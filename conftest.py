@@ -1,0 +1,6 @@
+"""Allow `pytest python/tests/` from the repo root: the test modules import
+the `compile` package that lives under python/."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,88 @@
+//! Scenario: imbalanced models (paper §IV-B / §VII-E/F) — T5-512/4 (a
+//! 512-token encoder feeding a 4-token decoder) and Swin-Huge (four
+//! hetero stages) make naive even pipeline partitions either OOM or idle.
+//!
+//! This example contrasts, for both models:
+//!   * even layer partition,
+//!   * memory-balanced partition p_m,
+//!   * time-balanced partition p_t,
+//!   * the bi-objective partition found by Galvatron-BMW,
+//! reporting simulated per-stage memory/time and the Eq. 6 balance degrees.
+//!
+//! Run: `cargo run --release --example heterogeneous_pipeline`
+
+use galvatron::cost::pipeline::Schedule;
+use galvatron::experiments::{cluster, model};
+use galvatron::search::base::{evaluate_partition, SearchConfig};
+use galvatron::search::bmw::{memory_balanced_partition, optimize_bmw, partition_str};
+use galvatron::search::decision_tree::SpaceOptions;
+use galvatron::search::partition::{balanced_partition, even_partition};
+use galvatron::sim::simulate;
+use galvatron::util::table::Table;
+use galvatron::util::GIB;
+
+fn main() {
+    let pp = 4usize;
+    let m = 8usize;
+    for (mname, batch) in [("t5-512/4-48", 64usize), ("swin-huge-48", 64)] {
+        let mp = model(mname);
+        let cl = cluster("a100x16", 16.0);
+        let cfg = SearchConfig {
+            space: SpaceOptions::default().no_ckpt(),
+            pp_degrees: Some(vec![pp]),
+            max_batch: batch,
+            ..Default::default()
+        };
+        let group = cl.n_devices / pp;
+        let b_m = batch as f64 / m as f64;
+        let act_w: Vec<f64> = mp.layers.iter().map(|l| l.act_bytes * b_m / group as f64).collect();
+        let ms_w: Vec<f64> = (0..mp.n_layers())
+            .map(|i| (mp.layers[i].params + mp.extra_params(i)) * 16.0 / group as f64)
+            .collect();
+        let flops_w: Vec<f64> = mp.layers.iter().map(|l| l.flops_fwd).collect();
+
+        let partitions: Vec<(&str, Vec<usize>)> = vec![
+            ("even", even_partition(mp.n_layers(), pp)),
+            ("memory-balanced", memory_balanced_partition(&act_w, &ms_w, pp, m, Schedule::OneFOneB)),
+            ("time-balanced", balanced_partition(&flops_w, pp)),
+            (
+                "bi-objective",
+                optimize_bmw(&mp, &cl, &cfg)
+                    .map(|o| o.plan.partition)
+                    .unwrap_or_else(|| even_partition(mp.n_layers(), pp)),
+            ),
+        ];
+
+        println!("\n=== {} | B={batch}, m={m}, P={pp}, a100x16 @16G ===", mp.name);
+        let mut t = Table::new([
+            "partition", "p", "stage mem GiB", "stage time rel", "alpha_t", "alpha_m", "samples/s",
+        ]);
+        for (name, part) in partitions {
+            match evaluate_partition(&mp, &cl, &cfg, batch, pp, m, &part) {
+                Some((out, _)) => {
+                    let sim = simulate(&mp, &cl, &out.plan, Schedule::OneFOneB, 1.3);
+                    let tmax = sim.stage_mb_time.iter().cloned().fold(0.0, f64::max);
+                    t.row([
+                        name.to_string(),
+                        partition_str(&part),
+                        sim.stage_peak_mem.iter().map(|x| format!("{:.1}", x / GIB)).collect::<Vec<_>>().join("/"),
+                        sim.stage_mb_time.iter().map(|x| format!("{:.2}", x / tmax)).collect::<Vec<_>>().join("/"),
+                        format!("{:.3}", sim.alpha_t()),
+                        format!("{:.3}", sim.alpha_m()),
+                        format!("{:.2}", sim.throughput),
+                    ]);
+                }
+                None => t.row([
+                    name.to_string(),
+                    partition_str(&part),
+                    "OOM".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,63 @@
+//! Scenario: "how does the optimal plan change as device memory shrinks?"
+//! — the workload that motivates the paper's intro (training under varying
+//! GPU memory constraints).
+//!
+//! Sweeps BERT-Huge-32 and ViT-Huge-32 on titan8 across 6..24 GB budgets,
+//! showing how Galvatron-BMW shifts between DP/SDP/TP/PP/CKPT and what
+//! batch size / throughput each budget affords.
+//!
+//! Run: `cargo run --release --example memory_budget_sweep`
+
+use galvatron::experiments::{cluster, model};
+use galvatron::search::baselines::run_method;
+use galvatron::util::table::Table;
+
+fn dominant_dims(out: &galvatron::search::SearchOutcome) -> String {
+    let mut dp = 0usize;
+    let mut sdp = 0usize;
+    let mut tp = 0usize;
+    let mut ckpt = 0usize;
+    for s in &out.plan.strategies {
+        if s.dp() > 1 {
+            dp += 1;
+        }
+        if s.sdp() > 1 {
+            sdp += 1;
+        }
+        if s.tp() > 1 {
+            tp += 1;
+        }
+        if s.ckpt {
+            ckpt += 1;
+        }
+    }
+    let total = out.plan.strategies.len();
+    let mut parts = vec![format!("PP{}", out.plan.pp)];
+    for (name, n) in [("DP", dp), ("SDP", sdp), ("TP", tp), ("CKPT", ckpt)] {
+        if n > 0 {
+            parts.push(format!("{name}:{n}/{total}"));
+        }
+    }
+    parts.join(" ")
+}
+
+fn main() {
+    for mname in ["bert-huge-32", "vit-huge-32"] {
+        let mp = model(mname);
+        println!("\n=== {} on titan8: memory budget sweep ===", mp.name);
+        let mut t = Table::new(["budget (GB)", "samples/s", "batch", "plan shape"]);
+        for budget in [6.0, 8.0, 10.0, 12.0, 16.0, 20.0, 24.0] {
+            let cl = cluster("titan8", budget);
+            match run_method("Galvatron-BMW", &mp, &cl, 512) {
+                Some(out) => t.row([
+                    format!("{budget}"),
+                    format!("{:.2}", out.throughput()),
+                    out.plan.batch.to_string(),
+                    dominant_dims(&out),
+                ]),
+                None => t.row([format!("{budget}"), "OOM".into(), "-".into(), "-".into()]),
+            }
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,229 @@
+"""AOT lowering: JAX (L2) -> HLO *text* artifacts + manifest for the Rust L3.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")``-proto serialization) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the ``xla`` crate binds) rejects;
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (from ``python/``):
+    python -m compile.aot --out ../artifacts [--preset e2e] [--stages 2] ...
+
+Emits into --out:
+    manifest.json                 description of everything below
+    stage{i}_fwd.hlo.txt          stage forward
+    stage{i}_bwd.hlo.txt          stage backward (recompute-based)
+    stage{i}_adam.hlo.txt         stage Adam update
+    stage{i}_params.bin           initial parameters (f32 LE, concatenated)
+    profile_layer_h{H}.hlo.txt    single-layer fwd used for cost calibration
+    smoke_axpy.hlo.txt            trivial runtime smoke-test artifact
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax fn -> XLA HLO text with a tuple root (see module doc)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def tensor_desc(s) -> dict:
+    dt = {jnp.float32.dtype: F32, jnp.int32.dtype: I32}[jnp.dtype(s.dtype)]
+    return {"dtype": dt, "shape": list(s.shape)}
+
+
+def lower_and_write(fn, arg_specs, path: pathlib.Path) -> dict:
+    # keep_unused=True: the Rust runtime passes every declared input; jit's
+    # default arg pruning would desynchronize the manifest signature from
+    # the compiled program's parameter list.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    out_specs = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(out_specs, tuple):
+        out_specs = (out_specs,)
+    return {
+        "file": path.name,
+        "inputs": [tensor_desc(s) for s in arg_specs],
+        "outputs": [tensor_desc(s) for s in out_specs],
+    }
+
+
+def build_stage_artifacts(
+    cfg: M.ModelConfig, partition: list[int], out: pathlib.Path, seed: int, lr: float
+) -> list[dict]:
+    stages = []
+    layer0 = 0
+    n_stages = len(partition)
+    key = jax.random.PRNGKey(seed)
+    for i, count in enumerate(partition):
+        first, last = i == 0, i == n_stages - 1
+        layers = list(range(layer0, layer0 + count))
+        layer0 += count
+        names = M.stage_param_names(cfg, layers, first, last)
+        shapes = M.stage_param_shapes(cfg, layers, first, last)
+        fwd, bwd, adam_raw = M.make_stage_fns(cfg, layers, first, last)
+        adam = functools.partial(adam_raw, lr=lr)
+
+        p_specs = [spec(s) for s in shapes]
+        x_spec = spec((cfg.microbatch, cfg.seq), jnp.int32) if first else spec(
+            (cfg.microbatch, cfg.seq, cfg.hidden)
+        )
+        dy_spec = spec((cfg.microbatch, cfg.seq, cfg.hidden))
+        tgt_spec = spec((cfg.microbatch, cfg.seq), jnp.int32)
+
+        fwd_args = [*p_specs, x_spec] + ([tgt_spec] if last else [])
+        bwd_args = [*p_specs, x_spec] + ([tgt_spec] if last else [dy_spec])
+        adam_args = [*p_specs, *p_specs, *p_specs, *p_specs, spec((), jnp.float32)]
+
+        fwd_desc = lower_and_write(fwd, fwd_args, out / f"stage{i}_fwd.hlo.txt")
+        bwd_desc = lower_and_write(bwd, bwd_args, out / f"stage{i}_bwd.hlo.txt")
+        adam_desc = lower_and_write(adam, adam_args, out / f"stage{i}_adam.hlo.txt")
+
+        # Initial parameters: concatenated f32 little-endian in param order.
+        key, sub = jax.random.split(key)
+        params = M.init_stage_params(cfg, layers, first, last, sub)
+        flat = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+        (out / f"stage{i}_params.bin").write_bytes(flat.astype("<f4").tobytes())
+
+        stages.append(
+            {
+                "index": i,
+                "first": first,
+                "last": last,
+                "layers": layers,
+                "param_names": names,
+                "param_shapes": [list(s) for s in shapes],
+                "param_file": f"stage{i}_params.bin",
+                "fwd": fwd_desc,
+                "bwd": bwd_desc,
+                "adam": adam_desc,
+            }
+        )
+    return stages
+
+
+def build_profile_artifacts(out: pathlib.Path, hiddens: list[int], seq: int, batch: int) -> list[dict]:
+    """Single transformer-layer forwards for cost-model calibration."""
+    descs = []
+    for h in hiddens:
+        cfg = M.ModelConfig(vocab=512, hidden=h, layers=1, heads=max(4, h // 64), seq=seq, microbatch=batch)
+        shapes = M.layer_param_shapes(cfg)
+
+        def layer_fwd(*args, cfg=cfg):
+            params = list(args[:-1])
+            x = args[-1]
+            return (M._transformer_layer(cfg, params, x),)
+
+        arg_specs = [*[spec(s) for s in shapes], spec((batch, seq, h))]
+        d = lower_and_write(layer_fwd, arg_specs, out / f"profile_layer_h{h}.hlo.txt")
+        d["hidden"] = h
+        d["seq"] = seq
+        d["batch"] = batch
+        d["flops_fwd"] = int(
+            batch * seq * (12 * h * h + 2 * seq * h) * 2  # qkv/proj/ffn + attn matmuls
+        )
+        descs.append(d)
+    return descs
+
+
+def build_smoke_artifact(out: pathlib.Path) -> dict:
+    def axpy(a, x, y):
+        return (a * x + y,)
+
+    return lower_and_write(
+        axpy, [spec((), jnp.float32), spec((16,)), spec((16,))], out / "smoke_axpy.hlo.txt"
+    )
+
+
+PRESETS = {
+    # Fast CI-scale model: artifacts build in seconds, e2e steps are quick.
+    "tiny": dict(vocab=512, hidden=128, layers=2, heads=4, seq=64, microbatch=2, stages=2),
+    # Default end-to-end demo (~5M params; vocab sized so the Markov
+    # structure is learnable within a few hundred fresh-data steps).
+    "e2e": dict(vocab=2048, hidden=256, layers=4, heads=8, seq=128, microbatch=4, stages=2),
+    # Larger configuration (~27M params) for longer runs.
+    "mid": dict(vocab=16384, hidden=384, layers=6, heads=8, seq=128, microbatch=4, stages=2),
+    # ~113M params, matches the "~100M transformer" e2e target; slow on CPU.
+    "100m": dict(vocab=32768, hidden=640, layers=12, heads=10, seq=256, microbatch=4, stages=4),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="e2e", choices=sorted(PRESETS))
+    ap.add_argument("--stages", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--hidden", type=int, default=None)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--heads", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--kernels", default="pallas", choices=["pallas", "ref"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3, help="Adam LR baked into the update artifact")
+    ap.add_argument("--profile-hiddens", type=int, nargs="*", default=[256, 512])
+    args = ap.parse_args()
+
+    p = dict(PRESETS[args.preset])
+    for k in ("vocab", "hidden", "layers", "heads", "seq", "microbatch", "stages"):
+        v = getattr(args, k)
+        if v is not None:
+            p[k] = v
+    stages = p.pop("stages")
+    cfg = M.ModelConfig(use_pallas=(args.kernels == "pallas"), **p)
+    partition = M.even_partition(cfg.layers, stages)
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    stage_descs = build_stage_artifacts(cfg, partition, out, args.seed, args.lr)
+    profile_descs = build_profile_artifacts(out, args.profile_hiddens, seq=128, batch=4)
+    smoke_desc = build_smoke_artifact(out)
+
+    manifest = {
+        "format_version": 1,
+        "preset": args.preset,
+        "kernels": args.kernels,
+        "config": dataclasses.asdict(cfg),
+        "param_count": cfg.param_count(),
+        "partition": partition,
+        "adam": {"lr": args.lr, "b1": 0.9, "b2": 0.999, "eps": 1e-8},
+        "stages": stage_descs,
+        "profiles": profile_descs,
+        "smoke": smoke_desc,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    n_files = len(list(out.iterdir()))
+    print(
+        f"wrote {n_files} artifacts to {out} "
+        f"(preset={args.preset}, params={cfg.param_count():,}, partition={partition})"
+    )
+
+
+if __name__ == "__main__":
+    main()

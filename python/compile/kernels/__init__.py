@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the Galvatron-BMW reproduction.
+
+All kernels lower with interpret=True (CPU-PJRT executable HLO) and carry
+custom VJPs defined through the pure-jnp oracles in ref.py.
+"""
+from .attention import flash_attention
+from .fused_ffn import matmul_bias_act
+from .layernorm import layer_norm
+from . import ref
+
+__all__ = ["flash_attention", "matmul_bias_act", "layer_norm", "ref"]

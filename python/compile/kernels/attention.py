@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: tiled (flash-style) scaled-dot-product attention.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of the CUDA
+threadblock tiling of the original flash attention, the HBM<->VMEM schedule
+is expressed with Pallas ``BlockSpec``s — each grid step holds one
+(block_q, head_dim) query tile resident in VMEM and streams
+(block_k, head_dim) key/value tiles through it with an online-softmax
+accumulator, which is the natural MXU/VMEM formulation.
+
+The kernel is lowered with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); numerics are validated against
+``ref.attention_ref`` by pytest/hypothesis.
+
+The backward pass is a ``custom_vjp`` through the reference implementation,
+so gradients of the AOT-lowered model are exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, sm_scale: float, block_q: int):
+    """One grid step: one (block_q, d) query tile vs. all key/value tiles.
+
+    q_ref: (block_q, d) VMEM tile; k_ref/v_ref: (seq, d) streamed source;
+    o_ref: (block_q, d) output tile.
+    """
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    seq = k_ref.shape[0]
+    d = q_ref.shape[1]
+    q_block_idx = pl.program_id(1)
+    q_offs = q_block_idx * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    num_kb = seq // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_tile.T  # (block_q, block_k)
+        if causal:
+            k_offs = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_offs[:, None] >= k_offs[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rescale previous accumulator and fold in this tile.
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    # Rows that saw only masked entries keep l == 0; guard the divide.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_fwd_pallas(q, k, v, *, causal, sm_scale, block_q, block_k, interpret):
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    grid = (b * h, s // block_q)
+    kernel = functools.partial(
+        _attn_kernel,
+        block_k=block_k,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q,
+    k,
+    v,
+    causal: bool = False,
+    sm_scale: float | None = None,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+):
+    """Tiled attention over (batch, heads, seq, head_dim) tensors.
+
+    Forward runs the Pallas kernel; backward is the exact VJP of the
+    reference implementation (standard practice for flash kernels).
+    """
+    scale = sm_scale if sm_scale is not None else 1.0 / (q.shape[-1] ** 0.5)
+    return _attention_fwd_pallas(
+        q, k, v, causal=causal, sm_scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def _fa_fwd(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    out = flash_attention(q, k, v, causal, sm_scale, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, sm_scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal, sm_scale=sm_scale),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

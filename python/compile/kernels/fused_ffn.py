@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + GELU (the FFN hot-spot).
+
+MXU-shaped (block_m x block_k)@(block_k x block_n) tiles with an f32
+accumulator carried through the K loop; bias add + GELU are fused onto the
+output tile before it leaves VMEM, saving one full HBM round-trip of the
+(m, n) intermediate — the TPU re-think of the CUDA epilogue-fusion idiom.
+
+interpret=True for CPU-PJRT execution; oracle: ref.matmul_bias_act_ref.
+Backward: custom_vjp through the reference (exact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ffn_kernel(x_ref, w_ref, b_ref, o_ref, *, block_k: int, activation: str):
+    """One grid step computes one (block_m, block_n) output tile."""
+    kdim = x_ref.shape[1]
+    num_kb = kdim // block_k
+
+    def body(kb, acc):
+        x_tile = x_ref[:, pl.dslice(kb * block_k, block_k)].astype(jnp.float32)
+        w_tile = w_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        return acc + x_tile @ w_tile
+
+    acc0 = jnp.zeros((x_ref.shape[0], w_ref.shape[1]), jnp.float32)
+    acc = jax.lax.fori_loop(0, num_kb, body, acc0)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if activation == "gelu":
+        acc = ref.gelu_ref(acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _ffn_fwd_pallas(x, w, b, *, activation, block_m, block_n, block_k, interpret):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_ffn_kernel, block_k=block_k, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((k, block_n), lambda mi, ni: (0, ni)),
+            pl.BlockSpec((block_n,), lambda mi, ni: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    activation: str = "gelu",
+    block_m: int = 32,
+    block_n: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+):
+    """Fused x @ w + b (+ GELU). x: (m, k), w: (k, n), b: (n,)."""
+    return _ffn_fwd_pallas(
+        x, w, b, activation=activation,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
+
+
+def _ffn_vjp_fwd(x, w, b, activation, block_m, block_n, block_k, interpret):
+    out = matmul_bias_act(x, w, b, activation, block_m, block_n, block_k, interpret)
+    return out, (x, w, b)
+
+
+def _ffn_vjp_bwd(activation, block_m, block_n, block_k, interpret, res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(
+        lambda x_, w_, b_: ref.matmul_bias_act_ref(x_, w_, b_, activation=activation),
+        x, w, b,
+    )
+    return vjp(g)
+
+
+matmul_bias_act.defvjp(_ffn_vjp_fwd, _ffn_vjp_bwd)

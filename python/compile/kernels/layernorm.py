@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: row-tiled layer normalization.
+
+Each grid step normalizes a (block_rows, hidden) tile entirely in VMEM:
+mean/variance reductions stay on-chip and the scale/shift epilogue is fused.
+interpret=True; oracle: ref.layernorm_ref; backward via custom_vjp through
+the reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32)[None, :] + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _ln_fwd_pallas(x, gamma, beta, *, eps, block_rows, interpret):
+    rows, hidden = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, hidden), lambda r: (r, 0)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hidden), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def layer_norm(x, gamma, beta, eps: float = 1e-5, block_rows: int = 32, interpret: bool = True):
+    """LayerNorm over the last axis. x: (rows, hidden)."""
+    return _ln_fwd_pallas(x, gamma, beta, eps=eps, block_rows=block_rows, interpret=interpret)
+
+
+def _ln_vjp_fwd(x, gamma, beta, eps, block_rows, interpret):
+    out = layer_norm(x, gamma, beta, eps, block_rows, interpret)
+    return out, (x, gamma, beta)
+
+
+def _ln_vjp_bwd(eps, block_rows, interpret, res, g):
+    x, gamma, beta = res
+    _, vjp = jax.vjp(lambda x_, g_, b_: ref.layernorm_ref(x_, g_, b_, eps=eps), x, gamma, beta)
+    return vjp(g)
+
+
+layer_norm.defvjp(_ln_vjp_fwd, _ln_vjp_bwd)

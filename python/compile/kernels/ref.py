@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has an exact reference here; pytest/hypothesis
+assert allclose between the Pallas output (interpret=True) and these, and
+the kernels' custom VJPs are defined *through* these references so that
+autodiff through the AOT-lowered model is mathematically identical to the
+reference model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Reference scaled-dot-product attention.
+
+    Shapes: q, k, v are (batch, heads, seq, head_dim); returns same shape.
+    """
+    *_, seq, head_dim = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / (head_dim**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    weights = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (matches the fused FFN kernel)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def matmul_bias_act_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "gelu"
+) -> jax.Array:
+    """Reference fused matmul + bias + activation.
+
+    x: (m, k), w: (k, n), b: (n,) -> (m, n).
+    """
+    y = x @ w + b[None, :]
+    if activation == "gelu":
+        return gelu_ref(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    """Reference layer norm over the last axis. x: (rows, hidden)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma[None, :] + beta[None, :]
+
+
+def softmax_xent_ref(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy. logits: (n, vocab), targets: (n,) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)

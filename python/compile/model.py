@@ -1,0 +1,324 @@
+"""L2: JAX transformer model (fwd/bwd/optimizer) built on the L1 kernels.
+
+The model is a GPT-style decoder-only transformer, split into *pipeline
+stages* at compile time. For every stage we export flat-argument functions
+(so the Rust coordinator can pass plain buffers over PJRT):
+
+  stage 0       : fwd(params..., tokens i32[B,S])            -> y f32[B,S,H]
+                  bwd(params..., tokens, dy)                 -> (grads...)
+  middle stage  : fwd(params..., x f32[B,S,H])               -> y
+                  bwd(params..., x, dy)                      -> (dx, grads...)
+  last stage    : fwd(params..., x, targets i32[B,S])        -> loss f32[]
+                  bwd(params..., x, targets)                 -> (dx, grads..., loss)
+  every stage   : adam(params..., grads..., m..., v..., step)-> (params..., m..., v...)
+
+The backward recomputes the stage forward from the stashed stage input
+(stage-granular activation checkpointing) — exactly the CKPT dimension the
+paper folds into its search space, and it keeps residuals out of the FFI.
+
+Parameter order within a stage is deterministic (see ``stage_param_names``)
+and recorded in the AOT manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, layer_norm, matmul_bias_act, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of the decoder-only transformer."""
+
+    vocab: int = 8192
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    seq: int = 128
+    microbatch: int = 4
+    ffn_mult: int = 4
+    use_pallas: bool = True  # False -> pure-jnp reference path (oracle)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def ffn(self) -> int:
+        return self.hidden * self.ffn_mult
+
+    def param_count(self) -> int:
+        """Total trainable parameters."""
+        per_layer = (
+            2 * self.hidden  # ln1
+            + 3 * self.hidden * self.hidden + 3 * self.hidden  # qkv
+            + self.hidden * self.hidden + self.hidden  # proj
+            + 2 * self.hidden  # ln2
+            + self.hidden * self.ffn + self.ffn  # fc1
+            + self.ffn * self.hidden + self.hidden  # fc2
+        )
+        emb = self.vocab * self.hidden + self.seq * self.hidden
+        head = 2 * self.hidden + self.hidden * self.vocab
+        return emb + self.layers * per_layer + head
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def layer_param_names(i: int) -> list[str]:
+    return [
+        f"l{i}.ln1.g", f"l{i}.ln1.b",
+        f"l{i}.qkv.w", f"l{i}.qkv.b",
+        f"l{i}.proj.w", f"l{i}.proj.b",
+        f"l{i}.ln2.g", f"l{i}.ln2.b",
+        f"l{i}.fc1.w", f"l{i}.fc1.b",
+        f"l{i}.fc2.w", f"l{i}.fc2.b",
+    ]
+
+
+def layer_param_shapes(cfg: ModelConfig) -> list[tuple[int, ...]]:
+    h, f = cfg.hidden, cfg.ffn
+    return [
+        (h,), (h,),
+        (h, 3 * h), (3 * h,),
+        (h, h), (h,),
+        (h,), (h,),
+        (h, f), (f,),
+        (f, h), (h,),
+    ]
+
+
+def stage_param_names(cfg: ModelConfig, stage_layers: Sequence[int], first: bool, last: bool) -> list[str]:
+    names: list[str] = []
+    if first:
+        names += ["emb.tok", "emb.pos"]
+    for i in stage_layers:
+        names += layer_param_names(i)
+    if last:
+        names += ["final.ln.g", "final.ln.b", "head.w"]
+    return names
+
+
+def stage_param_shapes(cfg: ModelConfig, stage_layers: Sequence[int], first: bool, last: bool) -> list[tuple[int, ...]]:
+    shapes: list[tuple[int, ...]] = []
+    if first:
+        shapes += [(cfg.vocab, cfg.hidden), (cfg.seq, cfg.hidden)]
+    for _ in stage_layers:
+        shapes += layer_param_shapes(cfg)
+    if last:
+        shapes += [(cfg.hidden,), (cfg.hidden,), (cfg.hidden, cfg.vocab)]
+    return shapes
+
+
+def init_stage_params(cfg: ModelConfig, stage_layers: Sequence[int], first: bool, last: bool, key) -> list[jax.Array]:
+    """GPT-2-style init: normal(0, 0.02) weights, zero bias, unit LN gain."""
+    shapes = stage_param_shapes(cfg, stage_layers, first, last)
+    names = stage_param_names(cfg, stage_layers, first, last)
+    out = []
+    for name, shape in zip(names, shapes):
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".b") and len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(".w") or name.startswith("emb."):
+            scale = 0.02
+            if name.endswith("proj.w") or name.endswith("fc2.w"):
+                # residual-branch scaling
+                scale = 0.02 / math.sqrt(2 * cfg.layers)
+            out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward computation
+# ---------------------------------------------------------------------------
+
+def _transformer_layer(cfg: ModelConfig, p: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Pre-LN transformer layer. x: (B, S, H); p: the 12 layer params."""
+    (ln1g, ln1b, qkvw, qkvb, projw, projb, ln2g, ln2b, fc1w, fc1b, fc2w, fc2b) = p
+    b, s, h = x.shape
+    rows = x.reshape(b * s, h)
+
+    if cfg.use_pallas:
+        normed = layer_norm(rows, ln1g, ln1b)
+    else:
+        normed = ref.layernorm_ref(rows, ln1g, ln1b)
+    qkv = normed @ qkvw + qkvb[None, :]
+    qkv = qkv.reshape(b, s, 3, cfg.heads, cfg.head_dim)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+    if cfg.use_pallas:
+        attn = flash_attention(q, k, v, True)
+    else:
+        attn = ref.attention_ref(q, k, v, causal=True)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b * s, h)
+    x = rows + attn @ projw + projb[None, :]
+
+    if cfg.use_pallas:
+        normed2 = layer_norm(x, ln2g, ln2b)
+        hidden = matmul_bias_act(normed2, fc1w, fc1b, "gelu")
+    else:
+        normed2 = ref.layernorm_ref(x, ln2g, ln2b)
+        hidden = ref.matmul_bias_act_ref(normed2, fc1w, fc1b, activation="gelu")
+    x = x + hidden @ fc2w + fc2b[None, :]
+    return x.reshape(b, s, h)
+
+
+def stage_forward(
+    cfg: ModelConfig,
+    stage_layers: Sequence[int],
+    first: bool,
+    last: bool,
+    params: list[jax.Array],
+    x: jax.Array,
+    targets: jax.Array | None = None,
+):
+    """Forward for one pipeline stage with flat params.
+
+    First stage: x is int32 tokens (B, S). Last stage returns scalar loss.
+    """
+    idx = 0
+    if first:
+        tok, pos = params[0], params[1]
+        idx = 2
+        h = tok[x] + pos[None, : cfg.seq, :]
+    else:
+        h = x
+    for _ in stage_layers:
+        h = _transformer_layer(cfg, params[idx : idx + 12], h)
+        idx += 12
+    if last:
+        lng, lnb, headw = params[idx], params[idx + 1], params[idx + 2]
+        b, s, hid = h.shape
+        rows = h.reshape(b * s, hid)
+        if cfg.use_pallas:
+            rows = layer_norm(rows, lng, lnb)
+        else:
+            rows = ref.layernorm_ref(rows, lng, lnb)
+        logits = rows @ headw
+        assert targets is not None
+        return ref.softmax_xent_ref(logits, targets.reshape(-1))
+    return h
+
+
+def full_forward_loss(cfg: ModelConfig, partition: Sequence[int], all_params: list[list[jax.Array]], tokens, targets):
+    """Single-device reference: run every stage in sequence, return loss."""
+    x = tokens
+    n = len(partition)
+    layer0 = 0
+    for i, count in enumerate(partition):
+        layers = list(range(layer0, layer0 + count))
+        layer0 += count
+        x = stage_forward(
+            cfg, layers, first=(i == 0), last=(i == n - 1),
+            params=all_params[i], x=x,
+            targets=targets if i == n - 1 else None,
+        )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Stage bwd / optimizer (the exported entry points)
+# ---------------------------------------------------------------------------
+
+def make_stage_fns(cfg: ModelConfig, stage_layers: Sequence[int], first: bool, last: bool):
+    """Build (fwd, bwd, adam) callables with flat-array signatures."""
+    n_params = len(stage_param_names(cfg, stage_layers, first, last))
+
+    if last:
+        def fwd(*args):
+            params = list(args[:n_params])
+            x, targets = args[n_params], args[n_params + 1]
+            return (stage_forward(cfg, stage_layers, first, last, params, x, targets),)
+
+        if first:
+            # Single-stage model: x is int tokens, no dx to propagate.
+            def bwd(*args):
+                params = list(args[:n_params])
+                x, targets = args[n_params], args[n_params + 1]
+
+                def lossfn(params_):
+                    return stage_forward(cfg, stage_layers, first, last, params_, x, targets)
+
+                loss, gparams = jax.value_and_grad(lossfn)(params)
+                return (*gparams, loss)
+        else:
+            def bwd(*args):
+                params = list(args[:n_params])
+                x, targets = args[n_params], args[n_params + 1]
+
+                def lossfn(params_, x_):
+                    return stage_forward(cfg, stage_layers, first, last, params_, x_, targets)
+
+                loss, grads = jax.value_and_grad(lossfn, argnums=(0, 1))(params, x)
+                gparams, dx = grads
+                return (dx, *gparams, loss)
+    elif first:
+        def fwd(*args):
+            params = list(args[:n_params])
+            x = args[n_params]
+            return (stage_forward(cfg, stage_layers, first, last, params, x),)
+
+        def bwd(*args):
+            params = list(args[:n_params])
+            x, dy = args[n_params], args[n_params + 1]
+
+            def f(params_):
+                return stage_forward(cfg, stage_layers, first, last, params_, x)
+
+            _, vjp = jax.vjp(f, params)
+            (gparams,) = vjp(dy)
+            return tuple(gparams)
+    else:
+        def fwd(*args):
+            params = list(args[:n_params])
+            x = args[n_params]
+            return (stage_forward(cfg, stage_layers, first, last, params, x),)
+
+        def bwd(*args):
+            params = list(args[:n_params])
+            x, dy = args[n_params], args[n_params + 1]
+
+            def f(params_, x_):
+                return stage_forward(cfg, stage_layers, first, last, params_, x_)
+
+            _, vjp = jax.vjp(f, params, x)
+            gparams, dx = vjp(dy)
+            return (dx, *gparams)
+
+    def adam(*args, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+        """Flat Adam: (params, grads, m, v, step) -> (params', m', v')."""
+        params = list(args[:n_params])
+        grads = list(args[n_params : 2 * n_params])
+        m = list(args[2 * n_params : 3 * n_params])
+        v = list(args[3 * n_params : 4 * n_params])
+        step = args[4 * n_params]  # f32 scalar, 1-based
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            mhat = mi / (1 - b1**step)
+            vhat = vi / (1 - b2**step)
+            new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        return (*new_p, *new_m, *new_v)
+
+    return fwd, bwd, adam
+
+
+def even_partition(layers: int, stages: int) -> list[int]:
+    """Split `layers` into `stages` contiguous chunks, earlier stages larger."""
+    base, rem = divmod(layers, stages)
+    return [base + (1 if i < rem else 0) for i in range(stages)]

@@ -1,0 +1,88 @@
+"""AOT pipeline: manifest integrity + HLO text artifacts parse and run."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ART = pathlib.Path("/tmp/galvatron_test_artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    if not (ART / "manifest.json").exists():
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(ART), "--preset", "tiny"],
+            check=True,
+            cwd=pathlib.Path(__file__).resolve().parents[1],
+        )
+    return ART
+
+
+def test_manifest_complete(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    assert man["format_version"] == 1
+    assert len(man["stages"]) == len(man["partition"])
+    for st in man["stages"]:
+        for kind in ("fwd", "bwd", "adam"):
+            f = artifacts / st[kind]["file"]
+            assert f.exists() and f.stat().st_size > 100
+        assert len(st["param_names"]) == len(st["param_shapes"])
+        pfile = artifacts / st["param_file"]
+        n_floats = sum(int(np.prod(s)) for s in st["param_shapes"])
+        assert pfile.stat().st_size == 4 * n_floats
+
+
+def test_artifact_signatures(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    cfg = man["config"]
+    b, s, h = cfg["microbatch"], cfg["seq"], cfg["hidden"]
+    for st in man["stages"]:
+        n = len(st["param_names"])
+        # fwd inputs: params + x (+ targets on last stage)
+        assert len(st["fwd"]["inputs"]) == n + (2 if st["last"] else 1)
+        x_in = st["fwd"]["inputs"][n]
+        if st["first"]:
+            assert x_in == {"dtype": "i32", "shape": [b, s]}
+        else:
+            assert x_in == {"dtype": "f32", "shape": [b, s, h]}
+        if st["last"]:
+            assert st["fwd"]["outputs"] == [{"dtype": "f32", "shape": []}]
+            assert st["bwd"]["outputs"][-1] == {"dtype": "f32", "shape": []}
+        else:
+            assert st["fwd"]["outputs"] == [{"dtype": "f32", "shape": [b, s, h]}]
+        # adam: 4n+1 in, 3n out
+        assert len(st["adam"]["inputs"]) == 4 * n + 1
+        assert len(st["adam"]["outputs"]) == 3 * n
+
+
+def test_hlo_text_parses(artifacts):
+    """HLO text artifacts must contain an ENTRY computation (loadable text)."""
+    for f in artifacts.glob("*.hlo.txt"):
+        text = f.read_text()
+        assert "ENTRY" in text and "ROOT" in text, f.name
+
+
+def test_hlo_text_proto_roundtrip(artifacts):
+    """HLO text must parse back into a module proto (what the Rust loader
+    does via HloModuleProto::from_text_file) without losing the entry."""
+    from jax._src.lib import xla_client as xc
+
+    text = (artifacts / "smoke_axpy.hlo.txt").read_text()
+    mod = xc._xla.hlo_module_from_text(text)
+    proto = mod.as_serialized_hlo_module_proto()
+    assert len(proto) > 50
+    # Round-trip once more through text to confirm stability.
+    text2 = mod.to_string()
+    mod2 = xc._xla.hlo_module_from_text(text2)
+    assert mod2.to_string() == text2
+
+
+def test_profile_artifacts_present(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    assert len(man["profiles"]) >= 1
+    for p in man["profiles"]:
+        assert (artifacts / p["file"]).exists()
+        assert p["flops_fwd"] > 0

@@ -1,0 +1,175 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis-swept)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, layer_norm, matmul_bias_act, ref
+
+SET = dict(deadline=None, max_examples=12, derandomize=True)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 100),
+)
+def test_attention_matches_ref(b, h, s, d, causal, seed):
+    q = rand(seed, (b, h, s, d))
+    k = rand(seed + 1, (b, h, s, d))
+    v = rand(seed + 2, (b, h, s, d))
+    out = flash_attention(q, k, v, causal)
+    exp = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SET)
+@given(
+    block_q=st.sampled_from([16, 32, 64]),
+    block_k=st.sampled_from([16, 32, 64]),
+)
+def test_attention_block_shape_invariance(block_q, block_k):
+    """Output must not depend on the VMEM tiling choice."""
+    q, k, v = (rand(i, (2, 2, 64, 32)) for i in range(3))
+    out = flash_attention(q, k, v, True, None, block_q, block_k)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_bf16():
+    q, k, v = (rand(i, (1, 2, 64, 32), jnp.bfloat16) for i in range(3))
+    out = flash_attention(q, k, v, False)
+    exp = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(out.astype(jnp.float32), exp, rtol=3e-2, atol=3e-2)
+
+
+def test_attention_grads_match_ref():
+    q, k, v = (rand(i, (1, 2, 64, 32)) for i in range(3))
+
+    def f_pallas(q, k, v):
+        return (flash_attention(q, k, v, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_causality():
+    """Perturbing a future key must not change earlier outputs."""
+    q, k, v = (rand(i, (1, 1, 64, 16)) for i in range(3))
+    out1 = flash_attention(q, k, v, True)
+    k2 = k.at[0, 0, 63].add(100.0)
+    v2 = v.at[0, 0, 63].add(100.0)
+    out2 = flash_attention(q, k2, v2, True)
+    np.testing.assert_allclose(out1[0, 0, :63], out2[0, 0, :63], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[0, 0, 63], out2[0, 0, 63])
+
+
+def test_attention_rejects_unaligned_seq():
+    q, k, v = (rand(i, (1, 1, 48, 16)) for i in range(3))
+    with pytest.raises(AssertionError):
+        flash_attention(q, k, v, False, None, 32, 32)
+
+
+# ---------------------------------------------------------------------------
+# Fused FFN
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([32, 64, 128]),
+    k=st.sampled_from([64, 128]),
+    n=st.sampled_from([64, 128, 256]),
+    act=st.sampled_from(["gelu", "none"]),
+    seed=st.integers(0, 100),
+)
+def test_ffn_matches_ref(m, k, n, act, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n), scale=0.1)
+    b = rand(seed + 2, (n,), scale=0.1)
+    out = matmul_bias_act(x, w, b, act)
+    exp = ref.matmul_bias_act_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SET)
+@given(
+    bm=st.sampled_from([16, 32]),
+    bn=st.sampled_from([32, 64]),
+    bk=st.sampled_from([32, 64]),
+)
+def test_ffn_block_shape_invariance(bm, bn, bk):
+    x, w, b = rand(0, (64, 128)), rand(1, (128, 64), scale=0.1), rand(2, (64,))
+    out = matmul_bias_act(x, w, b, "gelu", bm, bn, bk)
+    exp = ref.matmul_bias_act_ref(x, w, b)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+def test_ffn_grads_match_ref():
+    x, w, b = rand(0, (32, 64)), rand(1, (64, 128), scale=0.1), rand(2, (128,))
+
+    def f_p(x, w, b):
+        return matmul_bias_act(x, w, b, "gelu").sum()
+
+    def f_r(x, w, b):
+        return ref.matmul_bias_act_ref(x, w, b).sum()
+
+    gp = jax.grad(f_p, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    rows=st.sampled_from([32, 64, 128]),
+    hidden=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 100),
+)
+def test_layernorm_matches_ref(rows, hidden, seed):
+    x = rand(seed, (rows, hidden), scale=3.0)
+    g = rand(seed + 1, (hidden,))
+    b = rand(seed + 2, (hidden,))
+    out = layer_norm(x, g, b)
+    exp = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+
+
+def test_layernorm_output_stats():
+    """With unit gain / zero shift, rows are standardized."""
+    x = rand(0, (64, 256), scale=7.0) + 3.0
+    out = layer_norm(x, jnp.ones(256), jnp.zeros(256))
+    np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-3)
+
+
+def test_layernorm_grads_match_ref():
+    x, g, b = rand(0, (32, 64), scale=2.0), rand(1, (64,)), rand(2, (64,))
+    f_p = lambda *a: (layer_norm(*a) ** 2).sum()
+    f_r = lambda *a: (ref.layernorm_ref(*a) ** 2).sum()
+    gp = jax.grad(f_p, argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, g, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=3e-5, atol=3e-5)

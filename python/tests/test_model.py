@@ -1,0 +1,170 @@
+"""L2 correctness: staged model vs monolithic reference, training sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=512, hidden=128, layers=2, heads=4, seq=64, microbatch=2)
+CFG_REF = M.ModelConfig(vocab=512, hidden=128, layers=2, heads=4, seq=64, microbatch=2, use_pallas=False)
+
+
+def make_stage_state(cfg, partition, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    layer0 = 0
+    for i, count in enumerate(partition):
+        layers = list(range(layer0, layer0 + count))
+        layer0 += count
+        key, sub = jax.random.split(key)
+        out.append(
+            M.init_stage_params(cfg, layers, i == 0, i == len(partition) - 1, sub)
+        )
+    return out
+
+
+def batch(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (cfg.microbatch, cfg.seq), 0, cfg.vocab)
+    tgts = jnp.roll(toks, -1, axis=1)
+    return toks, tgts
+
+
+def test_param_count_formula():
+    assert CFG.param_count() == 536_064  # cross-checked against aot output
+
+
+def test_stage_shapes():
+    partition = [1, 1]
+    params = make_stage_state(CFG, partition)
+    toks, tgts = batch(CFG)
+    y = M.stage_forward(CFG, [0], True, False, params[0], toks)
+    assert y.shape == (CFG.microbatch, CFG.seq, CFG.hidden)
+    loss = M.stage_forward(CFG, [1], False, True, params[1], y, tgts)
+    assert loss.shape == ()
+    assert float(loss) > 0
+
+
+def test_pallas_model_matches_ref_model():
+    partition = [1, 1]
+    params = make_stage_state(CFG, partition)
+    toks, tgts = batch(CFG)
+    loss_p = M.full_forward_loss(CFG, partition, params, toks, tgts)
+    loss_r = M.full_forward_loss(CFG_REF, partition, params, toks, tgts)
+    np.testing.assert_allclose(loss_p, loss_r, rtol=1e-4, atol=1e-4)
+
+
+def test_staged_equals_monolithic():
+    """Splitting into 1 vs 2 stages must not change the loss."""
+    toks, tgts = batch(CFG_REF)
+    p2 = make_stage_state(CFG_REF, [1, 1], seed=3)
+    # Re-assemble the same parameters into a single stage.
+    p1 = [p2[0] + p2[1]]
+    loss2 = M.full_forward_loss(CFG_REF, [1, 1], p2, toks, tgts)
+    loss1 = M.full_forward_loss(CFG_REF, [2], p1, toks, tgts)
+    np.testing.assert_allclose(loss1, loss2, rtol=1e-5, atol=1e-5)
+
+
+def test_stage_bwd_chain_matches_e2e_grad():
+    """Chained stage bwd (the Rust pipeline's schedule) == jax.grad e2e."""
+    cfg = CFG_REF
+    partition = [1, 1]
+    params = make_stage_state(cfg, partition, seed=1)
+    toks, tgts = batch(cfg, seed=1)
+
+    # Chained (what the coordinator runs): fwd0 -> bwd1 -> bwd0.
+    fwd0, bwd0, _ = M.make_stage_fns(cfg, [0], True, False)
+    _, bwd1, _ = M.make_stage_fns(cfg, [1], False, True)
+    (y0,) = fwd0(*params[0], toks)
+    out1 = bwd1(*params[1], y0, tgts)
+    dx1, g1, loss = out1[0], out1[1:-1], out1[-1]
+    g0 = bwd0(*params[0], toks, dx1)
+
+    # Monolithic jax.grad over both stages.
+    def lossfn(p0, p1):
+        return M.full_forward_loss(cfg, partition, [p0, p1], toks, tgts)
+
+    lval, (e0, e1) = jax.value_and_grad(lossfn, argnums=(0, 1))(params[0], params[1])
+    np.testing.assert_allclose(loss, lval, rtol=1e-5, atol=1e-5)
+    for a, b in zip(g0, e0):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    for a, b in zip(g1, e1):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_adam_step_sane():
+    cfg = CFG_REF
+    _, _, adam = M.make_stage_fns(cfg, [0], True, False)
+    names = M.stage_param_names(cfg, [0], True, False)
+    params = M.init_stage_params(cfg, [0], True, False, jax.random.PRNGKey(0))
+    grads = [jnp.ones_like(p) for p in params]
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    out = adam(*params, *grads, *m, *v, jnp.float32(1.0))
+    n = len(names)
+    new_p, new_m, new_v = out[:n], out[n : 2 * n], out[2 * n :]
+    # First Adam step with unit grads moves every param by ~lr.
+    for p0, p1 in zip(params, new_p):
+        np.testing.assert_allclose(np.asarray(p0 - p1), 1e-3, rtol=1e-3)
+    for mi in new_m:
+        np.testing.assert_allclose(np.asarray(mi), 0.1, rtol=1e-5)
+    for vi in new_v:
+        np.testing.assert_allclose(np.asarray(vi), 1e-3, rtol=1e-4)
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    """A few Adam steps on a repeated batch must cut the loss sharply."""
+    cfg = CFG_REF
+    partition = [2]
+    params = make_stage_state(cfg, partition, seed=5)[0]
+    toks, tgts = batch(cfg, seed=5)
+    _, bwd, adam = M.make_stage_fns(cfg, [0, 1], True, True)
+    n = len(params)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    bwd_j = jax.jit(bwd)
+    adam_j = jax.jit(adam)
+    losses = []
+    for step in range(1, 31):
+        out = bwd_j(*params, toks, tgts)
+        grads, loss = out[:-1], out[-1]  # first+last stage: no dx output
+        losses.append(float(loss))
+        upd = adam_j(*params, *grads, *m, *v, jnp.float32(step))
+        params, m, v = list(upd[:n]), list(upd[n : 2 * n]), list(upd[2 * n :])
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_even_partition():
+    assert M.even_partition(4, 2) == [2, 2]
+    assert M.even_partition(5, 2) == [3, 2]
+    assert M.even_partition(7, 3) == [3, 2, 2]
+    assert sum(M.even_partition(48, 7)) == 48
+
+
+def test_gradient_accumulation_equivalence():
+    """Mean of per-microbatch grads == grad of the full batch (the
+    coordinator's accumulation scheme), because the loss is a token mean
+    and microbatches are equally sized."""
+    cfg = CFG_REF
+    params = make_stage_state(cfg, [2], seed=9)[0]
+    _, bwd, _ = M.make_stage_fns(cfg, [0, 1], True, True)
+    toks1, tgts1 = batch(cfg, seed=10)
+    toks2, tgts2 = batch(cfg, seed=11)
+
+    out1 = bwd(*params, toks1, tgts1)
+    out2 = bwd(*params, toks2, tgts2)
+    g_acc = [(a + b) / 2 for a, b in zip(out1[:-1], out2[:-1])]
+
+    big = M.ModelConfig(**{**cfg.__dict__, "microbatch": 2 * cfg.microbatch})
+    _, bwd_big, _ = M.make_stage_fns(big, [0, 1], True, True)
+    toks = jnp.concatenate([toks1, toks2], axis=0)
+    tgts = jnp.concatenate([tgts1, tgts2], axis=0)
+    out_big = bwd_big(*params, toks, tgts)
+
+    for a, b in zip(g_acc, out_big[:-1]):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(
+        (out1[-1] + out2[-1]) / 2, out_big[-1], rtol=1e-5
+    )

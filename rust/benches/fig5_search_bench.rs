@@ -1,0 +1,83 @@
+//! Bench: Fig. 5 — dynamic-programming search scaling in layers, memory
+//! budget and strategy-space size. Verifies the paper's "linear in L and
+//! E" claim on the hot path itself (dp_search).
+//!
+//! Run: `cargo bench --bench fig5_search_bench`
+
+use std::time::Duration;
+
+use galvatron::cluster::cluster_by_name;
+use galvatron::cost::CostEstimator;
+use galvatron::model::LayerProfile;
+use galvatron::search::decision_tree::{candidate_strategies, SpaceOptions};
+use galvatron::search::dp::{dp_search, DpInput};
+use galvatron::util::bench::bench;
+use galvatron::util::{GIB, MIB};
+
+fn main() {
+    let strategies = candidate_strategies(8, &SpaceOptions::default());
+    let cluster = cluster_by_name("titan8").unwrap();
+    let est = CostEstimator::new(&cluster, 1, 1.3);
+
+    // Scaling in L.
+    for layers in [8usize, 16, 32, 64] {
+        let ls: Vec<LayerProfile> =
+            (0..layers).map(|i| LayerProfile::encoder(&format!("l{i}"), 1280, 512, 20)).collect();
+        let extra = vec![0.0; layers];
+        bench(&format!("dp_search/L={layers}/E=16G"), Duration::from_secs(3), || {
+            let _ = dp_search(&DpInput {
+                layers: &ls,
+                extra_params: &extra,
+                strategies: &strategies,
+                estimator: &est,
+                b_m: 8.0,
+                microbatches: 1,
+                live_mb: 1,
+                mem_budget: 16.0 * GIB,
+                granularity: 64.0 * MIB,
+            });
+        });
+    }
+
+    // Scaling in E.
+    let ls: Vec<LayerProfile> =
+        (0..32).map(|i| LayerProfile::encoder(&format!("l{i}"), 1280, 512, 20)).collect();
+    let extra = vec![0.0; 32];
+    for budget in [8.0f64, 16.0, 24.0] {
+        bench(&format!("dp_search/L=32/E={budget}G"), Duration::from_secs(3), || {
+            let _ = dp_search(&DpInput {
+                layers: &ls,
+                extra_params: &extra,
+                strategies: &strategies,
+                estimator: &est,
+                b_m: 8.0,
+                microbatches: 1,
+                live_mb: 1,
+                mem_budget: budget * GIB,
+                granularity: 64.0 * MIB,
+            });
+        });
+    }
+
+    // Scaling in |S|.
+    for (name, opts) in [
+        ("DP+TP(no ckpt)", SpaceOptions::default().with_dims(&[galvatron::parallel::Dim::Dp, galvatron::parallel::Dim::Tp]).no_ckpt()),
+        ("Galvatron(no ckpt)", SpaceOptions::default().no_ckpt()),
+        ("Galvatron-BMW(full)", SpaceOptions::default()),
+    ] {
+        let s = candidate_strategies(8, &opts);
+        bench(&format!("dp_search/L=32/|S|={} ({name})", s.len()), Duration::from_secs(3), || {
+            let _ = dp_search(&DpInput {
+                layers: &ls,
+                extra_params: &extra,
+                strategies: &s,
+                estimator: &est,
+                b_m: 8.0,
+                microbatches: 1,
+                live_mb: 1,
+                mem_budget: 16.0 * GIB,
+                granularity: 64.0 * MIB,
+            });
+        });
+    }
+}

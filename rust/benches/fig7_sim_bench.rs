@@ -1,0 +1,48 @@
+//! Bench: Fig. 4/7 substrate — discrete-event simulator and closed-form
+//! estimator throughput (events/s and plans/s), plus the estimation-error
+//! numbers themselves.
+//!
+//! Run: `cargo bench --bench fig7_sim_bench`
+
+use std::time::Duration;
+
+use galvatron::cost::pipeline::{plan_cost, Schedule};
+use galvatron::experiments::{cluster, model};
+use galvatron::parallel::{Dim, ParallelPlan, Strategy};
+use galvatron::sim::simulate;
+use galvatron::util::bench::bench;
+
+fn main() {
+    let mp = model("bert-huge-32");
+    let cl = cluster("titan8", 16.0);
+    let plan = ParallelPlan {
+        pp: 4,
+        partition: vec![8, 8, 8, 8],
+        strategies: vec![Strategy::single(Dim::Dp, 2, false); 32],
+        batch: 64,
+        microbatches: 16,
+    };
+    let tasks = 2 * plan.pp * plan.microbatches;
+
+    let r = bench("simulate/4-stage x 16 microbatches", Duration::from_secs(3), || {
+        let _ = simulate(&mp, &cl, &plan, Schedule::OneFOneB, 1.3);
+    });
+    println!(
+        "  -> {:.0} scheduled tasks/s",
+        tasks as f64 / r.mean.as_secs_f64()
+    );
+
+    bench("plan_cost/same plan", Duration::from_secs(3), || {
+        let _ = plan_cost(&mp, &cl, &plan, Schedule::OneFOneB, 1.3);
+    });
+
+    // The Fig. 7 numbers on this plan.
+    let sim = simulate(&mp, &cl, &plan, Schedule::OneFOneB, 1.3);
+    let with = plan_cost(&mp, &cl, &plan, Schedule::OneFOneB, 1.3).iter_time;
+    let without = plan_cost(&mp, &cl, &plan, Schedule::OneFOneB, 1.0).iter_time;
+    println!(
+        "estimation error vs DES: with slowdown {:+.1}%, without {:+.1}%",
+        (with - sim.iter_time) / sim.iter_time * 100.0,
+        (without - sim.iter_time) / sim.iter_time * 100.0
+    );
+}

@@ -1,0 +1,28 @@
+//! Bench: Table II end-to-end — one full (model, budget) planning cell per
+//! method on titan8. Measures the planner's wallclock (the paper's Fig. 5
+//! concern) while regenerating a Table II slice.
+//!
+//! Run: `cargo bench --bench table2_bench`
+
+use std::time::Duration;
+
+use galvatron::experiments::{cluster, model};
+use galvatron::search::baselines::run_method;
+use galvatron::util::bench::bench;
+
+fn main() {
+    let budget = 16.0;
+    for mname in ["bert-huge-32", "vit-huge-32"] {
+        for method in ["FSDP/ZeRO-3 (SDP)", "Galvatron (DP+PP)", "Galvatron-Base", "Galvatron-BMW"] {
+            let mp = model(mname);
+            let cl = cluster("titan8", budget);
+            bench(
+                &format!("table2/{mname}/{method}"),
+                Duration::from_secs(3),
+                || {
+                    let _ = run_method(method, &mp, &cl, 128);
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: Table III/IV scalability — planning cost as the cluster grows
+//! (16 low-perf, 16 high-perf, 64 GPUs). The paper reports search time
+//! grows 2.2x (16 GPUs) and 9.2x (64 GPUs) vs 8 GPUs; this bench measures
+//! our planner's scaling on the same model.
+//!
+//! Run: `cargo bench --bench table3_scalability_bench`
+
+use std::time::Duration;
+
+use galvatron::experiments::{cluster, model};
+use galvatron::search::baselines::run_method;
+use galvatron::util::bench::bench;
+
+fn main() {
+    let mut base = None;
+    for (cl_name, budget) in [("titan8", 16.0), ("titan16", 16.0), ("a100x16", 16.0), ("a100x64", 16.0)] {
+        let mp = model("bert-huge-32");
+        let cl = cluster(cl_name, budget);
+        let r = bench(
+            &format!("scalability/{cl_name}/Galvatron-BMW"),
+            Duration::from_secs(3),
+            || {
+                let _ = run_method("Galvatron-BMW", &mp, &cl, 64);
+            },
+        );
+        match base {
+            None => base = Some(r.mean),
+            Some(b) => println!(
+                "  -> {:.1}x the 8-GPU search time (paper: 2.2x @16, 9.2x @64)",
+                r.mean.as_secs_f64() / b.as_secs_f64()
+            ),
+        }
+    }
+}

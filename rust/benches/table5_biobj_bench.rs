@@ -1,0 +1,24 @@
+//! Bench: Table V — bi-objective partition optimization cost vs the fixed
+//! memory-/time-balanced ablations on the imbalanced T5-512/4 model.
+//!
+//! Run: `cargo bench --bench table5_biobj_bench`
+
+use std::time::Duration;
+
+use galvatron::experiments::{cluster, model};
+use galvatron::search::baselines::{run_method, run_partition_ablation};
+use galvatron::util::bench::bench;
+
+fn main() {
+    let mp = model("t5-512/4-32");
+    let cl = cluster("a100x16", 16.0);
+    bench("table5/1F1B+Mem", Duration::from_secs(3), || {
+        let _ = run_partition_ablation("mem", &mp, &cl, 64);
+    });
+    bench("table5/1F1B+Time", Duration::from_secs(3), || {
+        let _ = run_partition_ablation("time", &mp, &cl, 64);
+    });
+    bench("table5/1F1B+Bi-obj", Duration::from_secs(3), || {
+        let _ = run_method("Galvatron (1F1B+Bi-obj)", &mp, &cl, 64);
+    });
+}

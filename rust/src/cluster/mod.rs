@@ -1,0 +1,181 @@
+//! Cluster topology model: devices, islands, and hierarchical bandwidth.
+//!
+//! Paper Takeaway #1: PP prefers to be applied across device "islands"
+//! (sets of devices with high-bandwidth interconnect); slower inter-island
+//! links carry only pipeline boundary activations. The planner needs, for a
+//! communication group of a given size at a given decision-tree level, the
+//! effective bandwidth of the slowest link that group spans — this module
+//! provides that.
+
+use crate::util::{is_pow2, GIB};
+
+/// GPU device class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Device memory in bytes.
+    pub mem_bytes: f64,
+    /// Effective training-matmul throughput in FLOP/s (calibration constant
+    /// that sets the absolute throughput scale; see DESIGN.md §2).
+    pub flops: f64,
+}
+
+impl GpuSpec {
+    pub fn titan_rtx() -> Self {
+        GpuSpec { name: "RTX-TITAN-24G".into(), mem_bytes: 24.0 * GIB, flops: 10e12 }
+    }
+
+    pub fn a100_40g() -> Self {
+        GpuSpec { name: "A100-40G".into(), mem_bytes: 40.0 * GIB, flops: 40e12 }
+    }
+
+    pub fn a100_80g() -> Self {
+        GpuSpec { name: "A100-80G".into(), mem_bytes: 80.0 * GIB, flops: 40e12 }
+    }
+}
+
+/// A training cluster: `n_devices` homogeneous GPUs grouped into equal
+/// islands; full bandwidth inside an island, `inter_bw` across.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub gpu: GpuSpec,
+    pub n_devices: usize,
+    /// Devices per island (e.g. one server).
+    pub island_size: usize,
+    /// Intra-island effective bus bandwidth, bytes/s (NVLink or PCIe).
+    pub intra_bw: f64,
+    /// Inter-island effective bandwidth, bytes/s (IB / Ethernet).
+    pub inter_bw: f64,
+}
+
+impl ClusterSpec {
+    pub fn new(
+        name: &str,
+        gpu: GpuSpec,
+        n_devices: usize,
+        island_size: usize,
+        intra_bw: f64,
+        inter_bw: f64,
+    ) -> Self {
+        assert!(is_pow2(n_devices), "device count must be a power of two");
+        assert!(is_pow2(island_size) && island_size <= n_devices);
+        assert_eq!(n_devices % island_size, 0);
+        ClusterSpec {
+            name: name.into(),
+            gpu,
+            n_devices,
+            island_size,
+            intra_bw,
+            inter_bw,
+        }
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.n_devices / self.island_size
+    }
+
+    /// Effective bandwidth for a communication group of `group` devices,
+    /// when the total devices are already partitioned into `pp` pipeline
+    /// groups of `n_devices/pp` (Takeaway #1 placement: PP cuts across the
+    /// slowest links first, so a group of size g inside one pipeline stage
+    /// spans islands only if g exceeds what is left of an island inside the
+    /// stage group).
+    pub fn group_bandwidth(&self, pp_degree: usize, group: usize) -> f64 {
+        let stage_devices = self.n_devices / pp_degree.max(1);
+        // Devices of one island that belong to the same stage.
+        let island_in_stage = self.island_size.min(stage_devices);
+        if group <= island_in_stage {
+            self.intra_bw
+        } else {
+            self.inter_bw
+        }
+    }
+
+    /// Bandwidth of the link crossed by pipeline p2p at stage boundaries.
+    pub fn pipeline_link_bw(&self, pp_degree: usize) -> f64 {
+        if pp_degree <= self.n_islands() {
+            // Stage boundaries align with island boundaries.
+            self.inter_bw
+        } else {
+            // Some stage boundaries fall inside an island; conservatively
+            // the bottleneck for cost purposes is the slower inter link if
+            // any boundary crosses islands, otherwise intra.
+            if self.n_islands() > 1 {
+                self.inter_bw
+            } else {
+                self.intra_bw
+            }
+        }
+    }
+
+    /// Memory budget per device possibly restricted below physical memory
+    /// (the paper evaluates 8/12/16/20 GB budgets on 24 GB cards).
+    pub fn with_memory_budget(mut self, budget_bytes: f64) -> Self {
+        self.gpu.mem_bytes = budget_bytes;
+        self
+    }
+}
+
+/// Named cluster presets matching the paper's testbeds (§VII-A, §VII-D).
+pub fn cluster_by_name(name: &str) -> Option<ClusterSpec> {
+    // Effective bandwidths (~80% of line rate): PCIe3 x16 ≈ 10 GB/s,
+    // NVLink(A100) ≈ 200 GB/s, 100 Gb IB ≈ 10 GB/s, 400 Gb IB ≈ 40 GB/s.
+    Some(match name.to_ascii_lowercase().as_str() {
+        // 8x RTX TITAN, single node, PCIe 3.0 (Table II).
+        "titan8" => ClusterSpec::new("titan8", GpuSpec::titan_rtx(), 8, 8, 10.0 * GIB, 10.0 * GIB),
+        // 16x RTX TITAN over 2 servers, 100Gb IB — "low-perf" (Table III).
+        "titan16" => ClusterSpec::new("titan16", GpuSpec::titan_rtx(), 16, 8, 10.0 * GIB, 10.0 * GIB),
+        // 16x A100 NVLink over 2 servers, 100Gb IB — "high-perf" (Table III).
+        "a100x16" => ClusterSpec::new("a100x16", GpuSpec::a100_40g(), 16, 8, 200.0 * GIB, 10.0 * GIB),
+        // 64x A100 40GB, 8 servers, NVLink + 100Gb IB (Table IV).
+        "a100x64" => ClusterSpec::new("a100x64", GpuSpec::a100_40g(), 64, 8, 200.0 * GIB, 10.0 * GIB),
+        // 32x A100 80GB, 400Gb IB (Table VI, GPT-3).
+        "a100-80g-x32" => {
+            ClusterSpec::new("a100-80g-x32", GpuSpec::a100_80g(), 32, 8, 200.0 * GIB, 40.0 * GIB)
+        }
+        // Small CPU-calibrated cluster used by the e2e runtime tests.
+        "cpu4" => ClusterSpec::new("cpu4", GpuSpec { name: "cpu".into(), mem_bytes: 4.0 * GIB, flops: 30e9 }, 4, 4, 8.0 * GIB, 8.0 * GIB),
+        _ => return None,
+    })
+}
+
+pub fn cluster_names() -> Vec<&'static str> {
+    vec!["titan8", "titan16", "a100x16", "a100x64", "a100-80g-x32", "cpu4"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for n in cluster_names() {
+            let c = cluster_by_name(n).unwrap();
+            assert!(c.n_devices >= 4);
+            assert!(c.intra_bw >= c.inter_bw);
+        }
+    }
+
+    #[test]
+    fn group_bandwidth_hierarchy() {
+        let c = cluster_by_name("a100x16").unwrap();
+        // PP=2 puts one island per stage: all intra-stage groups use NVLink.
+        assert_eq!(c.group_bandwidth(2, 8), c.intra_bw);
+        // PP=1: a 16-wide group spans both islands -> IB.
+        assert_eq!(c.group_bandwidth(1, 16), c.inter_bw);
+        assert_eq!(c.group_bandwidth(1, 8), c.intra_bw);
+    }
+
+    #[test]
+    fn memory_budget_override() {
+        let c = cluster_by_name("titan8").unwrap().with_memory_budget(8.0 * GIB);
+        assert_eq!(c.gpu.mem_bytes, 8.0 * GIB);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2() {
+        ClusterSpec::new("bad", GpuSpec::titan_rtx(), 6, 2, 1.0, 1.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! In-process collectives over host buffers — the NCCL substitute for the
+//! real-numerics runtime (DESIGN.md §2). Semantics match ring collectives:
+//! all-reduce sums elementwise; all-gather concatenates shards;
+//! reduce-scatter sums then splits.
+
+/// All-reduce (sum) across replicas: every buffer ends up with the
+/// elementwise sum. Panics if shapes mismatch.
+pub fn all_reduce(buffers: &mut [&mut [f32]]) {
+    let n = buffers.len();
+    if n <= 1 {
+        return;
+    }
+    let len = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == len), "shard length mismatch");
+    let mut acc = vec![0.0f32; len];
+    for b in buffers.iter() {
+        for (a, &x) in acc.iter_mut().zip(b.iter()) {
+            *a += x;
+        }
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+}
+
+/// All-reduce followed by mean (gradient averaging across DP replicas).
+pub fn all_reduce_mean(buffers: &mut [&mut [f32]]) {
+    let n = buffers.len() as f32;
+    all_reduce(buffers);
+    if n > 1.0 {
+        if let Some(first) = buffers.first_mut() {
+            for x in first.iter_mut() {
+                *x /= n;
+            }
+        }
+        // Propagate the scaled copy (all buffers identical post-allreduce).
+        if buffers.len() > 1 {
+            let (head, tail) = buffers.split_at_mut(1);
+            for b in tail {
+                b.copy_from_slice(head[0]);
+            }
+        }
+    }
+}
+
+/// All-gather: each replica holds a shard; returns the concatenation (the
+/// same full buffer every replica would see).
+pub fn all_gather(shards: &[&[f32]]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(shards.iter().map(|s| s.len()).sum());
+    for s in shards {
+        out.extend_from_slice(s);
+    }
+    out
+}
+
+/// Reduce-scatter: sum the full buffers, return each replica's shard.
+/// `full[i]` must all have the same length divisible by the replica count.
+pub fn reduce_scatter(full: &[&[f32]]) -> Vec<Vec<f32>> {
+    let n = full.len();
+    assert!(n >= 1);
+    let len = full[0].len();
+    assert!(full.iter().all(|b| b.len() == len));
+    assert_eq!(len % n, 0, "length must divide replica count");
+    let mut acc = vec![0.0f32; len];
+    for b in full {
+        for (a, &x) in acc.iter_mut().zip(b.iter()) {
+            *a += x;
+        }
+    }
+    let shard = len / n;
+    (0..n).map(|i| acc[i * shard..(i + 1) * shard].to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_reduce_sums() {
+        let mut a = vec![1.0, 2.0];
+        let mut b = vec![10.0, 20.0];
+        let mut c = vec![100.0, 200.0];
+        all_reduce(&mut [&mut a, &mut b, &mut c]);
+        assert_eq!(a, vec![111.0, 222.0]);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn all_reduce_mean_averages() {
+        let mut a = vec![1.0, 3.0];
+        let mut b = vec![3.0, 5.0];
+        all_reduce_mean(&mut [&mut a, &mut b]);
+        assert_eq!(a, vec![2.0, 4.0]);
+        assert_eq!(b, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn single_replica_noop() {
+        let mut a = vec![1.0, 2.0];
+        all_reduce(&mut [&mut a]);
+        assert_eq!(a, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn gather_scatter_compose_to_allreduce() {
+        // Property (paper Takeaway #3 premise): all-gather ∘ reduce-scatter
+        // ≡ all-reduce.
+        let mut rng = Rng::new(42);
+        for _ in 0..20 {
+            let n = 4usize;
+            let len = 8usize;
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let shards = reduce_scatter(&refs);
+            let shard_refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let gathered = all_gather(&shard_refs);
+
+            let mut expect = bufs.clone();
+            let mut refs_mut: Vec<&mut [f32]> =
+                expect.iter_mut().map(|b| b.as_mut_slice()).collect();
+            all_reduce(&mut refs_mut);
+            for (g, e) in gathered.iter().zip(expect[0].iter()) {
+                assert!((g - e).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut a = vec![1.0];
+        let mut b = vec![1.0, 2.0];
+        all_reduce(&mut [&mut a, &mut b]);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordinator: the distributed-training driver that turns a plan into
+//! real execution over the PJRT runtime — pipeline stages, data-parallel
+//! replicas, in-process collectives, synthetic data, and Adam.
+
+pub mod collectives;
+pub mod data;
+pub mod trainer;
+
+pub use trainer::{TrainReport, Trainer, TrainerConfig};

@@ -1,0 +1,225 @@
+//! Per-layer cost estimation: c(l, s), O_f, O_b, O_ms of the paper's DP
+//! search, plus the transformation cost R.
+
+use crate::cluster::ClusterSpec;
+use crate::model::LayerProfile;
+use crate::parallel::comm::{ckpt_recompute_comm, layer_comm_volumes};
+use crate::parallel::memory::{layer_memory, LayerMemory};
+use crate::parallel::{transform, Dim, Strategy};
+
+use super::overlapped_time;
+
+/// Full cost of one layer under one strategy for one microbatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    /// Forward time (compute + blocking TP collectives + overlapped SDP
+    /// parameter gather), seconds.
+    pub fwd: f64,
+    /// Backward time without gradient synchronization (microbatches 1..m-1).
+    pub bwd: f64,
+    /// Backward time of the last microbatch (DP gradient all-reduce
+    /// overlaps backward compute).
+    pub bwd_sync: f64,
+    /// Memory footprint.
+    pub mem: LayerMemory,
+}
+
+impl LayerCost {
+    /// Total per-microbatch time (no grad sync).
+    pub fn step(&self) -> f64 {
+        self.fwd + self.bwd
+    }
+}
+
+/// Estimator bound to a model's placement context: cluster + PP degree.
+#[derive(Debug, Clone)]
+pub struct CostEstimator {
+    pub cluster: ClusterSpec,
+    /// Pipeline degree the stage strategies live under (affects which links
+    /// intra-stage groups span).
+    pub pp: usize,
+    /// Compute/communication contention factor (§V).
+    pub overlap_slowdown: f64,
+}
+
+impl CostEstimator {
+    pub fn new(cluster: &ClusterSpec, pp: usize, overlap_slowdown: f64) -> Self {
+        CostEstimator { cluster: cluster.clone(), pp, overlap_slowdown }
+    }
+
+    /// Bandwidth seen by strategy level `i` of `strategy`: the level's
+    /// communication group spans the product of its own and all inner
+    /// degrees of contiguous devices (outer levels ride slower links).
+    fn level_bw(&self, strategy: &Strategy, i: usize) -> f64 {
+        let span: usize = strategy.levels[i..].iter().map(|(_, d)| d).product();
+        self.cluster.group_bandwidth(self.pp, span)
+    }
+
+    fn dim_bw(&self, strategy: &Strategy, dim: Dim) -> f64 {
+        strategy
+            .levels
+            .iter()
+            .position(|(d, _)| *d == dim)
+            .map(|i| self.level_bw(strategy, i))
+            .unwrap_or(self.cluster.intra_bw)
+    }
+
+    /// c(l, s): the paper's per-layer cost under strategy `s` with
+    /// microbatch size `b_m` and `extra_params` (embeddings/heads).
+    pub fn layer_cost(
+        &self,
+        layer: &LayerProfile,
+        strategy: &Strategy,
+        b_m: f64,
+        extra_params: f64,
+    ) -> LayerCost {
+        let local_samples = b_m / strategy.batch_split() as f64;
+        let comp_fwd = layer.flops_fwd * local_samples
+            / strategy.tp() as f64
+            / self.cluster.gpu.flops;
+        let comp_bwd = 2.0 * comp_fwd;
+
+        let vols = layer_comm_volumes(layer, strategy, b_m, extra_params);
+        let tp_bw = self.dim_bw(strategy, Dim::Tp);
+        let sdp_bw = self.dim_bw(strategy, Dim::Sdp);
+        let dp_bw = self.dim_bw(strategy, Dim::Dp);
+
+        // Forward: TP all-reduces are blocking (activations are inputs of
+        // the next op); SDP parameter gather overlaps compute.
+        let fwd = overlapped_time(comp_fwd + vols.tp_fwd / tp_bw, vols.sdp_fwd / sdp_bw, self.overlap_slowdown);
+
+        // Backward (no sync): compute (+ CKPT recompute) + blocking TP,
+        // overlapped with SDP gather/reduce-scatter.
+        let recompute = if strategy.ckpt {
+            comp_fwd + ckpt_recompute_comm(&vols) / tp_bw
+        } else {
+            0.0
+        };
+        let bwd_blocking = comp_bwd + recompute + vols.tp_bwd / tp_bw;
+        let bwd = overlapped_time(bwd_blocking, vols.sdp_bwd / sdp_bw, self.overlap_slowdown);
+
+        // Last microbatch also carries the DP gradient all-reduce.
+        let bwd_sync = overlapped_time(
+            bwd_blocking,
+            vols.sdp_bwd / sdp_bw + vols.dp_grad / dp_bw,
+            self.overlap_slowdown,
+        );
+
+        LayerCost {
+            fwd,
+            bwd,
+            bwd_sync,
+            mem: layer_memory(layer, strategy, b_m, extra_params),
+        }
+    }
+
+    /// Transformation cost R(l, S_prev, S_cur) in seconds (Eq. 4).
+    pub fn transform_cost(
+        &self,
+        layer: &LayerProfile,
+        prev: &Strategy,
+        cur: &Strategy,
+        b_m: f64,
+    ) -> f64 {
+        // Redistribution rides the stage group's slowest internal link.
+        let group = cur.degree().max(prev.degree());
+        let bw = self.cluster.group_bandwidth(self.pp, group.max(1));
+        transform::transform_time(layer, prev, cur, b_m, bw)
+    }
+
+    /// Pipeline p2p time to ship a stage-boundary activation (and its
+    /// gradient on the way back) for one microbatch.
+    pub fn p2p_time(&self, boundary: &LayerProfile, strategy: &Strategy, b_m: f64) -> f64 {
+        let local = b_m / strategy.batch_split() as f64;
+        boundary.bnd_bytes * local / self.cluster.pipeline_link_bw(self.pp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+
+    fn est(pp: usize) -> CostEstimator {
+        CostEstimator::new(&cluster_by_name("titan8").unwrap(), pp, 1.3)
+    }
+
+    fn layer() -> LayerProfile {
+        LayerProfile::encoder("enc", 1280, 512, 20)
+    }
+
+    #[test]
+    fn serial_cost_is_pure_compute() {
+        let e = est(1);
+        let c = e.layer_cost(&layer(), &Strategy::serial(false), 8.0, 0.0);
+        let expect = layer().flops_fwd * 8.0 / e.cluster.gpu.flops;
+        assert!((c.fwd - expect).abs() / expect < 1e-9);
+        assert!((c.bwd - 2.0 * expect).abs() / expect < 1e-9);
+        assert_eq!(c.bwd, c.bwd_sync); // no DP -> no sync cost
+    }
+
+    #[test]
+    fn bwd_twice_fwd_for_compute_bound() {
+        let e = est(1);
+        let c = e.layer_cost(&layer(), &Strategy::serial(false), 4.0, 0.0);
+        assert!((c.bwd / c.fwd - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ckpt_adds_forward_recompute() {
+        let e = est(1);
+        let plain = e.layer_cost(&layer(), &Strategy::serial(false), 4.0, 0.0);
+        let ck = e.layer_cost(&layer(), &Strategy::serial(true), 4.0, 0.0);
+        assert_eq!(plain.fwd, ck.fwd);
+        assert!((ck.bwd - plain.bwd - plain.fwd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_sync_slower_than_nosync() {
+        let e = est(1);
+        let c = e.layer_cost(&layer(), &Strategy::single(Dim::Dp, 8, false), 8.0, 0.0);
+        assert!(c.bwd_sync > c.bwd);
+    }
+
+    #[test]
+    fn tp_reduces_compute_adds_comm() {
+        let e = est(1);
+        let serial = e.layer_cost(&layer(), &Strategy::serial(false), 8.0, 0.0);
+        let tp8 = e.layer_cost(&layer(), &Strategy::single(Dim::Tp, 8, false), 8.0, 0.0);
+        // TP split compute by 8 but added all-reduce time.
+        let comp_only = serial.fwd / 8.0;
+        assert!(tp8.fwd > comp_only);
+    }
+
+    #[test]
+    fn overlap_slowdown_increases_sync_cost() {
+        let l = layer();
+        let s = Strategy::single(Dim::Dp, 8, false);
+        let no_slow = CostEstimator::new(&cluster_by_name("titan8").unwrap(), 1, 1.0);
+        let slow = est(1);
+        let a = no_slow.layer_cost(&l, &s, 8.0, 0.0);
+        let b = slow.layer_cost(&l, &s, 8.0, 0.0);
+        assert!(b.bwd_sync >= a.bwd_sync);
+    }
+
+    #[test]
+    fn innermost_tp_gets_fast_link() {
+        // On a two-island cluster with PP=1, a TP2 placed innermost spans 2
+        // adjacent devices (NVLink); placed outermost it spans 16 (IB).
+        let c = cluster_by_name("a100x16").unwrap();
+        let e = CostEstimator::new(&c, 1, 1.3);
+        let l = layer();
+        let tp_inner = Strategy { levels: vec![(Dim::Dp, 8), (Dim::Tp, 2)], ckpt: false };
+        let tp_outer = Strategy { levels: vec![(Dim::Tp, 2), (Dim::Dp, 8)], ckpt: false };
+        let ci = e.layer_cost(&l, &tp_inner, 16.0, 0.0);
+        let co = e.layer_cost(&l, &tp_outer, 16.0, 0.0);
+        assert!(ci.fwd < co.fwd, "inner TP {} must beat outer TP {}", ci.fwd, co.fwd);
+    }
+
+    #[test]
+    fn transform_cost_zero_for_same() {
+        let e = est(1);
+        let s = Strategy::single(Dim::Dp, 4, false);
+        assert_eq!(e.transform_cost(&layer(), &s, &s, 8.0), 0.0);
+    }
+}

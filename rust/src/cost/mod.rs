@@ -1,0 +1,62 @@
+//! Cost estimator (paper §V): computation + communication + memory, with
+//! the compute/communication *overlap slowdown* the paper highlights.
+//!
+//! Estimation structure follows the paper exactly:
+//!   * compute time   = per-sample profiled/analytic time × local samples;
+//!     backward = 2× forward (dense-matmul dominated);
+//!   * communication  = ring-collective volume / link bandwidth, with the
+//!     link chosen from the level's span in the topology (decision-tree
+//!     order maps outer levels to slower links);
+//!   * overlapped DP/SDP communication contends with backward compute:
+//!     both slow down by `overlap_slowdown` (~1.3×, §V);
+//!   * CKPT adds one forward recompute (+ its TP collectives) to backward;
+//!   * pipeline cost follows Eq. 5 / Eq. 9 with the last-microbatch
+//!     gradient-sync distinction.
+
+pub mod estimator;
+pub mod pipeline;
+
+pub use estimator::{CostEstimator, LayerCost};
+pub use pipeline::{plan_cost, PlanCost, StageCost};
+
+/// Default GPU streaming-multiprocessor contention factor (paper §V: "such
+/// contention could slow down the computation and communication by 1.3×").
+pub const DEFAULT_OVERLAP_SLOWDOWN: f64 = 1.3;
+
+/// Duration of a backward region where `comp` seconds of kernels overlap
+/// `comm` seconds of NCCL-style collectives, with mutual slowdown.
+///
+/// Bounds: never faster than running alone, never slower than serialized.
+pub fn overlapped_time(comp: f64, comm: f64, slowdown: f64) -> f64 {
+    if comm <= 0.0 {
+        return comp;
+    }
+    if comp <= 0.0 {
+        return comm;
+    }
+    (comp.max(comm) * slowdown).clamp(comp.max(comm), comp + comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_bounds() {
+        // No comm -> pure compute.
+        assert_eq!(overlapped_time(2.0, 0.0, 1.3), 2.0);
+        // No comp -> pure comm.
+        assert_eq!(overlapped_time(0.0, 3.0, 1.3), 3.0);
+        // Balanced: slowdown applies.
+        assert!((overlapped_time(1.0, 1.0, 1.3) - 1.3).abs() < 1e-12);
+        // Never worse than serialized.
+        assert!(overlapped_time(1.0, 1.0, 5.0) <= 2.0);
+        // Never better than the max alone.
+        assert!(overlapped_time(1.0, 0.1, 1.0) >= 1.0);
+    }
+
+    #[test]
+    fn slowdown_1_means_max() {
+        assert_eq!(overlapped_time(2.0, 1.5, 1.0), 2.0);
+    }
+}

@@ -1,0 +1,235 @@
+//! Whole-plan cost: pipeline composition (paper Eq. 5 / Eq. 9) + memory
+//! feasibility under 1F1B-Flush or GPipe scheduling.
+
+use crate::cluster::ClusterSpec;
+use crate::model::ModelProfile;
+use crate::parallel::memory::{stage_peak_memory, LayerMemory};
+use crate::parallel::ParallelPlan;
+
+use super::estimator::CostEstimator;
+
+/// Pipeline schedule flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// 1F1B-Flush (PipeDream-Flush): stage i keeps P-i microbatches live.
+    OneFOneB,
+    /// GPipe: all m microbatches live at the peak.
+    GPipe,
+}
+
+impl Schedule {
+    /// Live microbatches at peak for stage `i` (0-based) of `p` stages.
+    pub fn live_microbatches(&self, i: usize, p: usize, m: usize) -> usize {
+        match self {
+            Schedule::OneFOneB => (p - i).min(m),
+            Schedule::GPipe => m,
+        }
+    }
+}
+
+/// Cost summary for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageCost {
+    /// Per-microbatch time, no gradient sync.
+    pub time_nosync: f64,
+    /// Per-microbatch time of the last microbatch (with DP grad sync).
+    pub time_sync: f64,
+    /// Peak memory bytes (given the schedule's live microbatch count).
+    pub peak_mem: f64,
+    /// Layer memory records (for diagnostics).
+    pub mems: Vec<LayerMemory>,
+}
+
+/// Cost summary for an entire plan.
+#[derive(Debug, Clone)]
+pub struct PlanCost {
+    /// End-to-end iteration time (seconds) per global batch, Eq. 9.
+    pub iter_time: f64,
+    /// Throughput, samples/second.
+    pub throughput: f64,
+    /// Whether every stage fits in the device memory budget.
+    pub feasible: bool,
+    pub stages: Vec<StageCost>,
+    /// Time balance degree alpha_t (Eq. 6).
+    pub alpha_t: f64,
+    /// Memory balance degree alpha_m (Eq. 6).
+    pub alpha_m: f64,
+}
+
+/// Estimate the full cost of `plan` for `model` on `cluster` (Eq. 5/9).
+pub fn plan_cost(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    schedule: Schedule,
+    overlap_slowdown: f64,
+) -> PlanCost {
+    let est = CostEstimator::new(cluster, plan.pp, overlap_slowdown);
+    let b_m = plan.microbatch_size();
+    let m = plan.microbatches;
+    let p = plan.pp;
+
+    let mut stages = Vec::with_capacity(p);
+    for s in 0..p {
+        let range = plan.stage_layers(s);
+        let mut time_nosync = 0.0;
+        let mut time_sync = 0.0;
+        let mut mems = Vec::new();
+        let mut prev_strategy: Option<&crate::parallel::Strategy> = None;
+        for li in range.clone() {
+            let layer = &model.layers[li];
+            let strat = &plan.strategies[li];
+            let c = est.layer_cost(layer, strat, b_m, model.extra_params(li));
+            time_nosync += c.fwd + c.bwd;
+            time_sync += c.fwd + c.bwd_sync;
+            if let Some(prev) = prev_strategy {
+                let r = est.transform_cost(layer, prev, strat, b_m);
+                time_nosync += r;
+                time_sync += r;
+            }
+            mems.push(c.mem);
+            prev_strategy = Some(strat);
+        }
+        // Stage-boundary p2p (attributed to the sending stage).
+        if s + 1 < p {
+            let boundary_layer = &model.layers[range.end - 1];
+            let strat = &plan.strategies[range.end - 1];
+            let t = est.p2p_time(boundary_layer, strat, b_m) * 2.0; // fwd + bwd
+            time_nosync += t;
+            time_sync += t;
+        }
+        let live = schedule.live_microbatches(s, p, m);
+        let peak_mem = stage_peak_memory(&mems, live);
+        stages.push(StageCost { time_nosync, time_sync, peak_mem, mems });
+    }
+
+    // Eq. 9: (m-1)·max_i C_nosync + Σ_i C_sync.
+    let max_nosync = stages.iter().map(|s| s.time_nosync).fold(0.0, f64::max);
+    let sum_sync: f64 = stages.iter().map(|s| s.time_sync).sum();
+    let iter_time = (m as f64 - 1.0) * max_nosync + sum_sync;
+
+    let budget = cluster.gpu.mem_bytes;
+    let feasible = stages.iter().all(|s| s.peak_mem <= budget);
+
+    // Balance degrees (Eq. 6).
+    let sum_nosync: f64 = stages.iter().map(|s| s.time_nosync).sum();
+    let max_mem = stages.iter().map(|s| s.peak_mem).fold(0.0, f64::max);
+    let sum_mem: f64 = stages.iter().map(|s| s.peak_mem).sum();
+    let alpha_t = if sum_nosync > 0.0 { 1.0 - max_nosync / sum_nosync } else { 0.0 };
+    let alpha_m = if sum_mem > 0.0 { 1.0 - max_mem / sum_mem } else { 0.0 };
+
+    PlanCost {
+        iter_time,
+        throughput: if iter_time > 0.0 { plan.batch as f64 / iter_time } else { 0.0 },
+        feasible,
+        stages,
+        alpha_t,
+        alpha_m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::model::model_by_name;
+    use crate::parallel::{Dim, Strategy};
+
+    fn uniform_plan(model: &ModelProfile, pp: usize, n_dev: usize, strat: Strategy, batch: usize, m: usize) -> ParallelPlan {
+        let l = model.n_layers();
+        let base = l / pp;
+        let mut partition = vec![base; pp];
+        let rem = l - base * pp;
+        for i in 0..rem {
+            partition[i] += 1;
+        }
+        let _ = n_dev;
+        ParallelPlan {
+            pp,
+            partition,
+            strategies: vec![strat; l],
+            batch,
+            microbatches: m,
+        }
+    }
+
+    #[test]
+    fn schedule_live_counts() {
+        assert_eq!(Schedule::OneFOneB.live_microbatches(0, 4, 8), 4);
+        assert_eq!(Schedule::OneFOneB.live_microbatches(3, 4, 8), 1);
+        assert_eq!(Schedule::OneFOneB.live_microbatches(0, 4, 2), 2);
+        assert_eq!(Schedule::GPipe.live_microbatches(0, 4, 8), 8);
+        assert_eq!(Schedule::GPipe.live_microbatches(3, 4, 8), 8);
+    }
+
+    #[test]
+    fn onefoneb_memory_imbalanced_by_depth() {
+        // Paper §II-B: "1F1B-Flush causes distinct memory cost across
+        // different PP stages, where shallower stages consume more memory."
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let plan = uniform_plan(&model, 4, 8, Strategy::single(Dim::Dp, 2, false), 16, 8);
+        let pc = plan_cost(&model, &cluster, &plan, Schedule::OneFOneB, 1.3);
+        assert!(pc.stages[0].peak_mem > pc.stages[3].peak_mem);
+    }
+
+    #[test]
+    fn gpipe_peak_exceeds_1f1b() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let plan = uniform_plan(&model, 4, 8, Strategy::single(Dim::Dp, 2, false), 32, 8);
+        let g = plan_cost(&model, &cluster, &plan, Schedule::GPipe, 1.3);
+        let f = plan_cost(&model, &cluster, &plan, Schedule::OneFOneB, 1.3);
+        assert!(g.stages[0].peak_mem >= f.stages[0].peak_mem);
+        assert!(g.stages[3].peak_mem > f.stages[3].peak_mem);
+        // Identical bubble math -> identical time.
+        assert!((g.iter_time - f.iter_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq9_structure() {
+        // With pp=1, iter time = m-1 max + sum reduces to per-stage totals.
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let plan = uniform_plan(&model, 1, 8, Strategy::single(Dim::Dp, 8, false), 8, 1);
+        let pc = plan_cost(&model, &cluster, &plan, Schedule::OneFOneB, 1.3);
+        assert_eq!(pc.stages.len(), 1);
+        assert!((pc.iter_time - pc.stages[0].time_sync).abs() < 1e-12);
+        assert_eq!(pc.alpha_t, 0.0); // single stage: 1 - max/sum = 0
+    }
+
+    #[test]
+    fn more_microbatches_reduce_bubble_share() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let p2 = uniform_plan(&model, 2, 8, Strategy::single(Dim::Dp, 4, false), 32, 2);
+        let p8 = uniform_plan(&model, 2, 8, Strategy::single(Dim::Dp, 4, false), 32, 8);
+        let c2 = plan_cost(&model, &cluster, &p2, Schedule::OneFOneB, 1.3);
+        let c8 = plan_cost(&model, &cluster, &p8, Schedule::OneFOneB, 1.3);
+        // Bubble fraction (P-1)/m shrinks with m; per-sample time improves
+        // as long as per-microbatch efficiency doesn't collapse.
+        assert!(c8.iter_time < c2.iter_time, "{} vs {}", c8.iter_time, c2.iter_time);
+    }
+
+    #[test]
+    fn infeasible_when_budget_tiny() {
+        let model = model_by_name("bert-huge-48").unwrap();
+        let cluster = cluster_by_name("titan8")
+            .unwrap()
+            .with_memory_budget(1.0 * crate::util::GIB);
+        let plan = uniform_plan(&model, 1, 8, Strategy::single(Dim::Dp, 8, false), 8, 1);
+        let pc = plan_cost(&model, &cluster, &plan, Schedule::OneFOneB, 1.3);
+        assert!(!pc.feasible);
+    }
+
+    #[test]
+    fn balance_degrees_bounds() {
+        let model = model_by_name("t5-512/4-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let plan = uniform_plan(&model, 4, 8, Strategy::single(Dim::Dp, 2, true), 32, 8);
+        let pc = plan_cost(&model, &cluster, &plan, Schedule::OneFOneB, 1.3);
+        let bound = 1.0 - 1.0 / 4.0;
+        assert!(pc.alpha_t >= 0.0 && pc.alpha_t <= bound);
+        assert!(pc.alpha_m >= 0.0 && pc.alpha_m <= bound);
+    }
+}

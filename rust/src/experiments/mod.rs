@@ -1,0 +1,72 @@
+//! Experiment regenerators: one function per paper table/figure
+//! (DESIGN.md §5 experiment index). The CLI (`main.rs`), the examples, and
+//! the benches all call into here.
+
+pub mod figures;
+pub mod tables;
+
+use crate::cluster::{cluster_by_name, ClusterSpec};
+use crate::model::{model_by_name, ModelProfile};
+use crate::util::GIB;
+
+/// Common knobs for experiment runs (runtime scales with `max_batch`).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Largest global batch the sweeps explore.
+    pub max_batch: usize,
+    /// Restrict to these models (names); empty = experiment defaults.
+    pub models: Vec<String>,
+    /// Restrict to these memory budgets in GB; empty = experiment defaults.
+    pub budgets: Vec<f64>,
+    /// Restrict to these method names; empty = all.
+    pub methods: Vec<String>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { max_batch: 512, models: vec![], budgets: vec![], methods: vec![] }
+    }
+}
+
+impl ExpOptions {
+    pub fn models_or<'a>(&'a self, default: &[&'a str]) -> Vec<String> {
+        if self.models.is_empty() {
+            default.iter().map(|s| s.to_string()).collect()
+        } else {
+            self.models.clone()
+        }
+    }
+
+    pub fn budgets_or(&self, default: &[f64]) -> Vec<f64> {
+        if self.budgets.is_empty() {
+            default.to_vec()
+        } else {
+            self.budgets.clone()
+        }
+    }
+
+    pub fn methods_or(&self, default: &[&str]) -> Vec<String> {
+        if self.methods.is_empty() {
+            default.iter().map(|s| s.to_string()).collect()
+        } else {
+            self.methods.clone()
+        }
+    }
+}
+
+/// Resolve a model or panic with the accepted names.
+pub fn model(name: &str) -> ModelProfile {
+    model_by_name(name).unwrap_or_else(|| {
+        panic!(
+            "unknown model {name:?}; expected one of {:?}",
+            crate::model::model_names()
+        )
+    })
+}
+
+/// Resolve a cluster with a memory budget in GB.
+pub fn cluster(name: &str, budget_gb: f64) -> ClusterSpec {
+    cluster_by_name(name)
+        .unwrap_or_else(|| panic!("unknown cluster {name:?}"))
+        .with_memory_budget(budget_gb * GIB)
+}

@@ -1,0 +1,33 @@
+//! Galvatron-BMW reproduction: automatic parallel Transformer training via
+//! balanced memory workload optimization (TKDE 2023/2024).
+//!
+//! Library layout (see DESIGN.md):
+//!   * [`model`]   — Transformer model profiles (Table I zoo).
+//!   * [`cluster`] — device/island topology + bandwidth model.
+//!   * [`parallel`]— DP/SDP/TP/PP/CKPT strategy representation, memory and
+//!     collective-communication accounting.
+//!   * [`cost`]    — the paper's cost estimator (§V), incl. overlap slowdown.
+//!   * [`search`]  — decision-tree search space (§III), dynamic-programming
+//!     layer assignment + Galvatron-Base (§IV-A) and the BMW bi-objective
+//!     workload balancer (§IV-B), plus all baselines.
+//!   * [`sim`]     — discrete-event cluster simulator (ground truth for
+//!     Fig. 4/7-style experiments; substitutes the GPU testbed).
+//!   * [`runtime`] — PJRT-CPU execution of AOT artifacts (HLO text).
+//!   * [`coordinator`] — real-numerics distributed training driver
+//!     (pipeline + data parallel + collectives) over the runtime.
+//!   * [`util`]    — JSON/RNG/CLI/table/bench substrates.
+
+pub mod cluster;
+pub mod search;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod cost;
+pub mod experiments;
+pub mod model;
+pub mod parallel;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

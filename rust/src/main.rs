@@ -1,0 +1,235 @@
+//! galvatron — CLI for the Galvatron-BMW reproduction.
+//!
+//! Subcommands:
+//!   plan      find the optimal plan for a model/cluster/budget
+//!   table2..6 regenerate the paper's tables
+//!   fig4..7   regenerate the paper's figures
+//!   train     run real-numerics e2e training over the AOT artifacts
+//!   profile   calibrate the cost model by profiling artifacts on PJRT-CPU
+//!   smoke     runtime smoke test (load + execute the axpy artifact)
+//!   models    list the Table I model zoo
+//!   clusters  list cluster presets
+
+use anyhow::{Context, Result};
+use galvatron::cost::pipeline::Schedule;
+use galvatron::experiments::{cluster, figures, model, tables, ExpOptions};
+use galvatron::runtime::{HostTensor, Runtime};
+use galvatron::search::baselines::{method_names, run_method};
+use galvatron::sim::simulate;
+use galvatron::util::cli::Args;
+
+const USAGE: &str = "\
+galvatron <command> [options]
+
+commands:
+  plan      --model <name> --cluster <name> --memory <GB> [--method <name>] [--max-batch N]
+  table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
+  table3 | table4 | table5 | table6     (same options)
+  fig4 | fig5 | fig6 | fig7             [--max-batch N]
+  train     [--artifacts DIR] [--steps N] [--dp N] [--microbatches N] [--csv FILE] [--repeat-batch]
+  profile   [--artifacts DIR] [--reps N]
+  smoke     [--artifacts DIR]
+  simulate  --model <name> --cluster <name> --memory <GB> [--method <name>]
+  models | clusters | methods
+";
+
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    let list = |key: &str| -> Vec<String> {
+        args.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    };
+    Ok(ExpOptions {
+        max_batch: args.usize("max-batch", 512)?,
+        models: list("models"),
+        budgets: args
+            .get("budgets")
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().parse::<f64>().context("budget"))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .transpose()?
+            .unwrap_or_default(),
+        methods: list("methods"),
+    })
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let mname = args.get("model").unwrap_or("bert-huge-32");
+    let cname = args.get("cluster").unwrap_or("titan8");
+    let budget = args.f64("memory", 16.0)?;
+    let method = args.get("method").unwrap_or("Galvatron-BMW");
+    let max_batch = args.usize("max-batch", 512)?;
+    let mp = model(mname);
+    let cl = cluster(cname, budget);
+    println!(
+        "planning {} on {cname} ({} devices, {budget} GB budget) with {method} ...",
+        mp.name, cl.n_devices
+    );
+    match run_method(method, &mp, &cl, max_batch) {
+        Some(out) => figures::show_plan(&out, &mp, &cl),
+        None => println!("OOM: no feasible plan under this budget"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = galvatron::coordinator::TrainerConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        steps: args.usize("steps", 100)?,
+        dp: args.usize("dp", 2)?,
+        microbatches: args.usize("microbatches", 2)?,
+        log_every: args.usize("log-every", 10)?,
+        seed: args.usize("seed", 0)? as u64,
+        repeat_batch: args.flag("repeat-batch"),
+    };
+    let mut trainer = galvatron::coordinator::Trainer::new(cfg.clone())?;
+    println!(
+        "training: {} params, dp={}, {} microbatches/step, {} samples/step",
+        trainer.param_count,
+        cfg.dp,
+        cfg.microbatches,
+        trainer.samples_per_step()
+    );
+    let report = trainer.train()?;
+    println!(
+        "done: loss {:.4} -> {:.4}, {:.2} samples/s",
+        report.losses.first().unwrap_or(&f64::NAN),
+        report.losses.last().unwrap_or(&f64::NAN),
+        report.samples_per_sec()
+    );
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, report.to_csv())?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let rt = Runtime::new(std::path::Path::new(args.get_or("artifacts", "artifacts")))?;
+    let reps = args.usize("reps", 10)?;
+    let ms = galvatron::runtime::profile::profile_layers(&rt, reps)?;
+    for m in &ms {
+        println!(
+            "layer h={:<5} seq={:<5} batch={:<3} {:.2} ms/fwd  {:.2} GFLOP/s",
+            m.hidden,
+            m.seq,
+            m.batch,
+            m.seconds_per_fwd * 1e3,
+            m.effective_flops / 1e9
+        );
+    }
+    let spec = galvatron::runtime::profile::calibrated_host_spec(&ms, 4.0 * galvatron::util::GIB);
+    println!("calibrated host spec: {:.2} GFLOP/s effective", spec.flops / 1e9);
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let rt = Runtime::new(std::path::Path::new(args.get_or("artifacts", "artifacts")))?;
+    let man = rt.manifest()?;
+    let art = rt.load("smoke", &man.smoke.file, man.smoke.inputs.clone(), man.smoke.outputs.clone())?;
+    let out = art.run(&[
+        HostTensor::scalar_f32(3.0),
+        HostTensor::F32 { shape: vec![16], data: vec![1.0; 16] },
+        HostTensor::F32 { shape: vec![16], data: vec![0.5; 16] },
+    ])?;
+    anyhow::ensure!(out[0].as_f32()?.iter().all(|&v| (v - 3.5).abs() < 1e-6));
+    println!(
+        "smoke OK (platform: PJRT CPU; preset {}, {} params, kernels={})",
+        man.preset, man.param_count, man.kernels
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mname = args.get("model").unwrap_or("bert-huge-32");
+    let cname = args.get("cluster").unwrap_or("titan8");
+    let budget = args.f64("memory", 16.0)?;
+    let method = args.get("method").unwrap_or("Galvatron-BMW");
+    let mp = model(mname);
+    let cl = cluster(cname, budget);
+    let out = run_method(method, &mp, &cl, args.usize("max-batch", 512)?)
+        .context("no feasible plan")?;
+    let sim = simulate(&mp, &cl, &out.plan, Schedule::OneFOneB, 1.3);
+    println!("plan: est {:.2} samples/s | sim {:.2} samples/s", out.throughput(), sim.throughput);
+    for (i, (mem, bub)) in sim.stage_peak_mem.iter().zip(&sim.bubble_fraction).enumerate() {
+        println!("  stage {i}: peak {:.2} GiB, bubble {:.1}%", mem / galvatron::util::GIB, bub * 100.0);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["repeat-batch", "speedups"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "plan" => cmd_plan(&args)?,
+        "table2" => {
+            tables::table2(&exp_options(&args)?);
+        }
+        "table3" => {
+            tables::table3(&exp_options(&args)?);
+        }
+        "table4" => {
+            tables::table4(&exp_options(&args)?);
+        }
+        "table5" => {
+            tables::table5(&exp_options(&args)?);
+        }
+        "table6" => {
+            tables::table6(&exp_options(&args)?);
+        }
+        "fig4" => {
+            figures::fig4(&exp_options(&args)?);
+        }
+        "fig5" => {
+            let o = exp_options(&args)?;
+            figures::fig5a(&o);
+            figures::fig5b(&o);
+        }
+        "fig6" => {
+            figures::fig6(&exp_options(&args)?);
+        }
+        "fig7" => {
+            figures::fig7(&exp_options(&args)?);
+        }
+        "train" => cmd_train(&args)?,
+        "profile" => cmd_profile(&args)?,
+        "smoke" => cmd_smoke(&args)?,
+        "simulate" => cmd_simulate(&args)?,
+        "models" => {
+            for m in galvatron::model::model_names() {
+                let p = galvatron::model::model_by_name(m).unwrap();
+                println!(
+                    "{:<14} {:>4} layers  {:>8.1}M params  {:>9.1} MB act/sample",
+                    m,
+                    p.n_layers(),
+                    p.total_params() / 1e6,
+                    p.total_act_bytes() / 1e6
+                );
+            }
+        }
+        "clusters" => {
+            for c in galvatron::cluster::cluster_names() {
+                let cl = galvatron::cluster::cluster_by_name(c).unwrap();
+                println!(
+                    "{:<13} {:>3}x {:<14} islands of {}, intra {:>5.0} GB/s, inter {:>5.0} GB/s",
+                    c,
+                    cl.n_devices,
+                    cl.gpu.name,
+                    cl.island_size,
+                    cl.intra_bw / 1e9,
+                    cl.inter_bw / 1e9
+                );
+            }
+        }
+        "methods" => {
+            for m in method_names() {
+                println!("{m}");
+            }
+            println!("Alpa");
+        }
+        _ => print!("{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! Transformer model profiles: the planner's view of a model.
+//!
+//! A model is a sequence of layers (paper §III-A); each layer carries the
+//! quantities the cost estimator needs: parameter count, forward FLOPs per
+//! sample, and activation bytes per sample split into *boundary* (the layer
+//! input, which CKPT keeps) and *intermediate* (which CKPT discards and
+//! recomputes) — see paper §II-B "Activation checkpointing".
+//!
+//! Calibration: parameter counts and activation sizes reproduce Table I of
+//! the paper (unit-tested; params within 5%, activations within 35% — the
+//! paper does not publish its exact accounting, we use the Megatron-style
+//! formula act_bytes = 4·(17·s·h + 2.5·a·s·s_kv) per sample, fp32).
+
+pub mod zoo;
+
+pub use zoo::{model_by_name, model_names};
+
+/// One (composite) transformer layer as seen by the planner.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    /// Human-readable tag, e.g. "enc", "dec", "swin-s2".
+    pub name: String,
+    /// Hidden size of this layer.
+    pub hidden: usize,
+    /// Sequence length (tokens/patches) seen by this layer.
+    pub seq: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Key/value context length for self-attention (== seq, or the window
+    /// size for windowed attention like Swin).
+    pub kv_seq: usize,
+    /// Trainable parameters in this layer (count, not bytes).
+    pub params: f64,
+    /// Forward FLOPs per input sample.
+    pub flops_fwd: f64,
+    /// Total activation bytes stashed for backward, per sample (fp32).
+    pub act_bytes: f64,
+    /// Boundary (input) activation bytes per sample — what CKPT keeps.
+    pub bnd_bytes: f64,
+}
+
+impl LayerProfile {
+    /// Intermediate activation bytes per sample — what CKPT discards.
+    pub fn int_bytes(&self) -> f64 {
+        (self.act_bytes - self.bnd_bytes).max(0.0)
+    }
+
+    /// Standard encoder layer (self-attention + FFN), full attention.
+    pub fn encoder(name: &str, hidden: usize, seq: usize, heads: usize) -> Self {
+        Self::windowed_encoder(name, hidden, seq, heads, seq)
+    }
+
+    /// Encoder layer with windowed attention (kv context = `window`).
+    pub fn windowed_encoder(name: &str, hidden: usize, seq: usize, heads: usize, window: usize) -> Self {
+        let (h, s, a, w) = (hidden as f64, seq as f64, heads as f64, window as f64);
+        LayerProfile {
+            name: name.to_string(),
+            hidden,
+            seq,
+            heads,
+            kv_seq: window,
+            params: 12.0 * h * h + 13.0 * h, // qkv+proj+2×ffn weights + biases + 2 LN
+            flops_fwd: 24.0 * s * h * h + 4.0 * s * w * h,
+            act_bytes: 4.0 * (17.0 * s * h + 2.5 * a * s * w),
+            bnd_bytes: 4.0 * s * h,
+        }
+    }
+
+    /// Decoder layer with cross-attention to an encoder of length `enc_seq`
+    /// (T5-style). Self-attention is causal over `seq`.
+    pub fn decoder(name: &str, hidden: usize, seq: usize, heads: usize, enc_seq: usize) -> Self {
+        let (h, s, a, se) = (hidden as f64, seq as f64, heads as f64, enc_seq as f64);
+        let enc_like = Self::encoder(name, hidden, seq, heads);
+        LayerProfile {
+            name: name.to_string(),
+            hidden,
+            seq,
+            heads,
+            kv_seq: seq,
+            params: enc_like.params + 4.0 * h * h + 5.0 * h, // + cross-attn qkvo
+            flops_fwd: enc_like.flops_fwd + 8.0 * s * h * h + 4.0 * s * se * h,
+            act_bytes: enc_like.act_bytes + 4.0 * (6.0 * s * h + 2.5 * a * s * se),
+            bnd_bytes: 4.0 * s * h,
+        }
+    }
+}
+
+/// A whole model: a layer sequence plus pre/post (embedding / head) params.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerProfile>,
+    /// Embedding-side parameters, attributed to the first pipeline stage.
+    pub pre_params: f64,
+    /// Head-side parameters, attributed to the last pipeline stage.
+    pub post_params: f64,
+}
+
+impl ModelProfile {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total trainable parameters.
+    pub fn total_params(&self) -> f64 {
+        self.pre_params
+            + self.post_params
+            + self.layers.iter().map(|l| l.params).sum::<f64>()
+    }
+
+    /// Total activation bytes per sample (the Table I column).
+    pub fn total_act_bytes(&self) -> f64 {
+        self.layers.iter().map(|l| l.act_bytes).sum()
+    }
+
+    /// Total forward FLOPs per sample.
+    pub fn total_flops_fwd(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_fwd).sum()
+    }
+
+    /// Extra parameters attributed to layer `i` from embeddings/head.
+    pub fn extra_params(&self, i: usize) -> f64 {
+        let mut extra = 0.0;
+        if i == 0 {
+            extra += self.pre_params;
+        }
+        if i + 1 == self.layers.len() {
+            extra += self.post_params;
+        }
+        extra
+    }
+
+    /// Whether layers are homogeneous (same hidden/seq everywhere).
+    pub fn is_homogeneous(&self) -> bool {
+        self.layers
+            .windows(2)
+            .all(|w| w[0].hidden == w[1].hidden && w[0].seq == w[1].seq && w[0].params == w[1].params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_layer_sizes() {
+        // BERT-Huge layer: h=1280 -> 12h^2 ~ 19.66M params.
+        let l = LayerProfile::encoder("enc", 1280, 512, 20);
+        assert!((l.params / 1e6 - 19.68).abs() < 0.05, "{}", l.params);
+        // Activation ~97 MB/sample fp32 (Megatron formula, decimal MB).
+        assert!((l.act_bytes / 1e6 - 97.0).abs() < 3.0, "{}", l.act_bytes);
+        // Boundary = s*h*4 = 2.5 MiB.
+        assert!((l.bnd_bytes - 4.0 * 512.0 * 1280.0).abs() < 1.0);
+        assert!(l.int_bytes() > 0.0);
+    }
+
+    #[test]
+    fn decoder_has_more_params_than_encoder() {
+        let e = LayerProfile::encoder("e", 1024, 512, 16);
+        let d = LayerProfile::decoder("d", 1024, 512, 16, 512);
+        assert!(d.params > e.params);
+        assert!(d.flops_fwd > e.flops_fwd);
+        assert!(d.act_bytes > e.act_bytes);
+    }
+
+    #[test]
+    fn windowed_attention_cheaper() {
+        let full = LayerProfile::encoder("f", 640, 784, 20);
+        let win = LayerProfile::windowed_encoder("w", 640, 784, 20, 49);
+        assert!(win.flops_fwd < full.flops_fwd);
+        assert!(win.act_bytes < full.act_bytes);
+        assert_eq!(win.params, full.params);
+    }
+}

@@ -1,0 +1,268 @@
+//! Model zoo: every model from Table I of the paper, plus a CLI lookup.
+//!
+//! | Model        | Layers          | Hidden            | Params  | Act/sample |
+//! |--------------|-----------------|-------------------|---------|------------|
+//! | BERT-Huge-32 | 32              | 1280              | 672M    | 3149.39MB  |
+//! | BERT-Huge-48 | 48              | 1280              | 987M    | 4657.51MB  |
+//! | BERT-xHuge   | 128             | 2560              | 10.2B   | 24210.05MB |
+//! | ViT-Huge-32  | 32              | 1280              | 632M    | 646.5MB    |
+//! | ViT-Huge-48  | 48              | 1280              | 947M    | 968.59MB   |
+//! | ViT-xHuge    | 128             | 2560              | 10.1B   | 5313.9MB   |
+//! | T5-Large-32  | 16 Enc.+16 Dec. | 1024              | 502M    | 4119.66MB  |
+//! | T5-Large-48  | 24 Enc.+24 Dec. | 1024              | 737M    | 6107.75MB  |
+//! | T5-512/4-32  | 16 Enc.+16 Dec. | 1024              | 502M    | 1777.06MB  |
+//! | T5-512/4-48  | 24 Enc.+24 Dec. | 1024              | 737M    | 2473.10MB  |
+//! | Swin-Huge-32 | 2/2/26/2        | 320/640/1280/2560 | 701M    | 726.59MB   |
+//! | Swin-Huge-48 | 2/2/42/2        | 320/640/1280/2560 | 1016M   | 1016.8MB   |
+//! | GPT3-15B     | 48              | 5120              | 15.4B   | 32889.04MB |
+//! | GPT3-39B     | 48              | 8192              | 39.1B   | 58645.34MB |
+//! | GPT3-65B     | 80              | 8192              | 64.9B   | 97557.98MB |
+
+use super::{LayerProfile, ModelProfile};
+
+const BERT_VOCAB: f64 = 30522.0;
+const T5_VOCAB: f64 = 32128.0;
+const GPT_VOCAB: f64 = 50257.0;
+
+/// BERT-style encoder-only model.
+pub fn bert(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelProfile {
+    let h = hidden as f64;
+    ModelProfile {
+        name: name.to_string(),
+        layers: (0..layers)
+            .map(|i| LayerProfile::encoder(&format!("enc{i}"), hidden, seq, heads))
+            .collect(),
+        // token + position + segment embeddings + LN
+        pre_params: BERT_VOCAB * h + (seq as f64) * h + 2.0 * h + 2.0 * h,
+        // pooler + MLM head transform (tied decoder not re-counted)
+        post_params: h * h + 3.0 * h + BERT_VOCAB,
+    }
+}
+
+/// ViT-style encoder-only vision model (patch embedding front end).
+pub fn vit(name: &str, layers: usize, hidden: usize, heads: usize, patches: usize) -> ModelProfile {
+    let h = hidden as f64;
+    ModelProfile {
+        name: name.to_string(),
+        layers: (0..layers)
+            .map(|i| LayerProfile::encoder(&format!("enc{i}"), hidden, patches, heads))
+            .collect(),
+        pre_params: 3.0 * 16.0 * 16.0 * h + (patches as f64 + 1.0) * h, // patch16 conv + pos
+        post_params: h * 1000.0 + 1000.0,                               // ImageNet-1K head
+    }
+}
+
+/// T5-style encoder-decoder; `dec_seq` may differ (T5-512/4 imbalance).
+pub fn t5(
+    name: &str,
+    enc_layers: usize,
+    dec_layers: usize,
+    hidden: usize,
+    heads: usize,
+    enc_seq: usize,
+    dec_seq: usize,
+) -> ModelProfile {
+    let h = hidden as f64;
+    let mut layers = Vec::new();
+    for i in 0..enc_layers {
+        layers.push(LayerProfile::encoder(&format!("enc{i}"), hidden, enc_seq, heads));
+    }
+    for i in 0..dec_layers {
+        layers.push(LayerProfile::decoder(&format!("dec{i}"), hidden, dec_seq, heads, enc_seq));
+    }
+    ModelProfile {
+        name: name.to_string(),
+        layers,
+        pre_params: T5_VOCAB * h,
+        post_params: 0.0, // tied LM head
+    }
+}
+
+/// Swin-style hierarchical vision model: per-stage (layers, hidden, patches,
+/// heads) with 7x7 = 49-token attention windows.
+pub fn swin(name: &str, stages: &[(usize, usize, usize, usize)]) -> ModelProfile {
+    const WINDOW: usize = 49;
+    let mut layers = Vec::new();
+    let mut pre = 0.0;
+    for (si, &(n, hidden, patches, heads)) in stages.iter().enumerate() {
+        for i in 0..n {
+            layers.push(LayerProfile::windowed_encoder(
+                &format!("s{si}l{i}"),
+                hidden,
+                patches,
+                heads,
+                WINDOW,
+            ));
+        }
+        // Patch-merging projection into the next stage.
+        if si + 1 < stages.len() {
+            let h_next = stages[si + 1].1 as f64;
+            pre += 2.0 * h_next * h_next; // 4C -> 2C linear merge
+        }
+    }
+    let h0 = stages[0].1 as f64;
+    let h_last = stages.last().unwrap().1 as f64;
+    ModelProfile {
+        name: name.to_string(),
+        layers,
+        pre_params: pre + 3.0 * 4.0 * 4.0 * h0, // patch4 embed + merges
+        post_params: h_last * 1000.0,
+    }
+}
+
+/// GPT-3-style decoder-only model (causal self-attention only).
+pub fn gpt3(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelProfile {
+    let h = hidden as f64;
+    ModelProfile {
+        name: name.to_string(),
+        layers: (0..layers)
+            .map(|i| LayerProfile::encoder(&format!("dec{i}"), hidden, seq, heads))
+            .collect(),
+        pre_params: GPT_VOCAB * h + (seq as f64) * h,
+        post_params: 0.0, // tied
+    }
+}
+
+/// All Table I model names accepted by `model_by_name`.
+pub fn model_names() -> Vec<&'static str> {
+    vec![
+        "bert-huge-32",
+        "bert-huge-48",
+        "bert-xhuge",
+        "vit-huge-32",
+        "vit-huge-48",
+        "vit-xhuge",
+        "t5-large-32",
+        "t5-large-48",
+        "t5-512/4-32",
+        "t5-512/4-48",
+        "swin-huge-32",
+        "swin-huge-48",
+        "gpt3-15b",
+        "gpt3-39b",
+        "gpt3-65b",
+    ]
+}
+
+/// Look up a Table I model by (case-insensitive) name.
+pub fn model_by_name(name: &str) -> Option<ModelProfile> {
+    let swin_dims = |mid: usize| {
+        vec![
+            (2usize, 320usize, 3136usize, 10usize),
+            (2, 640, 784, 20),
+            (mid, 1280, 196, 40),
+            (2, 2560, 49, 80),
+        ]
+    };
+    Some(match name.to_ascii_lowercase().as_str() {
+        "bert-huge-32" => bert("BERT-Huge-32", 32, 1280, 20, 512),
+        "bert-huge-48" => bert("BERT-Huge-48", 48, 1280, 20, 512),
+        "bert-xhuge" => bert("BERT-xHuge", 128, 2560, 32, 512),
+        "vit-huge-32" => vit("ViT-Huge-32", 32, 1280, 16, 197),
+        "vit-huge-48" => vit("ViT-Huge-48", 48, 1280, 16, 197),
+        "vit-xhuge" => vit("ViT-xHuge", 128, 2560, 32, 197),
+        "t5-large-32" => t5("T5-Large-32", 16, 16, 1024, 16, 512, 512),
+        "t5-large-48" => t5("T5-Large-48", 24, 24, 1024, 16, 512, 512),
+        "t5-512/4-32" => t5("T5-512/4-32", 16, 16, 1024, 16, 512, 4),
+        "t5-512/4-48" => t5("T5-512/4-48", 24, 24, 1024, 16, 512, 4),
+        "swin-huge-32" => swin("Swin-Huge-32", &swin_dims(26)),
+        "swin-huge-48" => swin("Swin-Huge-48", &swin_dims(42)),
+        "gpt3-15b" => gpt3("GPT3-15B", 48, 5120, 40, 2048),
+        "gpt3-39b" => gpt3("GPT3-39B", 48, 8192, 64, 2048),
+        "gpt3-65b" => gpt3("GPT3-65B", 80, 8192, 64, 2048),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    /// (name, paper params in M, paper act MB/sample)
+    const TABLE_I: &[(&str, f64, f64)] = &[
+        ("bert-huge-32", 672.0, 3149.39),
+        ("bert-huge-48", 987.0, 4657.51),
+        ("bert-xhuge", 10200.0, 24210.05),
+        ("vit-huge-32", 632.0, 646.5),
+        ("vit-huge-48", 947.0, 968.59),
+        ("vit-xhuge", 10100.0, 5313.9),
+        ("t5-large-32", 502.0, 4119.66),
+        ("t5-large-48", 737.0, 6107.75),
+        ("t5-512/4-32", 502.0, 1777.06),
+        ("t5-512/4-48", 737.0, 2473.10),
+        ("swin-huge-32", 701.0, 726.59),
+        ("swin-huge-48", 1016.0, 1016.8),
+        ("gpt3-15b", 15400.0, f64::NAN),
+        ("gpt3-39b", 39100.0, f64::NAN),
+        ("gpt3-65b", 64900.0, f64::NAN),
+    ];
+
+    #[test]
+    fn params_match_table1_within_5pct() {
+        for &(name, paper_m, _) in TABLE_I {
+            let m = model_by_name(name).unwrap();
+            let ours_m = m.total_params() / 1e6;
+            let rel = (ours_m - paper_m).abs() / paper_m;
+            assert!(rel < 0.05, "{name}: ours {ours_m:.1}M vs paper {paper_m}M ({:.1}%)", rel * 100.0);
+        }
+    }
+
+    #[test]
+    fn activations_match_table1_within_35pct() {
+        // The paper's exact accounting is unpublished; we require the same
+        // order and relative ordering between models (shape preservation).
+        for &(name, _, paper_mb) in TABLE_I {
+            if paper_mb.is_nan() {
+                continue;
+            }
+            let m = model_by_name(name).unwrap();
+            let ours_mb = m.total_act_bytes() / MIB;
+            let rel = (ours_mb - paper_mb).abs() / paper_mb;
+            assert!(rel < 0.35, "{name}: ours {ours_mb:.1}MB vs paper {paper_mb}MB ({:.1}%)", rel * 100.0);
+        }
+    }
+
+    #[test]
+    fn nlp_has_bigger_activations_than_cv() {
+        // Paper §VII-B: "NLP models have larger activation while CV models
+        // have larger model parameters".
+        let bert = model_by_name("bert-huge-32").unwrap();
+        let vit = model_by_name("vit-huge-32").unwrap();
+        assert!(bert.total_act_bytes() > 3.0 * vit.total_act_bytes());
+    }
+
+    #[test]
+    fn t5_decoder_short_seq_is_imbalanced() {
+        let t = model_by_name("t5-512/4-32").unwrap();
+        let enc = &t.layers[0];
+        let dec = &t.layers[16];
+        assert!(dec.act_bytes < enc.act_bytes / 4.0, "decoder must be activation-light");
+        assert!(dec.params > enc.params, "decoder must be param-heavy");
+    }
+
+    #[test]
+    fn swin_is_heterogeneous() {
+        let s = model_by_name("swin-huge-32").unwrap();
+        assert!(!s.is_homogeneous());
+        assert_eq!(s.n_layers(), 32);
+        // Shallow layers: bigger activations, fewer params (paper §VII-F).
+        let first = &s.layers[0];
+        let last = &s.layers[31];
+        assert!(first.act_bytes > last.act_bytes);
+        assert!(first.params < last.params);
+    }
+
+    #[test]
+    fn all_names_resolve() {
+        for name in model_names() {
+            assert!(model_by_name(name).is_some(), "{name}");
+        }
+        assert!(model_by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn bert_is_homogeneous() {
+        assert!(model_by_name("bert-huge-32").unwrap().is_homogeneous());
+    }
+}

@@ -1,0 +1,180 @@
+//! Per-layer, per-strategy memory accounting (paper Eq. 1–3).
+//!
+//! For layer l with strategy S we compute:
+//!   O_ms — model-state bytes per device (params + grads + Adam moments),
+//!   O_f  — forward-activation bytes per device per microbatch,
+//!   O_b  — backward peak-extra bytes per device per microbatch.
+//!
+//! Sharding rules (paper §III-A2, Fig. 2):
+//!   * DP replicates model states, splits the batch.
+//!   * SDP shards model states by its degree, splits the batch.
+//!   * TP shards parameters AND intermediate activations by its degree but
+//!     replicates boundary activations.
+//!   * CKPT keeps only boundary activations live through the forward pass
+//!     (O_f = bnd) and pays the intermediate as backward peak (O_b = int).
+
+use crate::model::LayerProfile;
+use crate::parallel::Strategy;
+
+/// Bytes of model state per parameter: fp32 param + grad + Adam m + v.
+pub const STATE_BYTES_PER_PARAM: f64 = 16.0;
+
+/// Memory footprint of one layer under one strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerMemory {
+    /// Model states, bytes per device (static across the iteration).
+    pub o_ms: f64,
+    /// Forward activations stashed until this layer's backward, per device
+    /// per microbatch sample count `b_m`.
+    pub o_f: f64,
+    /// Extra peak during this layer's backward (CKPT recompute results).
+    pub o_b: f64,
+}
+
+impl LayerMemory {
+    pub fn total_fwd(&self) -> f64 {
+        self.o_ms + self.o_f
+    }
+}
+
+/// Compute the memory footprint of `layer` under `strategy` with microbatch
+/// size `b_m` (samples per microbatch, *before* batch splitting) and
+/// `extra_params` additional parameters attributed to this layer
+/// (embeddings on the first layer, heads on the last).
+pub fn layer_memory(layer: &LayerProfile, strategy: &Strategy, b_m: f64, extra_params: f64) -> LayerMemory {
+    let params = layer.params + extra_params;
+    let o_ms = params * STATE_BYTES_PER_PARAM / strategy.state_shard() as f64;
+
+    // Samples this device actually processes per microbatch.
+    let local_samples = b_m / strategy.batch_split() as f64;
+    let bnd = layer.bnd_bytes * local_samples;
+    // TP shards the intermediate activations; boundary is replicated.
+    let int = layer.int_bytes() * local_samples / strategy.tp() as f64;
+
+    let (o_f, o_b) = if strategy.ckpt {
+        (bnd, int)
+    } else {
+        (bnd + int, 0.0)
+    };
+    LayerMemory { o_ms, o_f, o_b }
+}
+
+/// Peak memory of a pipeline stage holding `layers[i]` with
+/// `strategies[i]`, when `live_mb` microbatches are simultaneously in
+/// flight (1F1B: P - stage_index; GPipe: m).
+///
+/// Implements Eq. 2 within the stage: while back-propagating layer i of the
+/// *oldest* microbatch, the stage holds all live microbatches' forward
+/// activations for layers <= i of the newest ones — we take the standard
+/// upper bound: (live-1) complete forward footprints plus the Eq. 2 walk of
+/// the current microbatch.
+pub fn stage_peak_memory(mems: &[LayerMemory], live_mb: usize) -> f64 {
+    let ms_total: f64 = mems.iter().map(|m| m.o_ms).sum();
+    let f_total: f64 = mems.iter().map(|m| m.o_f).sum();
+    let live_extra = (live_mb.max(1) - 1) as f64 * f_total;
+
+    // Eq. 2 walk over the current microbatch.
+    let mut prefix_f = 0.0;
+    let mut walk_peak: f64 = 0.0;
+    for m in mems {
+        prefix_f += m.o_f;
+        walk_peak = walk_peak.max(prefix_f + m.o_b);
+    }
+    ms_total + live_extra + walk_peak
+}
+
+/// Forward-memory total E_f of Eq. 3 for a stage (single microbatch).
+pub fn stage_forward_memory(mems: &[LayerMemory]) -> f64 {
+    mems.iter().map(|m| m.o_ms + m.o_f).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerProfile;
+    use crate::parallel::Dim;
+
+    fn layer() -> LayerProfile {
+        LayerProfile::encoder("enc", 1024, 512, 16)
+    }
+
+    #[test]
+    fn dp_replicates_states_splits_batch() {
+        let l = layer();
+        let dp4 = Strategy::single(Dim::Dp, 4, false);
+        let serial = Strategy::serial(false);
+        let m4 = layer_memory(&l, &dp4, 8.0, 0.0);
+        let m1 = layer_memory(&l, &serial, 8.0, 0.0);
+        assert_eq!(m4.o_ms, m1.o_ms); // replicated
+        assert!((m4.o_f - m1.o_f / 4.0).abs() < 1.0); // batch split
+        assert_eq!(m4.o_b, 0.0);
+    }
+
+    #[test]
+    fn sdp_shards_states() {
+        let l = layer();
+        let sdp4 = Strategy::single(Dim::Sdp, 4, false);
+        let dp4 = Strategy::single(Dim::Dp, 4, false);
+        let ms = layer_memory(&l, &sdp4, 8.0, 0.0);
+        let md = layer_memory(&l, &dp4, 8.0, 0.0);
+        assert!((ms.o_ms - md.o_ms / 4.0).abs() < 1.0);
+        assert_eq!(ms.o_f, md.o_f); // same batch split
+    }
+
+    #[test]
+    fn tp_shards_intermediate_not_boundary() {
+        let l = layer();
+        let tp4 = Strategy::single(Dim::Tp, 4, false);
+        let m = layer_memory(&l, &tp4, 8.0, 0.0);
+        let expect_f = l.bnd_bytes * 8.0 + l.int_bytes() * 8.0 / 4.0;
+        assert!((m.o_f - expect_f).abs() < 1.0);
+        // TP shards params too.
+        assert!((m.o_ms - l.params * STATE_BYTES_PER_PARAM / 4.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn ckpt_moves_intermediate_to_backward() {
+        let l = layer();
+        let plain = layer_memory(&l, &Strategy::serial(false), 4.0, 0.0);
+        let ck = layer_memory(&l, &Strategy::serial(true), 4.0, 0.0);
+        assert!(ck.o_f < plain.o_f);
+        assert!((ck.o_f - l.bnd_bytes * 4.0).abs() < 1.0);
+        assert!((ck.o_b - l.int_bytes() * 4.0).abs() < 1.0);
+        assert!((ck.o_f + ck.o_b - plain.o_f).abs() < 1.0); // conservation
+    }
+
+    #[test]
+    fn extra_params_counted() {
+        let l = layer();
+        let with = layer_memory(&l, &Strategy::serial(false), 1.0, 1e6);
+        let without = layer_memory(&l, &Strategy::serial(false), 1.0, 0.0);
+        assert!((with.o_ms - without.o_ms - 16e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn stage_peak_monotone_in_live_microbatches() {
+        let l = layer();
+        let mems: Vec<_> = (0..4)
+            .map(|_| layer_memory(&l, &Strategy::serial(false), 2.0, 0.0))
+            .collect();
+        let p1 = stage_peak_memory(&mems, 1);
+        let p2 = stage_peak_memory(&mems, 2);
+        let p4 = stage_peak_memory(&mems, 4);
+        assert!(p1 < p2 && p2 < p4);
+        // live=1 peak equals Eq.2 walk = ms + all forward activations.
+        let expect = mems.iter().map(|m| m.o_ms + m.o_f).sum::<f64>();
+        assert!((p1 - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn ckpt_lowers_stage_peak_with_many_live() {
+        let l = layer();
+        let plain: Vec<_> = (0..4)
+            .map(|_| layer_memory(&l, &Strategy::serial(false), 2.0, 0.0))
+            .collect();
+        let ck: Vec<_> = (0..4)
+            .map(|_| layer_memory(&l, &Strategy::serial(true), 2.0, 0.0))
+            .collect();
+        assert!(stage_peak_memory(&ck, 4) < stage_peak_memory(&plain, 4));
+    }
+}

@@ -1,0 +1,242 @@
+//! Parallelism strategies: the atoms of the Galvatron-BMW search space.
+//!
+//! A per-layer strategy (paper §III) is an *ordered* sequence of
+//! (dimension, degree) levels — outermost level first, i.e. applied across
+//! the slowest links of the stage's device group — plus an activation-
+//! checkpointing flag. PP is not part of the per-layer strategy: it is the
+//! outer decomposition (decision-tree root), chosen before layer-level
+//! optimization (Takeaway #1).
+
+pub mod comm;
+pub mod memory;
+pub mod transform;
+
+use std::fmt;
+
+/// Intra-stage parallelism dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Data parallelism: replicate model, split batch, all-reduce grads.
+    Dp,
+    /// Sharded data parallelism (ZeRO-3/FSDP): split batch AND shard model
+    /// states; all-gather params fwd+bwd, reduce-scatter grads.
+    Sdp,
+    /// Tensor parallelism (Megatron): shard parameters, all-reduce
+    /// activations in fwd and bwd.
+    Tp,
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::Dp => write!(f, "DP"),
+            Dim::Sdp => write!(f, "SDP"),
+            Dim::Tp => write!(f, "TP"),
+        }
+    }
+}
+
+/// A hybrid per-layer strategy over a stage device group.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    /// (dimension, degree) levels, outermost (slowest links) first.
+    /// Every degree is a power of two >= 2; dims are distinct.
+    pub levels: Vec<(Dim, usize)>,
+    /// Whether activation checkpointing is applied to this layer.
+    pub ckpt: bool,
+}
+
+impl Strategy {
+    /// The serial strategy (single device in the group).
+    pub fn serial(ckpt: bool) -> Strategy {
+        Strategy { levels: vec![], ckpt }
+    }
+
+    /// Single-dimension strategy.
+    pub fn single(dim: Dim, degree: usize, ckpt: bool) -> Strategy {
+        if degree == 1 {
+            Strategy::serial(ckpt)
+        } else {
+            Strategy { levels: vec![(dim, degree)], ckpt }
+        }
+    }
+
+    /// Total device count covered (product of level degrees).
+    pub fn degree(&self) -> usize {
+        self.levels.iter().map(|(_, d)| d).product()
+    }
+
+    fn dim_degree(&self, dim: Dim) -> usize {
+        self.levels
+            .iter()
+            .filter(|(d, _)| *d == dim)
+            .map(|(_, deg)| deg)
+            .product()
+    }
+
+    pub fn dp(&self) -> usize {
+        self.dim_degree(Dim::Dp)
+    }
+
+    pub fn sdp(&self) -> usize {
+        self.dim_degree(Dim::Sdp)
+    }
+
+    pub fn tp(&self) -> usize {
+        self.dim_degree(Dim::Tp)
+    }
+
+    /// Degree by which the batch is split (DP and SDP both split samples).
+    pub fn batch_split(&self) -> usize {
+        self.dp() * self.sdp()
+    }
+
+    /// Degree by which model states are sharded (TP shards params, SDP
+    /// shards params+grads+optimizer states; DP replicates).
+    pub fn state_shard(&self) -> usize {
+        self.tp() * self.sdp()
+    }
+
+    /// The group size (number of devices inside the tree-level) *outside*
+    /// of level `i` — the factor of slower-level parallelism wrapping it.
+    pub fn outer_degree(&self, i: usize) -> usize {
+        self.levels[..i].iter().map(|(_, d)| d).product()
+    }
+
+    /// Validity: distinct dims, pow-2 degrees >= 2, no DP+SDP mix
+    /// (Takeaway #3).
+    pub fn is_valid(&self) -> bool {
+        let mut seen = Vec::new();
+        for &(dim, deg) in &self.levels {
+            if deg < 2 || !crate::util::is_pow2(deg) || seen.contains(&dim) {
+                return false;
+            }
+            seen.push(dim);
+        }
+        !(seen.contains(&Dim::Dp) && seen.contains(&Dim::Sdp))
+    }
+
+    /// Compact label like "TP2-DP4" or "TP2-DP4+CKPT".
+    pub fn label(&self) -> String {
+        let mut s = if self.levels.is_empty() {
+            "SERIAL".to_string()
+        } else {
+            self.levels
+                .iter()
+                .map(|(d, n)| format!("{d}{n}"))
+                .collect::<Vec<_>>()
+                .join("-")
+        };
+        if self.ckpt {
+            s.push_str("+CKPT");
+        }
+        s
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// A complete distributed execution plan for a model on a cluster.
+#[derive(Debug, Clone)]
+pub struct ParallelPlan {
+    /// Pipeline parallel degree (number of stages).
+    pub pp: usize,
+    /// Layers per pipeline stage (sums to the model's layer count).
+    pub partition: Vec<usize>,
+    /// Per-layer strategy, in model layer order.
+    pub strategies: Vec<Strategy>,
+    /// Global batch size.
+    pub batch: usize,
+    /// Number of microbatches per batch.
+    pub microbatches: usize,
+}
+
+impl ParallelPlan {
+    /// Microbatch size (global batch / microbatch count).
+    pub fn microbatch_size(&self) -> f64 {
+        self.batch as f64 / self.microbatches as f64
+    }
+
+    /// Index range of the layers in stage `s`.
+    pub fn stage_layers(&self, s: usize) -> std::ops::Range<usize> {
+        let start: usize = self.partition[..s].iter().sum();
+        start..start + self.partition[s]
+    }
+
+    /// Validate structural invariants against a model layer count.
+    pub fn validate(&self, n_layers: usize, n_devices: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.partition.len() == self.pp, "partition arity != pp");
+        anyhow::ensure!(
+            self.partition.iter().sum::<usize>() == n_layers,
+            "partition does not cover the model"
+        );
+        anyhow::ensure!(self.partition.iter().all(|&p| p > 0), "empty stage");
+        anyhow::ensure!(self.strategies.len() == n_layers, "strategy per layer");
+        anyhow::ensure!(n_devices % self.pp == 0, "pp must divide devices");
+        let group = n_devices / self.pp;
+        for (i, s) in self.strategies.iter().enumerate() {
+            anyhow::ensure!(s.is_valid(), "layer {i}: invalid strategy {s}");
+            anyhow::ensure!(
+                s.degree() == group || s.degree() == 1 && group == 1,
+                "layer {i}: strategy degree {} != stage group size {group}",
+                s.degree()
+            );
+        }
+        anyhow::ensure!(self.batch % self.microbatches == 0, "m must divide B");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_and_accessors() {
+        let s = Strategy { levels: vec![(Dim::Dp, 2), (Dim::Tp, 4)], ckpt: false };
+        assert_eq!(s.degree(), 8);
+        assert_eq!(s.dp(), 2);
+        assert_eq!(s.tp(), 4);
+        assert_eq!(s.sdp(), 1);
+        assert_eq!(s.batch_split(), 2);
+        assert_eq!(s.state_shard(), 4);
+        assert_eq!(s.label(), "DP2-TP4");
+    }
+
+    #[test]
+    fn validity_rules() {
+        let ok = Strategy { levels: vec![(Dim::Sdp, 2), (Dim::Tp, 2)], ckpt: true };
+        assert!(ok.is_valid());
+        // DP+SDP mixing violates Takeaway #3.
+        let mix = Strategy { levels: vec![(Dim::Dp, 2), (Dim::Sdp, 2)], ckpt: false };
+        assert!(!mix.is_valid());
+        // Repeated dim.
+        let rep = Strategy { levels: vec![(Dim::Tp, 2), (Dim::Tp, 2)], ckpt: false };
+        assert!(!rep.is_valid());
+        // Non-pow2 degree.
+        let bad = Strategy { levels: vec![(Dim::Dp, 3)], ckpt: false };
+        assert!(!bad.is_valid());
+        assert!(Strategy::serial(false).is_valid());
+    }
+
+    #[test]
+    fn plan_validation() {
+        let s = Strategy::single(Dim::Dp, 4, false);
+        let plan = ParallelPlan {
+            pp: 2,
+            partition: vec![2, 2],
+            strategies: vec![s.clone(), s.clone(), s.clone(), s.clone()],
+            batch: 8,
+            microbatches: 4,
+        };
+        plan.validate(4, 8).unwrap();
+        assert_eq!(plan.stage_layers(1), 2..4);
+        assert_eq!(plan.microbatch_size(), 2.0);
+        assert!(plan.validate(5, 8).is_err());
+        assert!(plan.validate(4, 16).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! AOT manifest parsing (artifacts/manifest.json written by aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::DType;
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = match j.req("dtype")?.as_str() {
+            Some("f32") => DType::F32,
+            Some("i32") => DType::I32,
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        };
+        let shape = j
+            .req("shape")?
+            .as_usize_vec()
+            .context("shape must be an int array")?;
+        Ok(TensorSpec { dtype, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry: file + signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactDesc {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactDesc {
+    fn from_json(j: &Json) -> Result<ArtifactDesc> {
+        Ok(ArtifactDesc {
+            file: j.req("file")?.as_str().context("file")?.to_string(),
+            inputs: j
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One pipeline stage's artifacts + parameter layout.
+#[derive(Debug, Clone)]
+pub struct StageManifest {
+    pub index: usize,
+    pub first: bool,
+    pub last: bool,
+    pub layers: Vec<usize>,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_file: String,
+    pub fwd: ArtifactDesc,
+    pub bwd: ArtifactDesc,
+    pub adam: ArtifactDesc,
+}
+
+/// Model configuration captured at AOT time.
+#[derive(Debug, Clone)]
+pub struct AotConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub microbatch: usize,
+    pub use_pallas: bool,
+}
+
+/// Profiling artifact entry (cost-model calibration).
+#[derive(Debug, Clone)]
+pub struct ProfileDesc {
+    pub artifact: ArtifactDesc,
+    pub hidden: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub flops_fwd: f64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub kernels: String,
+    pub config: AotConfig,
+    pub param_count: usize,
+    pub partition: Vec<usize>,
+    pub stages: Vec<StageManifest>,
+    pub profiles: Vec<ProfileDesc>,
+    pub smoke: ArtifactDesc,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            j.req("format_version")?.as_usize() == Some(1),
+            "unsupported manifest version"
+        );
+        let cfg = j.req("config")?;
+        let config = AotConfig {
+            vocab: cfg.req("vocab")?.as_usize().context("vocab")?,
+            hidden: cfg.req("hidden")?.as_usize().context("hidden")?,
+            layers: cfg.req("layers")?.as_usize().context("layers")?,
+            heads: cfg.req("heads")?.as_usize().context("heads")?,
+            seq: cfg.req("seq")?.as_usize().context("seq")?,
+            microbatch: cfg.req("microbatch")?.as_usize().context("microbatch")?,
+            use_pallas: cfg.req("use_pallas")?.as_bool().unwrap_or(true),
+        };
+        let stages = j
+            .req("stages")?
+            .as_arr()
+            .context("stages")?
+            .iter()
+            .map(|s| {
+                Ok(StageManifest {
+                    index: s.req("index")?.as_usize().context("index")?,
+                    first: s.req("first")?.as_bool().context("first")?,
+                    last: s.req("last")?.as_bool().context("last")?,
+                    layers: s.req("layers")?.as_usize_vec().context("layers")?,
+                    param_names: s
+                        .req("param_names")?
+                        .as_arr()
+                        .context("param_names")?
+                        .iter()
+                        .map(|n| Ok(n.as_str().context("name")?.to_string()))
+                        .collect::<Result<_>>()?,
+                    param_shapes: s
+                        .req("param_shapes")?
+                        .as_arr()
+                        .context("param_shapes")?
+                        .iter()
+                        .map(|v| v.as_usize_vec().context("shape"))
+                        .collect::<Result<_>>()?,
+                    param_file: s.req("param_file")?.as_str().context("param_file")?.to_string(),
+                    fwd: ArtifactDesc::from_json(s.req("fwd")?)?,
+                    bwd: ArtifactDesc::from_json(s.req("bwd")?)?,
+                    adam: ArtifactDesc::from_json(s.req("adam")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let profiles = j
+            .req("profiles")?
+            .as_arr()
+            .context("profiles")?
+            .iter()
+            .map(|p| {
+                Ok(ProfileDesc {
+                    artifact: ArtifactDesc::from_json(p)?,
+                    hidden: p.req("hidden")?.as_usize().context("hidden")?,
+                    seq: p.req("seq")?.as_usize().context("seq")?,
+                    batch: p.req("batch")?.as_usize().context("batch")?,
+                    flops_fwd: p.req("flops_fwd")?.as_f64().context("flops")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            preset: j.req("preset")?.as_str().unwrap_or("?").to_string(),
+            kernels: j.req("kernels")?.as_str().unwrap_or("?").to_string(),
+            config,
+            param_count: j.req("param_count")?.as_usize().context("param_count")?,
+            partition: j.req("partition")?.as_usize_vec().context("partition")?,
+            stages,
+            profiles,
+            smoke: ArtifactDesc::from_json(j.req("smoke")?)?,
+        })
+    }
+
+    /// Total parameter count across stages from the declared shapes.
+    pub fn declared_params(&self) -> usize {
+        self.stages
+            .iter()
+            .flat_map(|s| s.param_shapes.iter())
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1, "preset": "tiny", "kernels": "pallas",
+      "config": {"vocab": 512, "hidden": 128, "layers": 2, "heads": 4,
+                 "seq": 64, "microbatch": 2, "ffn_mult": 4, "use_pallas": true},
+      "param_count": 536064, "partition": [1, 1],
+      "adam": {"lr": 0.001, "b1": 0.9, "b2": 0.999, "eps": 1e-8},
+      "stages": [{
+        "index": 0, "first": true, "last": false, "layers": [0],
+        "param_names": ["emb.tok"], "param_shapes": [[512, 128]],
+        "param_file": "stage0_params.bin",
+        "fwd": {"file": "stage0_fwd.hlo.txt",
+                "inputs": [{"dtype":"f32","shape":[512,128]},{"dtype":"i32","shape":[2,64]}],
+                "outputs": [{"dtype":"f32","shape":[2,64,128]}]},
+        "bwd": {"file": "b", "inputs": [], "outputs": []},
+        "adam": {"file": "a", "inputs": [], "outputs": []}
+      }],
+      "profiles": [{"file": "p.hlo.txt", "inputs": [], "outputs": [],
+                    "hidden": 256, "seq": 128, "batch": 4, "flops_fwd": 1e9}],
+      "smoke": {"file": "s.hlo.txt", "inputs": [{"dtype":"f32","shape":[]}],
+                "outputs": [{"dtype":"f32","shape":[16]}]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("galvatron_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.config.hidden, 128);
+        assert_eq!(m.partition, vec![1, 1]);
+        assert_eq!(m.stages.len(), 1);
+        assert!(m.stages[0].first && !m.stages[0].last);
+        assert_eq!(m.stages[0].fwd.inputs[1].dtype, DType::I32);
+        assert_eq!(m.stages[0].fwd.outputs[0].shape, vec![2, 64, 128]);
+        assert_eq!(m.declared_params(), 512 * 128);
+        assert_eq!(m.profiles[0].flops_fwd, 1e9);
+        assert_eq!(m.smoke.inputs[0].numel(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("galvatron_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, SAMPLE.replace("\"format_version\": 1", "\"format_version\": 9")).unwrap();
+        assert!(Manifest::load(&path).is_err());
+    }
+}

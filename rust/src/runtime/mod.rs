@@ -1,0 +1,206 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client — the only place Rust touches XLA. Python never runs here.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id protos that xla_extension 0.5.1
+//! rejects.
+
+pub mod manifest;
+pub mod profile;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use manifest::{Manifest, StageManifest, TensorSpec};
+
+/// Element type of a tensor crossing the FFI boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A host-side tensor (what the coordinator shuttles around).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to an XLA literal (host copy). Public so the coordinator
+    /// can cache parameter literals across calls (§Perf).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                let flat = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                flat.reshape(&dims)?
+            }
+            HostTensor::I32 { shape, data } => {
+                let flat = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                flat.reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? },
+            DType::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? },
+        })
+    }
+}
+
+/// A compiled executable plus its manifest-declared signature.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host tensors; returns the unpacked output tuple.
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("packing inputs of {}", self.name))?;
+        self.run_literals(&literals.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with pre-built literals (hot path: the coordinator caches
+    /// parameter literals across microbatches instead of re-copying them).
+    pub fn run_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            literals.len() == self.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.inputs.len(),
+            literals.len()
+        );
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        // AOT lowers with return_tuple=True: always a tuple root.
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.outputs.len(),
+            parts.len()
+        );
+        parts
+            .iter()
+            .zip(&self.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// The PJRT runtime: client + artifact loader.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the manifest from the artifacts directory.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.dir.join("manifest.json"))
+    }
+
+    /// Load + compile one artifact described by (file, inputs, outputs).
+    pub fn load(&self, name: &str, file: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> Result<Artifact> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Artifact { name: name.to_string(), inputs, outputs, exe })
+    }
+
+    /// Read a raw little-endian f32 parameter file, split per the shapes.
+    pub fn load_params(&self, file: &str, shapes: &[Vec<usize>]) -> Result<Vec<HostTensor>> {
+        let bytes = std::fs::read(self.dir.join(file))
+            .with_context(|| format!("reading {file}"))?;
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        anyhow::ensure!(bytes.len() == 4 * total, "{file}: size mismatch");
+        let mut floats = vec![0f32; total];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        let mut out = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for shape in shapes {
+            let n: usize = shape.iter().product();
+            out.push(HostTensor::F32 { shape: shape.clone(), data: floats[off..off + n].to_vec() });
+            off += n;
+        }
+        Ok(out)
+    }
+}

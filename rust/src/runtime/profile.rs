@@ -1,0 +1,100 @@
+//! Cost-model calibration by profiling (paper §V: "take advantages from
+//! both sides" — profiling for compute, simulation for communication).
+//!
+//! Executes the `profile_layer_h*` artifacts on the PJRT CPU client,
+//! measures per-forward wallclock, and derives the effective FLOP/s of
+//! this host — producing a calibrated [`GpuSpec`] so planner tests and the
+//! e2e example can agree with real execution on this machine.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::GpuSpec;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// One profiled artifact's measurement.
+#[derive(Debug, Clone)]
+pub struct ProfileMeasurement {
+    pub hidden: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub flops_fwd: f64,
+    pub seconds_per_fwd: f64,
+    pub effective_flops: f64,
+}
+
+/// Profile every entry in the manifest; `reps` timed repetitions each.
+pub fn profile_layers(rt: &Runtime, reps: usize) -> Result<Vec<ProfileMeasurement>> {
+    let man = rt.manifest()?;
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut out = Vec::new();
+    for p in &man.profiles {
+        let art = rt.load(
+            &format!("profile_h{}", p.hidden),
+            &p.artifact.file,
+            p.artifact.inputs.clone(),
+            p.artifact.outputs.clone(),
+        )?;
+        let args: Vec<HostTensor> = art
+            .inputs
+            .iter()
+            .map(|spec| {
+                let n = spec.numel();
+                HostTensor::F32 {
+                    shape: spec.shape.clone(),
+                    data: (0..n).map(|_| rng.normal() as f32 * 0.05).collect(),
+                }
+            })
+            .collect();
+        // Warmup.
+        art.run(&args)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            art.run(&args)?;
+        }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        out.push(ProfileMeasurement {
+            hidden: p.hidden,
+            seq: p.seq,
+            batch: p.batch,
+            flops_fwd: p.flops_fwd,
+            seconds_per_fwd: secs,
+            effective_flops: p.flops_fwd / secs,
+        });
+    }
+    Ok(out)
+}
+
+/// Calibrated "GPU" spec for this host: median effective FLOP/s.
+pub fn calibrated_host_spec(measurements: &[ProfileMeasurement], mem_bytes: f64) -> GpuSpec {
+    let mut fl: Vec<f64> = measurements.iter().map(|m| m.effective_flops).collect();
+    fl.sort_by(f64::total_cmp);
+    let flops = if fl.is_empty() { 30e9 } else { fl[fl.len() / 2] };
+    GpuSpec { name: "calibrated-host".into(), mem_bytes, flops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_median() {
+        let ms: Vec<ProfileMeasurement> = [1e9, 3e9, 2e9]
+            .iter()
+            .map(|&f| ProfileMeasurement {
+                hidden: 256,
+                seq: 128,
+                batch: 4,
+                flops_fwd: 1e9,
+                seconds_per_fwd: 1.0,
+                effective_flops: f,
+            })
+            .collect();
+        let spec = calibrated_host_spec(&ms, 1e9);
+        assert_eq!(spec.flops, 2e9);
+        // Empty falls back to a sane default.
+        assert!(calibrated_host_spec(&[], 1e9).flops > 0.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Galvatron-Base optimization workflow (paper §IV-A, Algorithm 1).
+//!
+//! Sweep the global batch size upward; for every candidate PP degree,
+//! partition the model, run the stage-level DP search (dp.rs) under the
+//! device memory budget, compose the pipeline cost (Eq. 9), and track the
+//! best throughput until everything OOMs.
+
+use crate::cluster::ClusterSpec;
+use crate::cost::pipeline::{plan_cost, PlanCost, Schedule};
+use crate::cost::CostEstimator;
+use crate::model::ModelProfile;
+use crate::parallel::memory::LayerMemory;
+use crate::parallel::{ParallelPlan, Strategy};
+use crate::util::{pow2_divisors, MIB};
+
+use super::decision_tree::{candidate_strategies, SpaceOptions};
+use super::dp::{dp_search, DpInput};
+use super::partition::even_partition;
+
+/// Everything that configures one optimizer run.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Search-space construction options (dims, ckpt, pruning).
+    pub space: SpaceOptions,
+    /// Pipeline schedule for memory accounting.
+    pub schedule: Schedule,
+    /// If set, bypass enumeration: the only candidate strategy per stage
+    /// group (used by pure/expert baselines). Degree must equal group size.
+    pub fixed_strategy: Option<Strategy>,
+    /// PP degrees to explore; `None` = all powers of two up to N.
+    pub pp_degrees: Option<Vec<usize>>,
+    /// Compute/communication contention factor (§V).
+    pub overlap_slowdown: f64,
+    /// DP memory discretization (bytes).
+    pub granularity: f64,
+    /// Largest global batch size to consider.
+    pub max_batch: usize,
+    /// Stop after this many consecutive infeasible batch sizes once any
+    /// feasible plan was found.
+    pub patience: usize,
+    /// Cap on the microbatch count (gradient-accumulation depth). Pure
+    /// single-shot baselines (DDP / Megatron-TP / FSDP as benchmarked in
+    /// the paper) use `Some(1)`; `None` = unbounded.
+    pub microbatch_limit: Option<usize>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            space: SpaceOptions::default(),
+            schedule: Schedule::OneFOneB,
+            fixed_strategy: None,
+            pp_degrees: None,
+            overlap_slowdown: crate::cost::DEFAULT_OVERLAP_SLOWDOWN,
+            granularity: 64.0 * MIB,
+            max_batch: 4096,
+            patience: 3,
+            microbatch_limit: None,
+        }
+    }
+}
+
+/// A search result: the plan plus its estimated cost.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub plan: ParallelPlan,
+    pub cost: PlanCost,
+}
+
+impl SearchOutcome {
+    pub fn throughput(&self) -> f64 {
+        self.cost.throughput
+    }
+}
+
+/// Per-layer diagnostics used by the BMW partition adjustment.
+#[derive(Debug, Clone)]
+pub struct LayerDiag {
+    /// Per-microbatch fwd+bwd time of the layer under its chosen strategy.
+    pub time: f64,
+    pub mem: LayerMemory,
+}
+
+/// Evaluate one (batch, pp, microbatches, partition) point: run the DP per
+/// stage and compose. Returns the feasible outcome + per-layer diagnostics.
+pub fn evaluate_partition(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+    batch: usize,
+    pp: usize,
+    microbatches: usize,
+    partition: &[usize],
+) -> Option<(SearchOutcome, Vec<LayerDiag>)> {
+    let n = cluster.n_devices;
+    debug_assert_eq!(n % pp, 0);
+    let group = n / pp;
+    let est = CostEstimator::new(cluster, pp, cfg.overlap_slowdown);
+    let b_m = batch as f64 / microbatches as f64;
+
+    let candidates: Vec<Strategy> = match &cfg.fixed_strategy {
+        Some(s) => {
+            let mut v = Vec::new();
+            if s.degree() == group {
+                v.push(s.clone());
+                if cfg.space.allow_ckpt {
+                    let mut ck = s.clone();
+                    ck.ckpt = true;
+                    v.push(ck);
+                }
+            }
+            v
+        }
+        None => candidate_strategies(group, &cfg.space),
+    };
+    if candidates.is_empty() {
+        return None;
+    }
+
+    let mut strategies: Vec<Strategy> = Vec::with_capacity(model.n_layers());
+    let mut start = 0usize;
+    for (s, &count) in partition.iter().enumerate() {
+        let layers = &model.layers[start..start + count];
+        let extra: Vec<f64> = (start..start + count).map(|i| model.extra_params(i)).collect();
+        let live = cfg.schedule.live_microbatches(s, pp, microbatches);
+        let res = dp_search(&DpInput {
+            layers,
+            extra_params: &extra,
+            strategies: &candidates,
+            estimator: &est,
+            b_m,
+            microbatches,
+            live_mb: live,
+            mem_budget: cluster.gpu.mem_bytes,
+            granularity: cfg.granularity,
+        })?;
+        strategies.extend(res.strategies);
+        start += count;
+    }
+
+    let plan = ParallelPlan {
+        pp,
+        partition: partition.to_vec(),
+        strategies,
+        batch,
+        microbatches,
+    };
+    let cost = plan_cost(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown);
+    if !cost.feasible {
+        return None;
+    }
+
+    // Per-layer diagnostics for partition adjustment.
+    let mut diags = Vec::with_capacity(model.n_layers());
+    for (i, layer) in model.layers.iter().enumerate() {
+        let c = est.layer_cost(layer, &plan.strategies[i], b_m, model.extra_params(i));
+        diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+    }
+    Some((SearchOutcome { plan, cost }, diags))
+}
+
+/// PP degrees to explore for a model/cluster pair.
+pub fn pp_degrees(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Vec<usize> {
+    match &cfg.pp_degrees {
+        Some(v) => v.clone(),
+        None => pow2_divisors(cluster.n_devices)
+            .into_iter()
+            .filter(|&p| p <= model.n_layers())
+            .collect(),
+    }
+}
+
+/// Galvatron-Base (Algorithm 1): even-layer pipeline partition, batch-size
+/// sweep, DP per stage, best throughput wins.
+pub fn optimize(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Option<SearchOutcome> {
+    let mut best: Option<SearchOutcome> = None;
+    let mut infeasible_streak = 0usize;
+
+    for batch in super::batch_candidates(cfg.max_batch) {
+        let mut any_feasible = false;
+        for pp in pp_degrees(model, cluster, cfg) {
+            let partition = even_partition(model.n_layers(), pp);
+            let mut worse_streak = 0usize;
+            let mut best_mb: Option<f64> = None;
+            let mut mbs = super::microbatch_candidates(batch, pp);
+            if let Some(cap) = cfg.microbatch_limit {
+                mbs.retain(|&m| m <= cap);
+                if mbs.is_empty() {
+                    mbs.push(cap.min(batch));
+                }
+            }
+            for m in mbs {
+                match evaluate_partition(model, cluster, cfg, batch, pp, m, &partition) {
+                    Some((out, _)) => {
+                        any_feasible = true;
+                        let t = out.throughput();
+                        if best_mb.map_or(true, |b| t > b) {
+                            best_mb = Some(t);
+                            worse_streak = 0;
+                        } else {
+                            worse_streak += 1;
+                        }
+                        if best.as_ref().map_or(true, |b| t > b.throughput()) {
+                            best = Some(out);
+                        }
+                    }
+                    None => worse_streak += 1,
+                }
+                if worse_streak >= 2 {
+                    break; // microbatch cost is quasi-convex; stop early
+                }
+            }
+        }
+        if any_feasible {
+            infeasible_streak = 0;
+        } else if best.is_some() {
+            infeasible_streak += 1;
+            if infeasible_streak >= cfg.patience {
+                break; // memory monotonicity: larger batches won't fit either
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::model::model_by_name;
+    use crate::util::GIB;
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { max_batch: 64, ..Default::default() }
+    }
+
+    #[test]
+    fn finds_plan_for_bert_on_titan8() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
+        let out = optimize(&model, &cluster, &quick_cfg()).expect("feasible plan");
+        out.plan.validate(32, 8).unwrap();
+        assert!(out.throughput() > 0.0);
+        assert!(out.cost.feasible);
+    }
+
+    #[test]
+    fn more_memory_never_hurts() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cfg = quick_cfg();
+        let t8 = optimize(&model, &cluster_by_name("titan8").unwrap().with_memory_budget(8.0 * GIB), &cfg)
+            .map(|o| o.throughput())
+            .unwrap_or(0.0);
+        let t16 = optimize(&model, &cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB), &cfg)
+            .map(|o| o.throughput())
+            .unwrap_or(0.0);
+        assert!(t16 >= t8 * 0.999, "t16 {t16} < t8 {t8}");
+    }
+
+    #[test]
+    fn tiny_budget_returns_none_or_small() {
+        let model = model_by_name("bert-huge-48").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(0.5 * GIB);
+        assert!(optimize(&model, &cluster, &quick_cfg()).is_none());
+    }
+
+    #[test]
+    fn fixed_strategy_restricts_plan() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
+        let cfg = SearchConfig {
+            fixed_strategy: Some(Strategy::single(crate::parallel::Dim::Sdp, 8, false)),
+            pp_degrees: Some(vec![1]),
+            space: SpaceOptions::default().no_ckpt(),
+            max_batch: 64,
+            ..Default::default()
+        };
+        let out = optimize(&model, &cluster, &cfg).expect("sdp fits");
+        assert!(out.plan.strategies.iter().all(|s| s.sdp() == 8 && !s.ckpt));
+        assert_eq!(out.plan.pp, 1);
+    }
+
+    #[test]
+    fn ckpt_space_enables_larger_batches() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(8.0 * GIB);
+        let with = optimize(&model, &cluster, &SearchConfig { max_batch: 128, ..Default::default() });
+        let without = optimize(
+            &model,
+            &cluster,
+            &SearchConfig { max_batch: 128, space: SpaceOptions::default().no_ckpt(), ..Default::default() },
+        );
+        let bw = with.as_ref().map(|o| o.plan.batch).unwrap_or(0);
+        let bo = without.as_ref().map(|o| o.plan.batch).unwrap_or(0);
+        assert!(bw >= bo, "ckpt batch {bw} < no-ckpt batch {bo}");
+    }
+}

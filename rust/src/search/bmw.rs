@@ -1,0 +1,360 @@
+//! Galvatron-BMW: bi-objective optimization of pipeline workload balance
+//! (paper §IV-B, Algorithm 2, Appendix B).
+//!
+//! Starting from the memory-balanced partition p_m, iteratively cut the
+//! workload of the slowest stage by moving its boundary layer to an
+//! adjacent stage, accepting a new partition p' only if
+//!   (1) its max stage time does not exceed the previous maximum,
+//!   (2) its stage memories fit the budget,
+//!   (3) its stage memories do not exceed the max stage memory of the
+//!       time-balanced partition p_t,
+//! which guarantees the Eq. 7/8 sandwich: alpha_t(p_m) <= alpha_t(p') <=
+//! alpha_t(p_t) and alpha_m(p_t) <= alpha_m(p') <= alpha_m(p_m).
+
+use std::collections::VecDeque;
+
+use crate::cluster::ClusterSpec;
+use crate::cost::pipeline::Schedule;
+use crate::model::ModelProfile;
+use crate::parallel::memory::stage_peak_memory;
+use crate::util::GIB;
+
+use super::base::{evaluate_partition, pp_degrees, LayerDiag, SearchConfig, SearchOutcome};
+use super::partition::{balanced_partition, even_partition};
+
+/// Memory-balanced partition p_m with 1F1B live-microbatch awareness:
+/// stage s of P keeps (P - s) microbatches of activations live, so the
+/// greedy sweep weighs layer activations by the stage's live count.
+pub fn memory_balanced_partition(
+    act_weights: &[f64],
+    ms_weights: &[f64],
+    stages: usize,
+    microbatches: usize,
+    schedule: Schedule,
+) -> Vec<usize> {
+    let n = act_weights.len();
+    assert_eq!(ms_weights.len(), n);
+    assert!(stages >= 1 && stages <= n);
+    if stages == 1 {
+        return vec![n];
+    }
+    // Binary search the memory bottleneck.
+    let stage_weight = |s: usize, range: std::ops::Range<usize>| -> f64 {
+        let live = schedule.live_microbatches(s, stages, microbatches) as f64;
+        range
+            .map(|i| act_weights[i] * live + ms_weights[i])
+            .sum()
+    };
+    let total_hi: f64 = (0..n)
+        .map(|i| act_weights[i] * stages as f64 + ms_weights[i])
+        .sum();
+    let (mut lo, mut hi) = (0.0f64, total_hi);
+    let feasible = |cap: f64| -> Option<Vec<usize>> {
+        let mut counts = Vec::with_capacity(stages);
+        let mut i = 0usize;
+        for s in 0..stages {
+            let live = schedule.live_microbatches(s, stages, microbatches) as f64;
+            let remaining_stages = stages - s - 1;
+            let mut acc = 0.0;
+            let mut taken = 0usize;
+            while i < n {
+                // Leave at least one layer per remaining stage.
+                if n - i <= remaining_stages {
+                    break;
+                }
+                let w = act_weights[i] * live + ms_weights[i];
+                if taken > 0 && acc + w > cap {
+                    break;
+                }
+                acc += w;
+                taken += 1;
+                i += 1;
+            }
+            if taken == 0 {
+                return None;
+            }
+            counts.push(taken);
+        }
+        if i == n {
+            Some(counts)
+        } else {
+            None
+        }
+    };
+    let mut best = None;
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if let Some(c) = feasible(mid) {
+            best = Some(c);
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let counts = best.unwrap_or_else(|| even_partition(n, stages));
+    debug_assert_eq!(counts.iter().sum::<usize>(), n);
+    // Silence unused warning in release builds.
+    let _ = stage_weight;
+    counts
+}
+
+/// Proxy stage times/memories for a candidate partition, reusing the
+/// per-layer diagnostics from the most recent full search (the validation
+/// step of Algorithm 2 line 14 — cheap, no DP re-run).
+fn proxy_stage_stats(
+    diags: &[LayerDiag],
+    partition: &[usize],
+    microbatches: usize,
+    schedule: Schedule,
+) -> (Vec<f64>, Vec<f64>) {
+    let p = partition.len();
+    let mut times = Vec::with_capacity(p);
+    let mut mems = Vec::with_capacity(p);
+    let mut start = 0usize;
+    for (s, &c) in partition.iter().enumerate() {
+        let t: f64 = diags[start..start + c].iter().map(|d| d.time).sum();
+        let live = schedule.live_microbatches(s, p, microbatches);
+        let layer_mems: Vec<_> = diags[start..start + c].iter().map(|d| d.mem).collect();
+        times.push(t);
+        mems.push(stage_peak_memory(&layer_mems, live));
+        start += c;
+    }
+    (times, mems)
+}
+
+/// One adjustment step: move a boundary layer out of the slowest stage.
+/// Returns candidate partitions (shrink-left and shrink-right variants).
+fn adjust_candidates(partition: &[usize], slowest: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    if partition[slowest] <= 1 {
+        return out;
+    }
+    if slowest > 0 {
+        // Give the slowest stage's first layer to the previous stage.
+        let mut p = partition.to_vec();
+        p[slowest] -= 1;
+        p[slowest - 1] += 1;
+        out.push(p);
+    }
+    if slowest + 1 < partition.len() {
+        // Give the slowest stage's last layer to the next stage.
+        let mut p = partition.to_vec();
+        p[slowest] -= 1;
+        p[slowest + 1] += 1;
+        out.push(p);
+    }
+    out
+}
+
+/// Galvatron-BMW (Algorithm 2): Galvatron-Base plus bi-objective pipeline
+/// partition optimization.
+pub fn optimize_bmw(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Option<SearchOutcome> {
+    let mut best: Option<SearchOutcome> = None;
+    let mut infeasible_streak = 0usize;
+    let n_layers = model.n_layers();
+
+    let flops_w: Vec<f64> = model.layers.iter().map(|l| l.flops_fwd).collect();
+
+    for batch in super::batch_candidates(cfg.max_batch) {
+        let mut any_feasible = false;
+        for pp in pp_degrees(model, cluster, cfg) {
+            if pp < 2 && cfg.pp_degrees.is_none() {
+                // Algorithm 2 line 5 iterates P in {2,4,...}; P=1 has no
+                // pipeline to balance — still evaluate it via the even path
+                // so pure intra-stage plans are not lost.
+                for m in super::microbatch_candidates(batch, 1) {
+                    if let Some((out, _)) =
+                        evaluate_partition(model, cluster, cfg, batch, 1, m, &[n_layers])
+                    {
+                        any_feasible = true;
+                        if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
+                            best = Some(out);
+                        }
+                    }
+                }
+                continue;
+            }
+            let group = cluster.n_devices / pp;
+            for m in super::microbatch_candidates(batch, pp) {
+                let b_m = batch as f64 / m as f64;
+                // Strategy-agnostic per-layer weights for the initial
+                // partitions (Strategy_Init: memory under an even split of
+                // states across the group).
+                let act_w: Vec<f64> = model
+                    .layers
+                    .iter()
+                    .map(|l| l.act_bytes * b_m / group as f64)
+                    .collect();
+                let ms_w: Vec<f64> = (0..n_layers)
+                    .map(|i| {
+                        (model.layers[i].params + model.extra_params(i)) * 16.0 / group as f64
+                    })
+                    .collect();
+                let p_m = memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule);
+                let p_t = balanced_partition(&flops_w, pp);
+
+                let mut queue: VecDeque<Vec<usize>> = VecDeque::new();
+                let mut visited: Vec<Vec<usize>> = Vec::new();
+                // Seed with p_m (Algorithm 2 line 7); also evaluate the
+                // even and time-balanced partitions so BMW's answer is
+                // never worse than Galvatron-Base's for the same (B,P,m).
+                queue.push_back(p_m.clone());
+                queue.push_back(even_partition(n_layers, pp));
+                queue.push_back(p_t.clone());
+                let max_iters = 4 * n_layers;
+                let mut iters = 0usize;
+                let mut local_best_tp = f64::NEG_INFINITY;
+                let mut stale = 0usize;
+
+                while let Some(part) = queue.pop_front() {
+                    iters += 1;
+                    if iters > max_iters {
+                        break;
+                    }
+                    if visited.contains(&part) {
+                        continue;
+                    }
+                    visited.push(part.clone());
+                    let Some((out, diags)) =
+                        evaluate_partition(model, cluster, cfg, batch, pp, m, &part)
+                    else {
+                        continue;
+                    };
+                    any_feasible = true;
+                    if out.throughput() > local_best_tp {
+                        local_best_tp = out.throughput();
+                        stale = 0;
+                    } else {
+                        stale += 1;
+                        if stale > 6 {
+                            break;
+                        }
+                    }
+                    if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
+                        best = Some(out.clone());
+                    }
+
+                    // Adjustment (Algorithm 2 line 13-15).
+                    let (times, _mems) = proxy_stage_stats(&diags, &part, m, cfg.schedule);
+                    let c_max = times.iter().cloned().fold(0.0, f64::max);
+                    let slowest = times
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    // Validation limit (3): max stage memory under p_t.
+                    let (_, mems_pt) = proxy_stage_stats(&diags, &p_t, m, cfg.schedule);
+                    let mem_cap_pt = mems_pt.iter().cloned().fold(0.0, f64::max);
+                    for cand in adjust_candidates(&part, slowest) {
+                        if visited.contains(&cand) {
+                            continue;
+                        }
+                        let (t2, m2) = proxy_stage_stats(&diags, &cand, m, cfg.schedule);
+                        let cond1 = t2.iter().cloned().fold(0.0, f64::max) <= c_max + 1e-12;
+                        let cond2 = m2.iter().all(|&x| x <= cluster.gpu.mem_bytes);
+                        let cond3 = m2.iter().all(|&x| x <= mem_cap_pt.max(cluster.gpu.mem_bytes));
+                        if cond1 && cond2 && cond3 {
+                            queue.push_back(cand);
+                        }
+                    }
+                }
+            }
+        }
+        if any_feasible {
+            infeasible_streak = 0;
+        } else if best.is_some() {
+            infeasible_streak += 1;
+            if infeasible_streak >= cfg.patience {
+                break;
+            }
+        }
+    }
+    best
+}
+
+/// Report the two balance degrees of an outcome (Eq. 6), for Table V.
+pub fn balance_degrees(out: &SearchOutcome) -> (f64, f64) {
+    (out.cost.alpha_t, out.cost.alpha_m)
+}
+
+/// Pretty string for a partition, e.g. "[14,18]".
+pub fn partition_str(p: &[usize]) -> String {
+    format!(
+        "[{}]",
+        p.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+    )
+}
+
+/// Memory budget helper for tables.
+pub fn gb(bytes: f64) -> f64 {
+    bytes / GIB
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::model::model_by_name;
+
+    #[test]
+    fn memory_balanced_accounts_for_1f1b_live() {
+        // Uniform layers, 4 stages, many microbatches: stage 0 holds 4
+        // live microbatches, stage 3 holds 1 -> deeper stages get MORE
+        // layers (paper Fig. 4 memory-balanced pipelines).
+        let act = vec![100.0; 32];
+        let ms = vec![1.0; 32];
+        let p = memory_balanced_partition(&act, &ms, 4, 8, Schedule::OneFOneB);
+        assert_eq!(p.iter().sum::<usize>(), 32);
+        assert!(
+            p[3] > p[0],
+            "deeper stages must take more layers under 1F1B: {p:?}"
+        );
+    }
+
+    #[test]
+    fn memory_balanced_gpipe_is_even_for_uniform() {
+        let act = vec![100.0; 32];
+        let ms = vec![1.0; 32];
+        let p = memory_balanced_partition(&act, &ms, 4, 8, Schedule::GPipe);
+        assert_eq!(p, vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn adjustment_candidates_move_one_layer() {
+        let cands = adjust_candidates(&[8, 8, 8, 8], 1);
+        assert_eq!(cands.len(), 2);
+        assert!(cands.contains(&vec![9, 7, 8, 8]));
+        assert!(cands.contains(&vec![8, 7, 9, 8]));
+        assert!(adjust_candidates(&[1, 31], 0).is_empty());
+    }
+
+    #[test]
+    fn bmw_beats_or_matches_base() {
+        let model = model_by_name("t5-512/4-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(8.0 * GIB);
+        let cfg = SearchConfig { max_batch: 32, ..Default::default() };
+        let base = super::super::base::optimize(&model, &cluster, &cfg).map(|o| o.throughput());
+        let bmw = optimize_bmw(&model, &cluster, &cfg).map(|o| o.throughput());
+        match (base, bmw) {
+            (Some(b), Some(w)) => assert!(w >= b * 0.98, "bmw {w} << base {b}"),
+            (None, _) => {}
+            (Some(b), None) => panic!("bmw lost feasibility that base had ({b})"),
+        }
+    }
+
+    #[test]
+    fn bmw_outcome_valid() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(12.0 * GIB);
+        let cfg = SearchConfig { max_batch: 32, ..Default::default() };
+        if let Some(out) = optimize_bmw(&model, &cluster, &cfg) {
+            out.plan.validate(32, 8).unwrap();
+            assert!(out.cost.feasible);
+            let (at, am) = balance_degrees(&out);
+            let bound = 1.0 - 1.0 / out.plan.pp as f64;
+            assert!(at >= 0.0 && at <= bound + 1e-9);
+            assert!(am >= 0.0 && am <= bound + 1e-9);
+        }
+    }
+}

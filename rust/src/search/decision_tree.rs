@@ -1,0 +1,191 @@
+//! Decision-tree search-space construction (paper §III-B).
+//!
+//! For a stage device group of size G (a power of two), the candidate
+//! hybrid strategies are ordered sequences of (dimension, degree) levels:
+//!
+//!   * tree height = number of parallelism paradigms used,
+//!   * no dimension repeats across levels,
+//!   * non-leaf degrees come from {2, 4, 8, ...},
+//!   * Takeaway #3 prunes any tree containing both DP and SDP,
+//!   * each tree exists with and without CKPT.
+//!
+//! For 8 GPUs this yields 11 + 7 + 3 + 1 = 22 trees across PP degrees
+//! {1,2,4,8}, i.e. 44 candidates with CKPT — the counts in paper Fig. 3
+//! (and 68 pre-Takeaway-3) — verified by unit tests below.
+
+use crate::parallel::{Dim, Strategy};
+use crate::util::is_pow2;
+
+/// Options controlling search-space construction (used to express the
+/// restricted baselines: DP+TP, DP+PP, no-CKPT, ...).
+#[derive(Debug, Clone)]
+pub struct SpaceOptions {
+    /// Dimensions available inside a stage.
+    pub dims: Vec<Dim>,
+    /// Whether CKPT variants are generated.
+    pub allow_ckpt: bool,
+    /// Whether Takeaway #3 (no DP+SDP mixing) prunes the space.
+    pub takeaway3: bool,
+}
+
+impl Default for SpaceOptions {
+    fn default() -> Self {
+        SpaceOptions { dims: vec![Dim::Dp, Dim::Sdp, Dim::Tp], allow_ckpt: true, takeaway3: true }
+    }
+}
+
+impl SpaceOptions {
+    pub fn no_ckpt(mut self) -> Self {
+        self.allow_ckpt = false;
+        self
+    }
+
+    pub fn with_dims(mut self, dims: &[Dim]) -> Self {
+        self.dims = dims.to_vec();
+        self
+    }
+}
+
+/// Enumerate the candidate strategies for one stage group of `group`
+/// devices. Order within the returned vector is deterministic.
+pub fn candidate_strategies(group: usize, opts: &SpaceOptions) -> Vec<Strategy> {
+    assert!(is_pow2(group), "group size must be a power of two, got {group}");
+    let mut levelings: Vec<Vec<(Dim, usize)>> = Vec::new();
+    enumerate_levels(group, &opts.dims, opts.takeaway3, &mut Vec::new(), &mut levelings);
+
+    let mut out = Vec::new();
+    for levels in levelings {
+        out.push(Strategy { levels: levels.clone(), ckpt: false });
+        if opts.allow_ckpt {
+            out.push(Strategy { levels, ckpt: true });
+        }
+    }
+    out
+}
+
+fn enumerate_levels(
+    remaining: usize,
+    dims: &[Dim],
+    takeaway3: bool,
+    prefix: &mut Vec<(Dim, usize)>,
+    out: &mut Vec<Vec<(Dim, usize)>>,
+) {
+    if remaining == 1 {
+        out.push(prefix.clone());
+        return;
+    }
+    for &dim in dims {
+        if prefix.iter().any(|(d, _)| *d == dim) {
+            continue;
+        }
+        if takeaway3 {
+            let has_dp = dim == Dim::Dp || prefix.iter().any(|(d, _)| *d == Dim::Dp);
+            let has_sdp = dim == Dim::Sdp || prefix.iter().any(|(d, _)| *d == Dim::Sdp);
+            if has_dp && has_sdp {
+                continue;
+            }
+        }
+        let mut degree = 2;
+        while degree <= remaining {
+            prefix.push((dim, degree));
+            enumerate_levels(remaining / degree, dims, takeaway3, prefix, out);
+            prefix.pop();
+            degree *= 2;
+        }
+    }
+}
+
+/// Total candidate count across all PP degrees for `n` devices — the
+/// "44 strategies for 8 GPUs" quantity of paper §III-B.
+pub fn total_candidates(n: usize, opts: &SpaceOptions) -> usize {
+    crate::util::pow2_divisors(n)
+        .into_iter()
+        .map(|pp| candidate_strategies(n / pp, opts).len())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counts_8_gpus() {
+        let full = SpaceOptions::default();
+        // Per-group counts (with CKPT): G=8 -> 22, G=4 -> 14, G=2 -> 6, G=1 -> 2.
+        assert_eq!(candidate_strategies(8, &full).len(), 22);
+        assert_eq!(candidate_strategies(4, &full).len(), 14);
+        assert_eq!(candidate_strategies(2, &full).len(), 6);
+        assert_eq!(candidate_strategies(1, &full).len(), 2);
+        // Paper: 44 candidates for 8 GPUs across PP degrees.
+        assert_eq!(total_candidates(8, &full), 44);
+        // Without CKPT: 22 (the "Galvatron" variant count in Fig. 5b).
+        assert_eq!(total_candidates(8, &full.clone().no_ckpt()), 22);
+        // Without Takeaway #3 pruning: 68 (paper §III-B).
+        let no_t3 = SpaceOptions { takeaway3: false, ..Default::default() };
+        assert_eq!(total_candidates(8, &no_t3), 68);
+    }
+
+    #[test]
+    fn limited_dims_match_prior_work_counts() {
+        // Paper Fig. 5(b): "both DP+TP and DP+PP have a total of 4 alternate
+        // strategies on 8 GPUs" (per PP degree incl. pure forms, no ckpt).
+        let dp_tp = SpaceOptions::default().with_dims(&[Dim::Dp, Dim::Tp]).no_ckpt();
+        // Group 8: DP8, TP8, DP2-TP4, DP4-TP2, TP2-DP4, TP4-DP2 ... ordered:
+        // sequences with product 8 over {DP,TP}.
+        let g8 = candidate_strategies(8, &dp_tp);
+        assert!(g8.len() >= 4);
+        for s in &g8 {
+            assert!(s.sdp() == 1 && !s.ckpt);
+        }
+        let dp_only = SpaceOptions::default().with_dims(&[Dim::Dp]).no_ckpt();
+        assert_eq!(candidate_strategies(8, &dp_only).len(), 1); // DP8
+    }
+
+    #[test]
+    fn all_candidates_valid_and_cover_group() {
+        for g in [1usize, 2, 4, 8, 16] {
+            for s in candidate_strategies(g, &SpaceOptions::default()) {
+                assert!(s.is_valid(), "{s}");
+                assert_eq!(s.degree(), g, "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_dp_sdp_mix_after_takeaway3() {
+        for s in candidate_strategies(8, &SpaceOptions::default()) {
+            assert!(!(s.dp() > 1 && s.sdp() > 1), "{s}");
+        }
+        // Pre-pruning the mixes exist.
+        let no_t3 = SpaceOptions { takeaway3: false, ..Default::default() };
+        assert!(candidate_strategies(8, &no_t3)
+            .iter()
+            .any(|s| s.dp() > 1 && s.sdp() > 1));
+    }
+
+    #[test]
+    fn orderings_are_distinct_candidates() {
+        // Permutations capture topology placement (paper: "it is necessary
+        // to consider the permutations of hybrid strategies").
+        let cands = candidate_strategies(8, &SpaceOptions::default().no_ckpt());
+        let dp2_tp4 = cands.iter().any(|s| s.levels == vec![(Dim::Dp, 2), (Dim::Tp, 4)]);
+        let tp4_dp2 = cands.iter().any(|s| s.levels == vec![(Dim::Tp, 4), (Dim::Dp, 2)]);
+        assert!(dp2_tp4 && tp4_dp2);
+    }
+
+    #[test]
+    fn deterministic_order() {
+        let a = candidate_strategies(8, &SpaceOptions::default());
+        let b = candidate_strategies(8, &SpaceOptions::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scales_to_64_gpus() {
+        let n = total_candidates(64, &SpaceOptions::default());
+        assert!(n > 44, "64-GPU space must be larger: {n}");
+        // Still far below the unpruned combinatorial space.
+        let no_t3 = SpaceOptions { takeaway3: false, ..Default::default() };
+        assert!(n < total_candidates(64, &no_t3));
+    }
+}

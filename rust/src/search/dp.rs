@@ -1,0 +1,408 @@
+//! Dynamic-programming layer-strategy assignment (paper §IV-A2, Eq. 4,
+//! Appendix A / Algorithm 3).
+//!
+//! For one pipeline stage (a layer sub-sequence on a device group) we
+//! minimize the stage execution cost subject to the device memory budget.
+//! Following Appendix A1, the DP state is (layer, forward-memory bucket,
+//! strategy-of-last-layer): tracking forward memory E_f keeps the state
+//! linear in the budget; the full Eq. 2 peak (which adds backward spikes
+//! O_b and the 1F1B live-microbatch multiplier) is verified on the
+//! backtraced solution, scanning candidate terminal states in cost order —
+//! equivalent to Algorithm 3's E_fwd sweep.
+
+use crate::cost::estimator::{CostEstimator, LayerCost};
+use crate::model::LayerProfile;
+use crate::parallel::memory::stage_peak_memory;
+use crate::parallel::Strategy;
+
+/// Inputs for one stage-level DP search.
+pub struct DpInput<'a> {
+    /// The stage's layers, in order.
+    pub layers: &'a [LayerProfile],
+    /// Embedding/head params attributed to each layer (same length).
+    pub extra_params: &'a [f64],
+    /// Candidate strategies (all with degree == stage group size).
+    pub strategies: &'a [Strategy],
+    pub estimator: &'a CostEstimator,
+    /// Microbatch size (global samples per microbatch).
+    pub b_m: f64,
+    /// Microbatches per global batch (m).
+    pub microbatches: usize,
+    /// Live microbatches at this stage's peak (1F1B: P - stage_idx).
+    pub live_mb: usize,
+    /// Device memory budget E, bytes.
+    pub mem_budget: f64,
+    /// Memory discretization granularity, bytes.
+    pub granularity: f64,
+}
+
+/// Result of a stage-level DP search.
+#[derive(Debug, Clone)]
+pub struct DpResult {
+    /// Per-global-batch stage time: m·(fwd+bwd+R) + grad-sync extra.
+    pub cost_per_batch: f64,
+    /// Per-microbatch stage time without gradient sync.
+    pub time_nosync: f64,
+    /// Per-microbatch stage time of the sync microbatch.
+    pub time_sync: f64,
+    /// Eq. 2 peak memory (bytes) with the live-microbatch multiplier.
+    pub peak_mem: f64,
+    /// Chosen strategy per layer.
+    pub strategies: Vec<Strategy>,
+}
+
+const INF: f64 = f64::INFINITY;
+
+/// Run the DP search; `None` if no assignment fits the budget.
+pub fn dp_search(input: &DpInput) -> Option<DpResult> {
+    let nl = input.layers.len();
+    let ns = input.strategies.len();
+    if nl == 0 || ns == 0 {
+        return None;
+    }
+    let m = input.microbatches as f64;
+    let buckets = (input.mem_budget / input.granularity).floor() as usize;
+    if buckets == 0 {
+        return None;
+    }
+
+    // ---- Precompute per-(layer, strategy) costs and weights -------------
+    // weight = forward-memory share: model states + live·O_f (Eq. 3 with
+    // the schedule's live multiplier).
+    let mut cost: Vec<Vec<LayerCost>> = Vec::with_capacity(nl);
+    let mut weight: Vec<Vec<usize>> = Vec::with_capacity(nl);
+    let mut batch_cost: Vec<Vec<f64>> = Vec::with_capacity(nl);
+    for (l, layer) in input.layers.iter().enumerate() {
+        let mut crow = Vec::with_capacity(ns);
+        let mut wrow = Vec::with_capacity(ns);
+        let mut brow = Vec::with_capacity(ns);
+        for s in input.strategies {
+            let c = input.estimator.layer_cost(layer, s, input.b_m, input.extra_params[l]);
+            let fwd_bytes = c.mem.o_ms + input.live_mb as f64 * c.mem.o_f;
+            wrow.push((fwd_bytes / input.granularity).ceil() as usize);
+            brow.push(m * (c.fwd + c.bwd) + (c.bwd_sync - c.bwd));
+            crow.push(c);
+        }
+        cost.push(crow);
+        weight.push(wrow);
+        batch_cost.push(brow);
+    }
+
+    // Transform costs R between consecutive layers (per batch: m times).
+    //
+    // §Perf: R(l, S_i, S_j) depends on the strategies only through their
+    // batch-split degrees (transform.rs), so strategies collapse into a
+    // handful of *split classes*. The DP transition then takes the min
+    // over classes instead of over all |S| predecessors, cutting the inner
+    // loop from O(|S|^2) to O(|S|·C), C = #distinct splits (<= 5 for 64
+    // GPUs). See EXPERIMENTS.md §Perf for the before/after.
+    let mut splits: Vec<usize> = input.strategies.iter().map(|s| s.batch_split()).collect();
+    splits.sort_unstable();
+    splits.dedup();
+    let nc = splits.len();
+    let class_of: Vec<usize> = input
+        .strategies
+        .iter()
+        .map(|s| splits.binary_search(&s.batch_split()).unwrap())
+        .collect();
+    // Representative strategy per class (transform cost only reads split).
+    let class_rep: Vec<usize> = (0..nc)
+        .map(|c| class_of.iter().position(|&x| x == c).unwrap())
+        .collect();
+    // r_class[l][ci][cj]: per-batch transform cost between split classes.
+    let mut r_class: Vec<Vec<Vec<f64>>> = Vec::with_capacity(nl);
+    r_class.push(vec![vec![0.0; nc]; 1]); // unused for l=0
+    for l in 1..nl {
+        let mut mat = vec![vec![0.0; nc]; nc];
+        for ci in 0..nc {
+            for cj in 0..nc {
+                mat[ci][cj] = m * input.estimator.transform_cost(
+                    &input.layers[l],
+                    &input.strategies[class_rep[ci]],
+                    &input.strategies[class_rep[cj]],
+                    input.b_m,
+                );
+            }
+        }
+        r_class.push(mat);
+    }
+    let r_between = |l: usize, i: usize, j: usize| r_class[l][class_of[i]][class_of[j]];
+
+    // ---- DP table --------------------------------------------------------
+    // dp[e][j]: min per-batch cost of layers 0..=l with exactly e buckets of
+    // forward memory used and layer l running strategy j.
+    let width = buckets + 1;
+    let mut prev = vec![INF; width * ns];
+    let mut parent: Vec<Vec<u32>> = Vec::with_capacity(nl);
+
+    // Layer 0.
+    let mut p0 = vec![u32::MAX; width * ns];
+    for j in 0..ns {
+        let w = weight[0][j];
+        if w <= buckets {
+            let idx = w * ns + j;
+            if batch_cost[0][j] < prev[idx] {
+                prev[idx] = batch_cost[0][j];
+                p0[idx] = j as u32; // self-marker
+            }
+        }
+    }
+    parent.push(p0);
+
+    for l in 1..nl {
+        let mut cur = vec![INF; width * ns];
+        let mut par = vec![u32::MAX; width * ns];
+        let mut best_class = vec![(INF, 0u32); nc];
+        for e_prev in 0..width {
+            let base = e_prev * ns;
+            // Collapse predecessors into split classes: min cost + argmin.
+            for b in best_class.iter_mut() {
+                *b = (INF, 0);
+            }
+            let mut any = false;
+            for i in 0..ns {
+                let c_prev = prev[base + i];
+                if c_prev < best_class[class_of[i]].0 {
+                    best_class[class_of[i]] = (c_prev, (base + i) as u32);
+                    any = true;
+                }
+            }
+            if !any {
+                continue; // empty column
+            }
+            for j in 0..ns {
+                let w = weight[l][j];
+                let e = e_prev + w;
+                if e > buckets {
+                    continue;
+                }
+                let cj = class_of[j];
+                let mut best = INF;
+                let mut best_par = u32::MAX;
+                for (ci, &(c_prev, par_idx)) in best_class.iter().enumerate() {
+                    if !c_prev.is_finite() {
+                        continue;
+                    }
+                    let c = c_prev + r_class[l][ci][cj];
+                    if c < best {
+                        best = c;
+                        best_par = par_idx;
+                    }
+                }
+                if !best.is_finite() {
+                    continue;
+                }
+                let c = best + batch_cost[l][j];
+                let idx = e * ns + j;
+                if c < cur[idx] {
+                    cur[idx] = c;
+                    par[idx] = best_par;
+                }
+            }
+        }
+        parent.push(par);
+        prev = cur;
+    }
+
+    // ---- Pick the cheapest terminal state whose true Eq. 2 peak fits ----
+    let mut terminals: Vec<(f64, usize)> = prev
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_finite())
+        .map(|(idx, c)| (*c, idx))
+        .collect();
+    terminals.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    for (c_batch, term_idx) in terminals {
+        // Backtrace.
+        let mut choice = vec![0usize; nl];
+        let mut idx = term_idx;
+        for l in (0..nl).rev() {
+            choice[l] = idx % ns;
+            if l > 0 {
+                idx = parent[l][idx] as usize;
+                debug_assert_ne!(idx, u32::MAX as usize);
+            }
+        }
+        // True peak (Eq. 2 with live multiplier).
+        let mems: Vec<_> = (0..nl).map(|l| cost[l][choice[l]].mem).collect();
+        let peak = stage_peak_memory(&mems, input.live_mb);
+        if peak <= input.mem_budget {
+            let mut nosync = 0.0;
+            let mut sync = 0.0;
+            for l in 0..nl {
+                let c = &cost[l][choice[l]];
+                nosync += c.fwd + c.bwd;
+                sync += c.fwd + c.bwd_sync;
+                if l > 0 {
+                    let rt = r_between(l, choice[l - 1], choice[l]) / m;
+                    nosync += rt;
+                    sync += rt;
+                }
+            }
+            return Some(DpResult {
+                cost_per_batch: c_batch,
+                time_nosync: nosync,
+                time_sync: sync,
+                peak_mem: peak,
+                strategies: choice.iter().map(|&j| input.strategies[j].clone()).collect(),
+            });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::model::model_by_name;
+    use crate::search::decision_tree::{candidate_strategies, SpaceOptions};
+    use crate::util::{GIB, MIB};
+
+    fn setup(budget_gb: f64) -> (Vec<LayerProfile>, Vec<f64>, Vec<Strategy>, CostEstimator, f64) {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let layers: Vec<_> = model.layers[..8].to_vec();
+        let extra = vec![0.0; 8];
+        let strategies = candidate_strategies(8, &SpaceOptions::default());
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(budget_gb * GIB);
+        let est = CostEstimator::new(&cluster, 1, 1.3);
+        (layers, extra, strategies, est, budget_gb * GIB)
+    }
+
+    fn run(budget_gb: f64, b_m: f64) -> Option<DpResult> {
+        let (layers, extra, strategies, est, budget) = setup(budget_gb);
+        dp_search(&DpInput {
+            layers: &layers,
+            extra_params: &extra,
+            strategies: &strategies,
+            estimator: &est,
+            b_m,
+            microbatches: 1,
+            live_mb: 1,
+            mem_budget: budget,
+            granularity: 32.0 * MIB,
+        })
+    }
+
+    #[test]
+    fn finds_feasible_plan() {
+        let r = run(16.0, 8.0).expect("feasible");
+        assert_eq!(r.strategies.len(), 8);
+        assert!(r.peak_mem <= 16.0 * GIB);
+        assert!(r.cost_per_batch.is_finite() && r.cost_per_batch > 0.0);
+    }
+
+    #[test]
+    fn respects_budget_always() {
+        for gb in [4.0, 8.0, 16.0] {
+            if let Some(r) = run(gb, 8.0) {
+                assert!(r.peak_mem <= gb * GIB, "budget {gb} violated: {}", r.peak_mem / GIB);
+            }
+        }
+    }
+
+    #[test]
+    fn cost_monotone_in_budget() {
+        // More memory can only help (paper: optimal substructure).
+        let c8 = run(8.0, 8.0).map(|r| r.cost_per_batch);
+        let c16 = run(16.0, 8.0).map(|r| r.cost_per_batch);
+        let c24 = run(24.0, 8.0).map(|r| r.cost_per_batch);
+        if let (Some(a), Some(b)) = (c16, c24) {
+            assert!(b <= a * 1.0001, "{b} vs {a}");
+        }
+        if let (Some(a), Some(b)) = (c8, c16) {
+            assert!(b <= a * 1.0001);
+        }
+    }
+
+    #[test]
+    fn infeasible_when_tiny_budget() {
+        assert!(run(0.25, 8.0).is_none());
+    }
+
+    #[test]
+    fn tight_budget_prefers_memory_saving_strategies() {
+        // Under a loose budget vs a tight one, the tight plan must use at
+        // least as much state sharding or checkpointing.
+        let loose = run(20.0, 8.0).unwrap();
+        let tight = run(6.0, 8.0);
+        if let Some(t) = tight {
+            let shard = |r: &DpResult| {
+                r.strategies
+                    .iter()
+                    .map(|s| s.state_shard() as f64 + if s.ckpt { 8.0 } else { 0.0 })
+                    .sum::<f64>()
+            };
+            assert!(shard(&t) >= shard(&loose), "tight {} loose {}", shard(&t), shard(&loose));
+            assert!(t.cost_per_batch >= loose.cost_per_batch * 0.999);
+        }
+    }
+
+    #[test]
+    fn matches_bruteforce_on_small_instance() {
+        // 3 layers, uniform-strategy brute force (the DP also explores
+        // non-uniform assignments, so dp <= best uniform).
+        let model = model_by_name("bert-huge-32").unwrap();
+        let layers = model.layers[..3].to_vec();
+        let extra = vec![0.0; 3];
+        let strategies = candidate_strategies(4, &SpaceOptions::default());
+        let cluster = cluster_by_name("titan8").unwrap();
+        let est = CostEstimator::new(&cluster, 2, 1.3);
+        let input = DpInput {
+            layers: &layers,
+            extra_params: &extra,
+            strategies: &strategies,
+            estimator: &est,
+            b_m: 4.0,
+            microbatches: 2,
+            live_mb: 2,
+            mem_budget: 24.0 * GIB,
+            granularity: 16.0 * MIB,
+        };
+        let dp = dp_search(&input).unwrap();
+
+        let mut best_uniform = f64::INFINITY;
+        for s in &strategies {
+            let mut total = 0.0;
+            let mut mems = Vec::new();
+            for (l, layer) in layers.iter().enumerate() {
+                let c = est.layer_cost(layer, s, 4.0, extra[l]);
+                total += 2.0 * (c.fwd + c.bwd) + (c.bwd_sync - c.bwd);
+                mems.push(c.mem);
+            }
+            if stage_peak_memory(&mems, 2) <= 24.0 * GIB {
+                best_uniform = best_uniform.min(total);
+            }
+        }
+        assert!(
+            dp.cost_per_batch <= best_uniform * 1.0001,
+            "dp {} vs uniform {}",
+            dp.cost_per_batch,
+            best_uniform
+        );
+    }
+
+    #[test]
+    fn granularity_insensitivity() {
+        let (layers, extra, strategies, est, budget) = setup(16.0);
+        let mut costs = Vec::new();
+        for gran in [16.0 * MIB, 64.0 * MIB] {
+            let r = dp_search(&DpInput {
+                layers: &layers,
+                extra_params: &extra,
+                strategies: &strategies,
+                estimator: &est,
+                b_m: 8.0,
+                microbatches: 1,
+                live_mb: 1,
+                mem_budget: budget,
+                granularity: gran,
+            })
+            .unwrap();
+            costs.push(r.cost_per_batch);
+        }
+        let rel = (costs[0] - costs[1]).abs() / costs[0];
+        assert!(rel < 0.10, "granularity changed cost by {:.1}%", rel * 100.0);
+    }
+}

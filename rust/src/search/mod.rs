@@ -1,0 +1,98 @@
+//! Parallelism optimization framework (paper §IV): search-space
+//! construction, stage-level DP, Galvatron-Base, Galvatron-BMW, and every
+//! baseline the paper compares against.
+
+pub mod baselines;
+pub mod base;
+pub mod bmw;
+pub mod decision_tree;
+pub mod dp;
+pub mod partition;
+
+pub use base::{optimize, SearchConfig, SearchOutcome};
+pub use bmw::optimize_bmw;
+pub use decision_tree::{candidate_strategies, SpaceOptions};
+
+use crate::cost::pipeline::Schedule;
+use crate::parallel::{Dim, Strategy};
+
+/// Which optimizer variant a named method uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Single fixed strategy (pure parallelisms, DeepSpeed-3D).
+    Fixed,
+    /// Galvatron-Base-style DP search with a given partition policy.
+    Base,
+    /// Full bi-objective workload balancing (Algorithm 2).
+    BiObjective,
+}
+
+/// Batch sizes explored by the sweep: dense at small B, geometric beyond.
+pub fn batch_candidates(max_batch: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut b = 8;
+    while b <= max_batch {
+        out.push(b);
+        b += if b < 128 {
+            8
+        } else if b < 512 {
+            32
+        } else if b < 2048 {
+            128
+        } else {
+            512
+        };
+    }
+    out
+}
+
+/// Microbatch-count candidates for batch `b` under `pp` stages: powers of
+/// two multiples of max(pp, 1) that divide... (we allow fractional
+/// microbatch sizes, so only m <= b is required), capped to 6 options.
+pub fn microbatch_candidates(b: usize, pp: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut m = pp.max(1);
+    while m <= b && out.len() < 6 {
+        out.push(m);
+        m *= 2;
+    }
+    if out.is_empty() {
+        out.push(b.max(1));
+    }
+    out
+}
+
+/// Convenience constructor for fixed-strategy levels.
+pub fn levels(spec: &[(Dim, usize)]) -> Strategy {
+    Strategy { levels: spec.to_vec(), ckpt: false }
+}
+
+/// Human description of a schedule.
+pub fn schedule_name(s: Schedule) -> &'static str {
+    match s {
+        Schedule::OneFOneB => "1F1B-Flush",
+        Schedule::GPipe => "GPipe",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_sweep_shape() {
+        let bs = batch_candidates(2048);
+        assert_eq!(bs[0], 8);
+        assert!(bs.windows(2).all(|w| w[1] > w[0]));
+        assert!(bs.contains(&128) && bs.contains(&512));
+        assert!(*bs.last().unwrap() <= 2048);
+    }
+
+    #[test]
+    fn microbatch_options() {
+        assert_eq!(microbatch_candidates(32, 4), vec![4, 8, 16, 32]);
+        assert_eq!(microbatch_candidates(8, 1), vec![1, 2, 4, 8]);
+        // b < pp: fall back to one sample per microbatch (m = b).
+        assert_eq!(microbatch_candidates(4, 8), vec![4]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Pipeline partition construction: even, memory-balanced (p_m) and
+//! time-balanced (p_t) contiguous partitions (paper §IV-B).
+//!
+//! Balanced partitions minimize the maximum stage weight over contiguous
+//! layer chunks — solved exactly with binary search over the bottleneck +
+//! a greedy feasibility sweep (classic linear-partitioning).
+
+/// Split `n_layers` into `stages` contiguous chunks as evenly as possible.
+pub fn even_partition(n_layers: usize, stages: usize) -> Vec<usize> {
+    assert!(stages >= 1 && stages <= n_layers);
+    let base = n_layers / stages;
+    let rem = n_layers % stages;
+    (0..stages).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Contiguous partition of `weights` into `stages` parts minimizing the
+/// maximum part sum. Returns layer counts per stage (every stage >= 1).
+pub fn balanced_partition(weights: &[f64], stages: usize) -> Vec<usize> {
+    let n = weights.len();
+    assert!(stages >= 1 && stages <= n);
+    if stages == 1 {
+        return vec![n];
+    }
+    let total: f64 = weights.iter().sum();
+    let maxw = weights.iter().cloned().fold(0.0, f64::max);
+    let (mut lo, mut hi) = (maxw, total);
+    // Binary search the bottleneck to within a tiny relative tolerance.
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(weights, stages, mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    // Greedy fill at the found bottleneck, then pad so every stage is
+    // non-empty (move boundaries back from the right).
+    let mut cuts = greedy_cuts(weights, stages, hi * (1.0 + 1e-12));
+    while cuts.len() < stages - 1 {
+        // Fewer parts needed than allowed: split the largest part.
+        let counts = cuts_to_counts(&cuts, n);
+        let (mut best, mut best_i) = (0usize, 0usize);
+        let mut start = 0;
+        for (i, c) in counts.iter().enumerate() {
+            if *c > best {
+                best = *c;
+                best_i = i;
+            }
+            start += c;
+        }
+        let _ = start;
+        let part_start: usize = counts[..best_i].iter().sum();
+        cuts.push(part_start + counts[best_i] / 2);
+        cuts.sort_unstable();
+    }
+    cuts_to_counts(&cuts, n)
+}
+
+/// Can `weights` be split into `stages` contiguous parts each <= cap?
+fn feasible(weights: &[f64], stages: usize, cap: f64) -> bool {
+    let mut parts = 1;
+    let mut acc: f64 = 0.0;
+    for &w in weights {
+        if w > cap {
+            return false;
+        }
+        if acc + w > cap {
+            parts += 1;
+            acc = w;
+            if parts > stages {
+                return false;
+            }
+        } else {
+            acc += w;
+        }
+    }
+    true
+}
+
+fn greedy_cuts(weights: &[f64], stages: usize, cap: f64) -> Vec<usize> {
+    let mut cuts = Vec::new();
+    let mut acc = 0.0;
+    let n = weights.len();
+    for (i, &w) in weights.iter().enumerate() {
+        if acc + w > cap && i > 0 {
+            cuts.push(i);
+            acc = w;
+        } else {
+            acc += w;
+        }
+        // Never leave fewer layers than stages remaining.
+        if cuts.len() == stages - 1 {
+            break;
+        }
+        let remaining_stages = stages - 1 - cuts.len();
+        let remaining_layers = n - (i + 1);
+        if remaining_layers == remaining_stages && i + 1 < n {
+            // Force cuts so that later stages get >= 1 layer each.
+            for c in (i + 1)..n {
+                cuts.push(c);
+                if cuts.len() == stages - 1 {
+                    break;
+                }
+            }
+            break;
+        }
+    }
+    cuts.truncate(stages - 1);
+    cuts
+}
+
+fn cuts_to_counts(cuts: &[usize], n: usize) -> Vec<usize> {
+    let mut counts = Vec::with_capacity(cuts.len() + 1);
+    let mut prev = 0;
+    for &c in cuts {
+        counts.push(c - prev);
+        prev = c;
+    }
+    counts.push(n - prev);
+    counts
+}
+
+/// Max part sum of a partition (for alpha computations / tests).
+pub fn max_stage_weight(weights: &[f64], counts: &[usize]) -> f64 {
+    let mut best: f64 = 0.0;
+    let mut i = 0;
+    for &c in counts {
+        let s: f64 = weights[i..i + c].iter().sum();
+        best = best.max(s);
+        i += c;
+    }
+    best
+}
+
+/// Balance degree alpha = 1 - max/sum (Eq. 6 numerator shape).
+pub fn balance_degree(weights: &[f64], counts: &[usize]) -> f64 {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    1.0 - max_stage_weight(weights, counts) / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn even_splits() {
+        assert_eq!(even_partition(32, 4), vec![8, 8, 8, 8]);
+        assert_eq!(even_partition(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(even_partition(4, 4), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn balanced_uniform_equals_even() {
+        let w = vec![1.0; 32];
+        assert_eq!(balanced_partition(&w, 4), vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn balanced_heterogeneous() {
+        // Heavy head: [8,1,1,1,1,1,1,1] into 2 -> [1,7] puts the heavy
+        // layer alone.
+        let w = vec![8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let counts = balanced_partition(&w, 2);
+        assert_eq!(counts.iter().sum::<usize>(), 8);
+        assert_eq!(max_stage_weight(&w, &counts), 8.0);
+    }
+
+    #[test]
+    fn every_stage_nonempty_property() {
+        // Property test: random weights, random stage counts.
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let n = rng.range(4, 40) as usize;
+            let stages = rng.range(2, 8.min(n as i64)) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0 + 0.01).collect();
+            let counts = balanced_partition(&w, stages);
+            assert_eq!(counts.len(), stages);
+            assert_eq!(counts.iter().sum::<usize>(), n);
+            assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_beats_even_on_skewed_weights() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let n = 24;
+            let w: Vec<f64> = (0..n).map(|i| if i < 4 { 20.0 } else { rng.f64() + 1.0 }).collect();
+            let bal = balanced_partition(&w, 4);
+            let even = even_partition(n, 4);
+            assert!(
+                max_stage_weight(&w, &bal) <= max_stage_weight(&w, &even) + 1e-9,
+                "bal {bal:?} even {even:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimality_vs_bruteforce_small() {
+        // Exhaustive check on small instances.
+        let mut rng = Rng::new(13);
+        for _ in 0..60 {
+            let n = rng.range(3, 9) as usize;
+            let stages = rng.range(2, n as i64) as usize;
+            let w: Vec<f64> = (0..n).map(|_| (rng.below(9) + 1) as f64).collect();
+            let got = max_stage_weight(&w, &balanced_partition(&w, stages));
+            let best = brute_best(&w, stages);
+            assert!((got - best).abs() < 1e-6, "w={w:?} stages={stages} got={got} best={best}");
+        }
+    }
+
+    fn brute_best(w: &[f64], stages: usize) -> f64 {
+        fn rec(w: &[f64], stages: usize) -> f64 {
+            if stages == 1 {
+                return w.iter().sum();
+            }
+            let mut best = f64::INFINITY;
+            for first in 1..=(w.len() - stages + 1) {
+                let head: f64 = w[..first].iter().sum();
+                let rest = rec(&w[first..], stages - 1);
+                best = best.min(head.max(rest));
+            }
+            best
+        }
+        rec(w, stages)
+    }
+
+    #[test]
+    fn balance_degree_bounds() {
+        let w = vec![1.0; 16];
+        let alpha = balance_degree(&w, &even_partition(16, 4));
+        assert!((alpha - 0.75).abs() < 1e-12); // perfect balance: 1 - 1/P
+    }
+}

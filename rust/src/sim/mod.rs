@@ -1,0 +1,427 @@
+//! Discrete-event simulator of distributed pipeline training — the
+//! "testbed" that substitutes the paper's GPU clusters (DESIGN.md §2).
+//!
+//! The simulator executes a [`ParallelPlan`] at (stage, microbatch, phase)
+//! task granularity with explicit scheduling:
+//!
+//!   * per-stage device groups follow the real 1F1B-Flush (or GPipe)
+//!     microbatch order, including warmup / steady / flush phases;
+//!   * stage-boundary activations and gradients ride point-to-point links
+//!     that serialize transfers (FIFO per link);
+//!   * task durations come from the same physical primitives as the cost
+//!     estimator (FLOPs / bandwidths / contention) but the *schedule* is
+//!     simulated, not summed — so Eq. 9 is an approximation of this ground
+//!     truth, which is exactly the relationship Fig. 7 measures;
+//!   * per-stage memory is tracked as an allocation timeline
+//!     (model states + live forward stashes + backward spikes) and the
+//!     high-water mark is reported.
+
+pub mod schedule;
+
+use crate::cluster::ClusterSpec;
+use crate::cost::estimator::CostEstimator;
+use crate::cost::pipeline::Schedule;
+use crate::model::ModelProfile;
+use crate::parallel::memory::LayerMemory;
+use crate::parallel::ParallelPlan;
+
+pub use schedule::{device_task_order, Phase, Task};
+
+/// One simulated execution record (for Gantt-style visualization).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub stage: usize,
+    pub microbatch: usize,
+    pub phase: Phase,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end iteration time, seconds.
+    pub iter_time: f64,
+    /// Samples per second.
+    pub throughput: f64,
+    /// Per-stage peak memory, bytes.
+    pub stage_peak_mem: Vec<f64>,
+    /// Per-stage busy (non-idle) time, seconds.
+    pub stage_busy: Vec<f64>,
+    /// Per-stage bubble fraction: 1 - busy/iter_time.
+    pub bubble_fraction: Vec<f64>,
+    /// Per-stage execution time of one microbatch (fwd+bwd, no sync).
+    pub stage_mb_time: Vec<f64>,
+    /// Full task trace.
+    pub trace: Vec<TraceEvent>,
+}
+
+impl SimReport {
+    /// Time balance degree alpha_t over simulated stage times (Eq. 6).
+    pub fn alpha_t(&self) -> f64 {
+        let max = self.stage_mb_time.iter().cloned().fold(0.0, f64::max);
+        let sum: f64 = self.stage_mb_time.iter().sum();
+        if sum > 0.0 {
+            1.0 - max / sum
+        } else {
+            0.0
+        }
+    }
+
+    /// Memory balance degree alpha_m over simulated peaks (Eq. 6).
+    pub fn alpha_m(&self) -> f64 {
+        let max = self.stage_peak_mem.iter().cloned().fold(0.0, f64::max);
+        let sum: f64 = self.stage_peak_mem.iter().sum();
+        if sum > 0.0 {
+            1.0 - max / sum
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-stage precomputed durations and memory quantities.
+struct StageModel {
+    fwd: f64,
+    bwd: f64,
+    bwd_sync: f64,
+    /// Forward stash bytes per microbatch (sum of O_f).
+    f_bytes: f64,
+    /// Backward spike peak within one microbatch (Eq. 2 walk minus stash).
+    b_spike: f64,
+    /// Static model-state bytes.
+    ms_bytes: f64,
+    /// p2p payload to the next stage, bytes.
+    p2p_bytes: f64,
+}
+
+fn build_stage_models(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    overlap_slowdown: f64,
+) -> Vec<StageModel> {
+    let est = CostEstimator::new(cluster, plan.pp, overlap_slowdown);
+    let b_m = plan.microbatch_size();
+    let mut out = Vec::with_capacity(plan.pp);
+    for s in 0..plan.pp {
+        let range = plan.stage_layers(s);
+        let mut fwd = 0.0;
+        let mut bwd = 0.0;
+        let mut bwd_sync = 0.0;
+        let mut mems: Vec<LayerMemory> = Vec::new();
+        let mut prev: Option<&crate::parallel::Strategy> = None;
+        for li in range.clone() {
+            let layer = &model.layers[li];
+            let strat = &plan.strategies[li];
+            let c = est.layer_cost(layer, strat, b_m, model.extra_params(li));
+            fwd += c.fwd;
+            bwd += c.bwd;
+            bwd_sync += c.bwd_sync;
+            if let Some(p) = prev {
+                let r = est.transform_cost(layer, p, strat, b_m);
+                fwd += r; // redistribution happens on the forward path
+            }
+            mems.push(c.mem);
+            prev = Some(strat);
+        }
+        let ms_bytes: f64 = mems.iter().map(|m| m.o_ms).sum();
+        let f_bytes: f64 = mems.iter().map(|m| m.o_f).sum();
+        // Backward spike: Eq. 2 walk peak minus the plain stash.
+        let mut prefix = 0.0;
+        let mut walk: f64 = 0.0;
+        for m in &mems {
+            prefix += m.o_f;
+            walk = walk.max(prefix + m.o_b);
+        }
+        let b_spike = (walk - f_bytes).max(0.0);
+        let p2p_bytes = if s + 1 < plan.pp {
+            let li = range.end - 1;
+            let strat = &plan.strategies[li];
+            model.layers[li].bnd_bytes * b_m / strat.batch_split() as f64
+        } else {
+            0.0
+        };
+        out.push(StageModel { fwd, bwd, bwd_sync, f_bytes, b_spike, ms_bytes, p2p_bytes });
+    }
+    out
+}
+
+/// Simulate one training iteration of `plan`.
+pub fn simulate(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    schedule: Schedule,
+    overlap_slowdown: f64,
+) -> SimReport {
+    let p = plan.pp;
+    let m = plan.microbatches;
+    let stages = build_stage_models(model, cluster, plan, overlap_slowdown);
+    let link_bw = cluster.pipeline_link_bw(p);
+
+    // Fixed per-device task order (the real schedule).
+    let orders: Vec<Vec<Task>> = (0..p).map(|s| device_task_order(schedule, s, p, m)).collect();
+
+    // Completion times; f64::NAN = not done.
+    let mut fwd_done = vec![vec![f64::NAN; m]; p];
+    let mut bwd_done = vec![vec![f64::NAN; m]; p];
+    // Arrival of inputs across links (serialized per link, FIFO).
+    let mut fwd_arrival = vec![vec![f64::NAN; m]; p]; // activation into stage s
+    let mut bwd_arrival = vec![vec![f64::NAN; m]; p]; // grad into stage s
+    let mut link_fwd_clock = vec![0.0f64; p]; // link s -> s+1
+    let mut link_bwd_clock = vec![0.0f64; p]; // link s+1 -> s
+    for j in 0..m {
+        fwd_arrival[0][j] = 0.0; // data loader feeds stage 0
+    }
+
+    let mut device_clock = vec![0.0f64; p];
+    let mut next_idx = vec![0usize; p];
+    let mut trace: Vec<TraceEvent> = Vec::with_capacity(2 * p * m);
+    let mut busy = vec![0.0f64; p];
+    // Memory timeline: (time, delta_bytes) per stage.
+    let mut mem_events: Vec<Vec<(f64, f64)>> = vec![Vec::new(); p];
+
+    let mut progressed = true;
+    while progressed {
+        progressed = false;
+        for s in 0..p {
+            while next_idx[s] < orders[s].len() {
+                let task = orders[s][next_idx[s]];
+                let (ready, dur) = match task.phase {
+                    Phase::Forward => {
+                        let arr = fwd_arrival[s][task.microbatch];
+                        if arr.is_nan() {
+                            break;
+                        }
+                        (arr, stages[s].fwd)
+                    }
+                    Phase::Backward => {
+                        let arr = if s + 1 == p {
+                            // Loss gradient is local once fwd finished.
+                            fwd_done[s][task.microbatch]
+                        } else {
+                            bwd_arrival[s][task.microbatch]
+                        };
+                        if arr.is_nan() {
+                            break;
+                        }
+                        let dur = if task.microbatch + 1 == m {
+                            stages[s].bwd_sync
+                        } else {
+                            stages[s].bwd
+                        };
+                        (arr, dur)
+                    }
+                };
+                let start = device_clock[s].max(ready);
+                let end = start + dur;
+                device_clock[s] = end;
+                busy[s] += dur;
+                trace.push(TraceEvent {
+                    stage: s,
+                    microbatch: task.microbatch,
+                    phase: task.phase,
+                    start,
+                    end,
+                });
+                match task.phase {
+                    Phase::Forward => {
+                        fwd_done[s][task.microbatch] = end;
+                        // Allocate the stash for this microbatch.
+                        mem_events[s].push((start, stages[s].f_bytes));
+                        if s + 1 < p {
+                            let t = stages[s].p2p_bytes / link_bw;
+                            let depart = link_fwd_clock[s].max(end);
+                            link_fwd_clock[s] = depart + t;
+                            fwd_arrival[s + 1][task.microbatch] = depart + t;
+                        }
+                    }
+                    Phase::Backward => {
+                        bwd_done[s][task.microbatch] = end;
+                        // Spike during bwd, then free the stash.
+                        mem_events[s].push((start, stages[s].b_spike));
+                        mem_events[s].push((end, -stages[s].b_spike - stages[s].f_bytes));
+                        if s > 0 {
+                            let t = stages[s - 1].p2p_bytes / link_bw;
+                            let depart = link_bwd_clock[s - 1].max(end);
+                            link_bwd_clock[s - 1] = depart + t;
+                            bwd_arrival[s - 1][task.microbatch] = depart + t;
+                        }
+                    }
+                }
+                next_idx[s] += 1;
+                progressed = true;
+            }
+        }
+    }
+    assert!(
+        next_idx.iter().enumerate().all(|(s, &i)| i == orders[s].len()),
+        "simulation deadlocked: {next_idx:?}"
+    );
+
+    let iter_time = device_clock.iter().cloned().fold(0.0, f64::max);
+
+    // Memory high-water per stage.
+    let mut stage_peak_mem = Vec::with_capacity(p);
+    for s in 0..p {
+        let mut evs = std::mem::take(&mut mem_events[s]);
+        // Ascending time; at equal timestamps apply frees before allocs
+        // (a bwd ending exactly when the next fwd starts must not
+        // double-count the stash).
+        evs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        let mut cur = stages[s].ms_bytes;
+        let mut peak = cur;
+        for (_, d) in evs {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        stage_peak_mem.push(peak);
+    }
+
+    let bubble_fraction: Vec<f64> = busy.iter().map(|b| 1.0 - b / iter_time).collect();
+    let stage_mb_time: Vec<f64> = stages.iter().map(|st| st.fwd + st.bwd).collect();
+
+    SimReport {
+        iter_time,
+        throughput: plan.batch as f64 / iter_time,
+        stage_peak_mem,
+        stage_busy: busy,
+        bubble_fraction,
+        stage_mb_time,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::cost::pipeline::plan_cost;
+    use crate::model::model_by_name;
+    use crate::parallel::{Dim, Strategy};
+
+    fn plan(pp: usize, batch: usize, m: usize, strat: Strategy, layers: usize) -> ParallelPlan {
+        let base = layers / pp;
+        let mut partition = vec![base; pp];
+        let rem = layers - base * pp;
+        for i in 0..rem {
+            partition[i] += 1;
+        }
+        ParallelPlan { pp, partition, strategies: vec![strat; layers], batch, microbatches: m }
+    }
+
+    #[test]
+    fn every_microbatch_runs_once() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, false), 32);
+        let r = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        // 2 phases x 4 stages x 8 microbatches.
+        assert_eq!(r.trace.len(), 2 * 4 * 8);
+        for s in 0..4 {
+            for j in 0..8 {
+                let f = r.trace.iter().filter(|e| e.stage == s && e.microbatch == j && e.phase == Phase::Forward).count();
+                let b = r.trace.iter().filter(|e| e.stage == s && e.microbatch == j && e.phase == Phase::Backward).count();
+                assert_eq!((f, b), (1, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 16, 4, Strategy::single(Dim::Dp, 2, false), 32);
+        let r = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let find = |s: usize, j: usize, ph: Phase| {
+            r.trace.iter().find(|e| e.stage == s && e.microbatch == j && e.phase == ph).unwrap()
+        };
+        for j in 0..4 {
+            for s in 1..4 {
+                assert!(find(s, j, Phase::Forward).start >= find(s - 1, j, Phase::Forward).end);
+            }
+            for s in 0..3 {
+                assert!(find(s, j, Phase::Backward).start >= find(s + 1, j, Phase::Backward).end);
+            }
+            assert!(find(3, j, Phase::Backward).start >= find(3, j, Phase::Forward).end);
+        }
+    }
+
+    #[test]
+    fn estimator_close_to_simulator() {
+        // Eq. 9 approximates the DES for homogeneous stages (<12%).
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, false), 32);
+        let sim = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let est = plan_cost(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let rel = (est.iter_time - sim.iter_time).abs() / sim.iter_time;
+        assert!(rel < 0.12, "estimator {} vs sim {} ({:.1}%)", est.iter_time, sim.iter_time, rel * 100.0);
+    }
+
+    #[test]
+    fn ignoring_slowdown_underestimates() {
+        // Fig. 7: estimation without the overlap slowdown is biased low.
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(1, 8, 1, Strategy::single(Dim::Dp, 8, false), 32);
+        let sim = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let est_no = plan_cost(&model, &cluster, &pl, Schedule::OneFOneB, 1.0);
+        assert!(est_no.iter_time < sim.iter_time);
+    }
+
+    #[test]
+    fn onefoneb_stage0_holds_more_memory() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, false), 32);
+        let r = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        assert!(r.stage_peak_mem[0] > r.stage_peak_mem[3]);
+    }
+
+    #[test]
+    fn gpipe_uses_more_memory_than_1f1b() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, false), 32);
+        let g = simulate(&model, &cluster, &pl, Schedule::GPipe, 1.3);
+        let f = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        assert!(g.stage_peak_mem[3] > f.stage_peak_mem[3]);
+    }
+
+    #[test]
+    fn more_microbatches_less_bubble() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let p2 = plan(4, 32, 4, Strategy::single(Dim::Dp, 2, false), 32);
+        let p8 = plan(4, 32, 16, Strategy::single(Dim::Dp, 2, false), 32);
+        let r2 = simulate(&model, &cluster, &p2, Schedule::OneFOneB, 1.3);
+        let r8 = simulate(&model, &cluster, &p8, Schedule::OneFOneB, 1.3);
+        // Last stage bubble dominated by warmup: (P-1)/(m+P-1).
+        assert!(r8.bubble_fraction[3] < r2.bubble_fraction[3]);
+    }
+
+    #[test]
+    fn sim_matches_estimator_memory() {
+        // The DES memory tracker and Eq. 2 accounting must agree.
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, true), 32);
+        let sim = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let est = plan_cost(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        for s in 0..4 {
+            let rel = (sim.stage_peak_mem[s] - est.stages[s].peak_mem).abs() / est.stages[s].peak_mem;
+            assert!(rel < 0.05, "stage {s}: sim {} est {}", sim.stage_peak_mem[s], est.stages[s].peak_mem);
+        }
+    }
+
+    #[test]
+    fn single_stage_no_bubble() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(1, 8, 1, Strategy::single(Dim::Dp, 8, false), 32);
+        let r = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        assert!(r.bubble_fraction[0].abs() < 1e-9);
+    }
+}

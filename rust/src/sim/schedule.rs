@@ -1,0 +1,147 @@
+//! Microbatch schedules: the per-device task orders of 1F1B-Flush
+//! (PipeDream-Flush) and GPipe.
+//!
+//! 1F1B-Flush for stage s of P with m microbatches:
+//!   warmup:  min(P - s, m) forwards
+//!   steady:  alternate (backward, forward) while forwards remain
+//!   flush:   remaining backwards
+//! GPipe: all m forwards, then all m backwards.
+
+use crate::cost::pipeline::Schedule;
+
+/// Task phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Forward,
+    Backward,
+}
+
+/// One schedulable unit on a stage device group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Task {
+    pub microbatch: usize,
+    pub phase: Phase,
+}
+
+/// The fixed task order device `stage` (0-based) executes.
+pub fn device_task_order(schedule: Schedule, stage: usize, p: usize, m: usize) -> Vec<Task> {
+    assert!(stage < p && m >= 1);
+    let mut out = Vec::with_capacity(2 * m);
+    match schedule {
+        Schedule::GPipe => {
+            for j in 0..m {
+                out.push(Task { microbatch: j, phase: Phase::Forward });
+            }
+            for j in (0..m).rev() {
+                out.push(Task { microbatch: j, phase: Phase::Backward });
+            }
+        }
+        Schedule::OneFOneB => {
+            let warmup = (p - stage).min(m);
+            let mut next_fwd = 0usize;
+            let mut next_bwd = 0usize;
+            for _ in 0..warmup {
+                out.push(Task { microbatch: next_fwd, phase: Phase::Forward });
+                next_fwd += 1;
+            }
+            // Steady 1F1B.
+            while next_fwd < m {
+                out.push(Task { microbatch: next_bwd, phase: Phase::Backward });
+                next_bwd += 1;
+                out.push(Task { microbatch: next_fwd, phase: Phase::Forward });
+                next_fwd += 1;
+            }
+            // Flush.
+            while next_bwd < m {
+                out.push(Task { microbatch: next_bwd, phase: Phase::Backward });
+                next_bwd += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Max microbatches simultaneously holding forward state under the order
+/// (sanity tool for tests: live = #fwd issued - #bwd completed).
+pub fn max_live(order: &[Task]) -> usize {
+    let mut live = 0usize;
+    let mut peak = 0usize;
+    for t in order {
+        match t.phase {
+            Phase::Forward => {
+                live += 1;
+                peak = peak.max(live);
+            }
+            Phase::Backward => live -= 1,
+        }
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_order() {
+        let o = device_task_order(Schedule::GPipe, 0, 4, 3);
+        assert_eq!(o.len(), 6);
+        assert!(o[..3].iter().all(|t| t.phase == Phase::Forward));
+        assert!(o[3..].iter().all(|t| t.phase == Phase::Backward));
+        // GPipe backwards run in reverse microbatch order.
+        assert_eq!(o[3].microbatch, 2);
+        assert_eq!(max_live(&o), 3);
+    }
+
+    #[test]
+    fn onefoneb_live_counts_match_theory() {
+        // Paper §II-B: stage s of P keeps P-s microbatches live.
+        let (p, m) = (4, 8);
+        for s in 0..p {
+            let o = device_task_order(Schedule::OneFOneB, s, p, m);
+            assert_eq!(o.len(), 2 * m);
+            assert_eq!(max_live(&o), p - s, "stage {s}");
+        }
+    }
+
+    #[test]
+    fn onefoneb_all_microbatches_covered() {
+        let o = device_task_order(Schedule::OneFOneB, 1, 4, 6);
+        for j in 0..6 {
+            assert!(o.iter().any(|t| t.microbatch == j && t.phase == Phase::Forward));
+            assert!(o.iter().any(|t| t.microbatch == j && t.phase == Phase::Backward));
+        }
+    }
+
+    #[test]
+    fn onefoneb_bwd_follows_own_fwd() {
+        // A device never backwards a microbatch it hasn't forwarded.
+        for s in 0..4 {
+            let o = device_task_order(Schedule::OneFOneB, s, 4, 8);
+            let mut fwd_seen = vec![false; 8];
+            for t in o {
+                match t.phase {
+                    Phase::Forward => fwd_seen[t.microbatch] = true,
+                    Phase::Backward => assert!(fwd_seen[t.microbatch]),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_microbatches_than_stages() {
+        let o = device_task_order(Schedule::OneFOneB, 0, 8, 2);
+        assert_eq!(o.len(), 4);
+        assert_eq!(max_live(&o), 2);
+    }
+
+    #[test]
+    fn last_stage_strict_alternation() {
+        // Stage P-1 warms up exactly 1 forward, then strictly alternates.
+        let o = device_task_order(Schedule::OneFOneB, 3, 4, 6);
+        assert_eq!(o[0].phase, Phase::Forward);
+        assert_eq!(o[1].phase, Phase::Backward);
+        assert_eq!(o[1].microbatch, 0);
+        assert_eq!(max_live(&o), 1);
+    }
+}

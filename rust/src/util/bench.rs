@@ -1,0 +1,75 @@
+//! Micro-benchmark harness (substrate: criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with mean/p50/p95 reporting, used by
+//! every target under `benches/` (each declared with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Run `f` repeatedly for at least `budget` (after warmup) and report stats.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: one call, or more if the call is very fast.
+    let w0 = Instant::now();
+    f();
+    let first = w0.elapsed();
+    let warmups = if first < Duration::from_millis(5) { 10 } else { 0 };
+    for _ in 0..warmups {
+        f();
+    }
+
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[p95_idx],
+        min: samples[0],
+    };
+    println!("{}", res.report());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep() {
+        let r = bench("sleep-2ms", Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(r.mean >= Duration::from_millis(2));
+        assert!(r.iters >= 3);
+    }
+}

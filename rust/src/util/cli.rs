@@ -1,0 +1,113 @@
+//! Tiny CLI argument parser (substrate: clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (not including argv[0]). `flag_names` lists options
+    /// that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), iter.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("table2 --memory 16 --model=bert-huge-32 --verbose", &["verbose"]);
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.get("memory"), Some("16"));
+        assert_eq!(a.get("model"), Some("bert-huge-32"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --fast", &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("--dry-run --n 4", &["dry-run"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.usize("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--n x", &[]);
+        assert!(a.usize("n", 0).is_err());
+        assert_eq!(a.usize("m", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared utilities: JSON, RNG, CLI parsing, tables, and a bench harness.
+//!
+//! These are substrates we implement ourselves because the image's offline
+//! crate cache only contains the `xla` dependency closure (no serde_json,
+//! clap, rand, or criterion) — see DESIGN.md §2.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Bytes in one mebibyte / gibibyte, as f64 for cost arithmetic.
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Format a byte count for human output.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.1} MiB", b / MIB)
+    } else {
+        format!("{:.0} B", b)
+    }
+}
+
+/// True iff n is a power of two (and nonzero).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Powers of two from 1 up to and including `n` (n must be a power of two).
+pub fn pow2_divisors(n: usize) -> Vec<usize> {
+    assert!(is_pow2(n), "{n} is not a power of two");
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d <= n {
+        out.push(d);
+        d *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1) && is_pow2(8) && !is_pow2(6) && !is_pow2(0));
+        assert_eq!(pow2_divisors(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(3.0 * MIB), "3.0 MiB");
+        assert_eq!(fmt_bytes(2.5 * GIB), "2.50 GiB");
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration tests over the PJRT runtime + coordinator, using the AOT
+//! artifacts built by `make artifacts` (skipped gracefully if absent).
+
+use std::path::PathBuf;
+
+use galvatron::coordinator::{Trainer, TrainerConfig};
+use galvatron::runtime::{HostTensor, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn smoke_artifact_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let man = rt.manifest().unwrap();
+    let art = rt
+        .load("smoke", &man.smoke.file, man.smoke.inputs.clone(), man.smoke.outputs.clone())
+        .unwrap();
+    let a = HostTensor::scalar_f32(2.0);
+    let x = HostTensor::F32 { shape: vec![16], data: (0..16).map(|i| i as f32).collect() };
+    let y = HostTensor::F32 { shape: vec![16], data: vec![1.0; 16] };
+    let out = art.run(&[a, x, y]).unwrap();
+    let vals = out[0].as_f32().unwrap();
+    for (i, &v) in vals.iter().enumerate() {
+        assert!((v - (2.0 * i as f32 + 1.0)).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn manifest_matches_files() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let man = rt.manifest().unwrap();
+    assert_eq!(man.stages.len(), man.partition.len());
+    assert_eq!(man.declared_params(), man.param_count);
+    for sm in &man.stages {
+        assert!(dir.join(&sm.fwd.file).exists());
+        assert!(dir.join(&sm.bwd.file).exists());
+        assert!(dir.join(&sm.adam.file).exists());
+        let params = rt.load_params(&sm.param_file, &sm.param_shapes).unwrap();
+        assert_eq!(params.len(), sm.param_names.len());
+    }
+}
+
+#[test]
+fn stage_forward_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let man = rt.manifest().unwrap();
+    let sm = &man.stages[0];
+    let art = rt
+        .load("fwd0", &sm.fwd.file, sm.fwd.inputs.clone(), sm.fwd.outputs.clone())
+        .unwrap();
+    let mut args = rt.load_params(&sm.param_file, &sm.param_shapes).unwrap();
+    let (b, s) = (man.config.microbatch, man.config.seq);
+    args.push(HostTensor::I32 { shape: vec![b, s], data: vec![1; b * s] });
+    let out = art.run(&args).unwrap();
+    assert_eq!(out[0].shape(), &[b, s, man.config.hidden]);
+    // Finite outputs.
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn training_reduces_loss_and_keeps_replicas_synced() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut trainer = Trainer::new(TrainerConfig {
+        artifacts_dir: dir,
+        steps: 12,
+        dp: 2,
+        microbatches: 2,
+        log_every: 0,
+        seed: 3,
+        repeat_batch: true, // memorization mode: strong signal in 12 steps
+    })
+    .unwrap();
+    let report = trainer.train().unwrap();
+    assert_eq!(report.losses.len(), 12);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    // Memorizing a fixed batch must cut the loss sharply (cf. the jax-side
+    // probe: 9.06 -> <5 in 12 steps at lr=1e-3).
+    let first = report.losses[0];
+    let last = report.losses[11];
+    assert!(last < first * 0.75, "no learning: {first} -> {last}");
+    assert!(trainer.replicas_in_sync().unwrap());
+}
+
+#[test]
+fn dp1_and_dp2_start_from_same_loss() {
+    // The initial loss (before any update) is data-dependent only through
+    // the corpus seed; dp replicas use different streams, so just check
+    // both are near ln(vocab) at init.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let vocab = rt.manifest().unwrap().config.vocab as f64;
+    for dp in [1usize, 2] {
+        let mut t = Trainer::new(TrainerConfig {
+            artifacts_dir: dir.clone(),
+            steps: 1,
+            dp,
+            microbatches: 1,
+            log_every: 0,
+            seed: 11,
+            repeat_batch: false,
+        })
+        .unwrap();
+        let loss = t.train_step().unwrap();
+        let expect = vocab.ln();
+        assert!(
+            (loss - expect).abs() / expect < 0.15,
+            "dp={dp}: init loss {loss} vs ln(vocab) {expect}"
+        );
+    }
+}
