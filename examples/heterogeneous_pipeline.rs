@@ -11,10 +11,11 @@
 //!
 //! Run: `cargo run --release --example heterogeneous_pipeline`
 
+use galvatron::api::{MethodSpec, PlanRequest};
 use galvatron::cost::pipeline::Schedule;
 use galvatron::experiments::{cluster, model};
 use galvatron::search::base::{evaluate_partition, SearchConfig};
-use galvatron::search::bmw::{memory_balanced_partition, optimize_bmw, partition_str};
+use galvatron::search::bmw::{memory_balanced_partition, partition_str};
 use galvatron::search::decision_tree::SpaceOptions;
 use galvatron::search::partition::{balanced_partition, even_partition};
 use galvatron::sim::simulate;
@@ -47,9 +48,16 @@ fn main() {
             ("time-balanced", balanced_partition(&flops_w, pp)),
             (
                 "bi-objective",
-                optimize_bmw(&mp, &cl, &cfg)
-                    .map(|o| o.plan.partition)
-                    .unwrap_or_else(|| even_partition(mp.n_layers(), pp)),
+                // The full planner, through the typed API, pinned to the
+                // same PP degree / no-CKPT space as the fixed partitions.
+                PlanRequest::new(mname, "a100x16")
+                    .memory_gb(16.0)
+                    .max_batch(batch)
+                    .method(MethodSpec::Bmw { ckpt: false })
+                    .pipeline_degrees(&[pp])
+                    .plan()
+                    .map(|r| r.plan.partition)
+                    .unwrap_or_else(|_| even_partition(mp.n_layers(), pp)),
             ),
         ];
 

@@ -2,22 +2,22 @@
 //! — the workload that motivates the paper's intro (training under varying
 //! GPU memory constraints).
 //!
-//! Sweeps BERT-Huge-32 and ViT-Huge-32 on titan8 across 6..24 GB budgets,
-//! showing how Galvatron-BMW shifts between DP/SDP/TP/PP/CKPT and what
-//! batch size / throughput each budget affords.
+//! Sweeps BERT-Huge-32 and ViT-Huge-32 on titan8 across 6..24 GB budgets
+//! through the typed `PlanRequest` API, showing how Galvatron-BMW shifts
+//! between DP/SDP/TP/PP/CKPT and what batch size / throughput each budget
+//! affords. OOM shows up as a typed `PlanError::Infeasible`, not a `None`.
 //!
 //! Run: `cargo run --release --example memory_budget_sweep`
 
-use galvatron::experiments::{cluster, model};
-use galvatron::search::baselines::run_method;
+use galvatron::api::{PlanError, PlanReport, PlanRequest};
 use galvatron::util::table::Table;
 
-fn dominant_dims(out: &galvatron::search::SearchOutcome) -> String {
+fn dominant_dims(report: &PlanReport) -> String {
     let mut dp = 0usize;
     let mut sdp = 0usize;
     let mut tp = 0usize;
     let mut ckpt = 0usize;
-    for s in &out.plan.strategies {
+    for s in &report.plan.strategies {
         if s.dp() > 1 {
             dp += 1;
         }
@@ -31,8 +31,8 @@ fn dominant_dims(out: &galvatron::search::SearchOutcome) -> String {
             ckpt += 1;
         }
     }
-    let total = out.plan.strategies.len();
-    let mut parts = vec![format!("PP{}", out.plan.pp)];
+    let total = report.plan.strategies.len();
+    let mut parts = vec![format!("PP{}", report.plan.pp)];
     for (name, n) in [("DP", dp), ("SDP", sdp), ("TP", tp), ("CKPT", ckpt)] {
         if n > 0 {
             parts.push(format!("{name}:{n}/{total}"));
@@ -41,23 +41,26 @@ fn dominant_dims(out: &galvatron::search::SearchOutcome) -> String {
     parts.join(" ")
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     for mname in ["bert-huge-32", "vit-huge-32"] {
-        let mp = model(mname);
-        println!("\n=== {} on titan8: memory budget sweep ===", mp.name);
+        println!("\n=== {mname} on titan8: memory budget sweep ===");
         let mut t = Table::new(["budget (GB)", "samples/s", "batch", "plan shape"]);
         for budget in [6.0, 8.0, 10.0, 12.0, 16.0, 20.0, 24.0] {
-            let cl = cluster("titan8", budget);
-            match run_method("Galvatron-BMW", &mp, &cl, 512) {
-                Some(out) => t.row([
+            let request = PlanRequest::new(mname, "titan8").memory_gb(budget).max_batch(512);
+            match request.plan() {
+                Ok(report) => t.row([
                     format!("{budget}"),
-                    format!("{:.2}", out.throughput()),
-                    out.plan.batch.to_string(),
-                    dominant_dims(&out),
+                    format!("{:.2}", report.throughput),
+                    report.plan.batch.to_string(),
+                    dominant_dims(&report),
                 ]),
-                None => t.row([format!("{budget}"), "OOM".into(), "-".into(), "-".into()]),
+                Err(PlanError::Infeasible { .. }) => {
+                    t.row([format!("{budget}"), "OOM".into(), "-".into(), "-".into()])
+                }
+                Err(e) => return Err(e.into()),
             }
         }
         t.print();
     }
+    Ok(())
 }

@@ -1,47 +1,58 @@
 //! Quickstart: ask Galvatron-BMW for the optimal hybrid-parallel plan for
-//! BERT-Huge-32 on 8 RTX-TITAN GPUs under a 16 GB budget, compare it with
-//! the pure baselines, and cross-check the plan on the discrete-event
+//! BERT-Huge-32 on 8 RTX-TITAN GPUs under a 16 GB budget via the typed
+//! `PlanRequest` builder, compare it with the pure baselines, persist the
+//! plan as a JSON artifact, and cross-check it on the discrete-event
 //! simulator.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use galvatron::cost::pipeline::Schedule;
-use galvatron::experiments::{cluster, model};
-use galvatron::search::baselines::run_method;
-use galvatron::sim::simulate;
+use galvatron::api::{MethodSpec, PlanError, PlanRequest, Planner};
+use galvatron::parallel::Dim;
 use galvatron::util::GIB;
 
-fn main() {
-    let mp = model("bert-huge-32");
-    let cl = cluster("titan8", 16.0);
-    println!(
-        "model: {} ({:.0}M params) | cluster: {} x{} | budget 16 GB\n",
-        mp.name,
-        mp.total_params() / 1e6,
-        cl.gpu.name,
-        cl.n_devices
-    );
+fn main() -> anyhow::Result<()> {
+    let planner = Planner::new();
 
-    // 1. The automatic plan.
-    let bmw = run_method("Galvatron-BMW", &mp, &cl, 512).expect("feasible");
-    println!("Galvatron-BMW plan:");
-    println!("{}", galvatron::experiments::figures::plan_summary(&bmw.plan));
+    // 1. The automatic plan, via the builder API.
+    let request = PlanRequest::new("bert-huge-32", "titan8").memory_gb(16.0).max_batch(512);
+    let report = planner.plan(&request)?;
+    println!("Galvatron-BMW plan:\n{}", report.plan.summary());
 
-    // 2. How it stacks up against pure parallelisms.
+    // 2. How it stacks up against pure parallelisms (typed catalog — no
+    //    magic strings; an OOM baseline is a typed Infeasible error).
     println!("{:<22} {:>12} {:>8}", "method", "samples/s", "batch");
-    for m in ["PyTorch DDP (DP)", "Megatron (TP)", "PyTorch GPipe (PP)", "FSDP/ZeRO-3 (SDP)", "Galvatron-BMW"] {
-        match run_method(m, &mp, &cl, 512) {
-            Some(o) => println!("{:<22} {:>12.2} {:>8}", m, o.throughput(), o.plan.batch),
-            None => println!("{:<22} {:>12} {:>8}", m, "OOM", "-"),
+    for method in [
+        MethodSpec::Pure(Dim::Dp),
+        MethodSpec::Pure(Dim::Tp),
+        MethodSpec::PurePipeline,
+        MethodSpec::Pure(Dim::Sdp),
+        MethodSpec::Bmw { ckpt: true },
+    ] {
+        let name = method.canonical_name();
+        match planner.plan(&request.clone().method(method)) {
+            Ok(r) => println!("{:<22} {:>12.2} {:>8}", name, r.throughput, r.plan.batch),
+            Err(PlanError::Infeasible { .. }) => {
+                println!("{:<22} {:>12} {:>8}", name, "OOM", "-")
+            }
+            Err(e) => return Err(e.into()),
         }
     }
 
-    // 3. Independent cross-check on the event simulator.
-    let sim = simulate(&mp, &cl, &bmw.plan, Schedule::OneFOneB, 1.3);
+    // 3. Persist the plan artifact and reload it — the same JSON the CLI
+    //    exchanges via `plan --out` / `simulate --plan`.
+    let path = std::env::temp_dir().join("galvatron-quickstart-plan.json");
+    report.save(&path)?;
+    let loaded = galvatron::api::PlanReport::load(&path)?;
+    assert_eq!(loaded, report);
+    println!("\nplan artifact round-tripped through {}", path.display());
+
+    // 4. Independent cross-check on the event simulator.
+    let sim = planner.simulate_report(&loaded)?;
     println!(
-        "\nsimulator cross-check: {:.2} samples/s (estimator said {:.2});\nper-stage peak memory: {:?} GiB",
+        "simulator cross-check: {:.2} samples/s (estimator said {:.2});\nper-stage peak memory: {:?} GiB",
         sim.throughput,
-        bmw.throughput(),
+        report.throughput,
         sim.stage_peak_mem.iter().map(|b| (b / GIB * 10.0).round() / 10.0).collect::<Vec<_>>()
     );
+    Ok(())
 }

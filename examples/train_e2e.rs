@@ -14,11 +14,25 @@
 //! default; build with `--preset 100m` in python/compile/aot.py for the
 //! ~100M-parameter variant — same code path, longer wallclock).
 
+use galvatron::api::PlanReport;
 use galvatron::coordinator::{Trainer, TrainerConfig};
 use galvatron::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&["repeat-batch"]);
+    // Optional planner artifact (`galvatron plan --out plan.json`): print
+    // what the planner promised so the run can be judged against it — the
+    // plan → train leg of the artifact pipeline.
+    if let Some(path) = args.get("plan") {
+        let report = PlanReport::load(std::path::Path::new(path))?;
+        println!(
+            "plan artifact {path}: {} on {} via {}, est {:.2} samples/s",
+            report.model,
+            report.cluster,
+            report.method.canonical_name(),
+            report.throughput
+        );
+    }
     let cfg = TrainerConfig {
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
         steps: args.usize("steps", 200)?,

@@ -1,26 +1,33 @@
 //! Bench: Table II end-to-end — one full (model, budget) planning cell per
 //! method on titan8. Measures the planner's wallclock (the paper's Fig. 5
-//! concern) while regenerating a Table II slice.
+//! concern) while regenerating a Table II slice, through the typed
+//! `MethodSpec` catalog.
 //!
 //! Run: `cargo bench --bench table2_bench`
 
 use std::time::Duration;
 
+use galvatron::api::MethodSpec;
 use galvatron::experiments::{cluster, model};
-use galvatron::search::baselines::run_method;
+use galvatron::parallel::Dim;
 use galvatron::util::bench::bench;
 
 fn main() {
     let budget = 16.0;
     for mname in ["bert-huge-32", "vit-huge-32"] {
-        for method in ["FSDP/ZeRO-3 (SDP)", "Galvatron (DP+PP)", "Galvatron-Base", "Galvatron-BMW"] {
+        for method in [
+            MethodSpec::Pure(Dim::Sdp),
+            MethodSpec::Limited { dims: vec![Dim::Dp], pp: true },
+            MethodSpec::Base { ckpt: true },
+            MethodSpec::Bmw { ckpt: true },
+        ] {
             let mp = model(mname);
             let cl = cluster("titan8", budget);
             bench(
-                &format!("table2/{mname}/{method}"),
+                &format!("table2/{mname}/{}", method.canonical_name()),
                 Duration::from_secs(3),
                 || {
-                    let _ = run_method(method, &mp, &cl, 128);
+                    let _ = method.run(&mp, &cl, 128);
                 },
             );
         }

@@ -7,20 +7,21 @@
 
 use std::time::Duration;
 
+use galvatron::api::MethodSpec;
 use galvatron::experiments::{cluster, model};
-use galvatron::search::baselines::run_method;
 use galvatron::util::bench::bench;
 
 fn main() {
+    let method = MethodSpec::Bmw { ckpt: true };
     let mut base = None;
     for (cl_name, budget) in [("titan8", 16.0), ("titan16", 16.0), ("a100x16", 16.0), ("a100x64", 16.0)] {
         let mp = model("bert-huge-32");
         let cl = cluster(cl_name, budget);
         let r = bench(
-            &format!("scalability/{cl_name}/Galvatron-BMW"),
+            &format!("scalability/{cl_name}/{}", method.canonical_name()),
             Duration::from_secs(3),
             || {
-                let _ = run_method("Galvatron-BMW", &mp, &cl, 64);
+                let _ = method.run(&mp, &cl, 64);
             },
         );
         match base {

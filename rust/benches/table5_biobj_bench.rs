@@ -1,24 +1,25 @@
 //! Bench: Table V — bi-objective partition optimization cost vs the fixed
-//! memory-/time-balanced ablations on the imbalanced T5-512/4 model.
+//! memory-/time-balanced ablations on the imbalanced T5-512/4 model,
+//! through the typed `MethodSpec` catalog.
 //!
 //! Run: `cargo bench --bench table5_biobj_bench`
 
 use std::time::Duration;
 
+use galvatron::api::{MethodSpec, PartitionPolicy};
 use galvatron::experiments::{cluster, model};
-use galvatron::search::baselines::{run_method, run_partition_ablation};
 use galvatron::util::bench::bench;
 
 fn main() {
     let mp = model("t5-512/4-32");
     let cl = cluster("a100x16", 16.0);
-    bench("table5/1F1B+Mem", Duration::from_secs(3), || {
-        let _ = run_partition_ablation("mem", &mp, &cl, 64);
-    });
-    bench("table5/1F1B+Time", Duration::from_secs(3), || {
-        let _ = run_partition_ablation("time", &mp, &cl, 64);
-    });
-    bench("table5/1F1B+Bi-obj", Duration::from_secs(3), || {
-        let _ = run_method("Galvatron (1F1B+Bi-obj)", &mp, &cl, 64);
-    });
+    for (label, method) in [
+        ("table5/1F1B+Mem", MethodSpec::Partition(PartitionPolicy::Memory)),
+        ("table5/1F1B+Time", MethodSpec::Partition(PartitionPolicy::Time)),
+        ("table5/1F1B+Bi-obj", MethodSpec::Bmw { ckpt: false }),
+    ] {
+        bench(label, Duration::from_secs(3), || {
+            let _ = method.run(&mp, &cl, 64);
+        });
+    }
 }

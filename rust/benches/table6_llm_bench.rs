@@ -1,22 +1,27 @@
 //! Bench: Table VI — planning cost for the GPT-3-scale models (15B/39B/
-//! 65B on 32x A100-80G), including the Alpa-like restricted search.
+//! 65B on 32x A100-80G), including the Alpa-like restricted search,
+//! through the typed `MethodSpec` catalog.
 //!
 //! Run: `cargo bench --bench table6_llm_bench`
 
 use std::time::Duration;
 
+use galvatron::api::MethodSpec;
 use galvatron::experiments::{cluster, model};
-use galvatron::search::baselines::run_method;
 use galvatron::util::bench::bench;
 
 fn main() {
     for mname in ["gpt3-15b"] {
-        for method in ["Alpa", "Galvatron-BMW"] {
+        for method in [MethodSpec::Alpa, MethodSpec::Bmw { ckpt: true }] {
             let mp = model(mname);
             let cl = cluster("a100-80g-x32", 80.0);
-            bench(&format!("table6/{mname}/{method}"), Duration::from_secs(3), || {
-                let _ = run_method(method, &mp, &cl, 128);
-            });
+            bench(
+                &format!("table6/{mname}/{}", method.canonical_name()),
+                Duration::from_secs(3),
+                || {
+                    let _ = method.run(&mp, &cl, 128);
+                },
+            );
         }
     }
 }

@@ -1,0 +1,139 @@
+//! Planner error type: every failure mode of the public API, with
+//! did-you-mean suggestions for name lookups instead of panics.
+
+use std::fmt;
+
+/// Why a [`super::PlanRequest`] could not be turned into a
+/// [`super::PlanReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanError {
+    /// The requested model name is not in the Table I zoo.
+    UnknownModel { name: String, suggestion: Option<String> },
+    /// The requested cluster name is not a known preset.
+    UnknownCluster { name: String, suggestion: Option<String> },
+    /// The requested method name is not in the strategy catalog.
+    UnknownMethod { name: String, suggestion: Option<String> },
+    /// The request is structurally invalid (zero batch, bad schedule, ...).
+    InvalidRequest { reason: String },
+    /// Every candidate plan exceeded the device memory budget ("OOM" in
+    /// the paper's tables).
+    Infeasible { reason: String },
+    /// A plan artifact could not be read, written, or parsed.
+    Artifact { reason: String },
+}
+
+impl PlanError {
+    fn write_unknown(
+        f: &mut fmt::Formatter<'_>,
+        kind: &str,
+        name: &str,
+        suggestion: &Option<String>,
+        listing: &str,
+    ) -> fmt::Result {
+        write!(f, "unknown {kind} {name:?}")?;
+        if let Some(s) = suggestion {
+            write!(f, "; did you mean {s:?}?")?;
+        }
+        write!(f, " (run `galvatron {listing}` for the full list)")
+    }
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::UnknownModel { name, suggestion } => {
+                Self::write_unknown(f, "model", name, suggestion, "models")
+            }
+            PlanError::UnknownCluster { name, suggestion } => {
+                Self::write_unknown(f, "cluster", name, suggestion, "clusters")
+            }
+            PlanError::UnknownMethod { name, suggestion } => {
+                Self::write_unknown(f, "method", name, suggestion, "methods")
+            }
+            PlanError::InvalidRequest { reason } => write!(f, "invalid plan request: {reason}"),
+            PlanError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
+            PlanError::Artifact { reason } => write!(f, "plan artifact error: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Case-insensitive Levenshtein distance (iterative two-row DP).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.to_ascii_lowercase().chars().collect();
+    let b: Vec<char> = b.to_ascii_lowercase().chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate to `name`, if any is close enough to be a plausible
+/// typo (distance at most 3 and under half the query length, so wildly
+/// wrong inputs produce no suggestion).
+pub fn suggest<'a, I>(name: &str, candidates: I) -> Option<String>
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    let mut best: Option<(usize, &str)> = None;
+    for c in candidates {
+        let d = edit_distance(name, c);
+        if best.map_or(true, |(bd, _)| d < bd) {
+            best = Some((d, c));
+        }
+    }
+    let (d, c) = best?;
+    let cutoff = 3.min(1 + name.chars().count() / 2);
+    if d <= cutoff {
+        Some(c.to_string())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        // Case-insensitive.
+        assert_eq!(edit_distance("Galvatron-BMW", "galvatron-bmw"), 0);
+    }
+
+    #[test]
+    fn suggests_close_names() {
+        let names = ["bert-huge-32", "bert-huge-48", "vit-huge-32"];
+        assert_eq!(suggest("bert-hug-32", names), Some("bert-huge-32".into()));
+        assert_eq!(suggest("VIT-huge-32", names), Some("vit-huge-32".into()));
+        // Hopeless inputs get no suggestion.
+        assert_eq!(suggest("resnet50", names), None);
+    }
+
+    #[test]
+    fn error_messages_carry_suggestions() {
+        let e = PlanError::UnknownModel {
+            name: "bert-hug-32".into(),
+            suggestion: Some("bert-huge-32".into()),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("bert-hug-32") && msg.contains("did you mean"), "{msg}");
+        let e = PlanError::UnknownCluster { name: "xyz".into(), suggestion: None };
+        assert!(!e.to_string().contains("did you mean"));
+    }
+}

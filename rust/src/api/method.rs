@@ -1,0 +1,515 @@
+//! Typed strategy catalog: every method the paper evaluates (§VII-A) as a
+//! [`MethodSpec`] value instead of a magic string. `search::baselines`
+//! keeps its name-based entry points as thin compat shims over this enum.
+
+use crate::cluster::ClusterSpec;
+use crate::cost::pipeline::Schedule;
+use crate::model::ModelProfile;
+use crate::parallel::Dim;
+use crate::search::base::{evaluate_partition, optimize, pp_degrees, SearchConfig, SearchOutcome};
+use crate::search::bmw::{memory_balanced_partition, optimize_bmw};
+use crate::search::decision_tree::SpaceOptions;
+use crate::search::levels;
+use crate::search::partition::balanced_partition;
+use crate::util::json::Json;
+
+use super::error::{suggest, PlanError};
+
+/// Fixed pipeline-partition policy for the Table V ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Memory-balanced partition p_m (1F1B live-microbatch aware).
+    Memory,
+    /// Time-balanced partition p_t (FLOPs-balanced).
+    Time,
+}
+
+/// A planning method: which optimizer runs and over which search space.
+///
+/// The catalog covers every row of Tables II-VI; [`MethodSpec::parse`]
+/// resolves the paper's row names (and a few short aliases) and
+/// [`MethodSpec::canonical_name`] maps back, so specs round-trip through
+/// plan artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MethodSpec {
+    /// Pure single-dimension parallelism over all devices (PyTorch DDP,
+    /// Megatron-TP, FSDP/ZeRO-3), single-shot (no gradient accumulation).
+    Pure(Dim),
+    /// Pure pipeline parallelism (PyTorch GPipe): serial stages, GPipe
+    /// schedule, per-microbatch re-materialization stays in the space.
+    PurePipeline,
+    /// DeepSpeed 3D: expert 2-way DP x 2-way TP x PP over the rest.
+    DeepSpeed3d,
+    /// Limited-dimension automatic search (prior-work baselines such as
+    /// Galvatron (DP+TP) / Galvatron (DP+PP)); `pp` enables the pipeline
+    /// dimension on top of `dims`.
+    Limited { dims: Vec<Dim>, pp: bool },
+    /// Galvatron-Base (Algorithm 1); `ckpt` toggles the CKPT dimension
+    /// ("Galvatron" in the tables is the no-CKPT variant).
+    Base { ckpt: bool },
+    /// Galvatron-BMW (Algorithm 2, bi-objective workload balancing);
+    /// `ckpt: false` is the tables' "Galvatron (1F1B+Bi-obj)" row.
+    Bmw { ckpt: bool },
+    /// Alpa-like: best of (DP+TP+PP) and (SDP+TP+PP) restricted searches,
+    /// no CKPT (Table VI).
+    Alpa,
+    /// Table V ablation: fixed balanced partition, no adjustment loop,
+    /// CKPT disabled, 1F1B schedule.
+    Partition(PartitionPolicy),
+}
+
+/// Request-level overrides applied on top of a method's own search
+/// configuration (see [`super::PlanRequest`]). `None` keeps the method's
+/// default for that knob.
+#[derive(Debug, Clone)]
+pub struct SearchOverrides {
+    /// Largest global batch size to consider.
+    pub max_batch: usize,
+    /// Pipeline schedule for cost/memory accounting.
+    pub schedule: Option<Schedule>,
+    /// Compute/communication contention factor (§V).
+    pub overlap_slowdown: Option<f64>,
+    /// Cap on the microbatch count (gradient-accumulation depth); combined
+    /// with a method's own cap by taking the stricter of the two.
+    pub microbatch_limit: Option<usize>,
+    /// Restrict the PP degrees explored.
+    pub pp_degrees: Option<Vec<usize>>,
+}
+
+impl SearchOverrides {
+    pub fn new(max_batch: usize) -> Self {
+        SearchOverrides {
+            max_batch,
+            schedule: None,
+            overlap_slowdown: None,
+            microbatch_limit: None,
+            pp_degrees: None,
+        }
+    }
+
+    /// Apply these overrides to a method's base configuration.
+    fn apply(&self, mut cfg: SearchConfig) -> SearchConfig {
+        cfg.max_batch = self.max_batch;
+        if let Some(s) = self.schedule {
+            cfg.schedule = s;
+        }
+        if let Some(o) = self.overlap_slowdown {
+            cfg.overlap_slowdown = o;
+        }
+        if let Some(m) = self.microbatch_limit {
+            cfg.microbatch_limit = Some(cfg.microbatch_limit.map_or(m, |cur| cur.min(m)));
+        }
+        if let Some(pp) = &self.pp_degrees {
+            cfg.pp_degrees = Some(pp.clone());
+        }
+        cfg
+    }
+}
+
+impl MethodSpec {
+    /// The strategy rows of Table II, in row order (the historical
+    /// `search::baselines::method_names()` list).
+    pub fn paper_table_specs() -> Vec<MethodSpec> {
+        vec![
+            MethodSpec::Pure(Dim::Dp),
+            MethodSpec::Pure(Dim::Tp),
+            MethodSpec::PurePipeline,
+            MethodSpec::Pure(Dim::Sdp),
+            MethodSpec::DeepSpeed3d,
+            MethodSpec::Limited { dims: vec![Dim::Dp, Dim::Tp], pp: false },
+            MethodSpec::Limited { dims: vec![Dim::Dp], pp: true },
+            MethodSpec::Base { ckpt: false },
+            MethodSpec::Base { ckpt: true },
+            MethodSpec::Bmw { ckpt: false },
+            MethodSpec::Bmw { ckpt: true },
+        ]
+    }
+
+    /// The full catalog: Table II rows plus Alpa (Table VI) and the
+    /// partition ablations (Table V).
+    pub fn catalog() -> Vec<MethodSpec> {
+        let mut out = Self::paper_table_specs();
+        out.push(MethodSpec::Alpa);
+        out.push(MethodSpec::Partition(PartitionPolicy::Memory));
+        out.push(MethodSpec::Partition(PartitionPolicy::Time));
+        out
+    }
+
+    /// Catalog names in display order (for `galvatron methods`).
+    pub fn catalog_names() -> Vec<String> {
+        Self::catalog().iter().map(|s| s.canonical_name().to_string()).collect()
+    }
+
+    /// The paper's row name for this method — the historical string
+    /// accepted by `run_method` and stored in plan artifacts.
+    pub fn canonical_name(&self) -> &'static str {
+        match self {
+            MethodSpec::Pure(Dim::Dp) => "PyTorch DDP (DP)",
+            MethodSpec::Pure(Dim::Tp) => "Megatron (TP)",
+            MethodSpec::Pure(Dim::Sdp) => "FSDP/ZeRO-3 (SDP)",
+            MethodSpec::PurePipeline => "PyTorch GPipe (PP)",
+            MethodSpec::DeepSpeed3d => "DeepSpeed 3D",
+            MethodSpec::Limited { dims, pp } => {
+                if *pp && dims == &[Dim::Dp] {
+                    "Galvatron (DP+PP)"
+                } else if !*pp && dims == &[Dim::Dp, Dim::Tp] {
+                    "Galvatron (DP+TP)"
+                } else {
+                    // Non-catalog restriction: no paper row name exists.
+                    "Galvatron (limited)"
+                }
+            }
+            MethodSpec::Base { ckpt: false } => "Galvatron",
+            MethodSpec::Base { ckpt: true } => "Galvatron-Base",
+            MethodSpec::Bmw { ckpt: false } => "Galvatron (1F1B+Bi-obj)",
+            MethodSpec::Bmw { ckpt: true } => "Galvatron-BMW",
+            MethodSpec::Alpa => "Alpa",
+            MethodSpec::Partition(PartitionPolicy::Memory) => "Galvatron (1F1B+Mem)",
+            MethodSpec::Partition(PartitionPolicy::Time) => "Galvatron (1F1B+Time)",
+        }
+    }
+
+    /// The pipeline schedule this method plans under when the request
+    /// does not override it.
+    pub fn default_schedule(&self) -> Schedule {
+        match self {
+            MethodSpec::PurePipeline => Schedule::GPipe,
+            _ => Schedule::OneFOneB,
+        }
+    }
+
+    /// Short aliases accepted by [`MethodSpec::parse`] besides the
+    /// canonical names (CLI convenience).
+    fn aliases() -> Vec<(&'static str, MethodSpec)> {
+        vec![
+            ("ddp", MethodSpec::Pure(Dim::Dp)),
+            ("dp", MethodSpec::Pure(Dim::Dp)),
+            ("tp", MethodSpec::Pure(Dim::Tp)),
+            ("megatron", MethodSpec::Pure(Dim::Tp)),
+            ("sdp", MethodSpec::Pure(Dim::Sdp)),
+            ("fsdp", MethodSpec::Pure(Dim::Sdp)),
+            ("zero-3", MethodSpec::Pure(Dim::Sdp)),
+            ("pp", MethodSpec::PurePipeline),
+            ("gpipe", MethodSpec::PurePipeline),
+            ("deepspeed-3d", MethodSpec::DeepSpeed3d),
+            ("3d", MethodSpec::DeepSpeed3d),
+            ("dp+tp", MethodSpec::Limited { dims: vec![Dim::Dp, Dim::Tp], pp: false }),
+            ("dp+pp", MethodSpec::Limited { dims: vec![Dim::Dp], pp: true }),
+            ("galvatron-no-ckpt", MethodSpec::Base { ckpt: false }),
+            ("base", MethodSpec::Base { ckpt: true }),
+            ("bi-obj", MethodSpec::Bmw { ckpt: false }),
+            ("bmw", MethodSpec::Bmw { ckpt: true }),
+            ("alpa", MethodSpec::Alpa),
+            ("1f1b+mem", MethodSpec::Partition(PartitionPolicy::Memory)),
+            ("1f1b+time", MethodSpec::Partition(PartitionPolicy::Time)),
+        ]
+    }
+
+    /// Resolve a method name (case-insensitive; canonical row names and
+    /// short aliases) to a spec, with a did-you-mean suggestion on miss.
+    pub fn parse(name: &str) -> Result<MethodSpec, PlanError> {
+        let want = name.trim().to_ascii_lowercase();
+        for spec in Self::catalog() {
+            if spec.canonical_name().to_ascii_lowercase() == want {
+                return Ok(spec);
+            }
+        }
+        for (alias, spec) in Self::aliases() {
+            if alias == want {
+                return Ok(spec);
+            }
+        }
+        let names: Vec<String> = Self::catalog_names();
+        Err(PlanError::UnknownMethod {
+            name: name.to_string(),
+            suggestion: suggest(name, names.iter().map(|s| s.as_str())),
+        })
+    }
+
+    /// Serialize for plan artifacts. Catalog methods round-trip through
+    /// their canonical name; non-catalog `Limited` restrictions (which
+    /// all share the "Galvatron (limited)" display name) keep their
+    /// structure so `save → load` is lossless for every spec.
+    pub fn to_json(&self) -> Json {
+        if let MethodSpec::Limited { dims, pp } = self {
+            if Self::parse(self.canonical_name()).as_ref() != Ok(self) {
+                return Json::obj(vec![(
+                    "limited",
+                    Json::obj(vec![
+                        ("dims", Json::arr(dims.iter().map(|d| Json::str(&d.to_string())))),
+                        ("pp", Json::Bool(*pp)),
+                    ]),
+                )]);
+            }
+        }
+        Json::str(self.canonical_name())
+    }
+
+    /// Inverse of [`MethodSpec::to_json`].
+    pub fn from_json(v: &Json) -> Result<MethodSpec, PlanError> {
+        if let Some(name) = v.as_str() {
+            return Self::parse(name);
+        }
+        if let Some(lim) = v.get("limited") {
+            let bad = |what: &str| PlanError::Artifact {
+                reason: format!("method.limited: missing or invalid {what}"),
+            };
+            let mut dims = Vec::new();
+            for d in lim.get("dims").and_then(Json::as_arr).ok_or_else(|| bad("dims"))? {
+                dims.push(match d.as_str().ok_or_else(|| bad("dims"))? {
+                    "DP" => Dim::Dp,
+                    "SDP" => Dim::Sdp,
+                    "TP" => Dim::Tp,
+                    other => {
+                        return Err(PlanError::Artifact {
+                            reason: format!("method.limited: unknown dimension {other:?}"),
+                        })
+                    }
+                });
+            }
+            let pp = lim.get("pp").and_then(Json::as_bool).ok_or_else(|| bad("pp"))?;
+            return Ok(MethodSpec::Limited { dims, pp });
+        }
+        Err(PlanError::Artifact {
+            reason: "method must be a catalog name or a {\"limited\": ...} object".into(),
+        })
+    }
+
+    /// Run this method with default overrides — the engine behind the
+    /// `search::baselines::run_method` shim. `None` means OOM everywhere.
+    pub fn run(
+        &self,
+        model: &ModelProfile,
+        cluster: &ClusterSpec,
+        max_batch: usize,
+    ) -> Option<SearchOutcome> {
+        self.run_with(model, cluster, &SearchOverrides::new(max_batch))
+    }
+
+    /// Run this method with explicit request-level overrides.
+    pub fn run_with(
+        &self,
+        model: &ModelProfile,
+        cluster: &ClusterSpec,
+        ov: &SearchOverrides,
+    ) -> Option<SearchOutcome> {
+        let n = cluster.n_devices;
+        let base = SearchConfig { max_batch: ov.max_batch, ..Default::default() };
+        match self {
+            MethodSpec::Pure(dim) => optimize(
+                model,
+                cluster,
+                &ov.apply(SearchConfig {
+                    fixed_strategy: Some(levels(&[(*dim, n)])),
+                    pp_degrees: Some(vec![1]),
+                    space: SpaceOptions::default().no_ckpt(),
+                    microbatch_limit: Some(1),
+                    ..base
+                }),
+            ),
+            // GPipe re-materializes activations per microbatch (its
+            // documented default), so the CKPT variant stays in the space.
+            MethodSpec::PurePipeline => optimize(
+                model,
+                cluster,
+                &ov.apply(SearchConfig {
+                    fixed_strategy: Some(crate::parallel::Strategy::serial(false)),
+                    pp_degrees: Some(vec![n.min(model.n_layers())]),
+                    schedule: Schedule::GPipe,
+                    ..base
+                }),
+            ),
+            // Official suggestion: 2-way DP x 2-way TP x PP over the rest
+            // (https://github.com/microsoft/Megatron-DeepSpeed pretrain_bert).
+            MethodSpec::DeepSpeed3d => {
+                let pp = (n / 4).max(1).min(model.n_layers());
+                optimize(
+                    model,
+                    cluster,
+                    &ov.apply(SearchConfig {
+                        fixed_strategy: Some(levels(&[(Dim::Dp, 2), (Dim::Tp, 2)])),
+                        pp_degrees: Some(vec![pp]),
+                        space: SpaceOptions::default().no_ckpt(),
+                        ..base
+                    }),
+                )
+            }
+            MethodSpec::Limited { dims, pp } => {
+                // OptCNN/FlexFlow-era restricted automatic parallelism: no
+                // CKPT; without the pipeline dimension there is also no
+                // gradient accumulation.
+                let mut cfg = SearchConfig {
+                    space: SpaceOptions::default().with_dims(dims).no_ckpt(),
+                    ..base
+                };
+                if !*pp {
+                    cfg.pp_degrees = Some(vec![1]);
+                    cfg.microbatch_limit = Some(1);
+                }
+                optimize(model, cluster, &ov.apply(cfg))
+            }
+            MethodSpec::Base { ckpt: false } => optimize(
+                model,
+                cluster,
+                &ov.apply(SearchConfig { space: SpaceOptions::default().no_ckpt(), ..base }),
+            ),
+            MethodSpec::Base { ckpt: true } => optimize(model, cluster, &ov.apply(base)),
+            MethodSpec::Bmw { ckpt: false } => optimize_bmw(
+                model,
+                cluster,
+                &ov.apply(SearchConfig { space: SpaceOptions::default().no_ckpt(), ..base }),
+            ),
+            MethodSpec::Bmw { ckpt: true } => optimize_bmw(model, cluster, &ov.apply(base)),
+            // Alpa treats SDP as a global alternative to DP (paper §VII-D):
+            // best of two restricted searches, no CKPT.
+            MethodSpec::Alpa => {
+                let a = optimize(
+                    model,
+                    cluster,
+                    &ov.apply(SearchConfig {
+                        space: SpaceOptions::default().with_dims(&[Dim::Dp, Dim::Tp]).no_ckpt(),
+                        ..base.clone()
+                    }),
+                );
+                let b = optimize(
+                    model,
+                    cluster,
+                    &ov.apply(SearchConfig {
+                        space: SpaceOptions::default().with_dims(&[Dim::Sdp, Dim::Tp]).no_ckpt(),
+                        ..base
+                    }),
+                );
+                match (a, b) {
+                    (Some(x), Some(y)) => {
+                        Some(if x.throughput() >= y.throughput() { x } else { y })
+                    }
+                    (x, y) => x.or(y),
+                }
+            }
+            MethodSpec::Partition(policy) => {
+                run_fixed_partition(*policy, model, cluster, &ov.apply(SearchConfig {
+                    space: SpaceOptions::default().no_ckpt(),
+                    ..base
+                }))
+            }
+        }
+    }
+}
+
+/// Table V ablations: fixed memory-balanced or time-balanced partitions
+/// (no adjustment loop), CKPT disabled, 1F1B schedule.
+fn run_fixed_partition(
+    policy: PartitionPolicy,
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+) -> Option<SearchOutcome> {
+    let n_layers = model.n_layers();
+    let flops_w: Vec<f64> = model.layers.iter().map(|l| l.flops_fwd).collect();
+    let mut best: Option<SearchOutcome> = None;
+    let mut infeasible_streak = 0usize;
+    for batch in crate::search::batch_candidates(cfg.max_batch) {
+        let mut any = false;
+        for pp in pp_degrees(model, cluster, cfg) {
+            if pp < 2 {
+                continue;
+            }
+            let group = cluster.n_devices / pp;
+            for m in crate::search::microbatch_candidates(batch, pp) {
+                let partition = match policy {
+                    PartitionPolicy::Time => balanced_partition(&flops_w, pp),
+                    PartitionPolicy::Memory => {
+                        let b_m = batch as f64 / m as f64;
+                        let act_w: Vec<f64> = model
+                            .layers
+                            .iter()
+                            .map(|l| l.act_bytes * b_m / group as f64)
+                            .collect();
+                        let ms_w: Vec<f64> = (0..n_layers)
+                            .map(|i| {
+                                (model.layers[i].params + model.extra_params(i)) * 16.0
+                                    / group as f64
+                            })
+                            .collect();
+                        memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule)
+                    }
+                };
+                if let Some((out, _)) =
+                    evaluate_partition(model, cluster, cfg, batch, pp, m, &partition)
+                {
+                    any = true;
+                    if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
+                        best = Some(out);
+                    }
+                }
+            }
+        }
+        if any {
+            infeasible_streak = 0;
+        } else if best.is_some() {
+            infeasible_streak += 1;
+            if infeasible_streak >= cfg.patience {
+                break;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_parse_back() {
+        for spec in MethodSpec::catalog() {
+            let parsed = MethodSpec::parse(spec.canonical_name()).unwrap();
+            assert_eq!(parsed, spec, "{}", spec.canonical_name());
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(MethodSpec::parse("bmw").unwrap(), MethodSpec::Bmw { ckpt: true });
+        assert_eq!(MethodSpec::parse("GALVATRON-BMW").unwrap(), MethodSpec::Bmw { ckpt: true });
+        assert_eq!(MethodSpec::parse("fsdp").unwrap(), MethodSpec::Pure(Dim::Sdp));
+        assert_eq!(
+            MethodSpec::parse("dp+pp").unwrap(),
+            MethodSpec::Limited { dims: vec![Dim::Dp], pp: true }
+        );
+    }
+
+    #[test]
+    fn unknown_method_suggests() {
+        let err = MethodSpec::parse("Galvatron-BWM").unwrap_err();
+        match err {
+            PlanError::UnknownMethod { suggestion, .. } => {
+                assert_eq!(suggestion.as_deref(), Some("Galvatron-BMW"));
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn method_json_round_trips_including_non_catalog_limited() {
+        let mut specs = MethodSpec::catalog();
+        // Non-catalog restriction: not nameable, must survive structurally.
+        specs.push(MethodSpec::Limited { dims: vec![Dim::Sdp], pp: true });
+        specs.push(MethodSpec::Limited { dims: vec![Dim::Sdp, Dim::Tp], pp: false });
+        for spec in specs {
+            let v = crate::util::json::Json::parse(&spec.to_json().to_string()).unwrap();
+            assert_eq!(MethodSpec::from_json(&v).unwrap(), spec, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn overrides_tighten_microbatch_cap() {
+        let base = SearchConfig { microbatch_limit: Some(1), ..Default::default() };
+        let mut ov = SearchOverrides::new(64);
+        ov.microbatch_limit = Some(4);
+        assert_eq!(ov.apply(base.clone()).microbatch_limit, Some(1));
+        let loose = SearchConfig { microbatch_limit: None, ..Default::default() };
+        assert_eq!(ov.apply(loose).microbatch_limit, Some(4));
+        assert_eq!(ov.apply(base).max_batch, 64);
+    }
+}

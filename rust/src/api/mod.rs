@@ -1,0 +1,47 @@
+//! The public planning API — the one stable surface over the search
+//! machinery (paper §IV) for library users, the CLI, the experiment
+//! regenerators, and the benches.
+//!
+//! The pieces:
+//!
+//!   * [`PlanRequest`] — builder describing *what* to plan: model and
+//!     cluster (by name or inline spec), memory budget, method, schedule,
+//!     batch/microbatch caps, overlap factor, pipeline-degree pins.
+//!   * [`MethodSpec`] — the typed strategy catalog (every row of the
+//!     paper's Tables II-VI); replaces the magic strings formerly
+//!     dispatched by `search::baselines::run_method`.
+//!   * [`Planner`] — resolves and validates a request, runs the search,
+//!     and returns a [`PlanReport`] or a typed [`PlanError`]
+//!     (unknown names carry did-you-mean suggestions; OOM is
+//!     [`PlanError::Infeasible`], not a panic or a bare `None`).
+//!   * [`PlanReport`] — the serializable plan artifact: the
+//!     [`crate::parallel::ParallelPlan`] plus cost breakdown and
+//!     per-stage memory/bubble diagnostics. Round-trips through JSON via
+//!     [`crate::util::json`], so `galvatron plan --out plan.json` →
+//!     `galvatron simulate --plan plan.json` is a real pipeline.
+//!
+//! ```no_run
+//! use galvatron::api::{MethodSpec, PlanRequest, Planner};
+//!
+//! let report = PlanRequest::new("bert-huge-32", "titan8")
+//!     .memory_gb(16.0)
+//!     .method(MethodSpec::Bmw { ckpt: true })
+//!     .plan()?;
+//! report.save(std::path::Path::new("plan.json"))?;
+//! let sim = Planner::new().simulate_report(&report)?;
+//! println!("est {:.2} / sim {:.2} samples/s", report.throughput, sim.throughput);
+//! # Ok::<(), galvatron::api::PlanError>(())
+//! ```
+
+pub mod error;
+pub mod method;
+pub mod report;
+pub mod request;
+
+pub use error::{suggest, PlanError};
+pub use method::{MethodSpec, PartitionPolicy, SearchOverrides};
+pub use report::{PlanReport, StageReport, PLAN_ARTIFACT_VERSION};
+pub use request::{
+    parse_schedule, resolve_cluster_name, resolve_model_name, schedule_key, ClusterSource,
+    ModelSource, PlanRequest, Planner, ResolvedRequest,
+};

@@ -1,0 +1,259 @@
+//! `PlanReport`: the planner's output as a persistent, serializable
+//! artifact. `galvatron plan --out plan.json` writes one;
+//! `galvatron simulate --plan plan.json` (and eventually `train`) consumes
+//! it, so a plan found once can be re-validated and executed later.
+
+use std::path::Path;
+
+use crate::cost::pipeline::Schedule;
+use crate::parallel::ParallelPlan;
+use crate::search::SearchOutcome;
+use crate::util::json::Json;
+use crate::util::GIB;
+
+use super::error::PlanError;
+use super::method::MethodSpec;
+use super::request::{parse_schedule, schedule_key, ResolvedRequest};
+
+/// Artifact format version (bump on breaking schema changes).
+pub const PLAN_ARTIFACT_VERSION: usize = 1;
+
+/// Per-stage diagnostics carried by a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageReport {
+    /// Model layer range `[start, end)` assigned to this stage.
+    pub layers: (usize, usize),
+    /// Peak memory under the report's schedule, bytes.
+    pub peak_mem_bytes: f64,
+    /// Per-microbatch stage time without gradient sync, seconds.
+    pub time_nosync: f64,
+    /// Per-microbatch stage time of the last (syncing) microbatch.
+    pub time_sync: f64,
+    /// Estimated pipeline-bubble fraction for this stage (Eq. 9 view:
+    /// 1 - m·C_i / iter_time, clamped to [0, 1]).
+    pub est_bubble: f64,
+}
+
+/// A complete planning result: the plan itself plus enough context
+/// (model/cluster names, budget, method, schedule) to re-resolve,
+/// re-simulate, and eventually execute it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanReport {
+    /// Model zoo name (re-resolvable via `model_by_name`).
+    pub model: String,
+    /// Cluster preset name (re-resolvable via `cluster_by_name`).
+    pub cluster: String,
+    /// Per-device memory budget the plan was found under, GB.
+    pub memory_budget_gb: f64,
+    pub method: MethodSpec,
+    pub schedule: Schedule,
+    pub overlap_slowdown: f64,
+    pub max_batch: usize,
+    pub plan: ParallelPlan,
+    /// Estimated throughput, samples/second (Eq. 9).
+    pub throughput: f64,
+    /// Estimated end-to-end iteration time, seconds.
+    pub iter_time: f64,
+    /// Time balance degree alpha_t (Eq. 6).
+    pub alpha_t: f64,
+    /// Memory balance degree alpha_m (Eq. 6).
+    pub alpha_m: f64,
+    pub stages: Vec<StageReport>,
+}
+
+impl PlanReport {
+    /// Package a search outcome found for a resolved request.
+    pub fn from_outcome(r: &ResolvedRequest, out: &SearchOutcome) -> PlanReport {
+        let schedule = r.overrides.schedule.unwrap_or_else(|| r.method.default_schedule());
+        let overlap = r
+            .overrides
+            .overlap_slowdown
+            .unwrap_or(crate::cost::DEFAULT_OVERLAP_SLOWDOWN);
+        let m = out.plan.microbatches as f64;
+        let iter = out.cost.iter_time;
+        let stages = out
+            .cost
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                let range = out.plan.stage_layers(s);
+                let bubble = if iter > 0.0 {
+                    (1.0 - m * st.time_nosync / iter).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                StageReport {
+                    layers: (range.start, range.end),
+                    peak_mem_bytes: st.peak_mem,
+                    time_nosync: st.time_nosync,
+                    time_sync: st.time_sync,
+                    est_bubble: bubble,
+                }
+            })
+            .collect();
+        PlanReport {
+            model: r.model_name.clone(),
+            cluster: r.cluster_name.clone(),
+            memory_budget_gb: r.cluster.gpu.mem_bytes / GIB,
+            method: r.method.clone(),
+            schedule,
+            overlap_slowdown: overlap,
+            max_batch: r.overrides.max_batch,
+            plan: out.plan.clone(),
+            throughput: out.cost.throughput,
+            iter_time: out.cost.iter_time,
+            alpha_t: out.cost.alpha_t,
+            alpha_m: out.cost.alpha_m,
+            stages,
+        }
+    }
+
+    // ---- JSON (de)serialization -----------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(PLAN_ARTIFACT_VERSION as f64)),
+            ("model", Json::str(&self.model)),
+            ("cluster", Json::str(&self.cluster)),
+            ("memory_budget_gb", Json::num(self.memory_budget_gb)),
+            ("method", self.method.to_json()),
+            ("schedule", Json::str(schedule_key(self.schedule))),
+            ("overlap_slowdown", Json::num(self.overlap_slowdown)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("plan", self.plan.to_json()),
+            ("throughput", Json::num(self.throughput)),
+            ("iter_time", Json::num(self.iter_time)),
+            ("alpha_t", Json::num(self.alpha_t)),
+            ("alpha_m", Json::num(self.alpha_m)),
+            (
+                "stages",
+                Json::arr(self.stages.iter().map(|s| {
+                    Json::obj(vec![
+                        (
+                            "layers",
+                            Json::arr(vec![
+                                Json::num(s.layers.0 as f64),
+                                Json::num(s.layers.1 as f64),
+                            ]),
+                        ),
+                        ("peak_mem_bytes", Json::num(s.peak_mem_bytes)),
+                        ("time_nosync", Json::num(s.time_nosync)),
+                        ("time_sync", Json::num(s.time_sync)),
+                        ("est_bubble", Json::num(s.est_bubble)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlanReport, PlanError> {
+        let bad = |what: &str| PlanError::Artifact { reason: format!("missing or invalid {what}") };
+        let version = v.get("version").and_then(Json::as_usize).ok_or_else(|| bad("version"))?;
+        if version != PLAN_ARTIFACT_VERSION {
+            return Err(PlanError::Artifact {
+                reason: format!(
+                    "unsupported plan artifact version {version} (supported: {PLAN_ARTIFACT_VERSION})"
+                ),
+            });
+        }
+        let gets = |key: &str| -> Result<String, PlanError> {
+            Ok(v.get(key).and_then(Json::as_str).ok_or_else(|| bad(key))?.to_string())
+        };
+        let getn = |key: &str| v.get(key).and_then(Json::as_f64).ok_or_else(|| bad(key));
+        let method = MethodSpec::from_json(v.get("method").ok_or_else(|| bad("method"))?)?;
+        let schedule = parse_schedule(&gets("schedule")?)?;
+        let plan = ParallelPlan::from_json(v.get("plan").ok_or_else(|| bad("plan"))?)
+            .map_err(|e| PlanError::Artifact { reason: format!("plan: {e}") })?;
+        let mut stages = Vec::new();
+        for sv in v.get("stages").and_then(Json::as_arr).ok_or_else(|| bad("stages"))? {
+            let layers = sv
+                .get("layers")
+                .and_then(Json::as_usize_vec)
+                .filter(|l| l.len() == 2)
+                .ok_or_else(|| bad("stage layers"))?;
+            let f = |key: &str| sv.get(key).and_then(Json::as_f64).ok_or_else(|| bad(key));
+            stages.push(StageReport {
+                layers: (layers[0], layers[1]),
+                peak_mem_bytes: f("peak_mem_bytes")?,
+                time_nosync: f("time_nosync")?,
+                time_sync: f("time_sync")?,
+                est_bubble: f("est_bubble")?,
+            });
+        }
+        Ok(PlanReport {
+            model: gets("model")?,
+            cluster: gets("cluster")?,
+            memory_budget_gb: getn("memory_budget_gb")?,
+            method,
+            schedule,
+            overlap_slowdown: getn("overlap_slowdown")?,
+            max_batch: v.get("max_batch").and_then(Json::as_usize).ok_or_else(|| bad("max_batch"))?,
+            plan,
+            throughput: getn("throughput")?,
+            iter_time: getn("iter_time")?,
+            alpha_t: getn("alpha_t")?,
+            alpha_m: getn("alpha_m")?,
+            stages,
+        })
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json_str(s: &str) -> Result<PlanReport, PlanError> {
+        let v = Json::parse(s)
+            .map_err(|e| PlanError::Artifact { reason: format!("parse: {e}") })?;
+        Self::from_json(&v)
+    }
+
+    /// Write the artifact to disk.
+    pub fn save(&self, path: &Path) -> Result<(), PlanError> {
+        std::fs::write(path, self.to_json_string()).map_err(|e| PlanError::Artifact {
+            reason: format!("writing {}: {e}", path.display()),
+        })
+    }
+
+    /// Read an artifact from disk.
+    pub fn load(path: &Path) -> Result<PlanReport, PlanError> {
+        let text = std::fs::read_to_string(path).map_err(|e| PlanError::Artifact {
+            reason: format!("reading {}: {e}", path.display()),
+        })?;
+        Self::from_json_str(&text)
+    }
+
+    // ---- presentation ----------------------------------------------------
+
+    /// Human-readable summary (plan shape + cost + per-stage diagnostics).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} on {} @ {:.0} GB | {} | {} schedule\n",
+            self.model,
+            self.cluster,
+            self.memory_budget_gb,
+            self.method.canonical_name(),
+            crate::search::schedule_name(self.schedule),
+        ));
+        out.push_str(&self.plan.summary());
+        out.push_str(&format!(
+            "estimated: {:.2} samples/s, iter {:.3}s, alpha_t {:.3}, alpha_m {:.3}\n",
+            self.throughput, self.iter_time, self.alpha_t, self.alpha_m
+        ));
+        for (i, s) in self.stages.iter().enumerate() {
+            out.push_str(&format!(
+                "  stage {i}: layers {}..{}, peak {:.2} GiB, mb time {:.4}s (sync {:.4}s), est bubble {:.1}%\n",
+                s.layers.0,
+                s.layers.1,
+                s.peak_mem_bytes / GIB,
+                s.time_nosync,
+                s.time_sync,
+                s.est_bubble * 100.0
+            ));
+        }
+        out
+    }
+}

@@ -1,0 +1,378 @@
+//! `PlanRequest`: the one way to ask the planner for a hybrid-parallel
+//! plan — model/cluster by name or inline spec, memory budget, method,
+//! schedule and search knobs — plus the `Planner` facade that resolves and
+//! executes it.
+
+use crate::cluster::{cluster_by_name, cluster_names, ClusterSpec};
+use crate::cost::pipeline::Schedule;
+use crate::model::{model_by_name, model_names, ModelProfile};
+use crate::sim::{simulate, SimReport};
+use crate::util::GIB;
+
+use super::error::{suggest, PlanError};
+use super::method::{MethodSpec, SearchOverrides};
+use super::report::PlanReport;
+
+/// A model, referenced by zoo name or provided inline.
+#[derive(Debug, Clone)]
+pub enum ModelSource {
+    Name(String),
+    Spec(ModelProfile),
+}
+
+/// A cluster, referenced by preset name or provided inline.
+#[derive(Debug, Clone)]
+pub enum ClusterSource {
+    Name(String),
+    Spec(ClusterSpec),
+}
+
+/// Parse a pipeline-schedule name ("1f1b" / "gpipe").
+pub fn parse_schedule(name: &str) -> Result<Schedule, PlanError> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "1f1b" | "1f1b-flush" | "pipedream-flush" => Ok(Schedule::OneFOneB),
+        "gpipe" => Ok(Schedule::GPipe),
+        other => Err(PlanError::InvalidRequest {
+            reason: format!("unknown schedule {other:?}; expected \"1f1b\" or \"gpipe\""),
+        }),
+    }
+}
+
+/// Stable artifact name for a schedule (inverse of [`parse_schedule`]).
+pub fn schedule_key(s: Schedule) -> &'static str {
+    match s {
+        Schedule::OneFOneB => "1f1b",
+        Schedule::GPipe => "gpipe",
+    }
+}
+
+/// Builder for one planning run. Construct with [`PlanRequest::new`], chain
+/// setters, then call [`PlanRequest::plan`] (or hand it to a [`Planner`]).
+///
+/// ```no_run
+/// use galvatron::api::{MethodSpec, PlanRequest};
+/// let report = PlanRequest::new("bert-huge-32", "titan8")
+///     .memory_gb(16.0)
+///     .max_batch(512)
+///     .method(MethodSpec::Bmw { ckpt: true })
+///     .plan()?;
+/// println!("{:.2} samples/s", report.throughput);
+/// # Ok::<(), galvatron::api::PlanError>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    pub model: ModelSource,
+    pub cluster: ClusterSource,
+    /// Per-device memory budget in GB; `None` keeps the preset's physical
+    /// memory (the paper restricts 24 GB cards to 8/12/16/20 GB budgets).
+    pub memory_gb: Option<f64>,
+    pub method: MethodSpec,
+    pub max_batch: usize,
+    pub schedule: Option<Schedule>,
+    pub overlap_slowdown: Option<f64>,
+    pub microbatch_limit: Option<usize>,
+    pub pipeline_degrees: Option<Vec<usize>>,
+}
+
+impl PlanRequest {
+    /// Start a request for `model` on `cluster` (both by name) with the
+    /// full Galvatron-BMW method and the paper's default knobs.
+    pub fn new(model: &str, cluster: &str) -> PlanRequest {
+        PlanRequest {
+            model: ModelSource::Name(model.to_string()),
+            cluster: ClusterSource::Name(cluster.to_string()),
+            memory_gb: None,
+            method: MethodSpec::Bmw { ckpt: true },
+            max_batch: 512,
+            schedule: None,
+            overlap_slowdown: None,
+            microbatch_limit: None,
+            pipeline_degrees: None,
+        }
+    }
+
+    /// Plan for an inline model profile instead of a zoo name.
+    pub fn model_spec(mut self, model: ModelProfile) -> Self {
+        self.model = ModelSource::Spec(model);
+        self
+    }
+
+    /// Plan for an inline cluster spec instead of a preset name.
+    pub fn cluster_spec(mut self, cluster: ClusterSpec) -> Self {
+        self.cluster = ClusterSource::Spec(cluster);
+        self
+    }
+
+    /// Restrict the per-device memory budget (GB).
+    pub fn memory_gb(mut self, gb: f64) -> Self {
+        self.memory_gb = Some(gb);
+        self
+    }
+
+    /// Choose the planning method (default: full Galvatron-BMW).
+    pub fn method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Choose the planning method by catalog name.
+    pub fn method_name(mut self, name: &str) -> Result<Self, PlanError> {
+        self.method = MethodSpec::parse(name)?;
+        Ok(self)
+    }
+
+    /// Largest global batch size the sweep explores.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Override the pipeline schedule (default: the method's own).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Override the compute/communication contention factor (§V).
+    pub fn overlap_slowdown(mut self, factor: f64) -> Self {
+        self.overlap_slowdown = Some(factor);
+        self
+    }
+
+    /// Cap the microbatch count (gradient-accumulation depth).
+    pub fn microbatch_limit(mut self, limit: usize) -> Self {
+        self.microbatch_limit = Some(limit);
+        self
+    }
+
+    /// Restrict the pipeline degrees explored (e.g. `&[4]` to pin PP=4).
+    pub fn pipeline_degrees(mut self, degrees: &[usize]) -> Self {
+        self.pipeline_degrees = Some(degrees.to_vec());
+        self
+    }
+
+    /// Convenience: plan with a default [`Planner`].
+    pub fn plan(&self) -> Result<PlanReport, PlanError> {
+        Planner::new().plan(self)
+    }
+}
+
+/// A request after name resolution and validation: concrete model, cluster
+/// (budget applied), and method — ready to search.
+#[derive(Debug, Clone)]
+pub struct ResolvedRequest {
+    /// Name the report will carry (re-resolvable where possible).
+    pub model_name: String,
+    pub cluster_name: String,
+    pub model: ModelProfile,
+    pub cluster: ClusterSpec,
+    pub method: MethodSpec,
+    pub overrides: SearchOverrides,
+}
+
+/// Resolve a model name against the Table I zoo.
+pub fn resolve_model_name(name: &str) -> Result<ModelProfile, PlanError> {
+    model_by_name(name).ok_or_else(|| PlanError::UnknownModel {
+        name: name.to_string(),
+        suggestion: suggest(name, model_names()),
+    })
+}
+
+/// Resolve a cluster preset name (physical memory budget).
+pub fn resolve_cluster_name(name: &str) -> Result<ClusterSpec, PlanError> {
+    cluster_by_name(name).ok_or_else(|| PlanError::UnknownCluster {
+        name: name.to_string(),
+        suggestion: suggest(name, cluster_names()),
+    })
+}
+
+/// The planning facade: resolves a [`PlanRequest`], runs the method's
+/// search, and packages the result as a serializable [`PlanReport`].
+#[derive(Debug, Default)]
+pub struct Planner;
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner
+    }
+
+    /// Name resolution + validation without running the (expensive) search.
+    pub fn resolve(&self, req: &PlanRequest) -> Result<ResolvedRequest, PlanError> {
+        let (model_name, model) = match &req.model {
+            ModelSource::Name(n) => (n.clone(), resolve_model_name(n)?),
+            ModelSource::Spec(m) => (m.name.clone(), m.clone()),
+        };
+        let (cluster_name, mut cluster) = match &req.cluster {
+            ClusterSource::Name(n) => (n.clone(), resolve_cluster_name(n)?),
+            ClusterSource::Spec(c) => (c.name.clone(), c.clone()),
+        };
+        if let Some(gb) = req.memory_gb {
+            if !(gb.is_finite() && gb > 0.0) {
+                return Err(PlanError::InvalidRequest {
+                    reason: format!("memory budget must be a positive number of GB, got {gb}"),
+                });
+            }
+            cluster = cluster.with_memory_budget(gb * GIB);
+        }
+        if req.max_batch == 0 {
+            return Err(PlanError::InvalidRequest { reason: "max_batch must be >= 1".into() });
+        }
+        if let Some(o) = req.overlap_slowdown {
+            if !(o.is_finite() && o >= 1.0) {
+                return Err(PlanError::InvalidRequest {
+                    reason: format!("overlap slowdown must be >= 1.0, got {o}"),
+                });
+            }
+        }
+        if let Some(m) = req.microbatch_limit {
+            if m == 0 {
+                return Err(PlanError::InvalidRequest {
+                    reason: "microbatch limit must be >= 1".into(),
+                });
+            }
+        }
+        if let Some(pps) = &req.pipeline_degrees {
+            for &p in pps {
+                if p == 0 || cluster.n_devices % p != 0 {
+                    return Err(PlanError::InvalidRequest {
+                        reason: format!(
+                            "pipeline degree {p} does not divide the {} devices of {cluster_name}",
+                            cluster.n_devices
+                        ),
+                    });
+                }
+                // The default degree list filters these implicitly; pinned
+                // degrees must honor the same search invariants (at least
+                // one layer per stage, power-of-two stage device groups)
+                // or the partition/enumeration layers panic.
+                if p > model.n_layers() {
+                    return Err(PlanError::InvalidRequest {
+                        reason: format!(
+                            "pipeline degree {p} exceeds the {} layers of {model_name}",
+                            model.n_layers()
+                        ),
+                    });
+                }
+                if !crate::util::is_pow2(cluster.n_devices / p) {
+                    return Err(PlanError::InvalidRequest {
+                        reason: format!(
+                            "pipeline degree {p} leaves a non-power-of-two stage group of {} devices",
+                            cluster.n_devices / p
+                        ),
+                    });
+                }
+            }
+        }
+        let mut overrides = SearchOverrides::new(req.max_batch);
+        overrides.schedule = req.schedule;
+        overrides.overlap_slowdown = req.overlap_slowdown;
+        overrides.microbatch_limit = req.microbatch_limit;
+        overrides.pp_degrees = req.pipeline_degrees.clone();
+        Ok(ResolvedRequest {
+            model_name,
+            cluster_name,
+            model,
+            cluster,
+            method: req.method.clone(),
+            overrides,
+        })
+    }
+
+    /// Run the full planning pipeline:
+    /// resolve → search → package as an artifact.
+    pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
+        let r = self.resolve(req)?;
+        let outcome =
+            r.method.run_with(&r.model, &r.cluster, &r.overrides).ok_or_else(|| {
+                PlanError::Infeasible {
+                    reason: format!(
+                        "no plan for {} on {} fits the {:.1} GB budget ({}, max batch {})",
+                        r.model_name,
+                        r.cluster_name,
+                        r.cluster.gpu.mem_bytes / GIB,
+                        r.method.canonical_name(),
+                        r.overrides.max_batch
+                    ),
+                }
+            })?;
+        Ok(PlanReport::from_outcome(&r, &outcome))
+    }
+
+    /// Re-run the discrete-event simulator for a saved report (the
+    /// `plan → simulate` artifact pipeline). Resolves the report's model
+    /// and cluster by name from the built-in catalogs, re-validates the
+    /// plan, and simulates it.
+    ///
+    /// A report planned from an inline [`PlanRequest::model_spec`] /
+    /// [`PlanRequest::cluster_spec`] carries only the spec's *name*,
+    /// which the catalogs may not (faithfully) resolve — pass the
+    /// original specs to [`Planner::simulate_plan`] instead.
+    pub fn simulate_report(&self, report: &PlanReport) -> Result<SimReport, PlanError> {
+        let model = resolve_model_name(&report.model)?;
+        let cluster = resolve_cluster_name(&report.cluster)?
+            .with_memory_budget(report.memory_budget_gb * GIB);
+        self.simulate_plan(&model, &cluster, report)
+    }
+
+    /// Simulate a report against explicitly provided model/cluster specs
+    /// (the inline-spec counterpart of [`Planner::simulate_report`]).
+    pub fn simulate_plan(
+        &self,
+        model: &ModelProfile,
+        cluster: &ClusterSpec,
+        report: &PlanReport,
+    ) -> Result<SimReport, PlanError> {
+        report
+            .plan
+            .validate(model.n_layers(), cluster.n_devices)
+            .map_err(|e| PlanError::Artifact {
+                reason: format!("plan does not fit {}: {e}", report.model),
+            })?;
+        Ok(simulate(model, cluster, &report.plan, report.schedule, report.overlap_slowdown))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_names_get_suggestions() {
+        let err = PlanRequest::new("bert-hug-32", "titan8").plan().unwrap_err();
+        match err {
+            PlanError::UnknownModel { suggestion, .. } => {
+                assert_eq!(suggestion.as_deref(), Some("bert-huge-32"))
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        let err = PlanRequest::new("bert-huge-32", "titan9").plan().unwrap_err();
+        match err {
+            PlanError::UnknownCluster { suggestion, .. } => {
+                assert_eq!(suggestion.as_deref(), Some("titan8"))
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_knobs_rejected() {
+        let p = Planner::new();
+        let req = PlanRequest::new("bert-huge-32", "titan8").memory_gb(-4.0);
+        assert!(matches!(p.resolve(&req), Err(PlanError::InvalidRequest { .. })));
+        let req = PlanRequest::new("bert-huge-32", "titan8").max_batch(0);
+        assert!(matches!(p.resolve(&req), Err(PlanError::InvalidRequest { .. })));
+        let req = PlanRequest::new("bert-huge-32", "titan8").pipeline_degrees(&[3]);
+        assert!(matches!(p.resolve(&req), Err(PlanError::InvalidRequest { .. })));
+        // Divides the devices but exceeds the model's 32 layers.
+        let req = PlanRequest::new("bert-huge-32", "a100x64").pipeline_degrees(&[64]);
+        assert!(matches!(p.resolve(&req), Err(PlanError::InvalidRequest { .. })));
+    }
+
+    #[test]
+    fn schedule_names_round_trip() {
+        for s in [Schedule::OneFOneB, Schedule::GPipe] {
+            assert_eq!(parse_schedule(schedule_key(s)).unwrap(), s);
+        }
+        assert!(parse_schedule("fifo").is_err());
+    }
+}

@@ -9,41 +9,17 @@ use crate::search::base::{evaluate_partition, SearchConfig};
 use crate::search::bmw::{memory_balanced_partition, optimize_bmw, partition_str};
 use crate::search::decision_tree::{total_candidates, SpaceOptions};
 use crate::search::partition::balanced_partition;
-use crate::search::{optimize, SearchOutcome};
+use crate::search::optimize;
 use crate::sim::simulate;
 use crate::util::table::Table;
-use crate::util::{GIB, MIB};
+use crate::util::GIB;
 
 use super::{cluster, model, ExpOptions};
 
 /// Group a plan's per-layer strategies into "(strategy) ×N" runs — the
-/// Fig. 6 visualization.
+/// Fig. 6 visualization (shim over [`ParallelPlan::summary`]).
 pub fn plan_summary(plan: &ParallelPlan) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "PP={} partition={} batch={} microbatches={}\n",
-        plan.pp,
-        partition_str(&plan.partition),
-        plan.batch,
-        plan.microbatches
-    ));
-    for s in 0..plan.pp {
-        let range = plan.stage_layers(s);
-        out.push_str(&format!("  stage {s} (layers {}..{}):", range.start, range.end));
-        let mut runs: Vec<(String, usize)> = Vec::new();
-        for li in range {
-            let label = plan.strategies[li].label();
-            match runs.last_mut() {
-                Some((l, n)) if *l == label => *n += 1,
-                _ => runs.push((label, 1)),
-            }
-        }
-        for (label, n) in runs {
-            out.push_str(&format!(" [{label} ×{n}]"));
-        }
-        out.push('\n');
-    }
-    out
+    plan.summary()
 }
 
 /// Fig. 4: 4-way 1F1B pipelines under memory-/time-balanced/bi-objective
@@ -256,7 +232,7 @@ pub fn fig7(opts: &ExpOptions) -> Table {
         let cl = cluster("titan8", 16.0);
         // Use an overlap-heavy plan (DP/SDP gradient comm overlapping the
         // backward) — the regime the paper's Fig. 7 profiles.
-        let Some(out) = crate::search::baselines::run_method("FSDP/ZeRO-3 (SDP)", &mp, &cl, opts.max_batch.min(128))
+        let Some(out) = crate::api::MethodSpec::Pure(Dim::Sdp).run(&mp, &cl, opts.max_batch.min(128))
             .or_else(|| optimize(&mp, &cl, &SearchConfig { max_batch: opts.max_batch.min(128), ..Default::default() }))
         else {
             t.row([mname.clone(), "OOM".into(), "OOM".into()]);
@@ -280,7 +256,7 @@ pub fn fig7(opts: &ExpOptions) -> Table {
 pub fn estimation_errors(mname: &str) -> Option<(f64, f64)> {
     let mp = model(mname);
     let cl = cluster("titan8", 16.0);
-    let out = crate::search::baselines::run_method("FSDP/ZeRO-3 (SDP)", &mp, &cl, 64)?;
+    let out = crate::api::MethodSpec::Pure(Dim::Sdp).run(&mp, &cl, 64)?;
     let sim = simulate(&mp, &cl, &out.plan, Schedule::OneFOneB, 1.3);
     let with = plan_cost(&mp, &cl, &out.plan, Schedule::OneFOneB, 1.3).iter_time;
     let without = plan_cost(&mp, &cl, &out.plan, Schedule::OneFOneB, 1.0).iter_time;
@@ -288,31 +264,6 @@ pub fn estimation_errors(mname: &str) -> Option<(f64, f64)> {
         (with - sim.iter_time) / sim.iter_time,
         (without - sim.iter_time) / sim.iter_time,
     ))
-}
-
-/// Helper used by `main.rs plan`: run one method and show plan + sim.
-pub fn show_plan(out: &SearchOutcome, mp: &ModelProfile, cl: &crate::cluster::ClusterSpec) {
-    println!("{}", plan_summary(&out.plan));
-    println!(
-        "estimated: {:.2} samples/s, iter {:.3}s, alpha_t {:.3}, alpha_m {:.3}",
-        out.cost.throughput, out.cost.iter_time, out.cost.alpha_t, out.cost.alpha_m
-    );
-    for (i, s) in out.cost.stages.iter().enumerate() {
-        println!(
-            "  stage {i}: peak mem {:.2} GiB, mb time {:.4}s (sync {:.4}s)",
-            s.peak_mem / GIB,
-            s.time_nosync,
-            s.time_sync
-        );
-    }
-    let sim = simulate(mp, cl, &out.plan, Schedule::OneFOneB, 1.3);
-    println!(
-        "simulated: {:.2} samples/s, iter {:.3}s, bubbles {:?}",
-        sim.throughput,
-        sim.iter_time,
-        sim.bubble_fraction.iter().map(|b| format!("{:.2}", b)).collect::<Vec<_>>()
-    );
-    let _ = MIB;
 }
 
 #[cfg(test)]

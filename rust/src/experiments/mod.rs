@@ -5,8 +5,9 @@
 pub mod figures;
 pub mod tables;
 
-use crate::cluster::{cluster_by_name, ClusterSpec};
-use crate::model::{model_by_name, ModelProfile};
+use crate::api::{resolve_cluster_name, resolve_model_name};
+use crate::cluster::ClusterSpec;
+use crate::model::ModelProfile;
 use crate::util::GIB;
 
 /// Common knobs for experiment runs (runtime scales with `max_batch`).
@@ -54,19 +55,15 @@ impl ExpOptions {
     }
 }
 
-/// Resolve a model or panic with the accepted names.
+/// Resolve a model or panic with a did-you-mean hint (the regenerators
+/// are batch jobs; library users should prefer `api::resolve_model_name`).
 pub fn model(name: &str) -> ModelProfile {
-    model_by_name(name).unwrap_or_else(|| {
-        panic!(
-            "unknown model {name:?}; expected one of {:?}",
-            crate::model::model_names()
-        )
-    })
+    resolve_model_name(name).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Resolve a cluster with a memory budget in GB.
 pub fn cluster(name: &str, budget_gb: f64) -> ClusterSpec {
-    cluster_by_name(name)
-        .unwrap_or_else(|| panic!("unknown cluster {name:?}"))
+    resolve_cluster_name(name)
+        .unwrap_or_else(|e| panic!("{e}"))
         .with_memory_budget(budget_gb * GIB)
 }

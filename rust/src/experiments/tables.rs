@@ -5,7 +5,8 @@
 //! or OOM. Absolute numbers are calibrated-simulator estimates; the *shape*
 //! (who wins, OOM pattern, rough factors) is the reproduction target.
 
-use crate::search::baselines::{method_names, run_method, run_partition_ablation};
+use crate::api::MethodSpec;
+use crate::search::baselines::method_names;
 use crate::search::bmw::partition_str;
 use crate::search::SearchOutcome;
 use crate::util::table::{tp_cell, Table};
@@ -14,6 +15,18 @@ use super::{cluster, model, ExpOptions};
 
 fn cell(out: &Option<SearchOutcome>) -> String {
     tp_cell(out.as_ref().map(|o| (o.throughput(), o.plan.batch)))
+}
+
+/// Resolve user/default method names once, up front — a typo panics with
+/// the catalog's did-you-mean hint before any search time is spent.
+fn resolve_methods(names: &[String]) -> Vec<(String, MethodSpec)> {
+    names
+        .iter()
+        .map(|n| match MethodSpec::parse(n) {
+            Ok(spec) => (n.clone(), spec),
+            Err(e) => panic!("{e}"),
+        })
+        .collect()
 }
 
 /// Shared engine for Tables II/III/IV/VI: methods × models at budgets.
@@ -25,18 +38,19 @@ fn throughput_table(
     methods: &[String],
     max_batch: usize,
 ) -> Vec<Table> {
+    let specs = resolve_methods(methods);
     let mut tables = Vec::new();
     for &budget in budgets {
         println!("\n=== {title} | cluster={cluster_name} | memory={budget}G ===");
         let mut header = vec!["Strategy".to_string()];
         header.extend(models.iter().cloned());
         let mut t = Table::new(header);
-        for mname in methods {
+        for (mname, spec) in &specs {
             let mut row = vec![mname.clone()];
             for m in models {
                 let mp = model(m);
                 let cl = cluster(cluster_name, budget);
-                let out = run_method(mname, &mp, &cl, max_batch);
+                let out = spec.run(&mp, &cl, max_batch);
                 row.push(cell(&out));
             }
             t.row(row);
@@ -109,35 +123,15 @@ pub fn table5(opts: &ExpOptions) -> Vec<Table> {
         let mut header = vec!["Strategy".to_string()];
         header.extend(models.iter().cloned());
         let mut t = Table::new(header);
-        let rows: Vec<(&str, Box<dyn Fn(&str) -> Option<SearchOutcome>>)> = vec![
-            (
-                "Galvatron (1F1B+Mem)",
-                Box::new(move |m: &str| {
-                    run_partition_ablation("mem", &model(m), &cluster("a100x16", budget), opts.max_batch)
-                }),
-            ),
-            (
-                "Galvatron (1F1B+Time)",
-                Box::new(move |m: &str| {
-                    run_partition_ablation("time", &model(m), &cluster("a100x16", budget), opts.max_batch)
-                }),
-            ),
-            (
-                "Galvatron (1F1B+Bi-obj)",
-                Box::new(move |m: &str| {
-                    run_method(
-                        "Galvatron (1F1B+Bi-obj)",
-                        &model(m),
-                        &cluster("a100x16", budget),
-                        opts.max_batch,
-                    )
-                }),
-            ),
+        let rows = [
+            MethodSpec::Partition(crate::api::PartitionPolicy::Memory),
+            MethodSpec::Partition(crate::api::PartitionPolicy::Time),
+            MethodSpec::Bmw { ckpt: false },
         ];
-        for (name, f) in rows {
-            let mut row = vec![name.to_string()];
+        for spec in rows {
+            let mut row = vec![spec.canonical_name().to_string()];
             for m in &models {
-                let out = f(m);
+                let out = spec.run(&model(m), &cluster("a100x16", budget), opts.max_batch);
                 row.push(match &out {
                     Some(o) => format!("{} {}", tp_cell(Some((o.throughput(), o.plan.batch))), partition_str(&o.plan.partition)),
                     None => "OOM".to_string(),

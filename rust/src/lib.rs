@@ -2,6 +2,9 @@
 //! balanced memory workload optimization (TKDE 2023/2024).
 //!
 //! Library layout (see DESIGN.md):
+//!   * [`api`]     — the public planning surface: [`api::PlanRequest`]
+//!     builder, [`api::MethodSpec`] strategy catalog, [`api::Planner`],
+//!     and serializable [`api::PlanReport`] artifacts.
 //!   * [`model`]   — Transformer model profiles (Table I zoo).
 //!   * [`cluster`] — device/island topology + bandwidth model.
 //!   * [`parallel`]— DP/SDP/TP/PP/CKPT strategy representation, memory and
@@ -17,6 +20,7 @@
 //!     (pipeline + data parallel + collectives) over the runtime.
 //!   * [`util`]    — JSON/RNG/CLI/table/bench substrates.
 
+pub mod api;
 pub mod cluster;
 pub mod search;
 pub mod sim;
@@ -27,6 +31,8 @@ pub mod experiments;
 pub mod model;
 pub mod parallel;
 pub mod util;
+
+pub use api::{MethodSpec, PlanError, PlanReport, PlanRequest, Planner};
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

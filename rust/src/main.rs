@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   plan      find the optimal plan for a model/cluster/budget
+//!             (optionally persisting it with --out plan.json)
+//!   simulate  cross-check a plan on the discrete-event simulator, either
+//!             re-planned from names or loaded from --plan plan.json
 //!   table2..6 regenerate the paper's tables
 //!   fig4..7   regenerate the paper's figures
 //!   train     run real-numerics e2e training over the AOT artifacts
@@ -9,27 +12,28 @@
 //!   smoke     runtime smoke test (load + execute the axpy artifact)
 //!   models    list the Table I model zoo
 //!   clusters  list cluster presets
+//!   methods   list the strategy catalog
 
 use anyhow::{Context, Result};
-use galvatron::cost::pipeline::Schedule;
-use galvatron::experiments::{cluster, figures, model, tables, ExpOptions};
+use galvatron::api::{parse_schedule, MethodSpec, PlanError, PlanReport, PlanRequest, Planner};
+use galvatron::experiments::{figures, tables, ExpOptions};
 use galvatron::runtime::{HostTensor, Runtime};
-use galvatron::search::baselines::{method_names, run_method};
-use galvatron::sim::simulate;
 use galvatron::util::cli::Args;
 
 const USAGE: &str = "\
 galvatron <command> [options]
 
 commands:
-  plan      --model <name> --cluster <name> --memory <GB> [--method <name>] [--max-batch N]
+  plan      --model <name> --cluster <name> --memory <GB> [--method <name>]
+            [--max-batch N] [--schedule 1f1b|gpipe] [--out plan.json]
+  simulate  --plan plan.json
+            | --model <name> --cluster <name> --memory <GB> [--method <name>]
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
   table3 | table4 | table5 | table6     (same options)
   fig4 | fig5 | fig6 | fig7             [--max-batch N]
   train     [--artifacts DIR] [--steps N] [--dp N] [--microbatches N] [--csv FILE] [--repeat-batch]
   profile   [--artifacts DIR] [--reps N]
   smoke     [--artifacts DIR]
-  simulate  --model <name> --cluster <name> --memory <GB> [--method <name>]
   models | clusters | methods
 ";
 
@@ -55,21 +59,84 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
     })
 }
 
+/// Build a [`PlanRequest`] from the shared plan/simulate options. Unknown
+/// model/cluster/method names surface as [`PlanError`]s with did-you-mean
+/// suggestions (not panics).
+fn plan_request(args: &Args) -> Result<PlanRequest> {
+    let mut req = PlanRequest::new(
+        args.get_or("model", "bert-huge-32"),
+        args.get_or("cluster", "titan8"),
+    )
+    .memory_gb(args.f64("memory", 16.0)?)
+    .max_batch(args.usize("max-batch", 512)?)
+    .method_name(args.get_or("method", "Galvatron-BMW"))?;
+    if let Some(s) = args.get("schedule") {
+        req = req.schedule(parse_schedule(s)?);
+    }
+    if let Some(m) = args.get("microbatch-limit") {
+        req = req.microbatch_limit(m.parse().context("--microbatch-limit expects an integer")?);
+    }
+    Ok(req)
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
-    let mname = args.get("model").unwrap_or("bert-huge-32");
-    let cname = args.get("cluster").unwrap_or("titan8");
-    let budget = args.f64("memory", 16.0)?;
-    let method = args.get("method").unwrap_or("Galvatron-BMW");
-    let max_batch = args.usize("max-batch", 512)?;
-    let mp = model(mname);
-    let cl = cluster(cname, budget);
+    let planner = Planner::new();
+    let req = plan_request(args)?;
+    let resolved = planner.resolve(&req)?;
     println!(
-        "planning {} on {cname} ({} devices, {budget} GB budget) with {method} ...",
-        mp.name, cl.n_devices
+        "planning {} on {} ({} devices, {:.0} GB budget) with {} ...",
+        resolved.model.name,
+        resolved.cluster_name,
+        resolved.cluster.n_devices,
+        resolved.cluster.gpu.mem_bytes / galvatron::util::GIB,
+        resolved.method.canonical_name()
     );
-    match run_method(method, &mp, &cl, max_batch) {
-        Some(out) => figures::show_plan(&out, &mp, &cl),
-        None => println!("OOM: no feasible plan under this budget"),
+    let report = match planner.plan(&req) {
+        Ok(report) => report,
+        Err(PlanError::Infeasible { .. }) => {
+            println!("OOM: no feasible plan under this budget");
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    print!("{}", report.render());
+    let sim = planner.simulate_report(&report)?;
+    println!(
+        "simulated: {:.2} samples/s, iter {:.3}s, bubbles {:?}",
+        sim.throughput,
+        sim.iter_time,
+        sim.bubble_fraction.iter().map(|b| format!("{b:.2}")).collect::<Vec<_>>()
+    );
+    if let Some(path) = args.get("out") {
+        report.save(std::path::Path::new(path))?;
+        println!("wrote plan artifact to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let planner = Planner::new();
+    let report = match args.get("plan") {
+        Some(path) => {
+            let report = PlanReport::load(std::path::Path::new(path))?;
+            println!(
+                "loaded plan artifact {path}: {} on {} @ {:.0} GB ({})",
+                report.model,
+                report.cluster,
+                report.memory_budget_gb,
+                report.method.canonical_name()
+            );
+            report
+        }
+        None => planner.plan(&plan_request(args)?)?,
+    };
+    let sim = planner.simulate_report(&report)?;
+    println!(
+        "plan: est {:.2} samples/s | sim {:.2} samples/s",
+        report.throughput, sim.throughput
+    );
+    for (i, (mem, bub)) in sim.stage_peak_mem.iter().zip(&sim.bubble_fraction).enumerate() {
+        println!("  stage {i}: peak {:.2} GiB, bubble {:.1}%", mem / galvatron::util::GIB, bub * 100.0);
     }
     Ok(())
 }
@@ -142,23 +209,6 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> Result<()> {
-    let mname = args.get("model").unwrap_or("bert-huge-32");
-    let cname = args.get("cluster").unwrap_or("titan8");
-    let budget = args.f64("memory", 16.0)?;
-    let method = args.get("method").unwrap_or("Galvatron-BMW");
-    let mp = model(mname);
-    let cl = cluster(cname, budget);
-    let out = run_method(method, &mp, &cl, args.usize("max-batch", 512)?)
-        .context("no feasible plan")?;
-    let sim = simulate(&mp, &cl, &out.plan, Schedule::OneFOneB, 1.3);
-    println!("plan: est {:.2} samples/s | sim {:.2} samples/s", out.throughput(), sim.throughput);
-    for (i, (mem, bub)) in sim.stage_peak_mem.iter().zip(&sim.bubble_fraction).enumerate() {
-        println!("  stage {i}: peak {:.2} GiB, bubble {:.1}%", mem / galvatron::util::GIB, bub * 100.0);
-    }
-    Ok(())
-}
-
 fn main() -> Result<()> {
     let args = Args::from_env(&["repeat-batch", "speedups"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -224,12 +274,16 @@ fn main() -> Result<()> {
             }
         }
         "methods" => {
-            for m in method_names() {
+            for m in MethodSpec::catalog_names() {
                 println!("{m}");
             }
-            println!("Alpa");
         }
-        _ => print!("{USAGE}"),
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        unknown => {
+            eprintln!("unknown command {unknown:?}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
     }
     Ok(())
 }

@@ -140,8 +140,44 @@ impl fmt::Display for Strategy {
     }
 }
 
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+
+    /// Parse a [`Strategy::label`] string back ("SERIAL", "DP2-TP4+CKPT",
+    /// ...) — the plan-artifact wire format.
+    fn from_str(s: &str) -> anyhow::Result<Strategy> {
+        let (body, ckpt) = match s.strip_suffix("+CKPT") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        if body == "SERIAL" {
+            return Ok(Strategy::serial(ckpt));
+        }
+        let mut levels = Vec::new();
+        for tok in body.split('-') {
+            // Longest dimension name first: "SDP" contains "DP".
+            let (dim, rest) = if let Some(r) = tok.strip_prefix("SDP") {
+                (Dim::Sdp, r)
+            } else if let Some(r) = tok.strip_prefix("DP") {
+                (Dim::Dp, r)
+            } else if let Some(r) = tok.strip_prefix("TP") {
+                (Dim::Tp, r)
+            } else {
+                anyhow::bail!("bad strategy level {tok:?} in {s:?}");
+            };
+            let degree: usize = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad degree in level {tok:?} of {s:?}"))?;
+            levels.push((dim, degree));
+        }
+        let out = Strategy { levels, ckpt };
+        anyhow::ensure!(out.is_valid(), "invalid strategy {s:?}");
+        Ok(out)
+    }
+}
+
 /// A complete distributed execution plan for a model on a cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ParallelPlan {
     /// Pipeline parallel degree (number of stages).
     pub pp: usize,
@@ -169,6 +205,8 @@ impl ParallelPlan {
 
     /// Validate structural invariants against a model layer count.
     pub fn validate(&self, n_layers: usize, n_devices: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pp > 0, "pp must be >= 1");
+        anyhow::ensure!(self.microbatches > 0, "microbatches must be >= 1");
         anyhow::ensure!(self.partition.len() == self.pp, "partition arity != pp");
         anyhow::ensure!(
             self.partition.iter().sum::<usize>() == n_layers,
@@ -188,6 +226,78 @@ impl ParallelPlan {
         }
         anyhow::ensure!(self.batch % self.microbatches == 0, "m must divide B");
         Ok(())
+    }
+
+    /// Multi-line human summary: header plus per-stage "(strategy) ×N"
+    /// runs (the paper's Fig. 6 visualization).
+    pub fn summary(&self) -> String {
+        let partition = self
+            .partition
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let mut out = format!(
+            "PP={} partition=[{partition}] batch={} microbatches={}\n",
+            self.pp, self.batch, self.microbatches
+        );
+        for s in 0..self.pp {
+            let range = self.stage_layers(s);
+            out.push_str(&format!("  stage {s} (layers {}..{}):", range.start, range.end));
+            let mut runs: Vec<(String, usize)> = Vec::new();
+            for li in range {
+                let label = self.strategies[li].label();
+                match runs.last_mut() {
+                    Some((l, n)) if *l == label => *n += 1,
+                    _ => runs.push((label, 1)),
+                }
+            }
+            for (label, n) in runs {
+                out.push_str(&format!(" [{label} ×{n}]"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialize for plan artifacts (strategies as their compact labels).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("pp", Json::num(self.pp as f64)),
+            ("partition", Json::arr(self.partition.iter().map(|&c| Json::num(c as f64)))),
+            ("strategies", Json::arr(self.strategies.iter().map(|s| Json::str(&s.label())))),
+            ("batch", Json::num(self.batch as f64)),
+            ("microbatches", Json::num(self.microbatches as f64)),
+        ])
+    }
+
+    /// Inverse of [`ParallelPlan::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<ParallelPlan> {
+        use anyhow::Context;
+        let mut strategies = Vec::new();
+        for s in v.req("strategies")?.as_arr().context("strategies must be an array")? {
+            strategies.push(s.as_str().context("strategy must be a string")?.parse()?);
+        }
+        let plan = ParallelPlan {
+            pp: v.req("pp")?.as_usize().context("pp must be a number")?,
+            partition: v
+                .req("partition")?
+                .as_usize_vec()
+                .context("partition must be a number array")?,
+            strategies,
+            batch: v.req("batch")?.as_usize().context("batch must be a number")?,
+            microbatches: v
+                .req("microbatches")?
+                .as_usize()
+                .context("microbatches must be a number")?,
+        };
+        // Reject degenerate values up front so corrupt artifacts surface
+        // as errors, not divide-by-zero panics in later validation.
+        anyhow::ensure!(plan.pp > 0, "pp must be >= 1");
+        anyhow::ensure!(plan.microbatches > 0, "microbatches must be >= 1");
+        anyhow::ensure!(plan.batch > 0, "batch must be >= 1");
+        Ok(plan)
     }
 }
 
@@ -238,5 +348,56 @@ mod tests {
         assert_eq!(plan.microbatch_size(), 2.0);
         assert!(plan.validate(5, 8).is_err());
         assert!(plan.validate(4, 16).is_err());
+    }
+
+    #[test]
+    fn strategy_labels_parse_back() {
+        for s in [
+            Strategy::serial(false),
+            Strategy::serial(true),
+            Strategy::single(Dim::Sdp, 8, false),
+            Strategy { levels: vec![(Dim::Tp, 2), (Dim::Dp, 4)], ckpt: true },
+            Strategy { levels: vec![(Dim::Sdp, 2), (Dim::Tp, 2)], ckpt: false },
+        ] {
+            let parsed: Strategy = s.label().parse().unwrap();
+            assert_eq!(parsed, s, "{}", s.label());
+        }
+        assert!("DP3".parse::<Strategy>().is_err()); // non-pow2 degree
+        assert!("XP2".parse::<Strategy>().is_err()); // unknown dimension
+        assert!("DP2-SDP2".parse::<Strategy>().is_err()); // Takeaway #3
+    }
+
+    #[test]
+    fn plan_json_round_trip() {
+        let plan = ParallelPlan {
+            pp: 2,
+            partition: vec![3, 1],
+            strategies: vec![
+                Strategy::single(Dim::Dp, 4, false),
+                Strategy { levels: vec![(Dim::Tp, 2), (Dim::Sdp, 2)], ckpt: true },
+                Strategy::single(Dim::Tp, 4, true),
+                Strategy::single(Dim::Sdp, 4, false),
+            ],
+            batch: 48,
+            microbatches: 4,
+        };
+        let text = plan.to_json().to_string();
+        let back = ParallelPlan::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn summary_groups_runs() {
+        let s = Strategy::single(Dim::Dp, 4, false);
+        let plan = ParallelPlan {
+            pp: 2,
+            partition: vec![2, 2],
+            strategies: vec![s.clone(), s.clone(), Strategy::single(Dim::Tp, 4, true), s],
+            batch: 16,
+            microbatches: 4,
+        };
+        let text = plan.summary();
+        assert!(text.contains("[DP4 ×2]"), "{text}");
+        assert!(text.contains("[TP4+CKPT ×1]"), "{text}");
     }
 }

@@ -1,169 +1,34 @@
-//! Every baseline the paper compares against (§VII-A):
+//! Compat shims over the typed strategy catalog in [`crate::api`].
 //!
-//!   * PyTorch DDP (pure DP)            * Megatron (pure TP)
-//!   * PyTorch GPipe (pure PP)          * FSDP/ZeRO-3 (pure SDP)
-//!   * DeepSpeed 3D (expert 2-way DP×TP×PP)
-//!   * Galvatron (DP+TP), Galvatron (DP+PP)  — limited-dimension automatic
-//!   * Galvatron (no CKPT), Galvatron-Base (+CKPT)
-//!   * Galvatron (1F1B+Bi-obj), Galvatron-BMW (full)
-//!   * Alpa-like (DP xor SDP globally + TP + PP, no CKPT) — Table VI
-//!   * 1F1B+Mem / 1F1B+Time partition ablations — Table V
+//! Historically this module dispatched every baseline of the paper
+//! (§VII-A) on magic name strings. The configurations now live on
+//! [`MethodSpec`]; the name-based entry points below remain so the
+//! table/figure regenerators, benches, and downstream callers keep
+//! working unchanged — same names, same results.
 
+use crate::api::{MethodSpec, PartitionPolicy};
 use crate::cluster::ClusterSpec;
-use crate::cost::pipeline::Schedule;
 use crate::model::ModelProfile;
-use crate::parallel::Dim;
-use crate::search::base::{evaluate_partition, optimize, SearchConfig, SearchOutcome};
-use crate::search::bmw::{memory_balanced_partition, optimize_bmw};
-use crate::search::decision_tree::SpaceOptions;
-use crate::search::partition::balanced_partition;
-use crate::search::levels;
+use crate::search::base::SearchOutcome;
 
 /// All strategy names, in the row order of Table II.
 pub fn method_names() -> Vec<&'static str> {
-    vec![
-        "PyTorch DDP (DP)",
-        "Megatron (TP)",
-        "PyTorch GPipe (PP)",
-        "FSDP/ZeRO-3 (SDP)",
-        "DeepSpeed 3D",
-        "Galvatron (DP+TP)",
-        "Galvatron (DP+PP)",
-        "Galvatron",
-        "Galvatron-Base",
-        "Galvatron (1F1B+Bi-obj)",
-        "Galvatron-BMW",
-    ]
+    MethodSpec::paper_table_specs().iter().map(|s| s.canonical_name()).collect()
 }
 
 /// Run a named method; `None` result means OOM everywhere (paper's "OOM").
+///
+/// Panics on unknown names (with a did-you-mean hint) — library users
+/// should prefer [`MethodSpec::parse`] + [`MethodSpec::run`], which
+/// return typed errors instead.
 pub fn run_method(
     name: &str,
     model: &ModelProfile,
     cluster: &ClusterSpec,
     max_batch: usize,
 ) -> Option<SearchOutcome> {
-    let n = cluster.n_devices;
-    let base = SearchConfig { max_batch, ..Default::default() };
-    match name {
-        "PyTorch DDP (DP)" => optimize(
-            model,
-            cluster,
-            &SearchConfig {
-                fixed_strategy: Some(levels(&[(Dim::Dp, n)])),
-                pp_degrees: Some(vec![1]),
-                space: SpaceOptions::default().no_ckpt(),
-                microbatch_limit: Some(1),
-                ..base
-            },
-        ),
-        "Megatron (TP)" => optimize(
-            model,
-            cluster,
-            &SearchConfig {
-                fixed_strategy: Some(levels(&[(Dim::Tp, n)])),
-                pp_degrees: Some(vec![1]),
-                space: SpaceOptions::default().no_ckpt(),
-                microbatch_limit: Some(1),
-                ..base
-            },
-        ),
-        // PyTorch GPipe re-materializes activations per microbatch (its
-        // documented default), so the CKPT variant stays in the space.
-        "PyTorch GPipe (PP)" => optimize(
-            model,
-            cluster,
-            &SearchConfig {
-                fixed_strategy: Some(crate::parallel::Strategy::serial(false)),
-                pp_degrees: Some(vec![n.min(model.n_layers())]),
-                schedule: Schedule::GPipe,
-                ..base
-            },
-        ),
-        "FSDP/ZeRO-3 (SDP)" => optimize(
-            model,
-            cluster,
-            &SearchConfig {
-                fixed_strategy: Some(levels(&[(Dim::Sdp, n)])),
-                pp_degrees: Some(vec![1]),
-                space: SpaceOptions::default().no_ckpt(),
-                microbatch_limit: Some(1),
-                ..base
-            },
-        ),
-        // Official suggestion: 2-way DP x 2-way TP x PP over the rest
-        // (https://github.com/microsoft/Megatron-DeepSpeed pretrain_bert).
-        "DeepSpeed 3D" => {
-            let pp = (n / 4).max(1).min(model.n_layers());
-            optimize(
-                model,
-                cluster,
-                &SearchConfig {
-                    fixed_strategy: Some(levels(&[(Dim::Dp, 2), (Dim::Tp, 2)])),
-                    pp_degrees: Some(vec![pp]),
-                    space: SpaceOptions::default().no_ckpt(),
-                    ..base
-                },
-            )
-        }
-        // OptCNN/FlexFlow-era DP+TP auto-parallelism: no pipeline, no
-        // gradient accumulation.
-        "Galvatron (DP+TP)" => optimize(
-            model,
-            cluster,
-            &SearchConfig {
-                space: SpaceOptions::default().with_dims(&[Dim::Dp, Dim::Tp]).no_ckpt(),
-                pp_degrees: Some(vec![1]),
-                microbatch_limit: Some(1),
-                ..base
-            },
-        ),
-        "Galvatron (DP+PP)" => optimize(
-            model,
-            cluster,
-            &SearchConfig {
-                space: SpaceOptions::default().with_dims(&[Dim::Dp]).no_ckpt(),
-                ..base
-            },
-        ),
-        "Galvatron" => optimize(
-            model,
-            cluster,
-            &SearchConfig { space: SpaceOptions::default().no_ckpt(), ..base },
-        ),
-        "Galvatron-Base" => optimize(model, cluster, &base),
-        "Galvatron (1F1B+Bi-obj)" => optimize_bmw(
-            model,
-            cluster,
-            &SearchConfig { space: SpaceOptions::default().no_ckpt(), ..base },
-        ),
-        "Galvatron-BMW" => optimize_bmw(model, cluster, &base),
-        // Alpa treats SDP as a global alternative to DP (paper §VII-D):
-        // best of two restricted searches, no CKPT.
-        "Alpa" => {
-            let a = optimize(
-                model,
-                cluster,
-                &SearchConfig {
-                    space: SpaceOptions::default().with_dims(&[Dim::Dp, Dim::Tp]).no_ckpt(),
-                    ..base.clone()
-                },
-            );
-            let b = optimize(
-                model,
-                cluster,
-                &SearchConfig {
-                    space: SpaceOptions::default().with_dims(&[Dim::Sdp, Dim::Tp]).no_ckpt(),
-                    ..base
-                },
-            );
-            match (a, b) {
-                (Some(x), Some(y)) => Some(if x.throughput() >= y.throughput() { x } else { y }),
-                (x, y) => x.or(y),
-            }
-        }
-        _ => panic!("unknown method {name:?}"),
-    }
+    let spec = MethodSpec::parse(name).unwrap_or_else(|e| panic!("{e}"));
+    spec.run(model, cluster, max_batch)
 }
 
 /// Table V ablations: fixed memory-balanced or time-balanced partitions
@@ -174,57 +39,12 @@ pub fn run_partition_ablation(
     cluster: &ClusterSpec,
     max_batch: usize,
 ) -> Option<SearchOutcome> {
-    let cfg = SearchConfig {
-        space: SpaceOptions::default().no_ckpt(),
-        max_batch,
-        ..Default::default()
+    let policy = match which {
+        "mem" => PartitionPolicy::Memory,
+        "time" => PartitionPolicy::Time,
+        _ => panic!("which must be mem|time, got {which:?}"),
     };
-    let n_layers = model.n_layers();
-    let flops_w: Vec<f64> = model.layers.iter().map(|l| l.flops_fwd).collect();
-    let mut best: Option<SearchOutcome> = None;
-    let mut infeasible_streak = 0usize;
-    for batch in crate::search::batch_candidates(max_batch) {
-        let mut any = false;
-        for pp in crate::search::base::pp_degrees(model, cluster, &cfg) {
-            if pp < 2 {
-                continue;
-            }
-            let group = cluster.n_devices / pp;
-            for m in crate::search::microbatch_candidates(batch, pp) {
-                let partition = match which {
-                    "time" => balanced_partition(&flops_w, pp),
-                    "mem" => {
-                        let b_m = batch as f64 / m as f64;
-                        let act_w: Vec<f64> = model
-                            .layers
-                            .iter()
-                            .map(|l| l.act_bytes * b_m / group as f64)
-                            .collect();
-                        let ms_w: Vec<f64> = (0..n_layers)
-                            .map(|i| (model.layers[i].params + model.extra_params(i)) * 16.0 / group as f64)
-                            .collect();
-                        memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule)
-                    }
-                    _ => panic!("which must be mem|time"),
-                };
-                if let Some((out, _)) = evaluate_partition(model, cluster, &cfg, batch, pp, m, &partition) {
-                    any = true;
-                    if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
-                        best = Some(out);
-                    }
-                }
-            }
-        }
-        if any {
-            infeasible_streak = 0;
-        } else if best.is_some() {
-            infeasible_streak += 1;
-            if infeasible_streak >= cfg.patience {
-                break;
-            }
-        }
-    }
-    best
+    MethodSpec::Partition(policy).run(model, cluster, max_batch)
 }
 
 #[cfg(test)]
@@ -287,6 +107,23 @@ mod tests {
                 .unwrap_or(0.0);
             assert!(gal >= t * 0.999, "{pure}: galvatron {gal} < {t}");
         }
+    }
+
+    #[test]
+    fn shim_matches_typed_catalog() {
+        // The name shim and the typed API must be the same planner.
+        let (model, cluster) = setup(12.0);
+        let by_name = run_method("Galvatron-BMW", &model, &cluster, 32).unwrap();
+        let by_spec = MethodSpec::Bmw { ckpt: true }.run(&model, &cluster, 32).unwrap();
+        assert_eq!(by_name.plan, by_spec.plan);
+        assert_eq!(by_name.throughput(), by_spec.throughput());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown method")]
+    fn unknown_method_panics_with_hint() {
+        let (model, cluster) = setup(16.0);
+        run_method("Galvatron-BWM", &model, &cluster, 8);
     }
 
     #[test]

@@ -16,16 +16,9 @@ pub use decision_tree::{candidate_strategies, SpaceOptions};
 use crate::cost::pipeline::Schedule;
 use crate::parallel::{Dim, Strategy};
 
-/// Which optimizer variant a named method uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Method {
-    /// Single fixed strategy (pure parallelisms, DeepSpeed-3D).
-    Fixed,
-    /// Galvatron-Base-style DP search with a given partition policy.
-    Base,
-    /// Full bi-objective workload balancing (Algorithm 2).
-    BiObjective,
-}
+// Which optimizer a method uses is now expressed by the typed
+// [`crate::api::MethodSpec`] catalog (the old string-keyed `Method` tag
+// lived here).
 
 /// Batch sizes explored by the sweep: dense at small B, geometric beyond.
 pub fn batch_candidates(max_batch: usize) -> Vec<usize> {

@@ -23,12 +23,13 @@ impl Args {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if flag_names.contains(&stripped) {
                     out.flags.push(stripped.to_string());
-                } else if let Some(next) = iter.peek() {
-                    if next.starts_with("--") {
-                        out.flags.push(stripped.to_string());
-                    } else {
-                        out.options.insert(stripped.to_string(), iter.next().unwrap());
-                    }
+                } else if iter.peek().is_some() {
+                    // Any option not declared as a flag takes the next token
+                    // as its value — even one that itself starts with "--"
+                    // (e.g. `--models --foo`); the old lookahead silently
+                    // turned such options into flags and re-parsed their
+                    // value as a separate option.
+                    out.options.insert(stripped.to_string(), iter.next().unwrap());
                 } else {
                     out.flags.push(stripped.to_string());
                 }
@@ -102,6 +103,19 @@ mod tests {
         let a = parse("--dry-run --n 4", &["dry-run"]);
         assert!(a.flag("dry-run"));
         assert_eq!(a.usize("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn option_value_may_start_with_dashes() {
+        // Regression: `--models --foo` used to silently become two flags.
+        let a = parse("table2 --models --foo --memory 16", &[]);
+        assert_eq!(a.get("models"), Some("--foo"));
+        assert_eq!(a.get("memory"), Some("16"));
+        assert!(a.flags.is_empty());
+        // Declared flags still win over value consumption.
+        let a = parse("--verbose --models m1", &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("models"), Some("m1"));
     }
 
     #[test]

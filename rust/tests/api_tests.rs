@@ -1,0 +1,165 @@
+//! Integration tests for the public planning API: the `PlanRequest`
+//! builder contract, the typed `MethodSpec` catalog, `PlanError`
+//! suggestion quality, and the serializable `PlanReport` artifact
+//! (ISSUE 1 acceptance: plan → simulate round-trips through JSON).
+
+use galvatron::api::{
+    MethodSpec, PlanError, PlanReport, PlanRequest, Planner, PLAN_ARTIFACT_VERSION,
+};
+use galvatron::parallel::Dim;
+use galvatron::search::baselines::{method_names, run_method};
+use galvatron::util::json::Json;
+
+fn small_request() -> PlanRequest {
+    PlanRequest::new("bert-huge-32", "titan8").memory_gb(16.0).max_batch(32)
+}
+
+#[test]
+fn catalog_covers_every_published_name() {
+    // Every name in the historical `method_names()` list plus "Alpa" and
+    // the Table V ablations resolves to a spec whose canonical name maps
+    // straight back.
+    let mut names: Vec<String> = method_names().iter().map(|s| s.to_string()).collect();
+    names.push("Alpa".into());
+    names.push("Galvatron (1F1B+Mem)".into());
+    names.push("Galvatron (1F1B+Time)".into());
+    for name in &names {
+        let spec = MethodSpec::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(spec.canonical_name(), name);
+    }
+    // The catalog has no extra unreachable entries.
+    assert_eq!(MethodSpec::catalog_names().len(), names.len());
+}
+
+#[test]
+fn builder_plan_matches_name_shim() {
+    // The typed front door and the legacy string shim are the same planner.
+    let report = small_request().plan().expect("feasible");
+    let model = galvatron::model::model_by_name("bert-huge-32").unwrap();
+    let cluster = galvatron::cluster::cluster_by_name("titan8")
+        .unwrap()
+        .with_memory_budget(16.0 * galvatron::util::GIB);
+    let shim = run_method("Galvatron-BMW", &model, &cluster, 32).expect("feasible");
+    assert_eq!(report.plan, shim.plan);
+    assert_eq!(report.throughput, shim.throughput());
+}
+
+#[test]
+fn plan_report_json_round_trip_is_identical() {
+    let report = small_request().plan().expect("feasible");
+    let text = report.to_json_string();
+    let back = PlanReport::from_json_str(&text).expect("parse back");
+    assert_eq!(back, report);
+    // The fields the simulate/train consumers rely on, spelled out.
+    assert_eq!(back.plan, report.plan);
+    assert_eq!(back.throughput, report.throughput);
+    assert_eq!(back.method, MethodSpec::Bmw { ckpt: true });
+    assert_eq!(back.stages.len(), report.plan.pp);
+    // Serialization is deterministic (stable key order).
+    assert_eq!(back.to_json_string(), text);
+}
+
+#[test]
+fn plan_artifact_file_round_trip_and_simulation() {
+    // The CLI pipeline: `plan --out plan.json` → `simulate --plan plan.json`
+    // must report the estimated throughput stored in the artifact and
+    // simulate the identical plan.
+    let planner = Planner::new();
+    let report = small_request().plan().expect("feasible");
+    let path = std::env::temp_dir().join(format!("galvatron-api-test-{}.json", std::process::id()));
+    report.save(&path).expect("save");
+    let loaded = PlanReport::load(&path).expect("load");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, report);
+    let sim_orig = planner.simulate_report(&report).expect("sim original");
+    let sim_loaded = planner.simulate_report(&loaded).expect("sim loaded");
+    assert_eq!(sim_orig.iter_time, sim_loaded.iter_time);
+    assert_eq!(sim_orig.throughput, sim_loaded.throughput);
+}
+
+#[test]
+fn artifact_version_is_checked() {
+    let report = small_request().plan().expect("feasible");
+    let mut v = report.to_json();
+    if let Json::Obj(m) = &mut v {
+        m.insert("version".into(), Json::num((PLAN_ARTIFACT_VERSION + 1) as f64));
+    }
+    let err = PlanReport::from_json(&v).unwrap_err();
+    assert!(matches!(err, PlanError::Artifact { .. }), "{err:?}");
+}
+
+#[test]
+fn unknown_names_return_typed_errors_with_suggestions() {
+    let err = PlanRequest::new("bert-hug-32", "titan8").plan().unwrap_err();
+    match err {
+        PlanError::UnknownModel { name, suggestion } => {
+            assert_eq!(name, "bert-hug-32");
+            assert_eq!(suggestion.as_deref(), Some("bert-huge-32"));
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+
+    let err = PlanRequest::new("bert-huge-32", "titen8").plan().unwrap_err();
+    match err {
+        PlanError::UnknownCluster { suggestion, .. } => {
+            assert_eq!(suggestion.as_deref(), Some("titan8"));
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+
+    let err = MethodSpec::parse("Galvatron-BWM").unwrap_err();
+    match err {
+        PlanError::UnknownMethod { suggestion, .. } => {
+            assert_eq!(suggestion.as_deref(), Some("Galvatron-BMW"));
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+
+    // Error text is user-facing: it names the input and the suggestion.
+    let msg = PlanRequest::new("bert-hug-32", "titan8").plan().unwrap_err().to_string();
+    assert!(msg.contains("bert-hug-32") && msg.contains("bert-huge-32"), "{msg}");
+}
+
+#[test]
+fn infeasible_budget_is_a_typed_error() {
+    let err = PlanRequest::new("bert-huge-48", "titan8")
+        .memory_gb(0.5)
+        .max_batch(16)
+        .plan()
+        .unwrap_err();
+    match err {
+        PlanError::Infeasible { reason } => {
+            assert!(reason.contains("bert-huge-48"), "{reason}");
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+}
+
+#[test]
+fn pure_method_via_builder_produces_pure_plan() {
+    let report = small_request()
+        .method(MethodSpec::Pure(Dim::Sdp))
+        .plan()
+        .expect("sdp fits at 16G");
+    assert_eq!(report.plan.pp, 1);
+    assert!(report.plan.strategies.iter().all(|s| s.sdp() == 8));
+    assert_eq!(report.method.canonical_name(), "FSDP/ZeRO-3 (SDP)");
+}
+
+#[test]
+fn report_diagnostics_are_consistent() {
+    let report = small_request().plan().expect("feasible");
+    assert_eq!(report.stages.len(), report.plan.pp);
+    let n_layers = report.plan.strategies.len();
+    // Stage layer ranges tile the model in order.
+    let mut expect_start = 0usize;
+    for (i, s) in report.stages.iter().enumerate() {
+        assert_eq!(s.layers.0, expect_start, "stage {i}");
+        assert_eq!(s.layers.1 - s.layers.0, report.plan.partition[i]);
+        assert!(s.peak_mem_bytes > 0.0 && s.peak_mem_bytes <= 16.0 * galvatron::util::GIB);
+        assert!((0.0..=1.0).contains(&s.est_bubble));
+        expect_start = s.layers.1;
+    }
+    assert_eq!(expect_start, n_layers);
+    assert!(report.throughput > 0.0 && report.iter_time > 0.0);
+}
