@@ -29,7 +29,8 @@ fn main() {
                 layers: &ls,
                 extra_params: &extra,
                 strategies: &strategies,
-                estimator: &est,
+                costs: &est,
+                layer_offset: 0,
                 b_m: 8.0,
                 microbatches: 1,
                 live_mb: 1,
@@ -49,7 +50,8 @@ fn main() {
                 layers: &ls,
                 extra_params: &extra,
                 strategies: &strategies,
-                estimator: &est,
+                costs: &est,
+                layer_offset: 0,
                 b_m: 8.0,
                 microbatches: 1,
                 live_mb: 1,
@@ -71,7 +73,8 @@ fn main() {
                 layers: &ls,
                 extra_params: &extra,
                 strategies: &s,
-                estimator: &est,
+                costs: &est,
+                layer_offset: 0,
                 b_m: 8.0,
                 microbatches: 1,
                 live_mb: 1,

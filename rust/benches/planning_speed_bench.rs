@@ -1,0 +1,65 @@
+//! Bench: planner throughput in plans/second, emitted as JSON lines so CI
+//! and future PRs can track planning speed as a first-class metric.
+//!
+//! Each line is one case:
+//!   {"bench":"planning_speed","model":...,"cluster":...,"threads":N,
+//!    "plans_per_sec":...,"cache_hit_rate":...,"cells_explored":...}
+//!
+//! Run: `cargo bench --bench planning_speed_bench`
+
+use std::time::Duration;
+
+use galvatron::api::{MethodSpec, PlanRequest};
+use galvatron::util::bench::bench;
+use galvatron::util::json::Json;
+use galvatron::util::parallelism::resolve_worker_count;
+
+fn main() {
+    let auto = resolve_worker_count(None);
+    let mut thread_counts = vec![1usize];
+    if auto > 1 {
+        thread_counts.push(auto);
+    }
+    for (model, cluster, budget) in
+        [("bert-huge-32", "titan8", 16.0), ("t5-512/4-32", "titan8", 8.0)]
+    {
+        for &threads in &thread_counts {
+            let request = || {
+                PlanRequest::new(model, cluster)
+                    .memory_gb(budget)
+                    .max_batch(64)
+                    .method(MethodSpec::Bmw { ckpt: true })
+                    .threads(threads)
+            };
+            let r = bench(
+                &format!("planning_speed/{model}/threads={threads}"),
+                Duration::from_secs(3),
+                || {
+                    let _ = request().plan();
+                },
+            );
+            let plans_per_sec = 1.0 / r.mean.as_secs_f64();
+            // One traced run for the engine diagnostics.
+            let (hit_rate, cells) = match request().plan() {
+                Ok(report) => match report.search_trace {
+                    Some(t) => (t.cache_hit_rate(), t.cells_explored),
+                    None => (0.0, 0),
+                },
+                Err(_) => (0.0, 0),
+            };
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("bench", Json::str("planning_speed")),
+                    ("model", Json::str(model)),
+                    ("cluster", Json::str(cluster)),
+                    ("memory_gb", Json::num(budget)),
+                    ("threads", Json::num(threads as f64)),
+                    ("plans_per_sec", Json::num(plans_per_sec)),
+                    ("cache_hit_rate", Json::num(hit_rate)),
+                    ("cells_explored", Json::num(cells as f64)),
+                ])
+            );
+        }
+    }
+}

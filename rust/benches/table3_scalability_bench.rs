@@ -1,34 +1,62 @@
 //! Bench: Table III/IV scalability — planning cost as the cluster grows
 //! (16 low-perf, 16 high-perf, 64 GPUs). The paper reports search time
 //! grows 2.2x (16 GPUs) and 9.2x (64 GPUs) vs 8 GPUs; this bench measures
-//! our planner's scaling on the same model.
+//! our planner's scaling on the same model, at 1 worker thread and at the
+//! machine's full parallelism, and reports the engine's cache hit rate.
 //!
 //! Run: `cargo bench --bench table3_scalability_bench`
 
 use std::time::Duration;
 
-use galvatron::api::MethodSpec;
+use galvatron::api::{MethodSpec, SearchOverrides};
 use galvatron::experiments::{cluster, model};
 use galvatron::util::bench::bench;
+use galvatron::util::parallelism::resolve_worker_count;
 
 fn main() {
     let method = MethodSpec::Bmw { ckpt: true };
+    let auto = resolve_worker_count(None);
     let mut base = None;
     for (cl_name, budget) in [("titan8", 16.0), ("titan16", 16.0), ("a100x16", 16.0), ("a100x64", 16.0)] {
         let mp = model("bert-huge-32");
         let cl = cluster(cl_name, budget);
-        let r = bench(
-            &format!("scalability/{cl_name}/{}", method.canonical_name()),
+
+        let mut ov1 = SearchOverrides::new(64);
+        ov1.threads = Some(1);
+        let r1 = bench(
+            &format!("scalability/{cl_name}/threads=1"),
             Duration::from_secs(3),
             || {
-                let _ = method.run(&mp, &cl, 64);
+                let _ = method.run_with(&mp, &cl, &ov1);
             },
         );
+        let mut ovn = SearchOverrides::new(64);
+        ovn.threads = Some(auto);
+        // On a single-core machine threads=auto IS threads=1: skip the
+        // redundant pass instead of benchmarking a config against itself.
+        let rn = if auto > 1 {
+            bench(
+                &format!("scalability/{cl_name}/threads={auto}"),
+                Duration::from_secs(3),
+                || {
+                    let _ = method.run_with(&mp, &cl, &ovn);
+                },
+            )
+        } else {
+            r1.clone()
+        };
+        let (_, trace) = method.run_traced_with(&mp, &cl, &ovn);
+        println!(
+            "  -> {:.2}x speedup from {auto} workers; cache hit rate {:.1}% ({} lookups)",
+            r1.mean.as_secs_f64() / rn.mean.as_secs_f64(),
+            trace.cache_hit_rate() * 100.0,
+            trace.cache_lookups
+        );
         match base {
-            None => base = Some(r.mean),
+            None => base = Some(rn.mean),
             Some(b) => println!(
                 "  -> {:.1}x the 8-GPU search time (paper: 2.2x @16, 9.2x @64)",
-                r.mean.as_secs_f64() / b.as_secs_f64()
+                rn.mean.as_secs_f64() / b.as_secs_f64()
             ),
         }
     }

@@ -6,11 +6,11 @@ use crate::cluster::ClusterSpec;
 use crate::cost::pipeline::Schedule;
 use crate::model::ModelProfile;
 use crate::parallel::Dim;
-use crate::search::base::{evaluate_partition, optimize, pp_degrees, SearchConfig, SearchOutcome};
-use crate::search::bmw::{memory_balanced_partition, optimize_bmw};
+use crate::search::base::{optimize_traced, SearchConfig, SearchOutcome};
+use crate::search::bmw::optimize_bmw_traced;
 use crate::search::decision_tree::SpaceOptions;
+use crate::search::engine::{CellAlgo, PartitionKind, SearchEngine, SearchTrace};
 use crate::search::levels;
-use crate::search::partition::balanced_partition;
 use crate::util::json::Json;
 
 use super::error::{suggest, PlanError};
@@ -74,6 +74,9 @@ pub struct SearchOverrides {
     pub microbatch_limit: Option<usize>,
     /// Restrict the PP degrees explored.
     pub pp_degrees: Option<Vec<usize>>,
+    /// Worker threads for the search engine's cell fan-out (`None` = auto;
+    /// plans are identical for every value).
+    pub threads: Option<usize>,
 }
 
 impl SearchOverrides {
@@ -84,6 +87,7 @@ impl SearchOverrides {
             overlap_slowdown: None,
             microbatch_limit: None,
             pp_degrees: None,
+            threads: None,
         }
     }
 
@@ -101,6 +105,9 @@ impl SearchOverrides {
         }
         if let Some(pp) = &self.pp_degrees {
             cfg.pp_degrees = Some(pp.clone());
+        }
+        if self.threads.is_some() {
+            cfg.threads = self.threads;
         }
         cfg
     }
@@ -293,10 +300,21 @@ impl MethodSpec {
         cluster: &ClusterSpec,
         ov: &SearchOverrides,
     ) -> Option<SearchOutcome> {
+        self.run_traced_with(model, cluster, ov).0
+    }
+
+    /// Run this method and also return the engine's [`SearchTrace`] (for
+    /// composite methods like Alpa, the traces of all runs merged).
+    pub fn run_traced_with(
+        &self,
+        model: &ModelProfile,
+        cluster: &ClusterSpec,
+        ov: &SearchOverrides,
+    ) -> (Option<SearchOutcome>, SearchTrace) {
         let n = cluster.n_devices;
         let base = SearchConfig { max_batch: ov.max_batch, ..Default::default() };
         match self {
-            MethodSpec::Pure(dim) => optimize(
+            MethodSpec::Pure(dim) => optimize_traced(
                 model,
                 cluster,
                 &ov.apply(SearchConfig {
@@ -309,7 +327,7 @@ impl MethodSpec {
             ),
             // GPipe re-materializes activations per microbatch (its
             // documented default), so the CKPT variant stays in the space.
-            MethodSpec::PurePipeline => optimize(
+            MethodSpec::PurePipeline => optimize_traced(
                 model,
                 cluster,
                 &ov.apply(SearchConfig {
@@ -323,7 +341,7 @@ impl MethodSpec {
             // (https://github.com/microsoft/Megatron-DeepSpeed pretrain_bert).
             MethodSpec::DeepSpeed3d => {
                 let pp = (n / 4).max(1).min(model.n_layers());
-                optimize(
+                optimize_traced(
                     model,
                     cluster,
                     &ov.apply(SearchConfig {
@@ -346,24 +364,26 @@ impl MethodSpec {
                     cfg.pp_degrees = Some(vec![1]);
                     cfg.microbatch_limit = Some(1);
                 }
-                optimize(model, cluster, &ov.apply(cfg))
+                optimize_traced(model, cluster, &ov.apply(cfg))
             }
-            MethodSpec::Base { ckpt: false } => optimize(
+            MethodSpec::Base { ckpt: false } => optimize_traced(
                 model,
                 cluster,
                 &ov.apply(SearchConfig { space: SpaceOptions::default().no_ckpt(), ..base }),
             ),
-            MethodSpec::Base { ckpt: true } => optimize(model, cluster, &ov.apply(base)),
-            MethodSpec::Bmw { ckpt: false } => optimize_bmw(
+            MethodSpec::Base { ckpt: true } => optimize_traced(model, cluster, &ov.apply(base)),
+            MethodSpec::Bmw { ckpt: false } => optimize_bmw_traced(
                 model,
                 cluster,
                 &ov.apply(SearchConfig { space: SpaceOptions::default().no_ckpt(), ..base }),
             ),
-            MethodSpec::Bmw { ckpt: true } => optimize_bmw(model, cluster, &ov.apply(base)),
+            MethodSpec::Bmw { ckpt: true } => {
+                optimize_bmw_traced(model, cluster, &ov.apply(base))
+            }
             // Alpa treats SDP as a global alternative to DP (paper §VII-D):
             // best of two restricted searches, no CKPT.
             MethodSpec::Alpa => {
-                let a = optimize(
+                let (a, ta) = optimize_traced(
                     model,
                     cluster,
                     &ov.apply(SearchConfig {
@@ -371,7 +391,7 @@ impl MethodSpec {
                         ..base.clone()
                     }),
                 );
-                let b = optimize(
+                let (b, tb) = optimize_traced(
                     model,
                     cluster,
                     &ov.apply(SearchConfig {
@@ -379,81 +399,32 @@ impl MethodSpec {
                         ..base
                     }),
                 );
-                match (a, b) {
-                    (Some(x), Some(y)) => {
-                        Some(if x.throughput() >= y.throughput() { x } else { y })
-                    }
-                    (x, y) => x.or(y),
-                }
+                let a_wins = match (&a, &b) {
+                    (Some(x), Some(y)) => x.throughput() >= y.throughput(),
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                let best_cell = if a_wins { ta.best_cell } else { tb.best_cell };
+                let mut trace = ta;
+                trace.merge(tb);
+                trace.best_cell = best_cell;
+                (if a_wins { a } else { b.or(a) }, trace)
             }
+            // Table V ablations: fixed memory-balanced or time-balanced
+            // partitions (no adjustment loop), CKPT disabled, 1F1B.
             MethodSpec::Partition(policy) => {
-                run_fixed_partition(*policy, model, cluster, &ov.apply(SearchConfig {
+                let kind = match policy {
+                    PartitionPolicy::Memory => PartitionKind::MemoryBalanced,
+                    PartitionPolicy::Time => PartitionKind::TimeBalanced,
+                };
+                let cfg = ov.apply(SearchConfig {
                     space: SpaceOptions::default().no_ckpt(),
                     ..base
-                }))
+                });
+                SearchEngine::new(model, cluster, &cfg, CellAlgo::Fixed(kind)).run()
             }
         }
     }
-}
-
-/// Table V ablations: fixed memory-balanced or time-balanced partitions
-/// (no adjustment loop), CKPT disabled, 1F1B schedule.
-fn run_fixed_partition(
-    policy: PartitionPolicy,
-    model: &ModelProfile,
-    cluster: &ClusterSpec,
-    cfg: &SearchConfig,
-) -> Option<SearchOutcome> {
-    let n_layers = model.n_layers();
-    let flops_w: Vec<f64> = model.layers.iter().map(|l| l.flops_fwd).collect();
-    let mut best: Option<SearchOutcome> = None;
-    let mut infeasible_streak = 0usize;
-    for batch in crate::search::batch_candidates(cfg.max_batch) {
-        let mut any = false;
-        for pp in pp_degrees(model, cluster, cfg) {
-            if pp < 2 {
-                continue;
-            }
-            let group = cluster.n_devices / pp;
-            for m in crate::search::microbatch_candidates(batch, pp) {
-                let partition = match policy {
-                    PartitionPolicy::Time => balanced_partition(&flops_w, pp),
-                    PartitionPolicy::Memory => {
-                        let b_m = batch as f64 / m as f64;
-                        let act_w: Vec<f64> = model
-                            .layers
-                            .iter()
-                            .map(|l| l.act_bytes * b_m / group as f64)
-                            .collect();
-                        let ms_w: Vec<f64> = (0..n_layers)
-                            .map(|i| {
-                                (model.layers[i].params + model.extra_params(i)) * 16.0
-                                    / group as f64
-                            })
-                            .collect();
-                        memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule)
-                    }
-                };
-                if let Some((out, _)) =
-                    evaluate_partition(model, cluster, cfg, batch, pp, m, &partition)
-                {
-                    any = true;
-                    if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
-                        best = Some(out);
-                    }
-                }
-            }
-        }
-        if any {
-            infeasible_streak = 0;
-        } else if best.is_some() {
-            infeasible_streak += 1;
-            if infeasible_streak >= cfg.patience {
-                break;
-            }
-        }
-    }
-    best
 }
 
 #[cfg(test)]

@@ -15,10 +15,12 @@
 //!     (unknown names carry did-you-mean suggestions; OOM is
 //!     [`PlanError::Infeasible`], not a panic or a bare `None`).
 //!   * [`PlanReport`] — the serializable plan artifact: the
-//!     [`crate::parallel::ParallelPlan`] plus cost breakdown and
-//!     per-stage memory/bubble diagnostics. Round-trips through JSON via
-//!     [`crate::util::json`], so `galvatron plan --out plan.json` →
-//!     `galvatron simulate --plan plan.json` is a real pipeline.
+//!     [`crate::parallel::ParallelPlan`] plus cost breakdown, per-stage
+//!     memory/bubble diagnostics, and the engine's [`SearchTrace`]
+//!     (cells explored/pruned, cache hit rate, winning cell). Round-trips
+//!     through JSON via [`crate::util::json`], so `galvatron plan --out
+//!     plan.json` → `galvatron simulate --plan plan.json` is a real
+//!     pipeline.
 //!
 //! ```no_run
 //! use galvatron::api::{MethodSpec, PlanRequest, Planner};
@@ -38,6 +40,7 @@ pub mod method;
 pub mod report;
 pub mod request;
 
+pub use crate::search::engine::{CellTrace, SearchTrace};
 pub use error::{suggest, PlanError};
 pub use method::{MethodSpec, PartitionPolicy, SearchOverrides};
 pub use report::{PlanReport, StageReport, PLAN_ARTIFACT_VERSION};

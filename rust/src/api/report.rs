@@ -7,6 +7,7 @@ use std::path::Path;
 
 use crate::cost::pipeline::Schedule;
 use crate::parallel::ParallelPlan;
+use crate::search::engine::SearchTrace;
 use crate::search::SearchOutcome;
 use crate::util::json::Json;
 use crate::util::GIB;
@@ -59,11 +60,20 @@ pub struct PlanReport {
     /// Memory balance degree alpha_m (Eq. 6).
     pub alpha_m: f64,
     pub stages: Vec<StageReport>,
+    /// Structured diagnostics of the search that found this plan (cells
+    /// explored/pruned, cache statistics, winning cell). `None` for
+    /// artifacts written before the search engine existed — every other
+    /// field stands alone.
+    pub search_trace: Option<SearchTrace>,
 }
 
 impl PlanReport {
     /// Package a search outcome found for a resolved request.
-    pub fn from_outcome(r: &ResolvedRequest, out: &SearchOutcome) -> PlanReport {
+    pub fn from_outcome(
+        r: &ResolvedRequest,
+        out: &SearchOutcome,
+        search_trace: Option<SearchTrace>,
+    ) -> PlanReport {
         let schedule = r.overrides.schedule.unwrap_or_else(|| r.method.default_schedule());
         let overlap = r
             .overrides
@@ -106,6 +116,7 @@ impl PlanReport {
             alpha_t: out.cost.alpha_t,
             alpha_m: out.cost.alpha_m,
             stages,
+            search_trace,
         }
     }
 
@@ -144,6 +155,13 @@ impl PlanReport {
                     ])
                 })),
             ),
+            (
+                "search_trace",
+                match &self.search_trace {
+                    Some(t) => t.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -181,6 +199,11 @@ impl PlanReport {
                 est_bubble: f("est_bubble")?,
             });
         }
+        // Optional (absent in pre-engine artifacts); reject mistyped data.
+        let search_trace = match v.get("search_trace") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(SearchTrace::from_json(t).ok_or_else(|| bad("search_trace"))?),
+        };
         Ok(PlanReport {
             model: gets("model")?,
             cluster: gets("cluster")?,
@@ -195,6 +218,7 @@ impl PlanReport {
             alpha_t: getn("alpha_t")?,
             alpha_m: getn("alpha_m")?,
             stages,
+            search_trace,
         })
     }
 
@@ -253,6 +277,10 @@ impl PlanReport {
                 s.time_sync,
                 s.est_bubble * 100.0
             ));
+        }
+        if let Some(t) = &self.search_trace {
+            out.push_str(&t.summary());
+            out.push('\n');
         }
         out
     }

@@ -72,6 +72,11 @@ pub struct PlanRequest {
     pub overlap_slowdown: Option<f64>,
     pub microbatch_limit: Option<usize>,
     pub pipeline_degrees: Option<Vec<usize>>,
+    /// Worker threads for the search engine's (batch × PP) fan-out.
+    /// `None` (or `Some(0)`) = auto: `GALVATRON_THREADS` if set, else the
+    /// machine's available parallelism. The resulting plan (and its JSON
+    /// artifact) is byte-identical for every value.
+    pub threads: Option<usize>,
 }
 
 impl PlanRequest {
@@ -88,6 +93,7 @@ impl PlanRequest {
             overlap_slowdown: None,
             microbatch_limit: None,
             pipeline_degrees: None,
+            threads: None,
         }
     }
 
@@ -148,6 +154,13 @@ impl PlanRequest {
     /// Restrict the pipeline degrees explored (e.g. `&[4]` to pin PP=4).
     pub fn pipeline_degrees(mut self, degrees: &[usize]) -> Self {
         self.pipeline_degrees = Some(degrees.to_vec());
+        self
+    }
+
+    /// Pin the search engine's worker-thread count (0 = auto). Affects
+    /// wall-clock only — never the plan found.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
         self
     }
 
@@ -268,6 +281,7 @@ impl Planner {
         overrides.overlap_slowdown = req.overlap_slowdown;
         overrides.microbatch_limit = req.microbatch_limit;
         overrides.pp_degrees = req.pipeline_degrees.clone();
+        overrides.threads = req.threads;
         Ok(ResolvedRequest {
             model_name,
             cluster_name,
@@ -279,23 +293,22 @@ impl Planner {
     }
 
     /// Run the full planning pipeline:
-    /// resolve → search → package as an artifact.
+    /// resolve → search (on the parallel memoized engine) → package as an
+    /// artifact carrying the structured search trace.
     pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
         let r = self.resolve(req)?;
-        let outcome =
-            r.method.run_with(&r.model, &r.cluster, &r.overrides).ok_or_else(|| {
-                PlanError::Infeasible {
-                    reason: format!(
-                        "no plan for {} on {} fits the {:.1} GB budget ({}, max batch {})",
-                        r.model_name,
-                        r.cluster_name,
-                        r.cluster.gpu.mem_bytes / GIB,
-                        r.method.canonical_name(),
-                        r.overrides.max_batch
-                    ),
-                }
-            })?;
-        Ok(PlanReport::from_outcome(&r, &outcome))
+        let (outcome, trace) = r.method.run_traced_with(&r.model, &r.cluster, &r.overrides);
+        let outcome = outcome.ok_or_else(|| PlanError::Infeasible {
+            reason: format!(
+                "no plan for {} on {} fits the {:.1} GB budget ({}, max batch {})",
+                r.model_name,
+                r.cluster_name,
+                r.cluster.gpu.mem_bytes / GIB,
+                r.method.canonical_name(),
+                r.overrides.max_batch
+            ),
+        })?;
+        Ok(PlanReport::from_outcome(&r, &outcome, Some(trace)))
     }
 
     /// Re-run the discrete-event simulator for a saved report (the

@@ -31,6 +31,59 @@ impl LayerCost {
     }
 }
 
+/// Source of per-layer and transform costs for the stage-level DP kernel
+/// ([`crate::search::dp`]). `layer_idx` is the model-global layer index
+/// (stage offset + local index): a direct [`CostEstimator`] ignores it, the
+/// engine's memoized [`crate::search::engine::CostCache`] keys on it.
+///
+/// Method names carry the `_at` suffix so they never shadow (or get
+/// shadowed by) the inherent `CostEstimator` methods of the same shape.
+pub trait StageCosts: Sync {
+    /// c(l, s) for the layer at model-global index `layer_idx`.
+    fn layer_cost_at(
+        &self,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        strategy: &Strategy,
+        b_m: f64,
+        extra_params: f64,
+    ) -> LayerCost;
+
+    /// R(l, S_prev, S_cur) where `layer_idx` indexes the *current* layer.
+    fn transform_cost_at(
+        &self,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        prev: &Strategy,
+        cur: &Strategy,
+        b_m: f64,
+    ) -> f64;
+}
+
+impl StageCosts for CostEstimator {
+    fn layer_cost_at(
+        &self,
+        _layer_idx: usize,
+        layer: &LayerProfile,
+        strategy: &Strategy,
+        b_m: f64,
+        extra_params: f64,
+    ) -> LayerCost {
+        self.layer_cost(layer, strategy, b_m, extra_params)
+    }
+
+    fn transform_cost_at(
+        &self,
+        _layer_idx: usize,
+        layer: &LayerProfile,
+        prev: &Strategy,
+        cur: &Strategy,
+        b_m: f64,
+    ) -> f64 {
+        self.transform_cost(layer, prev, cur, b_m)
+    }
+}
+
 /// Estimator bound to a model's placement context: cluster + PP degree.
 #[derive(Debug, Clone)]
 pub struct CostEstimator {

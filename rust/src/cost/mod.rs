@@ -16,7 +16,7 @@
 pub mod estimator;
 pub mod pipeline;
 
-pub use estimator::{CostEstimator, LayerCost};
+pub use estimator::{CostEstimator, LayerCost, StageCosts};
 pub use pipeline::{plan_cost, PlanCost, StageCost};
 
 /// Default GPU streaming-multiprocessor contention factor (paper §V: "such

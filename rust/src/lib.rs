@@ -12,7 +12,10 @@
 //!   * [`cost`]    — the paper's cost estimator (§V), incl. overlap slowdown.
 //!   * [`search`]  — decision-tree search space (§III), dynamic-programming
 //!     layer assignment + Galvatron-Base (§IV-A) and the BMW bi-objective
-//!     workload balancer (§IV-B), plus all baselines.
+//!     workload balancer (§IV-B), plus all baselines — all driven by the
+//!     parallel memoized [`search::engine`] (shared cost caches,
+//!     thread-fanned batch × PP sweeps, deterministic reduction, and
+//!     [`search::engine::SearchTrace`] artifacts).
 //!   * [`sim`]     — discrete-event cluster simulator (ground truth for
 //!     Fig. 4/7-style experiments; substitutes the GPU testbed).
 //!   * [`runtime`] — PJRT-CPU execution of AOT artifacts (HLO text).

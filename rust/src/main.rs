@@ -25,7 +25,8 @@ galvatron <command> [options]
 
 commands:
   plan      --model <name> --cluster <name> --memory <GB> [--method <name>]
-            [--max-batch N] [--schedule 1f1b|gpipe] [--out plan.json]
+            [--max-batch N] [--schedule 1f1b|gpipe] [--threads N]
+            [--out plan.json]
   simulate  --plan plan.json
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
@@ -75,6 +76,11 @@ fn plan_request(args: &Args) -> Result<PlanRequest> {
     }
     if let Some(m) = args.get("microbatch-limit") {
         req = req.microbatch_limit(m.parse().context("--microbatch-limit expects an integer")?);
+    }
+    // Worker threads for the search engine (default: GALVATRON_THREADS or
+    // the machine's available parallelism; plans are identical either way).
+    if let Some(t) = args.get("threads") {
+        req = req.threads(t.parse().context("--threads expects an integer")?);
     }
     Ok(req)
 }

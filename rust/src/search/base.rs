@@ -4,6 +4,11 @@
 //! partition the model, run the stage-level DP search (dp.rs) under the
 //! device memory budget, compose the pipeline cost (Eq. 9), and track the
 //! best throughput until everything OOMs.
+//!
+//! The sweep itself executes on the parallel memoized
+//! [`crate::search::engine::SearchEngine`]; this module keeps the
+//! configuration type, the uncached single-point reference evaluator
+//! ([`evaluate_partition`]) and the `optimize` front door.
 
 use crate::cluster::ClusterSpec;
 use crate::cost::pipeline::{plan_cost, PlanCost, Schedule};
@@ -15,7 +20,7 @@ use crate::util::{pow2_divisors, MIB};
 
 use super::decision_tree::{candidate_strategies, SpaceOptions};
 use super::dp::{dp_search, DpInput};
-use super::partition::even_partition;
+use super::engine::{CellAlgo, SearchEngine, SearchTrace};
 
 /// Everything that configures one optimizer run.
 #[derive(Debug, Clone)]
@@ -36,12 +41,18 @@ pub struct SearchConfig {
     /// Largest global batch size to consider.
     pub max_batch: usize,
     /// Stop after this many consecutive infeasible batch sizes once any
-    /// feasible plan was found.
+    /// feasible plan was found. Patience is counted over *ordered* batch
+    /// sizes (the sweep order), never over completion order — the parallel
+    /// engine's reduction and a sequential sweep stop at the same batch.
     pub patience: usize,
     /// Cap on the microbatch count (gradient-accumulation depth). Pure
     /// single-shot baselines (DDP / Megatron-TP / FSDP as benchmarked in
     /// the paper) use `Some(1)`; `None` = unbounded.
     pub microbatch_limit: Option<usize>,
+    /// Worker threads for the (batch × PP) cell fan-out. `None` (or
+    /// `Some(0)`) resolves via `GALVATRON_THREADS` or the machine's
+    /// available parallelism; results are identical for every value.
+    pub threads: Option<usize>,
 }
 
 impl Default for SearchConfig {
@@ -56,6 +67,7 @@ impl Default for SearchConfig {
             max_batch: 4096,
             patience: 3,
             microbatch_limit: None,
+            threads: None,
         }
     }
 }
@@ -83,6 +95,11 @@ pub struct LayerDiag {
 
 /// Evaluate one (batch, pp, microbatches, partition) point: run the DP per
 /// stage and compose. Returns the feasible outcome + per-layer diagnostics.
+///
+/// This is the *uncached reference* evaluator: it rebuilds the candidate
+/// catalog and estimator per call. The engine's hot path uses the memoized
+/// equivalent in `search::engine`; the cache-consistency tests pin the two
+/// to identical results.
 pub fn evaluate_partition(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -98,21 +115,7 @@ pub fn evaluate_partition(
     let est = CostEstimator::new(cluster, pp, cfg.overlap_slowdown);
     let b_m = batch as f64 / microbatches as f64;
 
-    let candidates: Vec<Strategy> = match &cfg.fixed_strategy {
-        Some(s) => {
-            let mut v = Vec::new();
-            if s.degree() == group {
-                v.push(s.clone());
-                if cfg.space.allow_ckpt {
-                    let mut ck = s.clone();
-                    ck.ckpt = true;
-                    v.push(ck);
-                }
-            }
-            v
-        }
-        None => candidate_strategies(group, &cfg.space),
-    };
+    let candidates = stage_candidates(cfg, group);
     if candidates.is_empty() {
         return None;
     }
@@ -127,7 +130,8 @@ pub fn evaluate_partition(
             layers,
             extra_params: &extra,
             strategies: &candidates,
-            estimator: &est,
+            costs: &est,
+            layer_offset: start,
             b_m,
             microbatches,
             live_mb: live,
@@ -159,6 +163,29 @@ pub fn evaluate_partition(
     Some((SearchOutcome { plan, cost }, diags))
 }
 
+/// Candidate strategies for one stage group of `group` devices under this
+/// configuration — the single source of truth shared by the uncached
+/// reference evaluator and the engine's per-PP catalogs. A
+/// `fixed_strategy` whose degree does not match the group yields an empty
+/// catalog (the PP degree is simply not usable by that baseline).
+pub fn stage_candidates(cfg: &SearchConfig, group: usize) -> Vec<Strategy> {
+    match &cfg.fixed_strategy {
+        Some(s) => {
+            let mut v = Vec::new();
+            if s.degree() == group {
+                v.push(s.clone());
+                if cfg.space.allow_ckpt {
+                    let mut ck = s.clone();
+                    ck.ckpt = true;
+                    v.push(ck);
+                }
+            }
+            v
+        }
+        None => candidate_strategies(group, &cfg.space),
+    }
+}
+
 /// PP degrees to explore for a model/cluster pair.
 pub fn pp_degrees(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Vec<usize> {
     match &cfg.pp_degrees {
@@ -171,56 +198,19 @@ pub fn pp_degrees(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfi
 }
 
 /// Galvatron-Base (Algorithm 1): even-layer pipeline partition, batch-size
-/// sweep, DP per stage, best throughput wins.
+/// sweep, DP per stage, best throughput wins. Runs on the parallel
+/// memoized engine; see [`optimize_traced`] for the search diagnostics.
 pub fn optimize(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Option<SearchOutcome> {
-    let mut best: Option<SearchOutcome> = None;
-    let mut infeasible_streak = 0usize;
+    optimize_traced(model, cluster, cfg).0
+}
 
-    for batch in super::batch_candidates(cfg.max_batch) {
-        let mut any_feasible = false;
-        for pp in pp_degrees(model, cluster, cfg) {
-            let partition = even_partition(model.n_layers(), pp);
-            let mut worse_streak = 0usize;
-            let mut best_mb: Option<f64> = None;
-            let mut mbs = super::microbatch_candidates(batch, pp);
-            if let Some(cap) = cfg.microbatch_limit {
-                mbs.retain(|&m| m <= cap);
-                if mbs.is_empty() {
-                    mbs.push(cap.min(batch));
-                }
-            }
-            for m in mbs {
-                match evaluate_partition(model, cluster, cfg, batch, pp, m, &partition) {
-                    Some((out, _)) => {
-                        any_feasible = true;
-                        let t = out.throughput();
-                        if best_mb.map_or(true, |b| t > b) {
-                            best_mb = Some(t);
-                            worse_streak = 0;
-                        } else {
-                            worse_streak += 1;
-                        }
-                        if best.as_ref().map_or(true, |b| t > b.throughput()) {
-                            best = Some(out);
-                        }
-                    }
-                    None => worse_streak += 1,
-                }
-                if worse_streak >= 2 {
-                    break; // microbatch cost is quasi-convex; stop early
-                }
-            }
-        }
-        if any_feasible {
-            infeasible_streak = 0;
-        } else if best.is_some() {
-            infeasible_streak += 1;
-            if infeasible_streak >= cfg.patience {
-                break; // memory monotonicity: larger batches won't fit either
-            }
-        }
-    }
-    best
+/// [`optimize`] plus the engine's structured [`SearchTrace`].
+pub fn optimize_traced(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+) -> (Option<SearchOutcome>, SearchTrace) {
+    SearchEngine::new(model, cluster, cfg, CellAlgo::Even).run()
 }
 
 #[cfg(test)]

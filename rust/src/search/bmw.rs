@@ -11,16 +11,15 @@
 //! which guarantees the Eq. 7/8 sandwich: alpha_t(p_m) <= alpha_t(p') <=
 //! alpha_t(p_t) and alpha_m(p_t) <= alpha_m(p') <= alpha_m(p_m).
 
-use std::collections::VecDeque;
-
 use crate::cluster::ClusterSpec;
 use crate::cost::pipeline::Schedule;
 use crate::model::ModelProfile;
 use crate::parallel::memory::stage_peak_memory;
 use crate::util::GIB;
 
-use super::base::{evaluate_partition, pp_degrees, LayerDiag, SearchConfig, SearchOutcome};
-use super::partition::{balanced_partition, even_partition};
+use super::base::{LayerDiag, SearchConfig, SearchOutcome};
+use super::engine::{CellAlgo, SearchEngine, SearchTrace};
+use super::partition::even_partition;
 
 /// Memory-balanced partition p_m with 1F1B live-microbatch awareness:
 /// stage s of P keeps (P - s) microbatches of activations live, so the
@@ -101,7 +100,7 @@ pub fn memory_balanced_partition(
 /// Proxy stage times/memories for a candidate partition, reusing the
 /// per-layer diagnostics from the most recent full search (the validation
 /// step of Algorithm 2 line 14 — cheap, no DP re-run).
-fn proxy_stage_stats(
+pub(crate) fn proxy_stage_stats(
     diags: &[LayerDiag],
     partition: &[usize],
     microbatches: usize,
@@ -124,7 +123,7 @@ fn proxy_stage_stats(
 
 /// One adjustment step: move a boundary layer out of the slowest stage.
 /// Returns candidate partitions (shrink-left and shrink-right variants).
-fn adjust_candidates(partition: &[usize], slowest: usize) -> Vec<Vec<usize>> {
+pub(crate) fn adjust_candidates(partition: &[usize], slowest: usize) -> Vec<Vec<usize>> {
     let mut out = Vec::new();
     if partition[slowest] <= 1 {
         return out;
@@ -147,130 +146,20 @@ fn adjust_candidates(partition: &[usize], slowest: usize) -> Vec<Vec<usize>> {
 }
 
 /// Galvatron-BMW (Algorithm 2): Galvatron-Base plus bi-objective pipeline
-/// partition optimization.
+/// partition optimization. The (batch × PP) sweep and the per-cell
+/// boundary-adjustment queue run on the parallel memoized engine
+/// (`search::engine::cells::eval_bmw_cell`).
 pub fn optimize_bmw(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Option<SearchOutcome> {
-    let mut best: Option<SearchOutcome> = None;
-    let mut infeasible_streak = 0usize;
-    let n_layers = model.n_layers();
+    optimize_bmw_traced(model, cluster, cfg).0
+}
 
-    let flops_w: Vec<f64> = model.layers.iter().map(|l| l.flops_fwd).collect();
-
-    for batch in super::batch_candidates(cfg.max_batch) {
-        let mut any_feasible = false;
-        for pp in pp_degrees(model, cluster, cfg) {
-            if pp < 2 && cfg.pp_degrees.is_none() {
-                // Algorithm 2 line 5 iterates P in {2,4,...}; P=1 has no
-                // pipeline to balance — still evaluate it via the even path
-                // so pure intra-stage plans are not lost.
-                for m in super::microbatch_candidates(batch, 1) {
-                    if let Some((out, _)) =
-                        evaluate_partition(model, cluster, cfg, batch, 1, m, &[n_layers])
-                    {
-                        any_feasible = true;
-                        if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
-                            best = Some(out);
-                        }
-                    }
-                }
-                continue;
-            }
-            let group = cluster.n_devices / pp;
-            for m in super::microbatch_candidates(batch, pp) {
-                let b_m = batch as f64 / m as f64;
-                // Strategy-agnostic per-layer weights for the initial
-                // partitions (Strategy_Init: memory under an even split of
-                // states across the group).
-                let act_w: Vec<f64> = model
-                    .layers
-                    .iter()
-                    .map(|l| l.act_bytes * b_m / group as f64)
-                    .collect();
-                let ms_w: Vec<f64> = (0..n_layers)
-                    .map(|i| {
-                        (model.layers[i].params + model.extra_params(i)) * 16.0 / group as f64
-                    })
-                    .collect();
-                let p_m = memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule);
-                let p_t = balanced_partition(&flops_w, pp);
-
-                let mut queue: VecDeque<Vec<usize>> = VecDeque::new();
-                let mut visited: Vec<Vec<usize>> = Vec::new();
-                // Seed with p_m (Algorithm 2 line 7); also evaluate the
-                // even and time-balanced partitions so BMW's answer is
-                // never worse than Galvatron-Base's for the same (B,P,m).
-                queue.push_back(p_m.clone());
-                queue.push_back(even_partition(n_layers, pp));
-                queue.push_back(p_t.clone());
-                let max_iters = 4 * n_layers;
-                let mut iters = 0usize;
-                let mut local_best_tp = f64::NEG_INFINITY;
-                let mut stale = 0usize;
-
-                while let Some(part) = queue.pop_front() {
-                    iters += 1;
-                    if iters > max_iters {
-                        break;
-                    }
-                    if visited.contains(&part) {
-                        continue;
-                    }
-                    visited.push(part.clone());
-                    let Some((out, diags)) =
-                        evaluate_partition(model, cluster, cfg, batch, pp, m, &part)
-                    else {
-                        continue;
-                    };
-                    any_feasible = true;
-                    if out.throughput() > local_best_tp {
-                        local_best_tp = out.throughput();
-                        stale = 0;
-                    } else {
-                        stale += 1;
-                        if stale > 6 {
-                            break;
-                        }
-                    }
-                    if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
-                        best = Some(out.clone());
-                    }
-
-                    // Adjustment (Algorithm 2 line 13-15).
-                    let (times, _mems) = proxy_stage_stats(&diags, &part, m, cfg.schedule);
-                    let c_max = times.iter().cloned().fold(0.0, f64::max);
-                    let slowest = times
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i)
-                        .unwrap();
-                    // Validation limit (3): max stage memory under p_t.
-                    let (_, mems_pt) = proxy_stage_stats(&diags, &p_t, m, cfg.schedule);
-                    let mem_cap_pt = mems_pt.iter().cloned().fold(0.0, f64::max);
-                    for cand in adjust_candidates(&part, slowest) {
-                        if visited.contains(&cand) {
-                            continue;
-                        }
-                        let (t2, m2) = proxy_stage_stats(&diags, &cand, m, cfg.schedule);
-                        let cond1 = t2.iter().cloned().fold(0.0, f64::max) <= c_max + 1e-12;
-                        let cond2 = m2.iter().all(|&x| x <= cluster.gpu.mem_bytes);
-                        let cond3 = m2.iter().all(|&x| x <= mem_cap_pt.max(cluster.gpu.mem_bytes));
-                        if cond1 && cond2 && cond3 {
-                            queue.push_back(cand);
-                        }
-                    }
-                }
-            }
-        }
-        if any_feasible {
-            infeasible_streak = 0;
-        } else if best.is_some() {
-            infeasible_streak += 1;
-            if infeasible_streak >= cfg.patience {
-                break;
-            }
-        }
-    }
-    best
+/// [`optimize_bmw`] plus the engine's structured [`SearchTrace`].
+pub fn optimize_bmw_traced(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+) -> (Option<SearchOutcome>, SearchTrace) {
+    SearchEngine::new(model, cluster, cfg, CellAlgo::Bmw).run()
 }
 
 /// Report the two balance degrees of an outcome (Eq. 6), for Table V.

@@ -10,7 +10,7 @@
 //! backtraced solution, scanning candidate terminal states in cost order —
 //! equivalent to Algorithm 3's E_fwd sweep.
 
-use crate::cost::estimator::{CostEstimator, LayerCost};
+use crate::cost::estimator::{LayerCost, StageCosts};
 use crate::model::LayerProfile;
 use crate::parallel::memory::stage_peak_memory;
 use crate::parallel::Strategy;
@@ -23,7 +23,11 @@ pub struct DpInput<'a> {
     pub extra_params: &'a [f64],
     /// Candidate strategies (all with degree == stage group size).
     pub strategies: &'a [Strategy],
-    pub estimator: &'a CostEstimator,
+    /// Cost source: a bare [`crate::cost::CostEstimator`] or the engine's
+    /// shared memoized cache — the kernel itself stays cache-agnostic.
+    pub costs: &'a dyn StageCosts,
+    /// Model-global index of `layers[0]` (for cost-cache keying).
+    pub layer_offset: usize,
     /// Microbatch size (global samples per microbatch).
     pub b_m: f64,
     /// Microbatches per global batch (m).
@@ -77,7 +81,13 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
         let mut wrow = Vec::with_capacity(ns);
         let mut brow = Vec::with_capacity(ns);
         for s in input.strategies {
-            let c = input.estimator.layer_cost(layer, s, input.b_m, input.extra_params[l]);
+            let c = input.costs.layer_cost_at(
+                input.layer_offset + l,
+                layer,
+                s,
+                input.b_m,
+                input.extra_params[l],
+            );
             let fwd_bytes = c.mem.o_ms + input.live_mb as f64 * c.mem.o_f;
             wrow.push((fwd_bytes / input.granularity).ceil() as usize);
             brow.push(m * (c.fwd + c.bwd) + (c.bwd_sync - c.bwd));
@@ -116,7 +126,8 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
         let mut mat = vec![vec![0.0; nc]; nc];
         for ci in 0..nc {
             for cj in 0..nc {
-                mat[ci][cj] = m * input.estimator.transform_cost(
+                mat[ci][cj] = m * input.costs.transform_cost_at(
+                    input.layer_offset + l,
                     &input.layers[l],
                     &input.strategies[class_rep[ci]],
                     &input.strategies[class_rep[cj]],
@@ -256,6 +267,7 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;
+    use crate::cost::CostEstimator;
     use crate::model::model_by_name;
     use crate::search::decision_tree::{candidate_strategies, SpaceOptions};
     use crate::util::{GIB, MIB};
@@ -276,7 +288,8 @@ mod tests {
             layers: &layers,
             extra_params: &extra,
             strategies: &strategies,
-            estimator: &est,
+            costs: &est,
+            layer_offset: 0,
             b_m,
             microbatches: 1,
             live_mb: 1,
@@ -353,7 +366,8 @@ mod tests {
             layers: &layers,
             extra_params: &extra,
             strategies: &strategies,
-            estimator: &est,
+            costs: &est,
+            layer_offset: 0,
             b_m: 4.0,
             microbatches: 2,
             live_mb: 2,
@@ -392,7 +406,8 @@ mod tests {
                 layers: &layers,
                 extra_params: &extra,
                 strategies: &strategies,
-                estimator: &est,
+                costs: &est,
+                layer_offset: 0,
                 b_m: 8.0,
                 microbatches: 1,
                 live_mb: 1,

@@ -1,0 +1,221 @@
+//! Shared memoized cost tables for the search engine.
+//!
+//! The sequential planner recomputed every per-layer cost `c(l, s)` at each
+//! (batch, PP, microbatch, partition) cell even though the cost depends
+//! only on (layer profile, strategy, microbatch size). [`CostCache`]
+//! memoizes both `c(l, s)` and the transform cost R across *all* cells of
+//! a search run, and collapses the (typically many) identical transformer
+//! layers into cost classes so a 32-layer homogeneous model pays for at
+//! most two distinct layers (the embedding-bearing first/head-bearing last
+//! layer being the usual second class).
+//!
+//! Thread safety: the cache is shared by every worker of the engine's
+//! (batch × PP) fan-out. Values are pure functions of their key, so a
+//! racing double-compute is harmless — both threads produce bit-identical
+//! results and the insert path re-checks under the write lock, keeping the
+//! entry count (and thus the serialized `SearchTrace` cache statistics)
+//! independent of the thread count.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::cost::estimator::{CostEstimator, LayerCost, StageCosts};
+use crate::model::{LayerProfile, ModelProfile};
+use crate::parallel::Strategy;
+
+/// Map each layer to a cost class: two layers share a class iff their
+/// profiles *and* attributed embedding/head params are identical, making
+/// memoized costs valid across layer indices within a class.
+pub fn layer_classes(model: &ModelProfile) -> Vec<u32> {
+    let mut reps: Vec<usize> = Vec::new(); // class id -> representative layer
+    let mut classes = Vec::with_capacity(model.n_layers());
+    for i in 0..model.n_layers() {
+        match reps.iter().position(|&r| same_cost_profile(model, r, i)) {
+            Some(c) => classes.push(c as u32),
+            None => {
+                classes.push(reps.len() as u32);
+                reps.push(i);
+            }
+        }
+    }
+    classes
+}
+
+fn same_cost_profile(model: &ModelProfile, a: usize, b: usize) -> bool {
+    let (x, y) = (&model.layers[a], &model.layers[b]);
+    x.hidden == y.hidden
+        && x.seq == y.seq
+        && x.heads == y.heads
+        && x.kv_seq == y.kv_seq
+        && x.params == y.params
+        && x.flops_fwd == y.flops_fwd
+        && x.act_bytes == y.act_bytes
+        && x.bnd_bytes == y.bnd_bytes
+        && model.extra_params(a) == model.extra_params(b)
+}
+
+/// Outer key: everything except the strategy (which is matched by value in
+/// the inner list, avoiding a Strategy clone per lookup).
+type CellKey = (u32, u64, u64); // (class, b_m bits, extra_params bits)
+
+/// Memoizing [`StageCosts`] implementation bound to one (cluster, PP,
+/// overlap) placement context — the engine builds one per PP degree.
+pub struct CostCache {
+    est: CostEstimator,
+    classes: Vec<u32>,
+    layer_costs: RwLock<HashMap<CellKey, Vec<(Strategy, LayerCost)>>>,
+    /// (class, b_m bits) -> [(prev batch-split, cur batch-split), R].
+    transforms: RwLock<HashMap<(u32, u64), Vec<((usize, usize), f64)>>>,
+    lookups: AtomicU64,
+}
+
+impl CostCache {
+    pub fn new(est: CostEstimator, classes: Vec<u32>) -> CostCache {
+        CostCache {
+            est,
+            classes,
+            layer_costs: RwLock::new(HashMap::new()),
+            transforms: RwLock::new(HashMap::new()),
+            lookups: AtomicU64::new(0),
+        }
+    }
+
+    /// The underlying (uncached) estimator.
+    pub fn estimator(&self) -> &CostEstimator {
+        &self.est
+    }
+
+    /// Total memoized lookups served (layer costs + transforms). The per-key
+    /// work of every search cell is fixed, so this is deterministic across
+    /// thread counts.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Distinct entries resident (the union of keys touched — also
+    /// deterministic across thread counts; see module docs on races).
+    pub fn entries(&self) -> u64 {
+        let lc: usize = self.layer_costs.read().unwrap().values().map(Vec::len).sum();
+        let tc: usize = self.transforms.read().unwrap().values().map(Vec::len).sum();
+        (lc + tc) as u64
+    }
+
+    fn class_of(&self, layer_idx: usize) -> u32 {
+        self.classes[layer_idx]
+    }
+}
+
+impl StageCosts for CostCache {
+    fn layer_cost_at(
+        &self,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        strategy: &Strategy,
+        b_m: f64,
+        extra_params: f64,
+    ) -> LayerCost {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key: CellKey = (self.class_of(layer_idx), b_m.to_bits(), extra_params.to_bits());
+        if let Some(row) = self.layer_costs.read().unwrap().get(&key) {
+            if let Some((_, c)) = row.iter().find(|(s, _)| s == strategy) {
+                return *c;
+            }
+        }
+        let c = self.est.layer_cost(layer, strategy, b_m, extra_params);
+        let mut map = self.layer_costs.write().unwrap();
+        let row = map.entry(key).or_default();
+        // Re-check: another worker may have inserted while we computed.
+        if !row.iter().any(|(s, _)| s == strategy) {
+            row.push((strategy.clone(), c));
+        }
+        c
+    }
+
+    fn transform_cost_at(
+        &self,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        prev: &Strategy,
+        cur: &Strategy,
+        b_m: f64,
+    ) -> f64 {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        // R depends on the strategies only through their batch-split degrees
+        // (parallel::transform) and on the group's slowest link, which is
+        // fixed per cache (all catalog strategies span the full stage
+        // group), so splits are a sufficient key.
+        let splits = (prev.batch_split(), cur.batch_split());
+        let key = (self.class_of(layer_idx), b_m.to_bits());
+        if let Some(row) = self.transforms.read().unwrap().get(&key) {
+            if let Some((_, r)) = row.iter().find(|(sp, _)| *sp == splits) {
+                return *r;
+            }
+        }
+        let r = self.est.transform_cost(layer, prev, cur, b_m);
+        let mut map = self.transforms.write().unwrap();
+        let row = map.entry(key).or_default();
+        if !row.iter().any(|(sp, _)| *sp == splits) {
+            row.push((splits, r));
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::model::model_by_name;
+    use crate::search::decision_tree::{candidate_strategies, SpaceOptions};
+
+    #[test]
+    fn homogeneous_layers_collapse_to_few_classes() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let classes = layer_classes(&model);
+        assert_eq!(classes.len(), 32);
+        let distinct = classes.iter().max().unwrap() + 1;
+        // Interior layers identical; first/last differ via embeddings/head.
+        assert!(distinct <= 3, "expected <=3 classes, got {distinct}: {classes:?}");
+        assert_eq!(classes[1], classes[2]);
+    }
+
+    #[test]
+    fn cached_equals_direct_and_counts_stats() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let est = CostEstimator::new(&cluster, 2, 1.3);
+        let cache = CostCache::new(est.clone(), layer_classes(&model));
+        let cands = candidate_strategies(4, &SpaceOptions::default());
+        for (i, layer) in model.layers.iter().enumerate().take(3) {
+            for s in &cands {
+                let direct = est.layer_cost(layer, s, 4.0, model.extra_params(i));
+                let cached = cache.layer_cost_at(i, layer, s, 4.0, model.extra_params(i));
+                assert_eq!(direct, cached);
+                // Second call is a hit and returns the identical value.
+                assert_eq!(cache.layer_cost_at(i, layer, s, 4.0, model.extra_params(i)), direct);
+            }
+        }
+        let lookups = cache.lookups();
+        let entries = cache.entries();
+        assert!(lookups > entries, "lookups {lookups} entries {entries}");
+        // Layers 1 and 2 share a class, so entries reflect classes not layers.
+        assert!(entries <= 2 * cands.len() as u64);
+    }
+
+    #[test]
+    fn transform_cache_matches_direct() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let est = CostEstimator::new(&cluster, 1, 1.3);
+        let cache = CostCache::new(est.clone(), layer_classes(&model));
+        let cands = candidate_strategies(8, &SpaceOptions::default().no_ckpt());
+        for prev in &cands {
+            for cur in &cands {
+                let direct = est.transform_cost(&model.layers[1], prev, cur, 8.0);
+                let cached = cache.transform_cost_at(1, &model.layers[1], prev, cur, 8.0);
+                assert_eq!(direct, cached, "{prev} -> {cur}");
+            }
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! Per-cell search kernels: everything the engine computes for one
+//! (global-batch, PP-degree) grid cell. Each cell is self-contained — it
+//! reads only its own inputs and the shared (thread-safe) cost cache — so
+//! cells can run on any worker in any order and still reproduce the
+//! sequential planner's results exactly.
+
+use std::collections::VecDeque;
+
+use crate::cluster::ClusterSpec;
+use crate::cost::pipeline::plan_cost;
+use crate::cost::StageCosts;
+use crate::model::ModelProfile;
+use crate::parallel::ParallelPlan;
+use crate::search::base::{LayerDiag, SearchConfig, SearchOutcome};
+use crate::search::bmw::{adjust_candidates, memory_balanced_partition, proxy_stage_stats};
+use crate::search::dp::{dp_search, DpInput};
+use crate::search::partition::{balanced_partition, even_partition};
+
+use super::trace::CellTrace;
+use super::{PartitionKind, PpContext};
+
+/// Result of one cell: its local best plan plus the counters the ordered
+/// reduction and the [`super::SearchTrace`] need.
+pub(crate) struct CellOutcome {
+    pub batch: usize,
+    pub pp: usize,
+    /// Partition evaluations attempted (DP runs composed into plans).
+    pub evaluations: usize,
+    /// Whether any evaluation was memory-feasible.
+    pub feasible: bool,
+    /// Best outcome in this cell (ties keep the earliest, matching the
+    /// sequential sweep's strictly-greater update rule).
+    pub best: Option<SearchOutcome>,
+}
+
+impl CellOutcome {
+    fn new(batch: usize, pp: usize) -> CellOutcome {
+        CellOutcome { batch, pp, evaluations: 0, feasible: false, best: None }
+    }
+
+    /// Keep `out` iff strictly better than the current cell best.
+    fn offer(&mut self, out: SearchOutcome) {
+        if self.best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
+            self.best = Some(out);
+        }
+    }
+
+    pub(crate) fn to_trace(&self, discarded: bool) -> CellTrace {
+        CellTrace {
+            batch: self.batch,
+            pp: self.pp,
+            evaluations: self.evaluations,
+            feasible: self.feasible,
+            best_throughput: self.best.as_ref().map(|o| o.throughput()),
+            discarded,
+        }
+    }
+}
+
+/// Strategy-agnostic per-layer weights for the initial partitions
+/// (Strategy_Init: memory under an even split of states across the
+/// group) — shared by the BMW seed partition and the Table V ablations.
+fn strategy_init_weights(model: &ModelProfile, group: usize, b_m: f64) -> (Vec<f64>, Vec<f64>) {
+    let act_w = model
+        .layers
+        .iter()
+        .map(|l| l.act_bytes * b_m / group as f64)
+        .collect();
+    let ms_w = (0..model.n_layers())
+        .map(|i| (model.layers[i].params + model.extra_params(i)) * 16.0 / group as f64)
+        .collect();
+    (act_w, ms_w)
+}
+
+/// Microbatch-count candidates under the config's accumulation cap.
+fn microbatch_options(cfg: &SearchConfig, batch: usize, pp: usize) -> Vec<usize> {
+    let mut mbs = crate::search::microbatch_candidates(batch, pp);
+    if let Some(cap) = cfg.microbatch_limit {
+        mbs.retain(|&m| m <= cap);
+        if mbs.is_empty() {
+            mbs.push(cap.min(batch));
+        }
+    }
+    mbs
+}
+
+/// Cache-aware port of `search::base::evaluate_partition`: run the stage
+/// DPs over the precomputed candidate catalog and compose the plan.
+pub(crate) fn evaluate_partition_cached(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+    ctx: &PpContext,
+    batch: usize,
+    microbatches: usize,
+    partition: &[usize],
+) -> Option<(SearchOutcome, Vec<LayerDiag>)> {
+    if ctx.candidates.is_empty() {
+        return None;
+    }
+    let b_m = batch as f64 / microbatches as f64;
+
+    let mut strategies = Vec::with_capacity(model.n_layers());
+    let mut start = 0usize;
+    for (s, &count) in partition.iter().enumerate() {
+        let layers = &model.layers[start..start + count];
+        let extra: Vec<f64> = (start..start + count).map(|i| model.extra_params(i)).collect();
+        let live = cfg.schedule.live_microbatches(s, ctx.pp, microbatches);
+        let res = dp_search(&DpInput {
+            layers,
+            extra_params: &extra,
+            strategies: &ctx.candidates,
+            costs: &ctx.cache,
+            layer_offset: start,
+            b_m,
+            microbatches,
+            live_mb: live,
+            mem_budget: cluster.gpu.mem_bytes,
+            granularity: cfg.granularity,
+        })?;
+        strategies.extend(res.strategies);
+        start += count;
+    }
+
+    let plan = ParallelPlan {
+        pp: ctx.pp,
+        partition: partition.to_vec(),
+        strategies,
+        batch,
+        microbatches,
+    };
+    let cost = plan_cost(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown);
+    if !cost.feasible {
+        return None;
+    }
+
+    let mut diags = Vec::with_capacity(model.n_layers());
+    for (i, layer) in model.layers.iter().enumerate() {
+        let c = ctx.cache.layer_cost_at(i, layer, &plan.strategies[i], b_m, model.extra_params(i));
+        diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+    }
+    Some((SearchOutcome { plan, cost }, diags))
+}
+
+/// Galvatron-Base cell: even partition, quasi-convex microbatch sweep.
+pub(crate) fn eval_even_cell(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+    ctx: &PpContext,
+    batch: usize,
+) -> CellOutcome {
+    let mut cell = CellOutcome::new(batch, ctx.pp);
+    if ctx.candidates.is_empty() {
+        // Catalog mismatch (fixed strategy of another group size): nothing
+        // to evaluate — 0 evaluations, so the trace never counts it as OOM.
+        return cell;
+    }
+    let partition = even_partition(model.n_layers(), ctx.pp);
+    let mut worse_streak = 0usize;
+    let mut best_mb: Option<f64> = None;
+    for m in microbatch_options(cfg, batch, ctx.pp) {
+        cell.evaluations += 1;
+        match evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &partition) {
+            Some((out, _)) => {
+                cell.feasible = true;
+                let t = out.throughput();
+                if best_mb.map_or(true, |b| t > b) {
+                    best_mb = Some(t);
+                    worse_streak = 0;
+                } else {
+                    worse_streak += 1;
+                }
+                cell.offer(out);
+            }
+            None => worse_streak += 1,
+        }
+        if worse_streak >= 2 {
+            break; // microbatch cost is quasi-convex; stop early
+        }
+    }
+    cell
+}
+
+/// Galvatron-BMW cell: Algorithm 2's boundary-adjustment queue for every
+/// microbatch count of this (batch, PP) cell.
+pub(crate) fn eval_bmw_cell(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+    ctx: &PpContext,
+    batch: usize,
+    flops_w: &[f64],
+) -> CellOutcome {
+    let n_layers = model.n_layers();
+    let mut cell = CellOutcome::new(batch, ctx.pp);
+    if ctx.candidates.is_empty() {
+        return cell;
+    }
+    let pp = ctx.pp;
+
+    if pp < 2 && cfg.pp_degrees.is_none() {
+        // Algorithm 2 line 5 iterates P in {2,4,...}; P=1 has no pipeline
+        // to balance — still evaluate it via the even path so pure
+        // intra-stage plans are not lost.
+        for m in microbatch_options(cfg, batch, 1) {
+            cell.evaluations += 1;
+            if let Some((out, _)) =
+                evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &[n_layers])
+            {
+                cell.feasible = true;
+                cell.offer(out);
+            }
+        }
+        return cell;
+    }
+
+    let group = ctx.group;
+    for m in microbatch_options(cfg, batch, pp) {
+        let b_m = batch as f64 / m as f64;
+        let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
+        let p_m = memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule);
+        let p_t = balanced_partition(flops_w, pp);
+
+        let mut queue: VecDeque<Vec<usize>> = VecDeque::new();
+        let mut visited: Vec<Vec<usize>> = Vec::new();
+        // Seed with p_m (Algorithm 2 line 7); also evaluate the even and
+        // time-balanced partitions so BMW's answer is never worse than
+        // Galvatron-Base's for the same (B,P,m).
+        queue.push_back(p_m.clone());
+        queue.push_back(even_partition(n_layers, pp));
+        queue.push_back(p_t.clone());
+        let max_iters = 4 * n_layers;
+        let mut iters = 0usize;
+        let mut local_best_tp = f64::NEG_INFINITY;
+        let mut stale = 0usize;
+
+        while let Some(part) = queue.pop_front() {
+            iters += 1;
+            if iters > max_iters {
+                break;
+            }
+            if visited.contains(&part) {
+                continue;
+            }
+            visited.push(part.clone());
+            cell.evaluations += 1;
+            let Some((out, diags)) =
+                evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &part)
+            else {
+                continue;
+            };
+            cell.feasible = true;
+            if out.throughput() > local_best_tp {
+                local_best_tp = out.throughput();
+                stale = 0;
+            } else {
+                stale += 1;
+                if stale > 6 {
+                    break;
+                }
+            }
+            cell.offer(out);
+
+            // Adjustment (Algorithm 2 line 13-15).
+            let (times, _mems) = proxy_stage_stats(&diags, &part, m, cfg.schedule);
+            let c_max = times.iter().cloned().fold(0.0, f64::max);
+            let slowest = times
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+            // Validation limit (3): max stage memory under p_t.
+            let (_, mems_pt) = proxy_stage_stats(&diags, &p_t, m, cfg.schedule);
+            let mem_cap_pt = mems_pt.iter().cloned().fold(0.0, f64::max);
+            for cand in adjust_candidates(&part, slowest) {
+                if visited.contains(&cand) {
+                    continue;
+                }
+                let (t2, m2) = proxy_stage_stats(&diags, &cand, m, cfg.schedule);
+                let cond1 = t2.iter().cloned().fold(0.0, f64::max) <= c_max + 1e-12;
+                let cond2 = m2.iter().all(|&x| x <= cluster.gpu.mem_bytes);
+                let cond3 = m2.iter().all(|&x| x <= mem_cap_pt.max(cluster.gpu.mem_bytes));
+                if cond1 && cond2 && cond3 {
+                    queue.push_back(cand);
+                }
+            }
+        }
+    }
+    cell
+}
+
+/// Table V ablation cell: fixed memory- or time-balanced partition, no
+/// adjustment loop (pipeline degrees below 2 have nothing to balance).
+pub(crate) fn eval_fixed_cell(
+    kind: PartitionKind,
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+    ctx: &PpContext,
+    batch: usize,
+    flops_w: &[f64],
+) -> CellOutcome {
+    let mut cell = CellOutcome::new(batch, ctx.pp);
+    if ctx.pp < 2 || ctx.candidates.is_empty() {
+        return cell;
+    }
+    let group = ctx.group;
+    for m in microbatch_options(cfg, batch, ctx.pp) {
+        let partition = match kind {
+            PartitionKind::TimeBalanced => balanced_partition(flops_w, ctx.pp),
+            PartitionKind::MemoryBalanced => {
+                let b_m = batch as f64 / m as f64;
+                let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
+                memory_balanced_partition(&act_w, &ms_w, ctx.pp, m, cfg.schedule)
+            }
+        };
+        cell.evaluations += 1;
+        if let Some((out, _)) =
+            evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &partition)
+        {
+            cell.feasible = true;
+            cell.offer(out);
+        }
+    }
+    cell
+}

@@ -1,0 +1,309 @@
+//! The parallel memoized search engine (the planner core).
+//!
+//! [`SearchEngine`] drives every optimizer of the paper (Galvatron-Base,
+//! Galvatron-BMW, the fixed-partition ablations) over the same skeleton:
+//!
+//!   1. **Precompute** — per explored PP degree, build the decision-tree
+//!      candidate catalog once and bind a shared memoized cost cache
+//!      ([`cache::CostCache`]) that collapses identical layers into cost
+//!      classes and reuses `c(l, s)` / transform costs across every batch
+//!      size, partition, and BMW boundary-adjustment step.
+//!   2. **Fan out** — the independent (global-batch, PP-degree) cells of
+//!      the sweep run on a `std::thread::scope` worker pool sized by
+//!      [`crate::util::parallelism::resolve_worker_count`], in look-ahead
+//!      waves of [`WAVE_BATCHES`] consecutive batch sizes.
+//!   3. **Reduce deterministically** — results are folded in (batch, PP)
+//!      enumeration order with the sequential sweep's strictly-greater
+//!      update rule, and batch-sweep patience is counted over *ordered*
+//!      batch sizes (never completion order), so the winning plan — and the
+//!      serialized [`trace::SearchTrace`] — are bit-identical for every
+//!      worker count.
+//!
+//! `search::base::optimize`, `search::bmw::optimize_bmw` and the
+//! `api::MethodSpec` catalog are thin fronts over this engine;
+//! `search::dp` remains the pure per-stage kernel.
+
+pub mod cache;
+pub mod trace;
+mod cells;
+
+pub use cache::{layer_classes, CostCache};
+pub use trace::{CellTrace, SearchTrace};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::ClusterSpec;
+use crate::cost::CostEstimator;
+use crate::model::ModelProfile;
+use crate::parallel::Strategy;
+use crate::search::base::{pp_degrees, stage_candidates, SearchConfig, SearchOutcome};
+use crate::util::parallelism::resolve_worker_count;
+
+use cells::CellOutcome;
+
+/// Which fixed partition policy a [`CellAlgo::Fixed`] cell evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Memory-balanced partition p_m (1F1B live-microbatch aware).
+    MemoryBalanced,
+    /// Time-balanced partition p_t (FLOPs-balanced).
+    TimeBalanced,
+}
+
+/// The per-cell algorithm the engine fans out over the (batch × PP) grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellAlgo {
+    /// Galvatron-Base (Algorithm 1): even partition, microbatch sweep.
+    Even,
+    /// Galvatron-BMW (Algorithm 2): bi-objective boundary adjustment.
+    Bmw,
+    /// Table V ablations: fixed balanced partition, no adjustment loop.
+    Fixed(PartitionKind),
+}
+
+/// Precomputed per-PP-degree context shared by all cells of that degree:
+/// stage group size, the candidate catalog, and the memoized cost cache.
+pub(crate) struct PpContext {
+    pub pp: usize,
+    pub group: usize,
+    pub candidates: Vec<Strategy>,
+    pub cache: CostCache,
+}
+
+/// Look-ahead window of the batch sweep: cells of this many consecutive
+/// batch sizes are computed per wave. Deliberately fixed (never derived
+/// from the worker count) so the set of computed cells — and therefore the
+/// serialized trace — is identical for every `--threads` value. Matches
+/// the default patience of 3: at most one wave of overshoot past the
+/// stopping batch.
+const WAVE_BATCHES: usize = 4;
+
+/// The parallel memoized planner core. Construct per search run; borrows
+/// its inputs for the run's duration.
+pub struct SearchEngine<'a> {
+    model: &'a ModelProfile,
+    cluster: &'a ClusterSpec,
+    cfg: &'a SearchConfig,
+    algo: CellAlgo,
+    threads: usize,
+    contexts: Vec<PpContext>,
+    flops_w: Vec<f64>,
+}
+
+impl<'a> SearchEngine<'a> {
+    pub fn new(
+        model: &'a ModelProfile,
+        cluster: &'a ClusterSpec,
+        cfg: &'a SearchConfig,
+        algo: CellAlgo,
+    ) -> SearchEngine<'a> {
+        let threads = resolve_worker_count(cfg.threads);
+        let classes = layer_classes(model);
+        let contexts: Vec<PpContext> = pp_degrees(model, cluster, cfg)
+            .into_iter()
+            .map(|pp| {
+                let group = cluster.n_devices / pp;
+                let candidates = stage_candidates(cfg, group);
+                PpContext {
+                    pp,
+                    group,
+                    candidates,
+                    cache: CostCache::new(
+                        CostEstimator::new(cluster, pp, cfg.overlap_slowdown),
+                        classes.clone(),
+                    ),
+                }
+            })
+            .collect();
+        let flops_w = model.layers.iter().map(|l| l.flops_fwd).collect();
+        SearchEngine { model, cluster, cfg, algo, threads, contexts, flops_w }
+    }
+
+    /// Worker count this engine resolved (for diagnostics).
+    pub fn worker_count(&self) -> usize {
+        self.threads
+    }
+
+    /// Run the full sweep: fan cells out, reduce in order, return the best
+    /// outcome (if any plan fit) plus the structured search trace.
+    pub fn run(&self) -> (Option<SearchOutcome>, SearchTrace) {
+        let batches = crate::search::batch_candidates(self.cfg.max_batch);
+        let per_batch = self.contexts.len();
+        let mut trace = SearchTrace::default();
+        let mut best: Option<SearchOutcome> = None;
+        let mut infeasible_streak = 0usize;
+        let mut stopped = false;
+
+        for wave in batches.chunks(WAVE_BATCHES) {
+            if stopped {
+                trace.cells_skipped += wave.len() * per_batch;
+                continue;
+            }
+            let wave_cells: Vec<(usize, usize)> = wave
+                .iter()
+                .flat_map(|&b| (0..per_batch).map(move |c| (b, c)))
+                .collect();
+            let outcomes = self.run_wave(&wave_cells);
+
+            // Ordered reduction: batches in sweep order, PP degrees in
+            // enumeration order — identical to the sequential nested loop.
+            for (wi, _) in wave.iter().enumerate() {
+                let slice = &outcomes[wi * per_batch..(wi + 1) * per_batch];
+                if stopped {
+                    // Computed in this look-ahead wave, but the patience
+                    // rule already ended the sweep at an earlier batch:
+                    // record the work, discard the results.
+                    for cell in slice {
+                        trace.cells_discarded += 1;
+                        trace.cells.push(cell.to_trace(true));
+                    }
+                    continue;
+                }
+                let mut any_feasible = false;
+                for cell in slice {
+                    any_feasible |= cell.feasible;
+                    trace.cells_explored += 1;
+                    trace.evaluations += cell.evaluations;
+                    if !cell.feasible && cell.evaluations > 0 {
+                        trace.cells_oom += 1;
+                    }
+                    trace.cells.push(cell.to_trace(false));
+                    if let Some(out) = &cell.best {
+                        if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
+                            best = Some(out.clone());
+                            trace.best_cell = Some((cell.batch, cell.pp));
+                        }
+                    }
+                }
+                if any_feasible {
+                    infeasible_streak = 0;
+                } else if best.is_some() {
+                    // Patience over ordered batch sizes: memory use is
+                    // monotone in B, so after `patience` consecutive
+                    // infeasible batches the sweep stops.
+                    infeasible_streak += 1;
+                    if infeasible_streak >= self.cfg.patience {
+                        stopped = true;
+                    }
+                }
+            }
+        }
+
+        for ctx in &self.contexts {
+            trace.cache_lookups += ctx.cache.lookups();
+            trace.cache_entries += ctx.cache.entries();
+        }
+        (best, trace)
+    }
+
+    /// Compute one wave of cells, fanning out across the worker pool.
+    /// Results come back in input order regardless of completion order.
+    fn run_wave(&self, wave_cells: &[(usize, usize)]) -> Vec<CellOutcome> {
+        let workers = self.threads.min(wave_cells.len()).max(1);
+        if workers <= 1 {
+            return wave_cells.iter().map(|&(b, c)| self.eval_cell(b, c)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<CellOutcome>>> =
+            wave_cells.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= wave_cells.len() {
+                        break;
+                    }
+                    let (batch, ctx_idx) = wave_cells[i];
+                    let out = self.eval_cell(batch, ctx_idx);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("worker filled every wave slot"))
+            .collect()
+    }
+
+    fn eval_cell(&self, batch: usize, ctx_idx: usize) -> CellOutcome {
+        let ctx = &self.contexts[ctx_idx];
+        match self.algo {
+            CellAlgo::Even => cells::eval_even_cell(self.model, self.cluster, self.cfg, ctx, batch),
+            CellAlgo::Bmw => {
+                cells::eval_bmw_cell(self.model, self.cluster, self.cfg, ctx, batch, &self.flops_w)
+            }
+            CellAlgo::Fixed(kind) => cells::eval_fixed_cell(
+                kind,
+                self.model,
+                self.cluster,
+                self.cfg,
+                ctx,
+                batch,
+                &self.flops_w,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+    use crate::model::model_by_name;
+    use crate::util::GIB;
+
+    fn cfg(threads: usize, max_batch: usize) -> SearchConfig {
+        SearchConfig { threads: Some(threads), max_batch, ..Default::default() }
+    }
+
+    #[test]
+    fn parallel_run_matches_single_threaded_bitwise() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
+        let (b1, t1) =
+            SearchEngine::new(&model, &cluster, &cfg(1, 48), CellAlgo::Even).run();
+        let (b8, t8) =
+            SearchEngine::new(&model, &cluster, &cfg(8, 48), CellAlgo::Even).run();
+        let (p1, p8) = (b1.expect("feasible"), b8.expect("feasible"));
+        assert_eq!(p1.plan, p8.plan);
+        assert_eq!(p1.cost.throughput.to_bits(), p8.cost.throughput.to_bits());
+        assert_eq!(t1, t8, "trace must not depend on worker count");
+    }
+
+    #[test]
+    fn trace_counts_are_consistent() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
+        let (best, trace) =
+            SearchEngine::new(&model, &cluster, &cfg(2, 48), CellAlgo::Even).run();
+        assert!(best.is_some());
+        assert_eq!(
+            trace.cells.len(),
+            trace.cells_explored + trace.cells_discarded
+        );
+        assert!(trace.evaluations > 0);
+        assert!(trace.cache_lookups > trace.cache_entries);
+        assert!(trace.cache_hit_rate() > 0.5, "hit rate {}", trace.cache_hit_rate());
+        assert!(trace.best_cell.is_some());
+    }
+
+    #[test]
+    fn patience_stops_sweep_on_ordered_batches() {
+        // Tight budget: large batches become infeasible quickly, so the
+        // ordered reduction must stop and skip/discard later cells.
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(5.0 * GIB);
+        let c = SearchConfig { threads: Some(4), max_batch: 256, ..Default::default() };
+        let (_, trace) = SearchEngine::new(&model, &cluster, &c, CellAlgo::Even).run();
+        let total = trace.cells_explored + trace.cells_discarded + trace.cells_skipped;
+        let grid = crate::search::batch_candidates(256).len()
+            * pp_degrees(&model, &cluster, &c).len();
+        assert_eq!(total, grid);
+        if trace.cells_explored < grid {
+            // The sweep stopped early: the stop point is batch-ordered, so
+            // every explored cell's batch precedes every skipped batch.
+            assert!(trace.cells_skipped > 0 || trace.cells_discarded > 0);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Structured search diagnostics: what the engine explored, pruned and
+//! reused while planning. Serialized into [`crate::api::PlanReport`]
+//! artifacts (the `search_trace` field), so a saved plan records how it
+//! was found.
+//!
+//! Every serialized quantity is deterministic across worker counts: cells
+//! are enumerated in fixed (batch, PP) order, the per-cell work is
+//! independent of other cells, and the cache statistics count lookups
+//! (fixed per cell) and distinct entries (the union of keys) rather than
+//! racy miss counts. `threads=1` and `threads=N` therefore produce
+//! byte-identical traces.
+
+use crate::util::json::Json;
+
+/// One (global-batch, PP-degree) cell of the search grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellTrace {
+    /// Global batch size of this cell.
+    pub batch: usize,
+    /// Pipeline degree of this cell.
+    pub pp: usize,
+    /// Partition evaluations (stage-DP runs composed into a plan) tried.
+    pub evaluations: usize,
+    /// Whether any evaluation produced a memory-feasible plan.
+    pub feasible: bool,
+    /// Best estimated throughput found in this cell (samples/s).
+    pub best_throughput: Option<f64>,
+    /// Computed in a look-ahead wave but discarded because the ordered
+    /// batch-patience reduction had already stopped the sweep.
+    pub discarded: bool,
+}
+
+impl CellTrace {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("pp", Json::num(self.pp as f64)),
+            ("evaluations", Json::num(self.evaluations as f64)),
+            ("feasible", Json::Bool(self.feasible)),
+            (
+                "best_throughput",
+                match self.best_throughput {
+                    Some(t) => Json::num(t),
+                    None => Json::Null,
+                },
+            ),
+            ("discarded", Json::Bool(self.discarded)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<CellTrace> {
+        Some(CellTrace {
+            batch: v.get("batch")?.as_usize()?,
+            pp: v.get("pp")?.as_usize()?,
+            evaluations: v.get("evaluations")?.as_usize()?,
+            feasible: v.get("feasible")?.as_bool()?,
+            best_throughput: match v.get("best_throughput") {
+                None | Some(Json::Null) => None,
+                Some(t) => Some(t.as_f64()?),
+            },
+            discarded: v.get("discarded")?.as_bool()?,
+        })
+    }
+}
+
+/// Aggregate diagnostics of one engine run (or, for composite methods like
+/// Alpa, of several merged runs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchTrace {
+    /// Every computed cell, in deterministic enumeration order.
+    pub cells: Vec<CellTrace>,
+    /// Cells whose results entered the ordered reduction.
+    pub cells_explored: usize,
+    /// Cells computed in a look-ahead wave but discarded after the
+    /// patience stop (work done, result unused).
+    pub cells_discarded: usize,
+    /// Grid cells never computed because the sweep stopped first.
+    pub cells_skipped: usize,
+    /// Explored cells in which no plan fit the memory budget.
+    pub cells_oom: usize,
+    /// Partition evaluations across explored cells.
+    pub evaluations: usize,
+    /// Memoized cost lookups served by the shared caches.
+    pub cache_lookups: u64,
+    /// Distinct cost entries resident at the end of the run.
+    pub cache_entries: u64,
+    /// (batch, pp) of the cell holding the winning plan.
+    pub best_cell: Option<(usize, usize)>,
+}
+
+impl SearchTrace {
+    /// Fraction of cost lookups served from memory rather than computed.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            0.0
+        } else {
+            (self.cache_lookups - self.cache_entries.min(self.cache_lookups)) as f64
+                / self.cache_lookups as f64
+        }
+    }
+
+    /// Fold another run's trace into this one (cells appended in order;
+    /// `best_cell` is cleared — the caller knows which run won).
+    pub fn merge(&mut self, other: SearchTrace) {
+        self.cells.extend(other.cells);
+        self.cells_explored += other.cells_explored;
+        self.cells_discarded += other.cells_discarded;
+        self.cells_skipped += other.cells_skipped;
+        self.cells_oom += other.cells_oom;
+        self.evaluations += other.evaluations;
+        self.cache_lookups += other.cache_lookups;
+        self.cache_entries += other.cache_entries;
+        self.best_cell = None;
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "search: {} cells explored ({} oom, {} discarded, {} skipped), {} evaluations, cache hit rate {:.1}% ({} lookups, {} entries)",
+            self.cells_explored,
+            self.cells_oom,
+            self.cells_discarded,
+            self.cells_skipped,
+            self.evaluations,
+            self.cache_hit_rate() * 100.0,
+            self.cache_lookups,
+            self.cache_entries,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cells", Json::arr(self.cells.iter().map(|c| c.to_json()))),
+            ("cells_explored", Json::num(self.cells_explored as f64)),
+            ("cells_discarded", Json::num(self.cells_discarded as f64)),
+            ("cells_skipped", Json::num(self.cells_skipped as f64)),
+            ("cells_oom", Json::num(self.cells_oom as f64)),
+            ("evaluations", Json::num(self.evaluations as f64)),
+            ("cache_lookups", Json::num(self.cache_lookups as f64)),
+            ("cache_entries", Json::num(self.cache_entries as f64)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            (
+                "best_cell",
+                match self.best_cell {
+                    Some((b, p)) => Json::arr(vec![Json::num(b as f64), Json::num(p as f64)]),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Inverse of [`SearchTrace::to_json`] (`cache_hit_rate` is derived and
+    /// ignored on input). Returns `None` on any missing/mistyped field.
+    pub fn from_json(v: &Json) -> Option<SearchTrace> {
+        let mut cells = Vec::new();
+        for c in v.get("cells")?.as_arr()? {
+            cells.push(CellTrace::from_json(c)?);
+        }
+        Some(SearchTrace {
+            cells,
+            cells_explored: v.get("cells_explored")?.as_usize()?,
+            cells_discarded: v.get("cells_discarded")?.as_usize()?,
+            cells_skipped: v.get("cells_skipped")?.as_usize()?,
+            cells_oom: v.get("cells_oom")?.as_usize()?,
+            evaluations: v.get("evaluations")?.as_usize()?,
+            cache_lookups: v.get("cache_lookups")?.as_f64()? as u64,
+            cache_entries: v.get("cache_entries")?.as_f64()? as u64,
+            best_cell: match v.get("best_cell") {
+                None | Some(Json::Null) => None,
+                Some(bc) => {
+                    let pair = bc.as_usize_vec().filter(|p| p.len() == 2)?;
+                    Some((pair[0], pair[1]))
+                }
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SearchTrace {
+        SearchTrace {
+            cells: vec![
+                CellTrace {
+                    batch: 8,
+                    pp: 2,
+                    evaluations: 5,
+                    feasible: true,
+                    best_throughput: Some(123.5),
+                    discarded: false,
+                },
+                CellTrace {
+                    batch: 16,
+                    pp: 4,
+                    evaluations: 2,
+                    feasible: false,
+                    best_throughput: None,
+                    discarded: true,
+                },
+            ],
+            cells_explored: 1,
+            cells_discarded: 1,
+            cells_skipped: 4,
+            cells_oom: 0,
+            evaluations: 5,
+            cache_lookups: 1000,
+            cache_entries: 100,
+            best_cell: Some((8, 2)),
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let t = sample();
+        let text = t.to_json().to_string();
+        let back = SearchTrace::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // Deterministic serialization.
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let t = sample();
+        assert!((t.cache_hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(SearchTrace::default().cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_and_clears_best() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(b);
+        assert_eq!(a.cells.len(), 4);
+        assert_eq!(a.cells_explored, 2);
+        assert_eq!(a.cache_lookups, 2000);
+        assert_eq!(a.best_cell, None);
+    }
+}

@@ -7,11 +7,13 @@ pub mod base;
 pub mod bmw;
 pub mod decision_tree;
 pub mod dp;
+pub mod engine;
 pub mod partition;
 
-pub use base::{optimize, SearchConfig, SearchOutcome};
-pub use bmw::optimize_bmw;
+pub use base::{optimize, optimize_traced, SearchConfig, SearchOutcome};
+pub use bmw::{optimize_bmw, optimize_bmw_traced};
 pub use decision_tree::{candidate_strategies, SpaceOptions};
+pub use engine::{CellAlgo, PartitionKind, SearchEngine, SearchTrace};
 
 use crate::cost::pipeline::Schedule;
 use crate::parallel::{Dim, Strategy};

@@ -1,0 +1,81 @@
+//! Worker-count resolution for the parallel search engine.
+//!
+//! One precedence order, used everywhere a worker pool is sized:
+//!
+//!   1. an explicit request (`--threads N` on the CLI, or
+//!      [`crate::api::PlanRequest::threads`] in the API),
+//!   2. the `GALVATRON_THREADS` environment variable,
+//!   3. [`std::thread::available_parallelism`].
+//!
+//! A value of `0` at any level means "auto" and falls through to the next
+//! source, so `GALVATRON_THREADS=0` behaves like the variable being unset.
+
+/// Environment variable consulted when no explicit thread count is given.
+pub const THREADS_ENV: &str = "GALVATRON_THREADS";
+
+/// Resolve the worker count for a search run. `requested` is the explicit
+/// CLI/API value (`None` or `Some(0)` = auto).
+pub fn resolve_worker_count(requested: Option<usize>) -> usize {
+    let detected = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    resolve_from(requested, std::env::var(THREADS_ENV).ok().as_deref(), detected)
+}
+
+/// Pure core of [`resolve_worker_count`] with every input explicit, so the
+/// precedence order is testable without mutating process environment.
+///
+/// Precedence: `requested` > `env` > `detected`; zero or unparsable values
+/// fall through to the next source; the result is always >= 1.
+pub fn resolve_from(requested: Option<usize>, env: Option<&str>, detected: usize) -> usize {
+    if let Some(n) = requested {
+        if n >= 1 {
+            return n;
+        }
+    }
+    if let Some(s) = env {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    detected.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_request_wins_over_everything() {
+        assert_eq!(resolve_from(Some(3), Some("8"), 16), 3);
+        assert_eq!(resolve_from(Some(1), Some("8"), 16), 1);
+    }
+
+    #[test]
+    fn env_wins_over_detection() {
+        assert_eq!(resolve_from(None, Some("8"), 16), 8);
+        assert_eq!(resolve_from(None, Some(" 2 "), 16), 2);
+    }
+
+    #[test]
+    fn detection_is_the_fallback() {
+        assert_eq!(resolve_from(None, None, 6), 6);
+        assert_eq!(resolve_from(None, None, 0), 1);
+    }
+
+    #[test]
+    fn zero_and_garbage_fall_through() {
+        // Requested 0 = auto -> env.
+        assert_eq!(resolve_from(Some(0), Some("4"), 16), 4);
+        // Env 0 or unparsable = auto -> detected.
+        assert_eq!(resolve_from(None, Some("0"), 5), 5);
+        assert_eq!(resolve_from(None, Some("lots"), 5), 5);
+        assert_eq!(resolve_from(Some(0), Some("nope"), 7), 7);
+    }
+
+    #[test]
+    fn real_resolver_returns_at_least_one() {
+        assert!(resolve_worker_count(None) >= 1);
+        assert_eq!(resolve_worker_count(Some(5)), 5);
+    }
+}

@@ -1,0 +1,129 @@
+//! Integration tests for the parallel memoized search engine (ISSUE 2):
+//!
+//!   * cache consistency — the memoized `LayerCost` equals a direct
+//!     `CostEstimator` call for every catalog strategy;
+//!   * determinism — `threads=1` and `threads=8` produce byte-identical
+//!     `PlanReport` JSON (plan AND search trace) for two zoo models;
+//!   * patience — the parallel sweep stops at the same ordered batch as a
+//!     single-worker run;
+//!   * artifacts — the `search_trace` field round-trips through JSON.
+
+use galvatron::api::{MethodSpec, PlanReport, PlanRequest};
+use galvatron::cluster::cluster_by_name;
+use galvatron::cost::{CostEstimator, StageCosts};
+use galvatron::model::model_by_name;
+use galvatron::search::decision_tree::{candidate_strategies, SpaceOptions};
+use galvatron::search::engine::{layer_classes, CostCache};
+use galvatron::search::{optimize_traced, SearchConfig};
+use galvatron::util::GIB;
+
+#[test]
+fn memoized_layer_costs_equal_direct_estimator_for_every_catalog_strategy() {
+    let model = model_by_name("bert-huge-32").unwrap();
+    let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
+    for pp in [1usize, 2, 4] {
+        let group = cluster.n_devices / pp;
+        let est = CostEstimator::new(&cluster, pp, 1.3);
+        let cache = CostCache::new(est.clone(), layer_classes(&model));
+        let catalog = candidate_strategies(group, &SpaceOptions::default());
+        // First, interior and last layer (distinct extra-params classes).
+        for &i in &[0usize, 15, 31] {
+            let layer = &model.layers[i];
+            let extra = model.extra_params(i);
+            for s in &catalog {
+                for b_m in [1.0f64, 4.0, 8.0] {
+                    let direct = est.layer_cost(layer, s, b_m, extra);
+                    let memo = cache.layer_cost_at(i, layer, s, b_m, extra);
+                    assert_eq!(direct, memo, "pp={pp} layer={i} {s} b_m={b_m}");
+                    // Replay from cache: still identical.
+                    assert_eq!(cache.layer_cost_at(i, layer, s, b_m, extra), direct);
+                }
+            }
+        }
+        assert!(cache.lookups() > cache.entries());
+    }
+}
+
+#[test]
+fn thread_count_never_changes_plan_report_json() {
+    // Two zoo models; the whole artifact (plan, cost, stages, search
+    // trace) must serialize byte-identically at 1 and 8 workers.
+    for (model, budget, method) in [
+        ("bert-huge-32", 16.0, MethodSpec::Bmw { ckpt: true }),
+        ("t5-512/4-32", 16.0, MethodSpec::Base { ckpt: true }),
+    ] {
+        let plan_with = |threads: usize| -> String {
+            PlanRequest::new(model, "titan8")
+                .memory_gb(budget)
+                .max_batch(32)
+                .method(method.clone())
+                .threads(threads)
+                .plan()
+                .expect("feasible")
+                .to_json_string()
+        };
+        let t1 = plan_with(1);
+        let t8 = plan_with(8);
+        assert_eq!(t1, t8, "{model}: thread count changed the artifact");
+        // And the artifact indeed carries a search trace.
+        let report = PlanReport::from_json_str(&t1).unwrap();
+        let trace = report.search_trace.expect("engine-planned artifact has a trace");
+        assert!(trace.cells_explored > 0);
+        assert!(trace.cache_lookups > 0);
+        assert!(trace.best_cell.is_some());
+    }
+}
+
+#[test]
+fn patience_counts_ordered_batches_not_completion_order() {
+    // A budget where the sweep finds small-batch plans then hits OOM wall:
+    // the stopping batch (everything after it skipped/discarded) must be
+    // identical for 1 and 8 workers even though 8 workers complete cells
+    // in arbitrary order.
+    let model = model_by_name("bert-huge-32").unwrap();
+    let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(5.0 * GIB);
+    let run = |threads: usize| {
+        let cfg = SearchConfig { threads: Some(threads), max_batch: 128, ..Default::default() };
+        optimize_traced(&model, &cluster, &cfg)
+    };
+    let (b1, t1) = run(1);
+    let (b8, t8) = run(8);
+    assert_eq!(t1, t8);
+    match (b1, b8) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.throughput().to_bits(), y.throughput().to_bits());
+        }
+        (None, None) => {}
+        _ => panic!("feasibility differed across thread counts"),
+    }
+    // Explored cells are a prefix of the batch-ordered grid.
+    let explored_batches: Vec<usize> =
+        t1.cells.iter().filter(|c| !c.discarded).map(|c| c.batch).collect();
+    let mut sorted = explored_batches.clone();
+    sorted.sort_unstable();
+    assert_eq!(explored_batches, sorted, "reduction order must follow the batch sweep");
+}
+
+#[test]
+fn search_trace_survives_artifact_round_trip() {
+    let report = PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(32)
+        .threads(2)
+        .plan()
+        .expect("feasible");
+    let text = report.to_json_string();
+    let back = PlanReport::from_json_str(&text).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.search_trace, report.search_trace);
+    assert_eq!(back.to_json_string(), text);
+    // Pre-engine artifacts (no search_trace key) still load.
+    let mut v = report.to_json();
+    if let galvatron::util::json::Json::Obj(m) = &mut v {
+        m.remove("search_trace");
+    }
+    let legacy = PlanReport::from_json(&v).expect("legacy artifact loads");
+    assert_eq!(legacy.search_trace, None);
+    assert_eq!(legacy.plan, report.plan);
+}

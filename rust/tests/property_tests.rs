@@ -69,7 +69,8 @@ fn prop_dp_search_never_exceeds_budget() {
             layers: &model.layers,
             extra_params: &extra,
             strategies: &strategies,
-            estimator: &est,
+            costs: &est,
+            layer_offset: 0,
             b_m: (1 + rng.below(16)) as f64,
             microbatches: 1 + rng.below(8) as usize,
             live_mb: 1 + rng.below(4) as usize,
@@ -105,7 +106,8 @@ fn prop_dp_search_cost_monotone_in_budget() {
                 layers: &model.layers,
                 extra_params: &extra,
                 strategies: &strategies,
-                estimator: &est,
+                costs: &est,
+                layer_offset: 0,
                 b_m: 8.0,
                 microbatches: 2,
                 live_mb: 1,
