@@ -34,7 +34,7 @@ fn main() {
             max_batch: batch,
             ..Default::default()
         };
-        let group = cl.n_devices / pp;
+        let group = cl.n_devices() / pp;
         let b_m = batch as f64 / m as f64;
         let act_w: Vec<f64> = mp.layers.iter().map(|l| l.act_bytes * b_m / group as f64).collect();
         let ms_w: Vec<f64> = (0..mp.n_layers())

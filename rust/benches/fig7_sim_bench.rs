@@ -21,6 +21,7 @@ fn main() {
         strategies: vec![Strategy::single(Dim::Dp, 2, false); 32],
         batch: 64,
         microbatches: 16,
+        stage_slots: None,
     };
     let tasks = 2 * plan.pp * plan.microbatches;
 

@@ -15,6 +15,10 @@ pub enum PlanError {
     UnknownMethod { name: String, suggestion: Option<String> },
     /// The request is structurally invalid (zero batch, bad schedule, ...).
     InvalidRequest { reason: String },
+    /// The cluster description is invalid (bad island list, unknown GPU
+    /// class, non-power-of-two shapes) — the typed surface of
+    /// [`crate::cluster::ClusterError`].
+    InvalidCluster { reason: String },
     /// Every candidate plan exceeded the device memory budget ("OOM" in
     /// the paper's tables).
     Infeasible { reason: String },
@@ -51,6 +55,7 @@ impl fmt::Display for PlanError {
                 Self::write_unknown(f, "method", name, suggestion, "methods")
             }
             PlanError::InvalidRequest { reason } => write!(f, "invalid plan request: {reason}"),
+            PlanError::InvalidCluster { reason } => write!(f, "invalid cluster: {reason}"),
             PlanError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
             PlanError::Artifact { reason } => write!(f, "plan artifact error: {reason}"),
         }
@@ -58,6 +63,12 @@ impl fmt::Display for PlanError {
 }
 
 impl std::error::Error for PlanError {}
+
+impl From<crate::cluster::ClusterError> for PlanError {
+    fn from(e: crate::cluster::ClusterError) -> Self {
+        PlanError::InvalidCluster { reason: e.to_string() }
+    }
+}
 
 /// Case-insensitive Levenshtein distance (iterative two-row DP).
 fn edit_distance(a: &str, b: &str) -> usize {

@@ -311,7 +311,7 @@ impl MethodSpec {
         cluster: &ClusterSpec,
         ov: &SearchOverrides,
     ) -> (Option<SearchOutcome>, SearchTrace) {
-        let n = cluster.n_devices;
+        let n = cluster.n_devices();
         let base = SearchConfig { max_batch: ov.max_batch, ..Default::default() };
         match self {
             MethodSpec::Pure(dim) => optimize_traced(

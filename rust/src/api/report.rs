@@ -105,7 +105,9 @@ impl PlanReport {
         PlanReport {
             model: r.model_name.clone(),
             cluster: r.cluster_name.clone(),
-            memory_budget_gb: r.cluster.gpu.mem_bytes / GIB,
+            // Heterogeneous clusters: the floor island's capacity (their
+            // per-island budgets are fixed by the cluster itself).
+            memory_budget_gb: r.cluster.gpu().mem_bytes / GIB,
             method: r.method.clone(),
             schedule,
             overlap_slowdown: overlap,

@@ -3,7 +3,9 @@
 //! schedule and search knobs — plus the `Planner` facade that resolves and
 //! executes it.
 
-use crate::cluster::{cluster_by_name, cluster_names, ClusterSpec};
+use crate::cluster::{
+    cluster_by_name, cluster_names, looks_like_islands, parse_islands, ClusterSpec,
+};
 use crate::cost::pipeline::Schedule;
 use crate::model::{model_by_name, model_names, ModelProfile};
 use crate::sim::{simulate, SimReport};
@@ -65,6 +67,9 @@ pub struct PlanRequest {
     pub cluster: ClusterSource,
     /// Per-device memory budget in GB; `None` keeps the preset's physical
     /// memory (the paper restricts 24 GB cards to 8/12/16/20 GB budgets).
+    /// Only valid on homogeneous clusters — a heterogeneous cluster's
+    /// per-island budgets are fixed by its GPU classes and a uniform
+    /// override is rejected with a diagnostic.
     pub memory_gb: Option<f64>,
     pub method: MethodSpec,
     pub max_batch: usize,
@@ -191,9 +196,17 @@ pub fn resolve_model_name(name: &str) -> Result<ModelProfile, PlanError> {
     })
 }
 
-/// Resolve a cluster preset name (physical memory budget).
+/// Resolve a cluster preset name (physical memory budget) or an
+/// island-syntax description such as `"2xA100-80G,2xRTX-TITAN-24G"`
+/// (the `--islands` CLI form; see [`crate::cluster::parse_islands`]).
 pub fn resolve_cluster_name(name: &str) -> Result<ClusterSpec, PlanError> {
-    cluster_by_name(name).ok_or_else(|| PlanError::UnknownCluster {
+    if let Some(c) = cluster_by_name(name) {
+        return Ok(c);
+    }
+    if looks_like_islands(name) {
+        return parse_islands(name).map_err(PlanError::from);
+    }
+    Err(PlanError::UnknownCluster {
         name: name.to_string(),
         suggestion: suggest(name, cluster_names()),
     })
@@ -225,6 +238,15 @@ impl Planner {
                     reason: format!("memory budget must be a positive number of GB, got {gb}"),
                 });
             }
+            if !cluster.is_homogeneous() {
+                return Err(PlanError::InvalidRequest {
+                    reason: format!(
+                        "a uniform memory budget cannot be applied to heterogeneous cluster \
+                         {cluster_name}: per-island budgets are fixed by its GPU classes ({})",
+                        cluster.islands_label()
+                    ),
+                });
+            }
             cluster = cluster.with_memory_budget(gb * GIB);
         }
         if req.max_batch == 0 {
@@ -246,11 +268,11 @@ impl Planner {
         }
         if let Some(pps) = &req.pipeline_degrees {
             for &p in pps {
-                if p == 0 || cluster.n_devices % p != 0 {
+                if p == 0 || cluster.n_devices() % p != 0 {
                     return Err(PlanError::InvalidRequest {
                         reason: format!(
                             "pipeline degree {p} does not divide the {} devices of {cluster_name}",
-                            cluster.n_devices
+                            cluster.n_devices()
                         ),
                     });
                 }
@@ -266,11 +288,11 @@ impl Planner {
                         ),
                     });
                 }
-                if !crate::util::is_pow2(cluster.n_devices / p) {
+                if !crate::util::is_pow2(cluster.n_devices() / p) {
                     return Err(PlanError::InvalidRequest {
                         reason: format!(
                             "pipeline degree {p} leaves a non-power-of-two stage group of {} devices",
-                            cluster.n_devices / p
+                            cluster.n_devices() / p
                         ),
                     });
                 }
@@ -303,7 +325,7 @@ impl Planner {
                 "no plan for {} on {} fits the {:.1} GB budget ({}, max batch {})",
                 r.model_name,
                 r.cluster_name,
-                r.cluster.gpu.mem_bytes / GIB,
+                r.cluster.gpu().mem_bytes / GIB,
                 r.method.canonical_name(),
                 r.overrides.max_batch
             ),
@@ -322,8 +344,12 @@ impl Planner {
     /// original specs to [`Planner::simulate_plan`] instead.
     pub fn simulate_report(&self, report: &PlanReport) -> Result<SimReport, PlanError> {
         let model = resolve_model_name(&report.model)?;
-        let cluster = resolve_cluster_name(&report.cluster)?
-            .with_memory_budget(report.memory_budget_gb * GIB);
+        let mut cluster = resolve_cluster_name(&report.cluster)?;
+        if cluster.is_homogeneous() {
+            // Heterogeneous clusters fix per-island budgets via their GPU
+            // classes; `memory_budget_gb` records only the floor there.
+            cluster = cluster.with_memory_budget(report.memory_budget_gb * GIB);
+        }
         self.simulate_plan(&model, &cluster, report)
     }
 
@@ -337,7 +363,7 @@ impl Planner {
     ) -> Result<SimReport, PlanError> {
         report
             .plan
-            .validate(model.n_layers(), cluster.n_devices)
+            .validate(model.n_layers(), cluster.n_devices())
             .map_err(|e| PlanError::Artifact {
                 reason: format!("plan does not fit {}: {e}", report.model),
             })?;
@@ -379,6 +405,33 @@ mod tests {
         // Divides the devices but exceeds the model's 32 layers.
         let req = PlanRequest::new("bert-huge-32", "a100x64").pipeline_degrees(&[64]);
         assert!(matches!(p.resolve(&req), Err(PlanError::InvalidRequest { .. })));
+    }
+
+    #[test]
+    fn island_syntax_resolves_as_cluster_name() {
+        let c = resolve_cluster_name("2xA100-80G,2xRTX-TITAN-24G").unwrap();
+        assert_eq!(c.n_devices(), 4);
+        assert!(!c.is_homogeneous());
+        // Bad island syntax surfaces the typed cluster error, not a panic.
+        let err = resolve_cluster_name("2xH100,2xRTX-TITAN-24G").unwrap_err();
+        assert!(matches!(err, PlanError::InvalidCluster { .. }), "{err:?}");
+        let err = resolve_cluster_name("3xA100-80G,1xRTX-TITAN-24G").unwrap_err();
+        assert!(matches!(err, PlanError::InvalidCluster { .. }), "{err:?}");
+        // Names that do not look like island syntax keep the suggestion path.
+        let err = resolve_cluster_name("titen8").unwrap_err();
+        assert!(matches!(err, PlanError::UnknownCluster { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn uniform_budget_rejected_on_heterogeneous_cluster() {
+        let p = Planner::new();
+        let req = PlanRequest::new("bert-huge-32", "hetero4").memory_gb(16.0);
+        let err = p.resolve(&req).unwrap_err();
+        assert!(matches!(err, PlanError::InvalidRequest { .. }), "{err:?}");
+        // Without the override the mixed cluster resolves fine.
+        let req = PlanRequest::new("bert-huge-32", "hetero4");
+        let r = p.resolve(&req).unwrap();
+        assert!(!r.cluster.is_homogeneous());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Cluster topology model: devices, islands, and hierarchical bandwidth.
+//! Cluster topology model: devices, typed islands, and hierarchical
+//! bandwidth.
 //!
 //! Paper Takeaway #1: PP prefers to be applied across device "islands"
 //! (sets of devices with high-bandwidth interconnect); slower inter-island
@@ -6,6 +7,16 @@
 //! communication group of a given size at a given decision-tree level, the
 //! effective bandwidth of the slowest link that group spans — this module
 //! provides that.
+//!
+//! Since the heterogeneous-cluster generalization, a [`ClusterSpec`] is a
+//! *list of typed islands* ([`IslandSpec`]): each island carries its own
+//! GPU class (memory capacity + FLOP rate) and intra-island bus. A
+//! homogeneous cluster is the degenerate single-class case and reproduces
+//! the original model bit-for-bit. For a given pipeline degree the cluster
+//! exposes per-stage [`StageSite`]s — the device class, bus bandwidth and
+//! memory budget a pipeline stage sees on its slot — which the cost
+//! estimator, the stage-level DP budget and the search engine's memoization
+//! keys all consume.
 
 use crate::util::{is_pow2, GIB};
 
@@ -34,22 +45,110 @@ impl GpuSpec {
     }
 }
 
-/// A training cluster: `n_devices` homogeneous GPUs grouped into equal
-/// islands; full bandwidth inside an island, `inter_bw` across.
-#[derive(Debug, Clone)]
-pub struct ClusterSpec {
-    pub name: String,
+/// One island: `count` GPUs of one class behind a shared fast bus.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IslandSpec {
     pub gpu: GpuSpec,
-    pub n_devices: usize,
-    /// Devices per island (e.g. one server).
-    pub island_size: usize,
+    /// Devices in this island (a power of two).
+    pub count: usize,
     /// Intra-island effective bus bandwidth, bytes/s (NVLink or PCIe).
     pub intra_bw: f64,
+}
+
+/// Why a cluster description could not be constructed or parsed. Surfaces
+/// through [`crate::api::PlanError`] as a CLI diagnostic instead of the
+/// panics the original `ClusterSpec::new` asserts produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterError {
+    /// The island list is empty (or an island has zero devices).
+    Empty,
+    /// The total device count must be a power of two.
+    NonPow2Devices { n: usize },
+    /// Every island's device count must be a power of two.
+    NonPow2Island { count: usize },
+    /// Homogeneous constructor: the island size must divide the device
+    /// count (and not exceed it).
+    BadIslandSize { island: usize, n: usize },
+    /// An island-syntax GPU class name is not in the catalog.
+    UnknownGpu { name: String },
+    /// An island-syntax segment is malformed.
+    Parse { segment: String, reason: String },
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Empty => write!(f, "cluster has no devices"),
+            ClusterError::NonPow2Devices { n } => {
+                write!(f, "total device count must be a power of two, got {n}")
+            }
+            ClusterError::NonPow2Island { count } => {
+                write!(f, "island device count must be a power of two, got {count}")
+            }
+            ClusterError::BadIslandSize { island, n } => write!(
+                f,
+                "island size {island} must be a power of two dividing the {n} devices"
+            ),
+            ClusterError::UnknownGpu { name } => write!(
+                f,
+                "unknown GPU class {name:?} (known: {})",
+                gpu_class_names().join(", ")
+            ),
+            ClusterError::Parse { segment, reason } => write!(
+                f,
+                "bad island segment {segment:?}: {reason} (expected e.g. \"2xA100-80G,2xRTX-TITAN-24G\")"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// The execution context a pipeline stage sees on its slot of the cluster:
+/// the (floor) device class of the devices it occupies, the bus bandwidth
+/// of intra-stage collectives, and how wide a group can grow before it
+/// spills onto the inter-island link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSite {
+    /// Distinct site-class id within one (cluster, pp) context. Two slots
+    /// share a class iff their gpu/bandwidth/limit are identical — the
+    /// search engine keys its memoized cost tables on this.
+    pub class: u32,
+    /// Effective device class. For a slot spanning several islands this is
+    /// the floor: min memory AND min FLOP rate over the spanned islands.
+    pub gpu: GpuSpec,
+    /// Bus bandwidth for groups that fit inside one island of this slot.
+    pub intra_bw: f64,
+    /// Largest communication group that still rides intra-island links.
+    pub intra_limit: usize,
+}
+
+fn floor_gpu(a: &GpuSpec, b: &GpuSpec) -> GpuSpec {
+    GpuSpec {
+        name: if b.mem_bytes < a.mem_bytes { b.name.clone() } else { a.name.clone() },
+        mem_bytes: a.mem_bytes.min(b.mem_bytes),
+        flops: a.flops.min(b.flops),
+    }
+}
+
+fn site_shape_eq(a: &StageSite, b: &StageSite) -> bool {
+    a.gpu == b.gpu && a.intra_bw == b.intra_bw && a.intra_limit == b.intra_limit
+}
+
+/// A training cluster: an ordered list of typed islands. Full bandwidth
+/// inside an island, `inter_bw` across islands.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub islands: Vec<IslandSpec>,
     /// Inter-island effective bandwidth, bytes/s (IB / Ethernet).
     pub inter_bw: f64,
 }
 
 impl ClusterSpec {
+    /// Homogeneous constructor (the original model): `n_devices` GPUs of
+    /// one class grouped into equal islands of `island_size`. Returns a
+    /// typed [`ClusterError`] instead of panicking on bad shapes.
     pub fn new(
         name: &str,
         gpu: GpuSpec,
@@ -57,22 +156,156 @@ impl ClusterSpec {
         island_size: usize,
         intra_bw: f64,
         inter_bw: f64,
-    ) -> Self {
-        assert!(is_pow2(n_devices), "device count must be a power of two");
-        assert!(is_pow2(island_size) && island_size <= n_devices);
-        assert_eq!(n_devices % island_size, 0);
-        ClusterSpec {
-            name: name.into(),
-            gpu,
-            n_devices,
-            island_size,
-            intra_bw,
-            inter_bw,
+    ) -> Result<Self, ClusterError> {
+        if !is_pow2(n_devices) {
+            return Err(ClusterError::NonPow2Devices { n: n_devices });
         }
+        if !is_pow2(island_size) || island_size > n_devices || n_devices % island_size != 0 {
+            return Err(ClusterError::BadIslandSize { island: island_size, n: n_devices });
+        }
+        let islands = (0..n_devices / island_size)
+            .map(|_| IslandSpec { gpu: gpu.clone(), count: island_size, intra_bw })
+            .collect();
+        Self::from_islands(name, islands, inter_bw)
+    }
+
+    /// General constructor from an explicit island list.
+    pub fn from_islands(
+        name: &str,
+        islands: Vec<IslandSpec>,
+        inter_bw: f64,
+    ) -> Result<Self, ClusterError> {
+        if islands.is_empty() || islands.iter().any(|i| i.count == 0) {
+            return Err(ClusterError::Empty);
+        }
+        for isl in &islands {
+            if !is_pow2(isl.count) {
+                return Err(ClusterError::NonPow2Island { count: isl.count });
+            }
+        }
+        let n: usize = islands.iter().map(|i| i.count).sum();
+        if !is_pow2(n) {
+            return Err(ClusterError::NonPow2Devices { n });
+        }
+        Ok(ClusterSpec { name: name.into(), islands, inter_bw })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.islands.iter().map(|i| i.count).sum()
     }
 
     pub fn n_islands(&self) -> usize {
-        self.n_devices / self.island_size
+        self.islands.len()
+    }
+
+    /// Smallest island size (the homogeneous `island_size` when uniform).
+    pub fn island_size(&self) -> usize {
+        self.islands.iter().map(|i| i.count).min().unwrap_or(0)
+    }
+
+    /// Slowest intra-island bus in the cluster (== every island's bus for
+    /// homogeneous clusters).
+    pub fn intra_bw(&self) -> f64 {
+        self.islands.iter().map(|i| i.intra_bw).fold(f64::INFINITY, f64::min)
+    }
+
+    /// The floor device class: min memory AND min FLOP rate over all
+    /// islands (== the single class for homogeneous clusters).
+    pub fn gpu(&self) -> GpuSpec {
+        let mut g = self.islands[0].gpu.clone();
+        for isl in &self.islands[1..] {
+            g = floor_gpu(&g, &isl.gpu);
+        }
+        g
+    }
+
+    /// True iff every island has the same GPU class and bus — the
+    /// degenerate case that must reproduce the original homogeneous
+    /// planner byte-for-byte.
+    pub fn is_homogeneous(&self) -> bool {
+        let first = &self.islands[0];
+        self.islands
+            .iter()
+            .all(|i| i.gpu == first.gpu && i.intra_bw == first.intra_bw)
+    }
+
+    /// Canonical island-syntax label, e.g. `"2xA100-80G,2xRTX-TITAN-24G"`.
+    pub fn islands_label(&self) -> String {
+        self.islands
+            .iter()
+            .map(|i| format!("{}x{}", i.count, i.gpu.name))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Human budget summary: "16 GB budget" for homogeneous clusters, the
+    /// island label for mixed fleets.
+    pub fn budget_label(&self) -> String {
+        if self.is_homogeneous() {
+            format!("{:.0} GB budget", self.islands[0].gpu.mem_bytes / GIB)
+        } else {
+            self.islands_label()
+        }
+    }
+
+    /// The per-slot [`StageSite`]s for a pipeline of `pp_degree` stages:
+    /// slot `s` covers devices `[s·g, (s+1)·g)` in island order
+    /// (`g = n/pp`). A slot spanning several islands gets the floor device
+    /// class, the slowest spanned bus, and the smallest spanned island as
+    /// its intra limit.
+    pub fn stage_sites(&self, pp_degree: usize) -> Vec<StageSite> {
+        let n = self.n_devices();
+        let pp = pp_degree.clamp(1, n);
+        let g = n / pp;
+        let mut sites: Vec<StageSite> = Vec::with_capacity(pp);
+        for s in 0..pp {
+            let (lo, hi) = (s * g, (s + 1) * g);
+            let mut gpu: Option<GpuSpec> = None;
+            let mut intra = f64::INFINITY;
+            let mut min_count = usize::MAX;
+            let mut start = 0usize;
+            for isl in &self.islands {
+                let end = start + isl.count;
+                if start < hi && end > lo {
+                    gpu = Some(match &gpu {
+                        None => isl.gpu.clone(),
+                        Some(g0) => floor_gpu(g0, &isl.gpu),
+                    });
+                    intra = intra.min(isl.intra_bw);
+                    min_count = min_count.min(isl.count);
+                }
+                start = end;
+            }
+            let gpu = gpu.expect("cluster has devices");
+            sites.push(StageSite { class: 0, gpu, intra_bw: intra, intra_limit: min_count.min(g) });
+        }
+        // Assign class ids by first occurrence of each distinct site shape.
+        let mut reps: Vec<StageSite> = Vec::new();
+        for site in &mut sites {
+            match reps.iter().position(|r| site_shape_eq(r, site)) {
+                Some(c) => site.class = c as u32,
+                None => {
+                    site.class = reps.len() as u32;
+                    reps.push(site.clone());
+                }
+            }
+        }
+        sites
+    }
+
+    /// The conservative whole-cluster site for `pp_degree`: floor device
+    /// class, slowest bus, smallest island. Identical to every slot site on
+    /// a homogeneous cluster — [`crate::cost::CostEstimator::new`] binds to
+    /// this when no specific slot is requested.
+    pub fn floor_site(&self, pp_degree: usize) -> StageSite {
+        let n = self.n_devices();
+        let g = n / pp_degree.clamp(1, n);
+        StageSite {
+            class: 0,
+            gpu: self.gpu(),
+            intra_bw: self.intra_bw(),
+            intra_limit: self.island_size().min(g),
+        }
     }
 
     /// Effective bandwidth for a communication group of `group` devices,
@@ -80,13 +313,12 @@ impl ClusterSpec {
     /// groups of `n_devices/pp` (Takeaway #1 placement: PP cuts across the
     /// slowest links first, so a group of size g inside one pipeline stage
     /// spans islands only if g exceeds what is left of an island inside the
-    /// stage group).
+    /// stage group). Floor-site view; slot-accurate pricing lives in
+    /// [`crate::cost::CostEstimator`] via [`StageSite`].
     pub fn group_bandwidth(&self, pp_degree: usize, group: usize) -> f64 {
-        let stage_devices = self.n_devices / pp_degree.max(1);
-        // Devices of one island that belong to the same stage.
-        let island_in_stage = self.island_size.min(stage_devices);
-        if group <= island_in_stage {
-            self.intra_bw
+        let site = self.floor_site(pp_degree);
+        if group <= site.intra_limit {
+            site.intra_bw
         } else {
             self.inter_bw
         }
@@ -104,44 +336,172 @@ impl ClusterSpec {
             if self.n_islands() > 1 {
                 self.inter_bw
             } else {
-                self.intra_bw
+                self.intra_bw()
             }
         }
     }
 
     /// Memory budget per device possibly restricted below physical memory
-    /// (the paper evaluates 8/12/16/20 GB budgets on 24 GB cards).
+    /// (the paper evaluates 8/12/16/20 GB budgets on 24 GB cards). Applies
+    /// one uniform budget to every island — the public API only offers it
+    /// for homogeneous clusters, where it preserves the original semantics.
     pub fn with_memory_budget(mut self, budget_bytes: f64) -> Self {
-        self.gpu.mem_bytes = budget_bytes;
+        for isl in &mut self.islands {
+            isl.gpu.mem_bytes = budget_bytes;
+        }
         self
     }
 }
 
-/// Named cluster presets matching the paper's testbeds (§VII-A, §VII-D).
+/// GPU class catalog for the island syntax (case-insensitive lookup).
+/// Returns the spec plus the class's default intra-island bus bandwidth.
+pub fn gpu_by_name(name: &str) -> Option<(GpuSpec, f64)> {
+    Some(match name.trim().to_ascii_lowercase().as_str() {
+        "rtx-titan-24g" | "rtx-titan" | "titan-rtx" | "titan" => {
+            (GpuSpec::titan_rtx(), 10.0 * GIB)
+        }
+        "a100-40g" | "a100" => (GpuSpec::a100_40g(), 200.0 * GIB),
+        "a100-80g" => (GpuSpec::a100_80g(), 200.0 * GIB),
+        "cpu" => (GpuSpec { name: "cpu".into(), mem_bytes: 4.0 * GIB, flops: 30e9 }, 8.0 * GIB),
+        _ => return None,
+    })
+}
+
+/// Canonical GPU class names accepted by the island syntax.
+pub fn gpu_class_names() -> Vec<&'static str> {
+    vec!["A100-80G", "A100-40G", "RTX-TITAN-24G", "cpu"]
+}
+
+/// Quick shape check: does `name` look like island syntax rather than a
+/// preset name? (`<count>x<gpu>[,<count>x<gpu>...]`, e.g.
+/// `"2xA100-80G,2xRTX-TITAN-24G"`.)
+pub fn looks_like_islands(name: &str) -> bool {
+    let first = name.split(',').next().unwrap_or("");
+    first
+        .chars()
+        .next()
+        .map(|c| c.is_ascii_digit())
+        .unwrap_or(false)
+        && first.to_ascii_lowercase().contains('x')
+}
+
+/// Parse the island syntax `"<count>x<gpu>[,<count>x<gpu>...]"` into a
+/// cluster, e.g. `"2xA100-80G,2xRTX-TITAN-24G"`. Each island gets its GPU
+/// class's default intra bus; the inter-island link defaults to 10 GB/s
+/// (100 Gb IB). The cluster's name is the canonical label, so artifacts
+/// carrying it re-resolve through [`crate::api::resolve_cluster_name`].
+pub fn parse_islands(spec: &str) -> Result<ClusterSpec, ClusterError> {
+    let mut islands = Vec::new();
+    for segment in spec.split(',') {
+        let seg = segment.trim();
+        if seg.is_empty() {
+            return Err(ClusterError::Parse {
+                segment: segment.to_string(),
+                reason: "empty segment".into(),
+            });
+        }
+        let split = seg
+            .char_indices()
+            .find(|(_, c)| *c == 'x' || *c == 'X')
+            .map(|(i, _)| i)
+            .ok_or_else(|| ClusterError::Parse {
+                segment: seg.to_string(),
+                reason: "missing 'x' between count and GPU class".into(),
+            })?;
+        let (count_str, rest) = seg.split_at(split);
+        let gpu_name = &rest[1..];
+        let count: usize = count_str.parse().map_err(|_| ClusterError::Parse {
+            segment: seg.to_string(),
+            reason: format!("bad device count {count_str:?}"),
+        })?;
+        let (gpu, intra_bw) = gpu_by_name(gpu_name)
+            .ok_or_else(|| ClusterError::UnknownGpu { name: gpu_name.to_string() })?;
+        islands.push(IslandSpec { gpu, count, intra_bw });
+    }
+    // 100 Gb IB across islands (~80% of line rate). The cluster's name is
+    // its own canonical label, so one helper owns the format.
+    let mut cluster = ClusterSpec::from_islands("islands", islands, 10.0 * GIB)?;
+    cluster.name = cluster.islands_label();
+    Ok(cluster)
+}
+
+/// Named cluster presets matching the paper's testbeds (§VII-A, §VII-D),
+/// plus mixed-fleet presets for the heterogeneous scenario family.
 pub fn cluster_by_name(name: &str) -> Option<ClusterSpec> {
     // Effective bandwidths (~80% of line rate): PCIe3 x16 ≈ 10 GB/s,
     // NVLink(A100) ≈ 200 GB/s, 100 Gb IB ≈ 10 GB/s, 400 Gb IB ≈ 40 GB/s.
+    let preset = |c: Result<ClusterSpec, ClusterError>| c.expect("static preset is valid");
     Some(match name.to_ascii_lowercase().as_str() {
         // 8x RTX TITAN, single node, PCIe 3.0 (Table II).
-        "titan8" => ClusterSpec::new("titan8", GpuSpec::titan_rtx(), 8, 8, 10.0 * GIB, 10.0 * GIB),
-        // 16x RTX TITAN over 2 servers, 100Gb IB — "low-perf" (Table III).
-        "titan16" => ClusterSpec::new("titan16", GpuSpec::titan_rtx(), 16, 8, 10.0 * GIB, 10.0 * GIB),
-        // 16x A100 NVLink over 2 servers, 100Gb IB — "high-perf" (Table III).
-        "a100x16" => ClusterSpec::new("a100x16", GpuSpec::a100_40g(), 16, 8, 200.0 * GIB, 10.0 * GIB),
-        // 64x A100 40GB, 8 servers, NVLink + 100Gb IB (Table IV).
-        "a100x64" => ClusterSpec::new("a100x64", GpuSpec::a100_40g(), 64, 8, 200.0 * GIB, 10.0 * GIB),
-        // 32x A100 80GB, 400Gb IB (Table VI, GPT-3).
-        "a100-80g-x32" => {
-            ClusterSpec::new("a100-80g-x32", GpuSpec::a100_80g(), 32, 8, 200.0 * GIB, 40.0 * GIB)
+        "titan8" => {
+            preset(ClusterSpec::new("titan8", GpuSpec::titan_rtx(), 8, 8, 10.0 * GIB, 10.0 * GIB))
         }
+        // 16x RTX TITAN over 2 servers, 100Gb IB — "low-perf" (Table III).
+        "titan16" => {
+            preset(ClusterSpec::new("titan16", GpuSpec::titan_rtx(), 16, 8, 10.0 * GIB, 10.0 * GIB))
+        }
+        // 16x A100 NVLink over 2 servers, 100Gb IB — "high-perf" (Table III).
+        "a100x16" => {
+            preset(ClusterSpec::new("a100x16", GpuSpec::a100_40g(), 16, 8, 200.0 * GIB, 10.0 * GIB))
+        }
+        // 64x A100 40GB, 8 servers, NVLink + 100Gb IB (Table IV).
+        "a100x64" => {
+            preset(ClusterSpec::new("a100x64", GpuSpec::a100_40g(), 64, 8, 200.0 * GIB, 10.0 * GIB))
+        }
+        // 32x A100 80GB, 400Gb IB (Table VI, GPT-3).
+        "a100-80g-x32" => preset(ClusterSpec::new(
+            "a100-80g-x32",
+            GpuSpec::a100_80g(),
+            32,
+            8,
+            200.0 * GIB,
+            40.0 * GIB,
+        )),
+        // Mixed fleet: one PCIe TITAN server + one NVLink A100-80G server.
+        // Islands deliberately ordered small-memory first, so the planner's
+        // stage→island placement must actively move memory-heavy stages
+        // onto the 80G island (it is not the device-order default).
+        "hetero4" => preset(ClusterSpec::from_islands(
+            "hetero4",
+            vec![
+                IslandSpec { gpu: GpuSpec::titan_rtx(), count: 2, intra_bw: 10.0 * GIB },
+                IslandSpec { gpu: GpuSpec::a100_80g(), count: 2, intra_bw: 200.0 * GIB },
+            ],
+            10.0 * GIB,
+        )),
+        // Mixed fleet at server scale: 8x TITAN + 8x A100-40G over IB.
+        "hetero16" => preset(ClusterSpec::from_islands(
+            "hetero16",
+            vec![
+                IslandSpec { gpu: GpuSpec::titan_rtx(), count: 8, intra_bw: 10.0 * GIB },
+                IslandSpec { gpu: GpuSpec::a100_40g(), count: 8, intra_bw: 200.0 * GIB },
+            ],
+            10.0 * GIB,
+        )),
         // Small CPU-calibrated cluster used by the e2e runtime tests.
-        "cpu4" => ClusterSpec::new("cpu4", GpuSpec { name: "cpu".into(), mem_bytes: 4.0 * GIB, flops: 30e9 }, 4, 4, 8.0 * GIB, 8.0 * GIB),
+        "cpu4" => preset(ClusterSpec::new(
+            "cpu4",
+            GpuSpec { name: "cpu".into(), mem_bytes: 4.0 * GIB, flops: 30e9 },
+            4,
+            4,
+            8.0 * GIB,
+            8.0 * GIB,
+        )),
         _ => return None,
     })
 }
 
 pub fn cluster_names() -> Vec<&'static str> {
-    vec!["titan8", "titan16", "a100x16", "a100x64", "a100-80g-x32", "cpu4"]
+    vec![
+        "titan8",
+        "titan16",
+        "a100x16",
+        "a100x64",
+        "a100-80g-x32",
+        "hetero4",
+        "hetero16",
+        "cpu4",
+    ]
 }
 
 #[cfg(test)]
@@ -152,8 +512,8 @@ mod tests {
     fn presets_resolve() {
         for n in cluster_names() {
             let c = cluster_by_name(n).unwrap();
-            assert!(c.n_devices >= 4);
-            assert!(c.intra_bw >= c.inter_bw);
+            assert!(c.n_devices() >= 4);
+            assert!(c.intra_bw() >= c.inter_bw);
         }
     }
 
@@ -161,21 +521,125 @@ mod tests {
     fn group_bandwidth_hierarchy() {
         let c = cluster_by_name("a100x16").unwrap();
         // PP=2 puts one island per stage: all intra-stage groups use NVLink.
-        assert_eq!(c.group_bandwidth(2, 8), c.intra_bw);
+        assert_eq!(c.group_bandwidth(2, 8), c.intra_bw());
         // PP=1: a 16-wide group spans both islands -> IB.
         assert_eq!(c.group_bandwidth(1, 16), c.inter_bw);
-        assert_eq!(c.group_bandwidth(1, 8), c.intra_bw);
+        assert_eq!(c.group_bandwidth(1, 8), c.intra_bw());
     }
 
     #[test]
     fn memory_budget_override() {
         let c = cluster_by_name("titan8").unwrap().with_memory_budget(8.0 * GIB);
-        assert_eq!(c.gpu.mem_bytes, 8.0 * GIB);
+        assert_eq!(c.gpu().mem_bytes, 8.0 * GIB);
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_non_pow2() {
-        ClusterSpec::new("bad", GpuSpec::titan_rtx(), 6, 2, 1.0, 1.0);
+    fn rejects_non_pow2_with_typed_error() {
+        let err = ClusterSpec::new("bad", GpuSpec::titan_rtx(), 6, 2, 1.0, 1.0).unwrap_err();
+        assert_eq!(err, ClusterError::NonPow2Devices { n: 6 });
+        let err = ClusterSpec::new("bad", GpuSpec::titan_rtx(), 8, 3, 1.0, 1.0).unwrap_err();
+        assert_eq!(err, ClusterError::BadIslandSize { island: 3, n: 8 });
+        let err = ClusterSpec::new("bad", GpuSpec::titan_rtx(), 8, 16, 1.0, 1.0).unwrap_err();
+        assert_eq!(err, ClusterError::BadIslandSize { island: 16, n: 8 });
+        assert!(ClusterSpec::from_islands("bad", vec![], 1.0).is_err());
+        // The happy path still constructs.
+        let ok = ClusterSpec::new("ok", GpuSpec::titan_rtx(), 8, 4, 1.0, 1.0).unwrap();
+        assert_eq!(ok.n_devices(), 8);
+        assert_eq!(ok.n_islands(), 2);
+    }
+
+    #[test]
+    fn homogeneous_detection_and_floor() {
+        let hom = cluster_by_name("titan16").unwrap();
+        assert!(hom.is_homogeneous());
+        assert_eq!(hom.gpu(), GpuSpec::titan_rtx());
+        let het = cluster_by_name("hetero4").unwrap();
+        assert!(!het.is_homogeneous());
+        // Floor: TITAN memory, TITAN flops.
+        assert_eq!(het.gpu().mem_bytes, 24.0 * GIB);
+        assert_eq!(het.gpu().flops, 10e12);
+    }
+
+    #[test]
+    fn stage_sites_homogeneous_single_class() {
+        let c = cluster_by_name("titan8").unwrap();
+        for pp in [1usize, 2, 4, 8] {
+            let sites = c.stage_sites(pp);
+            assert_eq!(sites.len(), pp);
+            assert!(sites.iter().all(|s| s.class == 0));
+            assert!(sites.iter().all(|s| s.gpu == GpuSpec::titan_rtx()));
+            // One island of 8: the limit is the stage group size itself.
+            assert_eq!(sites[0].intra_limit, 8 / pp);
+        }
+    }
+
+    #[test]
+    fn stage_sites_mixed_islands() {
+        let c = cluster_by_name("hetero4").unwrap();
+        // PP=2: slot 0 = TITAN island, slot 1 = A100-80G island.
+        let sites = c.stage_sites(2);
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].gpu.mem_bytes, 24.0 * GIB);
+        assert_eq!(sites[1].gpu.mem_bytes, 80.0 * GIB);
+        assert_ne!(sites[0].class, sites[1].class);
+        // PP=1: the single slot spans both islands -> floor class.
+        let sites = c.stage_sites(1);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].gpu.mem_bytes, 24.0 * GIB);
+        assert_eq!(sites[0].gpu.flops, 10e12);
+        assert_eq!(sites[0].intra_bw, 10.0 * GIB);
+        // PP=4: one device per slot, two classes.
+        let sites = c.stage_sites(4);
+        assert_eq!(sites.len(), 4);
+        assert_eq!(sites[0].class, sites[1].class);
+        assert_eq!(sites[2].class, sites[3].class);
+        assert_ne!(sites[0].class, sites[2].class);
+    }
+
+    #[test]
+    fn island_syntax_round_trips() {
+        let c = parse_islands("2xA100-80G,2xRTX-TITAN-24G").unwrap();
+        assert_eq!(c.name, "2xA100-80G,2xRTX-TITAN-24G");
+        assert_eq!(c.islands_label(), c.name);
+        assert_eq!(c.n_devices(), 4);
+        assert!(!c.is_homogeneous());
+        // Case-insensitive classes and aliases.
+        let c2 = parse_islands("2xa100-80g,2xtitan").unwrap();
+        assert_eq!(c2.islands_label(), c.islands_label());
+        // Homogeneous single island.
+        let h = parse_islands("8xRTX-TITAN-24G").unwrap();
+        assert!(h.is_homogeneous());
+        assert_eq!(h.n_devices(), 8);
+    }
+
+    #[test]
+    fn island_syntax_rejects_bad_input() {
+        assert!(matches!(
+            parse_islands("2xH100").unwrap_err(),
+            ClusterError::UnknownGpu { .. }
+        ));
+        assert!(matches!(
+            parse_islands("twoxA100-80G").unwrap_err(),
+            ClusterError::Parse { .. }
+        ));
+        assert!(matches!(parse_islands("A100-80G").unwrap_err(), ClusterError::Parse { .. }));
+        // 3 + 2 devices: island and total shape errors surface typed.
+        assert!(matches!(
+            parse_islands("3xA100-80G,2xtitan").unwrap_err(),
+            ClusterError::NonPow2Island { count: 3 }
+        ));
+        assert!(matches!(
+            parse_islands("4xA100-80G,2xtitan").unwrap_err(),
+            ClusterError::NonPow2Devices { n: 6 }
+        ));
+    }
+
+    #[test]
+    fn looks_like_islands_shape_check() {
+        assert!(looks_like_islands("2xA100-80G,2xRTX-TITAN-24G"));
+        assert!(looks_like_islands("8xtitan"));
+        assert!(!looks_like_islands("titan8"));
+        assert!(!looks_like_islands("a100x16"));
+        assert!(!looks_like_islands(""));
     }
 }

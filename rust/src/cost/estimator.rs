@@ -1,7 +1,7 @@
 //! Per-layer cost estimation: c(l, s), O_f, O_b, O_ms of the paper's DP
 //! search, plus the transformation cost R.
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, StageSite};
 use crate::model::LayerProfile;
 use crate::parallel::comm::{ckpt_recompute_comm, layer_comm_volumes};
 use crate::parallel::memory::{layer_memory, LayerMemory};
@@ -84,7 +84,12 @@ impl StageCosts for CostEstimator {
     }
 }
 
-/// Estimator bound to a model's placement context: cluster + PP degree.
+/// Estimator bound to a model's placement context: cluster + PP degree +
+/// the island [`StageSite`] the priced stage runs on. `new` binds the
+/// cluster's floor site (identical to every slot on a homogeneous
+/// cluster); `for_slot`/`with_site` bind a specific pipeline slot of a
+/// heterogeneous cluster, so stage time scales with that island's FLOP
+/// rate and its intra-island bus.
 #[derive(Debug, Clone)]
 pub struct CostEstimator {
     pub cluster: ClusterSpec,
@@ -93,11 +98,44 @@ pub struct CostEstimator {
     pub pp: usize,
     /// Compute/communication contention factor (§V).
     pub overlap_slowdown: f64,
+    /// The island site this estimator prices (device FLOPs/memory + bus).
+    pub site: StageSite,
 }
 
 impl CostEstimator {
     pub fn new(cluster: &ClusterSpec, pp: usize, overlap_slowdown: f64) -> Self {
-        CostEstimator { cluster: cluster.clone(), pp, overlap_slowdown }
+        let site = cluster.floor_site(pp);
+        CostEstimator { cluster: cluster.clone(), pp, overlap_slowdown, site }
+    }
+
+    /// Estimator for pipeline slot `slot` of `cluster` at degree `pp`.
+    pub fn for_slot(cluster: &ClusterSpec, pp: usize, overlap_slowdown: f64, slot: usize) -> Self {
+        let site = cluster.stage_sites(pp)[slot].clone();
+        Self::with_site(cluster, pp, overlap_slowdown, site)
+    }
+
+    /// Estimator bound to an explicit (precomputed) site.
+    pub fn with_site(
+        cluster: &ClusterSpec,
+        pp: usize,
+        overlap_slowdown: f64,
+        site: StageSite,
+    ) -> Self {
+        CostEstimator { cluster: cluster.clone(), pp, overlap_slowdown, site }
+    }
+
+    /// Memory budget of the priced stage's devices, bytes.
+    pub fn mem_budget(&self) -> f64 {
+        self.site.gpu.mem_bytes
+    }
+
+    /// Bandwidth of a `group`-wide collective inside the priced stage.
+    fn group_bw(&self, group: usize) -> f64 {
+        if group <= self.site.intra_limit {
+            self.site.intra_bw
+        } else {
+            self.cluster.inter_bw
+        }
     }
 
     /// Bandwidth seen by strategy level `i` of `strategy`: the level's
@@ -105,7 +143,7 @@ impl CostEstimator {
     /// degrees of contiguous devices (outer levels ride slower links).
     fn level_bw(&self, strategy: &Strategy, i: usize) -> f64 {
         let span: usize = strategy.levels[i..].iter().map(|(_, d)| d).product();
-        self.cluster.group_bandwidth(self.pp, span)
+        self.group_bw(span)
     }
 
     fn dim_bw(&self, strategy: &Strategy, dim: Dim) -> f64 {
@@ -114,7 +152,7 @@ impl CostEstimator {
             .iter()
             .position(|(d, _)| *d == dim)
             .map(|i| self.level_bw(strategy, i))
-            .unwrap_or(self.cluster.intra_bw)
+            .unwrap_or(self.site.intra_bw)
     }
 
     /// c(l, s): the paper's per-layer cost under strategy `s` with
@@ -129,7 +167,7 @@ impl CostEstimator {
         let local_samples = b_m / strategy.batch_split() as f64;
         let comp_fwd = layer.flops_fwd * local_samples
             / strategy.tp() as f64
-            / self.cluster.gpu.flops;
+            / self.site.gpu.flops;
         let comp_bwd = 2.0 * comp_fwd;
 
         let vols = layer_comm_volumes(layer, strategy, b_m, extra_params);
@@ -176,7 +214,7 @@ impl CostEstimator {
     ) -> f64 {
         // Redistribution rides the stage group's slowest internal link.
         let group = cur.degree().max(prev.degree());
-        let bw = self.cluster.group_bandwidth(self.pp, group.max(1));
+        let bw = self.group_bw(group.max(1));
         transform::transform_time(layer, prev, cur, b_m, bw)
     }
 
@@ -205,7 +243,7 @@ mod tests {
     fn serial_cost_is_pure_compute() {
         let e = est(1);
         let c = e.layer_cost(&layer(), &Strategy::serial(false), 8.0, 0.0);
-        let expect = layer().flops_fwd * 8.0 / e.cluster.gpu.flops;
+        let expect = layer().flops_fwd * 8.0 / e.site.gpu.flops;
         assert!((c.fwd - expect).abs() / expect < 1e-9);
         assert!((c.bwd - 2.0 * expect).abs() / expect < 1e-9);
         assert_eq!(c.bwd, c.bwd_sync); // no DP -> no sync cost
@@ -267,6 +305,24 @@ mod tests {
         let ci = e.layer_cost(&l, &tp_inner, 16.0, 0.0);
         let co = e.layer_cost(&l, &tp_outer, 16.0, 0.0);
         assert!(ci.fwd < co.fwd, "inner TP {} must beat outer TP {}", ci.fwd, co.fwd);
+    }
+
+    #[test]
+    fn site_binding_scales_stage_time_and_budget() {
+        // hetero4 at PP=2: slot 0 is the TITAN island (10 TFLOP/s, 24G),
+        // slot 1 the A100-80G island (40 TFLOP/s, 80G).
+        let c = cluster_by_name("hetero4").unwrap();
+        let slow = CostEstimator::for_slot(&c, 2, 1.3, 0);
+        let fast = CostEstimator::for_slot(&c, 2, 1.3, 1);
+        let l = layer();
+        let cs = slow.layer_cost(&l, &Strategy::serial(false), 4.0, 0.0);
+        let cf = fast.layer_cost(&l, &Strategy::serial(false), 4.0, 0.0);
+        assert!((cs.fwd / cf.fwd - 4.0).abs() < 1e-9, "{} vs {}", cs.fwd, cf.fwd);
+        assert!(slow.mem_budget() < fast.mem_budget());
+        // The floor estimator prices the slowest class.
+        let floor = CostEstimator::new(&c, 2, 1.3);
+        let cfl = floor.layer_cost(&l, &Strategy::serial(false), 4.0, 0.0);
+        assert_eq!(cfl.fwd, cs.fwd);
     }
 
     #[test]

@@ -64,13 +64,32 @@ pub fn plan_cost(
     schedule: Schedule,
     overlap_slowdown: f64,
 ) -> PlanCost {
-    let est = CostEstimator::new(cluster, plan.pp, overlap_slowdown);
+    // Each stage is priced on its assigned island slot (identity placement
+    // unless the plan carries a heterogeneous stage→slot map); on a
+    // homogeneous cluster every slot shares site class 0 and this reduces
+    // to the original single-estimator path. Estimators are built once per
+    // distinct site class — plan_cost runs once per evaluated partition,
+    // so per-stage construction would churn ClusterSpec clones on the
+    // planner's hot path.
+    let sites = cluster.stage_sites(plan.pp);
+    let n_classes = sites.iter().map(|s| s.class).max().map(|c| c as usize + 1).unwrap_or(1);
+    let ests: Vec<CostEstimator> = (0..n_classes)
+        .map(|c| {
+            let site = sites
+                .iter()
+                .find(|s| s.class == c as u32)
+                .expect("contiguous site class ids")
+                .clone();
+            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
+        })
+        .collect();
     let b_m = plan.microbatch_size();
     let m = plan.microbatches;
     let p = plan.pp;
 
     let mut stages = Vec::with_capacity(p);
     for s in 0..p {
+        let est = &ests[sites[plan.slot_of(s)].class as usize];
         let range = plan.stage_layers(s);
         let mut time_nosync = 0.0;
         let mut time_sync = 0.0;
@@ -108,8 +127,11 @@ pub fn plan_cost(
     let sum_sync: f64 = stages.iter().map(|s| s.time_sync).sum();
     let iter_time = (m as f64 - 1.0) * max_nosync + sum_sync;
 
-    let budget = cluster.gpu.mem_bytes;
-    let feasible = stages.iter().all(|s| s.peak_mem <= budget);
+    // Per-stage feasibility against the assigned island's capacity.
+    let feasible = stages
+        .iter()
+        .enumerate()
+        .all(|(s, st)| st.peak_mem <= sites[plan.slot_of(s)].gpu.mem_bytes);
 
     // Balance degrees (Eq. 6).
     let sum_nosync: f64 = stages.iter().map(|s| s.time_nosync).sum();
@@ -150,6 +172,7 @@ mod tests {
             strategies: vec![strat; l],
             batch,
             microbatches: m,
+            stage_slots: None,
         }
     }
 

@@ -49,7 +49,7 @@ pub fn fig4(opts: &ExpOptions) -> Vec<Table> {
             max_batch: batch,
             ..Default::default()
         };
-        let group = cl.n_devices / pp;
+        let group = cl.n_devices() / pp;
         let b_m = batch as f64 / m as f64;
         let act_w: Vec<f64> = mp.layers.iter().map(|l| l.act_bytes * b_m / group as f64).collect();
         let ms_w: Vec<f64> = (0..mp.n_layers())
@@ -284,6 +284,7 @@ mod tests {
             ],
             batch: 16,
             microbatches: 4,
+            stage_slots: None,
         };
         let s = plan_summary(&plan);
         assert!(s.contains("[DP4 ×2]"), "{s}");

@@ -5,7 +5,7 @@
 //! or OOM. Absolute numbers are calibrated-simulator estimates; the *shape*
 //! (who wins, OOM pattern, rough factors) is the reproduction target.
 
-use crate::api::MethodSpec;
+use crate::api::{MethodSpec, PlanRequest};
 use crate::search::baselines::method_names;
 use crate::search::bmw::partition_str;
 use crate::search::SearchOutcome;
@@ -155,6 +155,52 @@ pub fn table6(opts: &ExpOptions) -> Vec<Table> {
         methods.insert(methods.len() - 1, "Alpa".to_string());
     }
     throughput_table("Table VI", "a100-80g-x32", &budgets, &models, &methods, opts.max_batch)
+}
+
+/// Heterogeneous-cluster sweep (the mixed-fleet scenario family): zoo
+/// models planned with Galvatron-BMW on a homogeneous baseline and the
+/// mixed-island presets, reporting throughput, the pipeline partition and
+/// the stage→island placement the planner chose (slot order; `hetero*`
+/// presets list their small-memory island first, so non-identity slots
+/// mean the placement pass moved memory-heavy stages onto big islands).
+pub fn table_hetero(opts: &ExpOptions) -> Vec<Table> {
+    let models = opts.models_or(&["bert-huge-32", "vit-huge-32", "t5-512/4-32"]);
+    let clusters = ["titan8", "hetero4", "hetero16"];
+    println!("\n=== Heterogeneous clusters | Galvatron-BMW | physical memory ===");
+    let mut header = vec!["Model".to_string()];
+    header.extend(clusters.iter().map(|s| s.to_string()));
+    let mut t = Table::new(header);
+    for m in &models {
+        let mut row = vec![m.clone()];
+        for cname in clusters {
+            let cell = match PlanRequest::new(m, cname).max_batch(opts.max_batch).plan() {
+                Ok(r) => {
+                    let slots = r
+                        .plan
+                        .stage_slots
+                        .as_ref()
+                        .map(|v| {
+                            format!(
+                                " slots[{}]",
+                                v.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+                            )
+                        })
+                        .unwrap_or_default();
+                    format!(
+                        "{} {}{}",
+                        tp_cell(Some((r.throughput, r.plan.batch))),
+                        partition_str(&r.plan.partition),
+                        slots
+                    )
+                }
+                Err(_) => "OOM".to_string(),
+            };
+            row.push(cell);
+        }
+        t.row(row);
+    }
+    t.print();
+    vec![t]
 }
 
 /// §VII-B headline speedups derived from a finished Table-II-style grid:

@@ -25,12 +25,13 @@ galvatron <command> [options]
 
 commands:
   plan      --model <name> --cluster <name> --memory <GB> [--method <name>]
-            [--max-batch N] [--schedule 1f1b|gpipe] [--threads N]
-            [--out plan.json]
+            [--islands 2xA100-80G,2xRTX-TITAN-24G] [--max-batch N]
+            [--schedule 1f1b|gpipe] [--threads N] [--out plan.json]
   simulate  --plan plan.json
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
   table3 | table4 | table5 | table6     (same options)
+  hetero    heterogeneous-cluster sweep [--models a,b] [--max-batch N]
   fig4 | fig5 | fig6 | fig7             [--max-batch N]
   train     [--artifacts DIR] [--steps N] [--dp N] [--microbatches N] [--csv FILE] [--repeat-batch]
   profile   [--artifacts DIR] [--reps N]
@@ -64,13 +65,31 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
 /// model/cluster/method names surface as [`PlanError`]s with did-you-mean
 /// suggestions (not panics).
 fn plan_request(args: &Args) -> Result<PlanRequest> {
-    let mut req = PlanRequest::new(
-        args.get_or("model", "bert-huge-32"),
-        args.get_or("cluster", "titan8"),
-    )
-    .memory_gb(args.f64("memory", 16.0)?)
-    .max_batch(args.usize("max-batch", 512)?)
-    .method_name(args.get_or("method", "Galvatron-BMW"))?;
+    // `--islands 2xA100-80G,2xRTX-TITAN-24G` describes a mixed fleet
+    // inline; it takes precedence over `--cluster` preset names.
+    let cluster = match args.get("islands") {
+        Some(spec) => spec.to_string(),
+        None => args.get_or("cluster", "titan8").to_string(),
+    };
+    // Heterogeneous clusters fix per-island budgets via their GPU classes,
+    // so the paper's 16 GB default applies only to homogeneous clusters
+    // (presets or single-class island strings, whichever flag carried
+    // them); an explicit --memory is always forwarded (and diagnosed by
+    // the API).
+    let heterogeneous = match galvatron::cluster::cluster_by_name(&cluster) {
+        Some(c) => !c.is_homogeneous(),
+        None => {
+            galvatron::cluster::looks_like_islands(&cluster)
+                && galvatron::cluster::parse_islands(&cluster)
+                    .map_or(true, |c| !c.is_homogeneous())
+        }
+    };
+    let mut req = PlanRequest::new(args.get_or("model", "bert-huge-32"), &cluster)
+        .max_batch(args.usize("max-batch", 512)?)
+        .method_name(args.get_or("method", "Galvatron-BMW"))?;
+    if !heterogeneous || args.get("memory").is_some() {
+        req = req.memory_gb(args.f64("memory", 16.0)?);
+    }
     if let Some(s) = args.get("schedule") {
         req = req.schedule(parse_schedule(s)?);
     }
@@ -90,11 +109,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let req = plan_request(args)?;
     let resolved = planner.resolve(&req)?;
     println!(
-        "planning {} on {} ({} devices, {:.0} GB budget) with {} ...",
+        "planning {} on {} ({} devices, {}) with {} ...",
         resolved.model.name,
         resolved.cluster_name,
-        resolved.cluster.n_devices,
-        resolved.cluster.gpu.mem_bytes / galvatron::util::GIB,
+        resolved.cluster.n_devices(),
+        resolved.cluster.budget_label(),
         resolved.method.canonical_name()
     );
     let report = match planner.plan(&req) {
@@ -235,6 +254,9 @@ fn main() -> Result<()> {
         "table6" => {
             tables::table6(&exp_options(&args)?);
         }
+        "hetero" => {
+            tables::table_hetero(&exp_options(&args)?);
+        }
         "fig4" => {
             figures::fig4(&exp_options(&args)?);
         }
@@ -268,13 +290,17 @@ fn main() -> Result<()> {
         "clusters" => {
             for c in galvatron::cluster::cluster_names() {
                 let cl = galvatron::cluster::cluster_by_name(c).unwrap();
+                let islands = cl
+                    .islands
+                    .iter()
+                    .map(|i| format!("{}x{}@{:.0}G", i.count, i.gpu.name, i.intra_bw / 1e9))
+                    .collect::<Vec<_>>()
+                    .join(" + ");
                 println!(
-                    "{:<13} {:>3}x {:<14} islands of {}, intra {:>5.0} GB/s, inter {:>5.0} GB/s",
+                    "{:<13} {:>3} devices  {:<44} inter {:>5.0} GB/s",
                     c,
-                    cl.n_devices,
-                    cl.gpu.name,
-                    cl.island_size,
-                    cl.intra_bw / 1e9,
+                    cl.n_devices(),
+                    islands,
                     cl.inter_bw / 1e9
                 );
             }

@@ -189,12 +189,24 @@ pub struct ParallelPlan {
     pub batch: usize,
     /// Number of microbatches per batch.
     pub microbatches: usize,
+    /// Stage→slot assignment on a heterogeneous cluster: stage `s` runs on
+    /// cluster slot `stage_slots[s]` (see `ClusterSpec::stage_sites`), a
+    /// permutation of `0..pp` chosen by the planner's placement pass so
+    /// memory-heavy stages land on large-memory islands. `None` on
+    /// homogeneous clusters (the identity), keeping their plan artifacts
+    /// byte-identical to the pre-island planner.
+    pub stage_slots: Option<Vec<usize>>,
 }
 
 impl ParallelPlan {
     /// Microbatch size (global batch / microbatch count).
     pub fn microbatch_size(&self) -> f64 {
         self.batch as f64 / self.microbatches as f64
+    }
+
+    /// Cluster slot of stage `s` (identity when no placement is recorded).
+    pub fn slot_of(&self, s: usize) -> usize {
+        self.stage_slots.as_ref().map_or(s, |v| v[s])
     }
 
     /// Index range of the layers in stage `s`.
@@ -225,6 +237,15 @@ impl ParallelPlan {
             );
         }
         anyhow::ensure!(self.batch % self.microbatches == 0, "m must divide B");
+        if let Some(slots) = &self.stage_slots {
+            anyhow::ensure!(slots.len() == self.pp, "stage_slots arity != pp");
+            let mut seen = vec![false; self.pp];
+            for &s in slots {
+                anyhow::ensure!(s < self.pp, "stage slot {s} out of range");
+                anyhow::ensure!(!seen[s], "stage slot {s} assigned twice");
+                seen[s] = true;
+            }
+        }
         Ok(())
     }
 
@@ -243,7 +264,11 @@ impl ParallelPlan {
         );
         for s in 0..self.pp {
             let range = self.stage_layers(s);
-            out.push_str(&format!("  stage {s} (layers {}..{}):", range.start, range.end));
+            out.push_str(&format!("  stage {s} (layers {}..{}", range.start, range.end));
+            if self.stage_slots.is_some() {
+                out.push_str(&format!(", slot {}", self.slot_of(s)));
+            }
+            out.push_str("):");
             let mut runs: Vec<(String, usize)> = Vec::new();
             for li in range {
                 let label = self.strategies[li].label();
@@ -261,15 +286,21 @@ impl ParallelPlan {
     }
 
     /// Serialize for plan artifacts (strategies as their compact labels).
+    /// `stage_slots` is emitted only when a heterogeneous placement exists,
+    /// so homogeneous artifacts keep their original byte layout.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let mut fields = vec![
             ("pp", Json::num(self.pp as f64)),
             ("partition", Json::arr(self.partition.iter().map(|&c| Json::num(c as f64)))),
             ("strategies", Json::arr(self.strategies.iter().map(|s| Json::str(&s.label())))),
             ("batch", Json::num(self.batch as f64)),
             ("microbatches", Json::num(self.microbatches as f64)),
-        ])
+        ];
+        if let Some(slots) = &self.stage_slots {
+            fields.push(("stage_slots", Json::arr(slots.iter().map(|&s| Json::num(s as f64)))));
+        }
+        Json::obj(fields)
     }
 
     /// Inverse of [`ParallelPlan::to_json`].
@@ -279,6 +310,13 @@ impl ParallelPlan {
         for s in v.req("strategies")?.as_arr().context("strategies must be an array")? {
             strategies.push(s.as_str().context("strategy must be a string")?.parse()?);
         }
+        // Optional: absent for homogeneous (pre-island) artifacts.
+        let stage_slots = match v.get("stage_slots") {
+            None | Some(crate::util::json::Json::Null) => None,
+            Some(s) => {
+                Some(s.as_usize_vec().context("stage_slots must be a number array")?)
+            }
+        };
         let plan = ParallelPlan {
             pp: v.req("pp")?.as_usize().context("pp must be a number")?,
             partition: v
@@ -291,6 +329,7 @@ impl ParallelPlan {
                 .req("microbatches")?
                 .as_usize()
                 .context("microbatches must be a number")?,
+            stage_slots,
         };
         // Reject degenerate values up front so corrupt artifacts surface
         // as errors, not divide-by-zero panics in later validation.
@@ -342,6 +381,7 @@ mod tests {
             strategies: vec![s.clone(), s.clone(), s.clone(), s.clone()],
             batch: 8,
             microbatches: 4,
+            stage_slots: None,
         };
         plan.validate(4, 8).unwrap();
         assert_eq!(plan.stage_layers(1), 2..4);
@@ -380,10 +420,42 @@ mod tests {
             ],
             batch: 48,
             microbatches: 4,
+            stage_slots: None,
         };
         let text = plan.to_json().to_string();
         let back = ParallelPlan::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn stage_slots_round_trip_and_validation() {
+        let s = Strategy::single(Dim::Dp, 4, false);
+        let mut plan = ParallelPlan {
+            pp: 2,
+            partition: vec![2, 2],
+            strategies: vec![s.clone(), s.clone(), s.clone(), s],
+            batch: 8,
+            microbatches: 2,
+            stage_slots: Some(vec![1, 0]),
+        };
+        plan.validate(4, 8).unwrap();
+        assert_eq!(plan.slot_of(0), 1);
+        assert_eq!(plan.slot_of(1), 0);
+        let text = plan.to_json().to_string();
+        assert!(text.contains("stage_slots"), "{text}");
+        let back =
+            ParallelPlan::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // Homogeneous plans omit the key entirely.
+        plan.stage_slots = None;
+        assert!(!plan.to_json().to_string().contains("stage_slots"));
+        // Non-permutations are rejected.
+        plan.stage_slots = Some(vec![0, 0]);
+        assert!(plan.validate(4, 8).is_err());
+        plan.stage_slots = Some(vec![0]);
+        assert!(plan.validate(4, 8).is_err());
+        plan.stage_slots = Some(vec![0, 2]);
+        assert!(plan.validate(4, 8).is_err());
     }
 
     #[test]
@@ -395,6 +467,7 @@ mod tests {
             strategies: vec![s.clone(), s.clone(), Strategy::single(Dim::Tp, 4, true), s],
             batch: 16,
             microbatches: 4,
+            stage_slots: None,
         };
         let text = plan.summary();
         assert!(text.contains("[DP4 ×2]"), "{text}");

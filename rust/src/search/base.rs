@@ -109,10 +109,18 @@ pub fn evaluate_partition(
     microbatches: usize,
     partition: &[usize],
 ) -> Option<(SearchOutcome, Vec<LayerDiag>)> {
-    let n = cluster.n_devices;
+    let n = cluster.n_devices();
     debug_assert_eq!(n % pp, 0);
     let group = n / pp;
-    let est = CostEstimator::new(cluster, pp, cfg.overlap_slowdown);
+    // Identity stage→slot placement: stage s runs on cluster slot s, with
+    // that slot's island budget and FLOP rate (all slots identical on a
+    // homogeneous cluster). The engine's cached path additionally explores
+    // capacity-ranked placements.
+    let sites = cluster.stage_sites(pp);
+    let ests: Vec<CostEstimator> = sites
+        .iter()
+        .map(|site| CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site.clone()))
+        .collect();
     let b_m = batch as f64 / microbatches as f64;
 
     let candidates = stage_candidates(cfg, group);
@@ -130,12 +138,12 @@ pub fn evaluate_partition(
             layers,
             extra_params: &extra,
             strategies: &candidates,
-            costs: &est,
+            costs: &ests[s],
             layer_offset: start,
             b_m,
             microbatches,
             live_mb: live,
-            mem_budget: cluster.gpu.mem_bytes,
+            mem_budget: sites[s].gpu.mem_bytes,
             granularity: cfg.granularity,
         })?;
         strategies.extend(res.strategies);
@@ -148,17 +156,24 @@ pub fn evaluate_partition(
         strategies,
         batch,
         microbatches,
+        stage_slots: if cluster.is_homogeneous() { None } else { Some((0..pp).collect()) },
     };
     let cost = plan_cost(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown);
     if !cost.feasible {
         return None;
     }
 
-    // Per-layer diagnostics for partition adjustment.
+    // Per-layer diagnostics for partition adjustment (priced on each
+    // layer's assigned stage site).
     let mut diags = Vec::with_capacity(model.n_layers());
-    for (i, layer) in model.layers.iter().enumerate() {
-        let c = est.layer_cost(layer, &plan.strategies[i], b_m, model.extra_params(i));
-        diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+    let mut start = 0usize;
+    for (s, &count) in partition.iter().enumerate() {
+        for i in start..start + count {
+            let extra = model.extra_params(i);
+            let c = ests[s].layer_cost(&model.layers[i], &plan.strategies[i], b_m, extra);
+            diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+        }
+        start += count;
     }
     Some((SearchOutcome { plan, cost }, diags))
 }
@@ -190,7 +205,7 @@ pub fn stage_candidates(cfg: &SearchConfig, group: usize) -> Vec<Strategy> {
 pub fn pp_degrees(model: &ModelProfile, cluster: &ClusterSpec, cfg: &SearchConfig) -> Vec<usize> {
     match &cfg.pp_degrees {
         Some(v) => v.clone(),
-        None => pow2_divisors(cluster.n_devices)
+        None => pow2_divisors(cluster.n_devices())
             .into_iter()
             .filter(|&p| p <= model.n_layers())
             .collect(),

@@ -19,7 +19,7 @@ use crate::util::GIB;
 
 use super::base::{LayerDiag, SearchConfig, SearchOutcome};
 use super::engine::{CellAlgo, SearchEngine, SearchTrace};
-use super::partition::even_partition;
+use super::partition::{even_partition, min_bottleneck_partition};
 
 /// Memory-balanced partition p_m with 1F1B live-microbatch awareness:
 /// stage s of P keeps (P - s) microbatches of activations live, so the
@@ -97,10 +97,46 @@ pub fn memory_balanced_partition(
     counts
 }
 
+/// Memory-balanced partition against a *per-stage budget vector*: stage
+/// `s` may hold weight in proportion to `budgets[s]` (its assigned
+/// island's memory capacity), so the optimization balances *utilization*
+/// `weight_s / budgets[s]` instead of raw bytes — the Eq. 7/8 p_m
+/// re-derived for heterogeneous clusters. Because the per-layer weight
+/// depends on the stage it lands in (live multiplier AND budget), the
+/// bottleneck is minimized exactly with an O(P·n²) interval DP rather
+/// than the homogeneous bisection (whose greedy is only correct for
+/// uniform allowances). A uniform budget vector delegates to
+/// [`memory_balanced_partition`] bit-for-bit, keeping the homogeneous
+/// planner byte-identical.
+pub fn memory_balanced_partition_budgeted(
+    act_weights: &[f64],
+    ms_weights: &[f64],
+    stages: usize,
+    microbatches: usize,
+    schedule: Schedule,
+    budgets: &[f64],
+) -> Vec<usize> {
+    assert_eq!(budgets.len(), stages);
+    if budgets.windows(2).all(|w| w[0] == w[1]) {
+        return memory_balanced_partition(act_weights, ms_weights, stages, microbatches, schedule);
+    }
+    let n = act_weights.len();
+    assert_eq!(ms_weights.len(), n);
+    assert!(stages >= 1 && stages <= n);
+    let live: Vec<f64> = (0..stages)
+        .map(|s| schedule.live_microbatches(s, stages, microbatches) as f64)
+        .collect();
+    let stage_cost = move |s: usize, j: usize, i: usize, pa: &[f64], pm: &[f64]| -> f64 {
+        ((pa[i] - pa[j]) * live[s] + (pm[i] - pm[j])) / budgets[s]
+    };
+    min_bottleneck_partition(n, stages, act_weights, ms_weights, &stage_cost)
+}
+
 /// Proxy stage times/memories for a candidate partition, reusing the
 /// per-layer diagnostics from the most recent full search (the validation
-/// step of Algorithm 2 line 14 — cheap, no DP re-run).
-pub(crate) fn proxy_stage_stats(
+/// step of Algorithm 2 line 14 — cheap, no DP re-run). Public so the
+/// property suite can drive the Eq. 7/8 sandwich directly.
+pub fn proxy_stage_stats(
     diags: &[LayerDiag],
     partition: &[usize],
     microbatches: usize,
@@ -123,7 +159,8 @@ pub(crate) fn proxy_stage_stats(
 
 /// One adjustment step: move a boundary layer out of the slowest stage.
 /// Returns candidate partitions (shrink-left and shrink-right variants).
-pub(crate) fn adjust_candidates(partition: &[usize], slowest: usize) -> Vec<Vec<usize>> {
+/// Public so the property suite can replay Algorithm 2's loop.
+pub fn adjust_candidates(partition: &[usize], slowest: usize) -> Vec<Vec<usize>> {
     let mut out = Vec::new();
     if partition[slowest] <= 1 {
         return out;
@@ -207,6 +244,38 @@ mod tests {
         let ms = vec![1.0; 32];
         let p = memory_balanced_partition(&act, &ms, 4, 8, Schedule::GPipe);
         assert_eq!(p, vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn budgeted_partition_uniform_budgets_delegate() {
+        let act = vec![100.0; 32];
+        let ms = vec![1.0; 32];
+        for m in [1usize, 4, 8] {
+            for sched in [Schedule::OneFOneB, Schedule::GPipe] {
+                let plain = memory_balanced_partition(&act, &ms, 4, m, sched);
+                let budgeted = memory_balanced_partition_budgeted(
+                    &act,
+                    &ms,
+                    4,
+                    m,
+                    sched,
+                    &[16.0 * GIB; 4],
+                );
+                assert_eq!(plain, budgeted);
+            }
+        }
+    }
+
+    #[test]
+    fn budgeted_partition_loads_large_budget_stages() {
+        // GPipe (uniform live counts) so only the budgets differ: the
+        // 80G stage must take more layers than a 24G stage.
+        let act = vec![100.0; 32];
+        let ms = vec![1.0; 32];
+        let budgets = [24.0 * GIB, 80.0 * GIB];
+        let p = memory_balanced_partition_budgeted(&act, &ms, 2, 4, Schedule::GPipe, &budgets);
+        assert_eq!(p.iter().sum::<usize>(), 32);
+        assert!(p[1] > p[0], "80G stage must hold more layers: {p:?}");
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //!
 //! The sequential planner recomputed every per-layer cost `c(l, s)` at each
 //! (batch, PP, microbatch, partition) cell even though the cost depends
-//! only on (layer profile, strategy, microbatch size). [`CostCache`]
-//! memoizes both `c(l, s)` and the transform cost R across *all* cells of
-//! a search run, and collapses the (typically many) identical transformer
-//! layers into cost classes so a 32-layer homogeneous model pays for at
-//! most two distinct layers (the embedding-bearing first/head-bearing last
-//! layer being the usual second class).
+//! only on (layer profile, strategy, microbatch size, island class).
+//! [`CostCache`] memoizes both `c(l, s)` and the transform cost R across
+//! *all* cells of a search run, and collapses the (typically many)
+//! identical transformer layers into cost classes so a 32-layer homogeneous
+//! model pays for at most two distinct layers (the embedding-bearing
+//! first/head-bearing last layer being the usual second class).
+//!
+//! Heterogeneous clusters: a cost additionally depends on the island class
+//! the stage runs on (FLOP rate, bus bandwidth, memory), so every key
+//! carries the site class and the cache holds one bound estimator per
+//! class. A homogeneous cluster has a single class 0 — its keys, lookup
+//! counts and entries are identical to the pre-island cache.
 //!
 //! Thread safety: the cache is shared by every worker of the engine's
 //! (batch × PP) fan-out. Values are pure functions of their key, so a
@@ -57,23 +63,34 @@ fn same_cost_profile(model: &ModelProfile, a: usize, b: usize) -> bool {
 
 /// Outer key: everything except the strategy (which is matched by value in
 /// the inner list, avoiding a Strategy clone per lookup).
-type CellKey = (u32, u64, u64); // (class, b_m bits, extra_params bits)
+type CellKey = (u32, u32, u64, u64); // (site class, layer class, b_m bits, extra_params bits)
 
-/// Memoizing [`StageCosts`] implementation bound to one (cluster, PP,
-/// overlap) placement context — the engine builds one per PP degree.
+/// Memoizing cost source bound to one (cluster, PP, overlap) placement
+/// context — the engine builds one per PP degree, holding one estimator
+/// per island site class of that degree.
 pub struct CostCache {
-    est: CostEstimator,
+    /// Site-class-bound estimators, indexed by `StageSite::class`.
+    ests: Vec<CostEstimator>,
     classes: Vec<u32>,
     layer_costs: RwLock<HashMap<CellKey, Vec<(Strategy, LayerCost)>>>,
-    /// (class, b_m bits) -> [(prev batch-split, cur batch-split), R].
-    transforms: RwLock<HashMap<(u32, u64), Vec<((usize, usize), f64)>>>,
+    /// (site class, layer class, b_m bits) ->
+    /// [(prev batch-split, cur batch-split), R].
+    transforms: RwLock<HashMap<(u32, u32, u64), Vec<((usize, usize), f64)>>>,
     lookups: AtomicU64,
 }
 
 impl CostCache {
+    /// Single-site cache (homogeneous context; the one estimator is class
+    /// 0). Kept as the simple constructor for tests and library users.
     pub fn new(est: CostEstimator, classes: Vec<u32>) -> CostCache {
+        Self::with_sites(vec![est], classes)
+    }
+
+    /// Cache over one estimator per island site class.
+    pub fn with_sites(ests: Vec<CostEstimator>, classes: Vec<u32>) -> CostCache {
+        assert!(!ests.is_empty());
         CostCache {
-            est,
+            ests,
             classes,
             layer_costs: RwLock::new(HashMap::new()),
             transforms: RwLock::new(HashMap::new()),
@@ -81,9 +98,16 @@ impl CostCache {
         }
     }
 
-    /// The underlying (uncached) estimator.
-    pub fn estimator(&self) -> &CostEstimator {
-        &self.est
+    /// The underlying (uncached) estimator for `site_class`.
+    pub fn estimator(&self, site_class: u32) -> &CostEstimator {
+        &self.ests[site_class as usize]
+    }
+
+    /// A [`StageCosts`] view bound to one island site class — what the
+    /// stage-level DP of a stage placed on that class consumes.
+    pub fn site_costs(&self, site_class: u32) -> SiteCosts<'_> {
+        debug_assert!((site_class as usize) < self.ests.len());
+        SiteCosts { cache: self, site: site_class }
     }
 
     /// Total memoized lookups served (layer costs + transforms). The per-key
@@ -104,8 +128,66 @@ impl CostCache {
     fn class_of(&self, layer_idx: usize) -> u32 {
         self.classes[layer_idx]
     }
+
+    fn layer_cost_for(
+        &self,
+        site: u32,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        strategy: &Strategy,
+        b_m: f64,
+        extra_params: f64,
+    ) -> LayerCost {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key: CellKey = (site, self.class_of(layer_idx), b_m.to_bits(), extra_params.to_bits());
+        if let Some(row) = self.layer_costs.read().unwrap().get(&key) {
+            if let Some((_, c)) = row.iter().find(|(s, _)| s == strategy) {
+                return *c;
+            }
+        }
+        let c = self.ests[site as usize].layer_cost(layer, strategy, b_m, extra_params);
+        let mut map = self.layer_costs.write().unwrap();
+        let row = map.entry(key).or_default();
+        // Re-check: another worker may have inserted while we computed.
+        if !row.iter().any(|(s, _)| s == strategy) {
+            row.push((strategy.clone(), c));
+        }
+        c
+    }
+
+    fn transform_cost_for(
+        &self,
+        site: u32,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        prev: &Strategy,
+        cur: &Strategy,
+        b_m: f64,
+    ) -> f64 {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        // R depends on the strategies only through their batch-split degrees
+        // (parallel::transform) and on the group's slowest link, which is
+        // fixed per site class (all catalog strategies span the full stage
+        // group), so splits are a sufficient key.
+        let splits = (prev.batch_split(), cur.batch_split());
+        let key = (site, self.class_of(layer_idx), b_m.to_bits());
+        if let Some(row) = self.transforms.read().unwrap().get(&key) {
+            if let Some((_, r)) = row.iter().find(|(sp, _)| *sp == splits) {
+                return *r;
+            }
+        }
+        let r = self.ests[site as usize].transform_cost(layer, prev, cur, b_m);
+        let mut map = self.transforms.write().unwrap();
+        let row = map.entry(key).or_default();
+        if !row.iter().any(|(sp, _)| *sp == splits) {
+            row.push((splits, r));
+        }
+        r
+    }
 }
 
+/// [`StageCosts`] for a bare `CostCache`: the degenerate single-class view
+/// (site class 0) — exactly the homogeneous cache's behavior.
 impl StageCosts for CostCache {
     fn layer_cost_at(
         &self,
@@ -115,21 +197,7 @@ impl StageCosts for CostCache {
         b_m: f64,
         extra_params: f64,
     ) -> LayerCost {
-        self.lookups.fetch_add(1, Ordering::Relaxed);
-        let key: CellKey = (self.class_of(layer_idx), b_m.to_bits(), extra_params.to_bits());
-        if let Some(row) = self.layer_costs.read().unwrap().get(&key) {
-            if let Some((_, c)) = row.iter().find(|(s, _)| s == strategy) {
-                return *c;
-            }
-        }
-        let c = self.est.layer_cost(layer, strategy, b_m, extra_params);
-        let mut map = self.layer_costs.write().unwrap();
-        let row = map.entry(key).or_default();
-        // Re-check: another worker may have inserted while we computed.
-        if !row.iter().any(|(s, _)| s == strategy) {
-            row.push((strategy.clone(), c));
-        }
-        c
+        self.layer_cost_for(0, layer_idx, layer, strategy, b_m, extra_params)
     }
 
     fn transform_cost_at(
@@ -140,25 +208,38 @@ impl StageCosts for CostCache {
         cur: &Strategy,
         b_m: f64,
     ) -> f64 {
-        self.lookups.fetch_add(1, Ordering::Relaxed);
-        // R depends on the strategies only through their batch-split degrees
-        // (parallel::transform) and on the group's slowest link, which is
-        // fixed per cache (all catalog strategies span the full stage
-        // group), so splits are a sufficient key.
-        let splits = (prev.batch_split(), cur.batch_split());
-        let key = (self.class_of(layer_idx), b_m.to_bits());
-        if let Some(row) = self.transforms.read().unwrap().get(&key) {
-            if let Some((_, r)) = row.iter().find(|(sp, _)| *sp == splits) {
-                return *r;
-            }
-        }
-        let r = self.est.transform_cost(layer, prev, cur, b_m);
-        let mut map = self.transforms.write().unwrap();
-        let row = map.entry(key).or_default();
-        if !row.iter().any(|(sp, _)| *sp == splits) {
-            row.push((splits, r));
-        }
-        r
+        self.transform_cost_for(0, layer_idx, layer, prev, cur, b_m)
+    }
+}
+
+/// A shared cache viewed from one island site class: the `StageCosts`
+/// source handed to the stage-level DP of a stage placed on that class.
+pub struct SiteCosts<'a> {
+    cache: &'a CostCache,
+    site: u32,
+}
+
+impl StageCosts for SiteCosts<'_> {
+    fn layer_cost_at(
+        &self,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        strategy: &Strategy,
+        b_m: f64,
+        extra_params: f64,
+    ) -> LayerCost {
+        self.cache.layer_cost_for(self.site, layer_idx, layer, strategy, b_m, extra_params)
+    }
+
+    fn transform_cost_at(
+        &self,
+        layer_idx: usize,
+        layer: &LayerProfile,
+        prev: &Strategy,
+        cur: &Strategy,
+        b_m: f64,
+    ) -> f64 {
+        self.cache.transform_cost_for(self.site, layer_idx, layer, prev, cur, b_m)
     }
 }
 
@@ -216,6 +297,30 @@ mod tests {
                 let cached = cache.transform_cost_at(1, &model.layers[1], prev, cur, 8.0);
                 assert_eq!(direct, cached, "{prev} -> {cur}");
             }
+        }
+    }
+
+    #[test]
+    fn site_classes_are_cached_independently() {
+        // hetero4 at PP=2 has two site classes (TITAN vs A100-80G): the
+        // memoized cost of the same (layer, strategy, b_m) must differ by
+        // class and match each class's direct estimator.
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("hetero4").unwrap();
+        let sites = cluster.stage_sites(2);
+        assert_ne!(sites[0].class, sites[1].class);
+        let ests: Vec<CostEstimator> = sites
+            .iter()
+            .map(|s| CostEstimator::with_site(&cluster, 2, 1.3, s.clone()))
+            .collect();
+        let cache = CostCache::with_sites(ests.clone(), layer_classes(&model));
+        let cands = candidate_strategies(2, &SpaceOptions::default().no_ckpt());
+        for s in &cands {
+            let slow = cache.site_costs(0).layer_cost_at(1, &model.layers[1], s, 4.0, 0.0);
+            let fast = cache.site_costs(1).layer_cost_at(1, &model.layers[1], s, 4.0, 0.0);
+            assert_eq!(slow, ests[0].layer_cost(&model.layers[1], s, 4.0, 0.0));
+            assert_eq!(fast, ests[1].layer_cost(&model.layers[1], s, 4.0, 0.0));
+            assert!(slow.fwd > fast.fwd, "TITAN must be slower: {} vs {}", slow.fwd, fast.fwd);
         }
     }
 }

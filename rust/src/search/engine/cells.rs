@@ -3,6 +3,13 @@
 //! reads only its own inputs and the shared (thread-safe) cost cache — so
 //! cells can run on any worker in any order and still reproduce the
 //! sequential planner's results exactly.
+//!
+//! Heterogeneous clusters: every kernel additionally sweeps the context's
+//! candidate stage→slot placements (capacity-ranked first, identity
+//! second) and prices each stage on its assigned island — per-stage memory
+//! budgets in the DP, per-stage FLOP rates in the seeds. Homogeneous
+//! clusters have a single identity placement, so their evaluation counts,
+//! plans and traces are untouched.
 
 use std::collections::VecDeque;
 
@@ -12,9 +19,9 @@ use crate::cost::StageCosts;
 use crate::model::ModelProfile;
 use crate::parallel::ParallelPlan;
 use crate::search::base::{LayerDiag, SearchConfig, SearchOutcome};
-use crate::search::bmw::{adjust_candidates, memory_balanced_partition, proxy_stage_stats};
+use crate::search::bmw::{adjust_candidates, memory_balanced_partition_budgeted, proxy_stage_stats};
 use crate::search::dp::{dp_search, DpInput};
-use crate::search::partition::{balanced_partition, even_partition};
+use crate::search::partition::{even_partition, rated_balanced_partition};
 
 use super::trace::CellTrace;
 use super::{PartitionKind, PpContext};
@@ -72,6 +79,13 @@ fn strategy_init_weights(model: &ModelProfile, group: usize, b_m: f64) -> (Vec<f
     (act_w, ms_w)
 }
 
+/// Per-stage memory budgets and FLOP rates of a placement.
+fn placement_budgets(ctx: &PpContext, placement: &[usize]) -> (Vec<f64>, Vec<f64>) {
+    let budgets = placement.iter().map(|&s| ctx.sites[s].gpu.mem_bytes).collect();
+    let rates = placement.iter().map(|&s| ctx.sites[s].gpu.flops).collect();
+    (budgets, rates)
+}
+
 /// Microbatch-count candidates under the config's accumulation cap.
 fn microbatch_options(cfg: &SearchConfig, batch: usize, pp: usize) -> Vec<usize> {
     let mut mbs = crate::search::microbatch_candidates(batch, pp);
@@ -85,7 +99,9 @@ fn microbatch_options(cfg: &SearchConfig, batch: usize, pp: usize) -> Vec<usize>
 }
 
 /// Cache-aware port of `search::base::evaluate_partition`: run the stage
-/// DPs over the precomputed candidate catalog and compose the plan.
+/// DPs over the precomputed candidate catalog — each stage against its
+/// placed island's budget and cost class — and compose the plan.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn evaluate_partition_cached(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -94,6 +110,7 @@ pub(crate) fn evaluate_partition_cached(
     batch: usize,
     microbatches: usize,
     partition: &[usize],
+    placement: &[usize],
 ) -> Option<(SearchOutcome, Vec<LayerDiag>)> {
     if ctx.candidates.is_empty() {
         return None;
@@ -103,6 +120,8 @@ pub(crate) fn evaluate_partition_cached(
     let mut strategies = Vec::with_capacity(model.n_layers());
     let mut start = 0usize;
     for (s, &count) in partition.iter().enumerate() {
+        let site = &ctx.sites[placement[s]];
+        let costs = ctx.cache.site_costs(site.class);
         let layers = &model.layers[start..start + count];
         let extra: Vec<f64> = (start..start + count).map(|i| model.extra_params(i)).collect();
         let live = cfg.schedule.live_microbatches(s, ctx.pp, microbatches);
@@ -110,12 +129,12 @@ pub(crate) fn evaluate_partition_cached(
             layers,
             extra_params: &extra,
             strategies: &ctx.candidates,
-            costs: &ctx.cache,
+            costs: &costs,
             layer_offset: start,
             b_m,
             microbatches,
             live_mb: live,
-            mem_budget: cluster.gpu.mem_bytes,
+            mem_budget: site.gpu.mem_bytes,
             granularity: cfg.granularity,
         })?;
         strategies.extend(res.strategies);
@@ -128,6 +147,7 @@ pub(crate) fn evaluate_partition_cached(
         strategies,
         batch,
         microbatches,
+        stage_slots: if cluster.is_homogeneous() { None } else { Some(placement.to_vec()) },
     };
     let cost = plan_cost(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown);
     if !cost.feasible {
@@ -135,9 +155,20 @@ pub(crate) fn evaluate_partition_cached(
     }
 
     let mut diags = Vec::with_capacity(model.n_layers());
-    for (i, layer) in model.layers.iter().enumerate() {
-        let c = ctx.cache.layer_cost_at(i, layer, &plan.strategies[i], b_m, model.extra_params(i));
-        diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+    let mut start = 0usize;
+    for (s, &count) in partition.iter().enumerate() {
+        let costs = ctx.cache.site_costs(ctx.sites[placement[s]].class);
+        for i in start..start + count {
+            let c = costs.layer_cost_at(
+                i,
+                &model.layers[i],
+                &plan.strategies[i],
+                b_m,
+                model.extra_params(i),
+            );
+            diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+        }
+        start += count;
     }
     Some((SearchOutcome { plan, cost }, diags))
 }
@@ -160,10 +191,22 @@ pub(crate) fn eval_even_cell(
     let mut worse_streak = 0usize;
     let mut best_mb: Option<f64> = None;
     for m in microbatch_options(cfg, batch, ctx.pp) {
-        cell.evaluations += 1;
-        match evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &partition) {
-            Some((out, _)) => {
+        // Best over the candidate placements for this microbatch count
+        // (single identity placement on homogeneous clusters).
+        let mut m_best: Option<SearchOutcome> = None;
+        for placement in &ctx.placements {
+            cell.evaluations += 1;
+            if let Some((out, _)) = evaluate_partition_cached(
+                model, cluster, cfg, ctx, batch, m, &partition, placement,
+            ) {
                 cell.feasible = true;
+                if m_best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
+                    m_best = Some(out);
+                }
+            }
+        }
+        match m_best {
+            Some(out) => {
                 let t = out.throughput();
                 if best_mb.map_or(true, |b| t > b) {
                     best_mb = Some(t);
@@ -183,7 +226,7 @@ pub(crate) fn eval_even_cell(
 }
 
 /// Galvatron-BMW cell: Algorithm 2's boundary-adjustment queue for every
-/// microbatch count of this (batch, PP) cell.
+/// microbatch count (and candidate placement) of this (batch, PP) cell.
 pub(crate) fn eval_bmw_cell(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -204,12 +247,14 @@ pub(crate) fn eval_bmw_cell(
         // to balance — still evaluate it via the even path so pure
         // intra-stage plans are not lost.
         for m in microbatch_options(cfg, batch, 1) {
-            cell.evaluations += 1;
-            if let Some((out, _)) =
-                evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &[n_layers])
-            {
-                cell.feasible = true;
-                cell.offer(out);
+            for placement in &ctx.placements {
+                cell.evaluations += 1;
+                if let Some((out, _)) = evaluate_partition_cached(
+                    model, cluster, cfg, ctx, batch, m, &[n_layers], placement,
+                ) {
+                    cell.feasible = true;
+                    cell.offer(out);
+                }
             }
         }
         return cell;
@@ -219,71 +264,83 @@ pub(crate) fn eval_bmw_cell(
     for m in microbatch_options(cfg, batch, pp) {
         let b_m = batch as f64 / m as f64;
         let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
-        let p_m = memory_balanced_partition(&act_w, &ms_w, pp, m, cfg.schedule);
-        let p_t = balanced_partition(flops_w, pp);
+        for placement in &ctx.placements {
+            let (budgets, rates) = placement_budgets(ctx, placement);
+            // Seeds re-derived against the placement's budgets/rates: p_m
+            // balances per-island memory utilization, p_t per-island
+            // normalized time (both reduce to the original homogeneous
+            // partitions under uniform budgets/rates).
+            let p_m = memory_balanced_partition_budgeted(
+                &act_w, &ms_w, pp, m, cfg.schedule, &budgets,
+            );
+            let p_t = rated_balanced_partition(flops_w, pp, &rates);
 
-        let mut queue: VecDeque<Vec<usize>> = VecDeque::new();
-        let mut visited: Vec<Vec<usize>> = Vec::new();
-        // Seed with p_m (Algorithm 2 line 7); also evaluate the even and
-        // time-balanced partitions so BMW's answer is never worse than
-        // Galvatron-Base's for the same (B,P,m).
-        queue.push_back(p_m.clone());
-        queue.push_back(even_partition(n_layers, pp));
-        queue.push_back(p_t.clone());
-        let max_iters = 4 * n_layers;
-        let mut iters = 0usize;
-        let mut local_best_tp = f64::NEG_INFINITY;
-        let mut stale = 0usize;
+            let mut queue: VecDeque<Vec<usize>> = VecDeque::new();
+            let mut visited: Vec<Vec<usize>> = Vec::new();
+            // Seed with p_m (Algorithm 2 line 7); also evaluate the even and
+            // time-balanced partitions so BMW's answer is never worse than
+            // Galvatron-Base's for the same (B,P,m).
+            queue.push_back(p_m.clone());
+            queue.push_back(even_partition(n_layers, pp));
+            queue.push_back(p_t.clone());
+            let max_iters = 4 * n_layers;
+            let mut iters = 0usize;
+            let mut local_best_tp = f64::NEG_INFINITY;
+            let mut stale = 0usize;
 
-        while let Some(part) = queue.pop_front() {
-            iters += 1;
-            if iters > max_iters {
-                break;
-            }
-            if visited.contains(&part) {
-                continue;
-            }
-            visited.push(part.clone());
-            cell.evaluations += 1;
-            let Some((out, diags)) =
-                evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &part)
-            else {
-                continue;
-            };
-            cell.feasible = true;
-            if out.throughput() > local_best_tp {
-                local_best_tp = out.throughput();
-                stale = 0;
-            } else {
-                stale += 1;
-                if stale > 6 {
+            while let Some(part) = queue.pop_front() {
+                iters += 1;
+                if iters > max_iters {
                     break;
                 }
-            }
-            cell.offer(out);
-
-            // Adjustment (Algorithm 2 line 13-15).
-            let (times, _mems) = proxy_stage_stats(&diags, &part, m, cfg.schedule);
-            let c_max = times.iter().cloned().fold(0.0, f64::max);
-            let slowest = times
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i)
-                .unwrap();
-            // Validation limit (3): max stage memory under p_t.
-            let (_, mems_pt) = proxy_stage_stats(&diags, &p_t, m, cfg.schedule);
-            let mem_cap_pt = mems_pt.iter().cloned().fold(0.0, f64::max);
-            for cand in adjust_candidates(&part, slowest) {
-                if visited.contains(&cand) {
+                if visited.contains(&part) {
                     continue;
                 }
-                let (t2, m2) = proxy_stage_stats(&diags, &cand, m, cfg.schedule);
-                let cond1 = t2.iter().cloned().fold(0.0, f64::max) <= c_max + 1e-12;
-                let cond2 = m2.iter().all(|&x| x <= cluster.gpu.mem_bytes);
-                let cond3 = m2.iter().all(|&x| x <= mem_cap_pt.max(cluster.gpu.mem_bytes));
-                if cond1 && cond2 && cond3 {
-                    queue.push_back(cand);
+                visited.push(part.clone());
+                cell.evaluations += 1;
+                let Some((out, diags)) = evaluate_partition_cached(
+                    model, cluster, cfg, ctx, batch, m, &part, placement,
+                ) else {
+                    continue;
+                };
+                cell.feasible = true;
+                if out.throughput() > local_best_tp {
+                    local_best_tp = out.throughput();
+                    stale = 0;
+                } else {
+                    stale += 1;
+                    if stale > 6 {
+                        break;
+                    }
+                }
+                cell.offer(out);
+
+                // Adjustment (Algorithm 2 line 13-15).
+                let (times, _mems) = proxy_stage_stats(&diags, &part, m, cfg.schedule);
+                let c_max = times.iter().cloned().fold(0.0, f64::max);
+                let slowest = times
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                // Validation limit (3): max stage memory under p_t.
+                let (_, mems_pt) = proxy_stage_stats(&diags, &p_t, m, cfg.schedule);
+                let mem_cap_pt = mems_pt.iter().cloned().fold(0.0, f64::max);
+                for cand in adjust_candidates(&part, slowest) {
+                    if visited.contains(&cand) {
+                        continue;
+                    }
+                    let (t2, m2) = proxy_stage_stats(&diags, &cand, m, cfg.schedule);
+                    let cond1 = t2.iter().cloned().fold(0.0, f64::max) <= c_max + 1e-12;
+                    // (2)/(3) against each stage's *assigned island* budget
+                    // — the heterogeneous form of the Eq. 7/8 sandwich.
+                    let cond2 = m2.iter().zip(&budgets).all(|(&x, &b)| x <= b);
+                    let cond3 =
+                        m2.iter().zip(&budgets).all(|(&x, &b)| x <= mem_cap_pt.max(b));
+                    if cond1 && cond2 && cond3 {
+                        queue.push_back(cand);
+                    }
                 }
             }
         }
@@ -308,20 +365,25 @@ pub(crate) fn eval_fixed_cell(
     }
     let group = ctx.group;
     for m in microbatch_options(cfg, batch, ctx.pp) {
-        let partition = match kind {
-            PartitionKind::TimeBalanced => balanced_partition(flops_w, ctx.pp),
-            PartitionKind::MemoryBalanced => {
-                let b_m = batch as f64 / m as f64;
-                let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
-                memory_balanced_partition(&act_w, &ms_w, ctx.pp, m, cfg.schedule)
+        for placement in &ctx.placements {
+            let (budgets, rates) = placement_budgets(ctx, placement);
+            let partition = match kind {
+                PartitionKind::TimeBalanced => rated_balanced_partition(flops_w, ctx.pp, &rates),
+                PartitionKind::MemoryBalanced => {
+                    let b_m = batch as f64 / m as f64;
+                    let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
+                    memory_balanced_partition_budgeted(
+                        &act_w, &ms_w, ctx.pp, m, cfg.schedule, &budgets,
+                    )
+                }
+            };
+            cell.evaluations += 1;
+            if let Some((out, _)) = evaluate_partition_cached(
+                model, cluster, cfg, ctx, batch, m, &partition, placement,
+            ) {
+                cell.feasible = true;
+                cell.offer(out);
             }
-        };
-        cell.evaluations += 1;
-        if let Some((out, _)) =
-            evaluate_partition_cached(model, cluster, cfg, ctx, batch, m, &partition)
-        {
-            cell.feasible = true;
-            cell.offer(out);
         }
     }
     cell

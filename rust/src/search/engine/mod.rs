@@ -27,13 +27,13 @@ pub mod cache;
 pub mod trace;
 mod cells;
 
-pub use cache::{layer_classes, CostCache};
+pub use cache::{layer_classes, CostCache, SiteCosts};
 pub use trace::{CellTrace, SearchTrace};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, StageSite};
 use crate::cost::CostEstimator;
 use crate::model::ModelProfile;
 use crate::parallel::Strategy;
@@ -63,12 +63,42 @@ pub enum CellAlgo {
 }
 
 /// Precomputed per-PP-degree context shared by all cells of that degree:
-/// stage group size, the candidate catalog, and the memoized cost cache.
+/// stage group size, the candidate catalog, the island slot sites, the
+/// candidate stage→slot placements, and the memoized cost cache (one
+/// bound estimator per island site class).
 pub(crate) struct PpContext {
     pub pp: usize,
     pub group: usize,
     pub candidates: Vec<Strategy>,
+    /// Slot sites of this PP degree, in device order.
+    pub sites: Vec<StageSite>,
+    /// Candidate stage→slot assignments, deduped by slot-class signature:
+    /// the capacity-ranked placement (memory-heavy early 1F1B stages on
+    /// large-memory slots) first, then the identity if it differs. A
+    /// homogeneous cluster collapses to the identity alone, so its cell
+    /// evaluation counts — and trace — are unchanged.
+    pub placements: Vec<Vec<usize>>,
     pub cache: CostCache,
+}
+
+/// Candidate stage→slot placements for one PP degree. The capacity-ranked
+/// placement assigns the k-th largest-memory slot to stage k — under 1F1B
+/// stage 0 holds the most live microbatches, so memory-heavy stages land
+/// on large-memory islands. The stable sort keeps device order on ties,
+/// which makes the ranked placement equal the identity on homogeneous
+/// clusters (deduped to a single entry).
+fn placement_candidates(sites: &[StageSite]) -> Vec<Vec<usize>> {
+    let p = sites.len();
+    let identity: Vec<usize> = (0..p).collect();
+    let mut ranked = identity.clone();
+    ranked.sort_by(|&a, &b| sites[b].gpu.mem_bytes.total_cmp(&sites[a].gpu.mem_bytes));
+    let signature =
+        |pl: &[usize]| -> Vec<u32> { pl.iter().map(|&s| sites[s].class).collect() };
+    let mut out = vec![ranked];
+    if signature(&identity) != signature(&out[0]) {
+        out.push(identity);
+    }
+    out
 }
 
 /// Look-ahead window of the batch sweep: cells of this many consecutive
@@ -103,16 +133,31 @@ impl<'a> SearchEngine<'a> {
         let contexts: Vec<PpContext> = pp_degrees(model, cluster, cfg)
             .into_iter()
             .map(|pp| {
-                let group = cluster.n_devices / pp;
+                let group = cluster.n_devices() / pp;
                 let candidates = stage_candidates(cfg, group);
+                let sites = cluster.stage_sites(pp);
+                // One bound estimator per distinct island site class (a
+                // homogeneous cluster has exactly one, class 0).
+                let n_classes =
+                    sites.iter().map(|s| s.class).max().map(|c| c as usize + 1).unwrap_or(1);
+                let ests: Vec<CostEstimator> = (0..n_classes)
+                    .map(|c| {
+                        let site = sites
+                            .iter()
+                            .find(|s| s.class == c as u32)
+                            .expect("contiguous site class ids")
+                            .clone();
+                        CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site)
+                    })
+                    .collect();
+                let placements = placement_candidates(&sites);
                 PpContext {
                     pp,
                     group,
                     candidates,
-                    cache: CostCache::new(
-                        CostEstimator::new(cluster, pp, cfg.overlap_slowdown),
-                        classes.clone(),
-                    ),
+                    sites,
+                    placements,
+                    cache: CostCache::with_sites(ests, classes.clone()),
                 }
             })
             .collect();
@@ -286,6 +331,36 @@ mod tests {
         assert!(trace.cache_lookups > trace.cache_entries);
         assert!(trace.cache_hit_rate() > 0.5, "hit rate {}", trace.cache_hit_rate());
         assert!(trace.best_cell.is_some());
+    }
+
+    #[test]
+    fn placements_collapse_on_homogeneous_and_rank_on_mixed() {
+        let hom = cluster_by_name("titan8").unwrap().stage_sites(4);
+        assert_eq!(placement_candidates(&hom), vec![vec![0, 1, 2, 3]]);
+        // hetero4 lists the TITAN island first: the ranked placement must
+        // put stage 0 on the A100-80G slot, with identity as the fallback.
+        let het = cluster_by_name("hetero4").unwrap().stage_sites(2);
+        let pls = placement_candidates(&het);
+        assert_eq!(pls.len(), 2);
+        assert_eq!(pls[0], vec![1, 0]);
+        assert_eq!(pls[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn mixed_island_run_is_thread_deterministic() {
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("hetero4").unwrap();
+        let (b1, t1) = SearchEngine::new(&model, &cluster, &cfg(1, 32), CellAlgo::Bmw).run();
+        let (b8, t8) = SearchEngine::new(&model, &cluster, &cfg(8, 32), CellAlgo::Bmw).run();
+        assert_eq!(t1, t8, "trace must not depend on worker count");
+        match (b1, b8) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.plan, y.plan);
+                assert_eq!(x.cost.throughput.to_bits(), y.cost.throughput.to_bits());
+            }
+            (None, None) => {}
+            _ => panic!("feasibility differed across thread counts"),
+        }
     }
 
     #[test]

@@ -56,6 +56,96 @@ pub fn balanced_partition(weights: &[f64], stages: usize) -> Vec<usize> {
     cuts_to_counts(&cuts, n)
 }
 
+/// Contiguous partition of `weights` into `stages` parts minimizing the
+/// maximum *normalized* part time `part_sum / rates[s]` — the
+/// time-balanced partition p_t on a heterogeneous pipeline whose stage `s`
+/// runs at `rates[s]` FLOP/s. Uniform rates delegate to
+/// [`balanced_partition`] bit-for-bit (the homogeneous degenerate case);
+/// otherwise the bottleneck is minimized exactly by
+/// [`min_bottleneck_partition`] (the homogeneous greedy is only correct
+/// for uniform stage allowances).
+pub fn rated_balanced_partition(weights: &[f64], stages: usize, rates: &[f64]) -> Vec<usize> {
+    assert_eq!(rates.len(), stages);
+    if rates.windows(2).all(|w| w[0] == w[1]) {
+        return balanced_partition(weights, stages);
+    }
+    let n = weights.len();
+    let zeros = vec![0.0f64; n];
+    let stage_cost = move |s: usize, j: usize, i: usize, pw: &[f64], _pz: &[f64]| -> f64 {
+        (pw[i] - pw[j]) / rates[s]
+    };
+    min_bottleneck_partition(n, stages, weights, &zeros, &stage_cost)
+}
+
+/// Exact min-bottleneck contiguous partition of `n` layers into `stages`
+/// non-empty parts, where the cost of layers `[j, i)` on stage `s` is
+/// `stage_cost(s, j, i, prefix_a, prefix_b)` over prefix sums of the two
+/// weight vectors (stage-dependent costs — per-island budgets or FLOP
+/// rates — need this interval DP; the classic bisection+greedy above is
+/// only optimal when every stage shares one allowance). O(stages·n²);
+/// ties resolve to the earliest cut, so results are deterministic.
+pub fn min_bottleneck_partition(
+    n: usize,
+    stages: usize,
+    weights_a: &[f64],
+    weights_b: &[f64],
+    stage_cost: &dyn Fn(usize, usize, usize, &[f64], &[f64]) -> f64,
+) -> Vec<usize> {
+    assert!(stages >= 1 && stages <= n);
+    if stages == 1 {
+        return vec![n];
+    }
+    let mut pa = vec![0.0f64; n + 1];
+    let mut pb = vec![0.0f64; n + 1];
+    for i in 0..n {
+        pa[i + 1] = pa[i] + weights_a[i];
+        pb[i + 1] = pb[i] + weights_b[i];
+    }
+    const INF: f64 = f64::INFINITY;
+    // dp[i]: min bottleneck covering the first i layers with the stages
+    // processed so far; parent[s][i]: the cut j achieving it at stage s.
+    let mut dp = vec![INF; n + 1];
+    let mut parent = vec![vec![0usize; n + 1]; stages];
+    // Stage 0 covers [0, i), leaving at least one layer per later stage.
+    for i in 1..=(n - (stages - 1)) {
+        dp[i] = stage_cost(0, 0, i, &pa, &pb);
+    }
+    for s in 1..stages {
+        let mut next = vec![INF; n + 1];
+        let remaining = stages - 1 - s;
+        // Stage s ends at i: >= s layers before it, `remaining` after it.
+        for i in (s + 1)..=(n - remaining) {
+            let mut best = INF;
+            let mut best_j = 0usize;
+            for j in s..i {
+                if !dp[j].is_finite() {
+                    continue;
+                }
+                let c = dp[j].max(stage_cost(s, j, i, &pa, &pb));
+                if c < best {
+                    best = c;
+                    best_j = j;
+                }
+            }
+            next[i] = best;
+            parent[s][i] = best_j;
+        }
+        dp = next;
+    }
+    // Backtrack cuts from the full cover.
+    let mut counts = vec![0usize; stages];
+    let mut i = n;
+    for s in (1..stages).rev() {
+        let j = parent[s][i];
+        counts[s] = i - j;
+        i = j;
+    }
+    counts[0] = i;
+    debug_assert_eq!(counts.iter().sum::<usize>(), n);
+    debug_assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+    counts
+}
+
 /// Can `weights` be split into `stages` contiguous parts each <= cap?
 fn feasible(weights: &[f64], stages: usize, cap: f64) -> bool {
     let mut parts = 1;
@@ -227,6 +317,60 @@ mod tests {
             best
         }
         rec(w, stages)
+    }
+
+    #[test]
+    fn rated_uniform_delegates_to_balanced() {
+        let mut rng = Rng::new(21);
+        for _ in 0..40 {
+            let n = rng.range(4, 24) as usize;
+            let stages = rng.range(2, 6.min(n as i64)) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.f64() * 5.0 + 0.1).collect();
+            let rates = vec![3.0e12; stages];
+            assert_eq!(
+                rated_balanced_partition(&w, stages, &rates),
+                balanced_partition(&w, stages)
+            );
+        }
+    }
+
+    #[test]
+    fn rated_partition_favors_fast_stages() {
+        // Uniform layers, stage 1 is 4x faster: it must take more layers.
+        let w = vec![1.0; 16];
+        let counts = rated_balanced_partition(&w, 2, &[1.0, 4.0]);
+        assert_eq!(counts.iter().sum::<usize>(), 16);
+        assert!(counts[1] > counts[0], "{counts:?}");
+        // Normalized bottleneck beats the even split's.
+        let norm_max = |c: &[usize], rates: &[f64]| {
+            let mut best: f64 = 0.0;
+            let mut i = 0;
+            for (s, &cnt) in c.iter().enumerate() {
+                let sum: f64 = w[i..i + cnt].iter().sum();
+                best = best.max(sum / rates[s]);
+                i += cnt;
+            }
+            best
+        };
+        assert!(
+            norm_max(&counts, &[1.0, 4.0]) <= norm_max(&even_partition(16, 2), &[1.0, 4.0]) + 1e-9
+        );
+    }
+
+    #[test]
+    fn rated_partition_every_stage_nonempty() {
+        let mut rng = Rng::new(33);
+        for _ in 0..100 {
+            let n = rng.range(4, 30) as usize;
+            let stages = rng.range(2, 7.min(n as i64)) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0 + 0.01).collect();
+            let rates: Vec<f64> =
+                (0..stages).map(|_| [1.0, 2.0, 4.0][rng.below(3) as usize]).collect();
+            let counts = rated_balanced_partition(&w, stages, &rates);
+            assert_eq!(counts.len(), stages);
+            assert_eq!(counts.iter().sum::<usize>(), n);
+            assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+        }
     }
 
     #[test]

@@ -46,6 +46,9 @@ pub struct SimReport {
     pub throughput: f64,
     /// Per-stage peak memory, bytes.
     pub stage_peak_mem: Vec<f64>,
+    /// Per-stage device memory capacity (the assigned island's budget),
+    /// bytes — the ceiling the allocation timeline is checked against.
+    pub stage_capacity: Vec<f64>,
     /// Per-stage busy (non-idle) time, seconds.
     pub stage_busy: Vec<f64>,
     /// Per-stage bubble fraction: 1 - busy/iter_time.
@@ -66,6 +69,15 @@ impl SimReport {
         } else {
             0.0
         }
+    }
+
+    /// Whether every stage's simulated high-water mark fits its assigned
+    /// island's memory capacity.
+    pub fn fits_capacity(&self) -> bool {
+        self.stage_peak_mem
+            .iter()
+            .zip(&self.stage_capacity)
+            .all(|(peak, cap)| peak <= cap)
     }
 
     /// Memory balance degree alpha_m over simulated peaks (Eq. 6).
@@ -100,11 +112,27 @@ fn build_stage_models(
     cluster: &ClusterSpec,
     plan: &ParallelPlan,
     overlap_slowdown: f64,
+    sites: &[crate::cluster::StageSite],
 ) -> Vec<StageModel> {
-    let est = CostEstimator::new(cluster, plan.pp, overlap_slowdown);
+    // Task durations come from each stage's assigned island (FLOP rate and
+    // bus); identical to a single shared estimator on homogeneous clusters.
+    // One estimator per distinct site class (not per stage) — see the
+    // matching note in `cost::pipeline::plan_cost`.
+    let n_classes = sites.iter().map(|s| s.class).max().map(|c| c as usize + 1).unwrap_or(1);
+    let ests: Vec<CostEstimator> = (0..n_classes)
+        .map(|c| {
+            let site = sites
+                .iter()
+                .find(|s| s.class == c as u32)
+                .expect("contiguous site class ids")
+                .clone();
+            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
+        })
+        .collect();
     let b_m = plan.microbatch_size();
     let mut out = Vec::with_capacity(plan.pp);
     for s in 0..plan.pp {
+        let est = &ests[sites[plan.slot_of(s)].class as usize];
         let range = plan.stage_layers(s);
         let mut fwd = 0.0;
         let mut bwd = 0.0;
@@ -157,7 +185,8 @@ pub fn simulate(
 ) -> SimReport {
     let p = plan.pp;
     let m = plan.microbatches;
-    let stages = build_stage_models(model, cluster, plan, overlap_slowdown);
+    let sites = cluster.stage_sites(p);
+    let stages = build_stage_models(model, cluster, plan, overlap_slowdown, &sites);
     let link_bw = cluster.pipeline_link_bw(p);
 
     // Fixed per-device task order (the real schedule).
@@ -281,11 +310,14 @@ pub fn simulate(
 
     let bubble_fraction: Vec<f64> = busy.iter().map(|b| 1.0 - b / iter_time).collect();
     let stage_mb_time: Vec<f64> = stages.iter().map(|st| st.fwd + st.bwd).collect();
+    let stage_capacity: Vec<f64> =
+        (0..p).map(|s| sites[plan.slot_of(s)].gpu.mem_bytes).collect();
 
     SimReport {
         iter_time,
         throughput: plan.batch as f64 / iter_time,
         stage_peak_mem,
+        stage_capacity,
         stage_busy: busy,
         bubble_fraction,
         stage_mb_time,
@@ -308,7 +340,14 @@ mod tests {
         for i in 0..rem {
             partition[i] += 1;
         }
-        ParallelPlan { pp, partition, strategies: vec![strat; layers], batch, microbatches: m }
+        ParallelPlan {
+            pp,
+            partition,
+            strategies: vec![strat; layers],
+            batch,
+            microbatches: m,
+            stage_slots: None,
+        }
     }
 
     #[test]
@@ -414,6 +453,23 @@ mod tests {
             let rel = (sim.stage_peak_mem[s] - est.stages[s].peak_mem).abs() / est.stages[s].peak_mem;
             assert!(rel < 0.05, "stage {s}: sim {} est {}", sim.stage_peak_mem[s], est.stages[s].peak_mem);
         }
+    }
+
+    #[test]
+    fn stage_capacity_tracks_assigned_islands() {
+        use crate::util::GIB;
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("hetero4").unwrap();
+        let mut pl = plan(2, 8, 2, Strategy::single(Dim::Dp, 2, false), 32);
+        // Place stage 0 (memory-heavy under 1F1B) on the A100-80G island.
+        pl.stage_slots = Some(vec![1, 0]);
+        let r = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        assert_eq!(r.stage_capacity, vec![80.0 * GIB, 24.0 * GIB]);
+        // Homogeneous cluster: uniform capacity.
+        let hom = cluster_by_name("titan8").unwrap();
+        let pl = plan(2, 8, 2, Strategy::single(Dim::Dp, 4, false), 32);
+        let r = simulate(&model, &hom, &pl, Schedule::OneFOneB, 1.3);
+        assert_eq!(r.stage_capacity, vec![24.0 * GIB, 24.0 * GIB]);
     }
 
     #[test]

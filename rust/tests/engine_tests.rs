@@ -22,7 +22,7 @@ fn memoized_layer_costs_equal_direct_estimator_for_every_catalog_strategy() {
     let model = model_by_name("bert-huge-32").unwrap();
     let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
     for pp in [1usize, 2, 4] {
-        let group = cluster.n_devices / pp;
+        let group = cluster.n_devices() / pp;
         let est = CostEstimator::new(&cluster, pp, 1.3);
         let cache = CostCache::new(est.clone(), layer_classes(&model));
         let catalog = candidate_strategies(group, &SpaceOptions::default());

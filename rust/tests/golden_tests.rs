@@ -1,0 +1,144 @@
+//! Golden-plan snapshot tests (ISSUE 3): commit `PlanReport` JSON
+//! artifacts for three zoo configurations and assert byte-identical
+//! re-generation — catching accidental search-space, cost-model or
+//! serialization drift, and pinning the guarantee that homogeneous
+//! clusters keep producing the pre-island planner's artifacts.
+//!
+//! Blessing: the first run (or `GALVATRON_BLESS=1 cargo test --test
+//! golden_tests`) writes `rust/tests/golden/<case>.json`; subsequent runs
+//! compare byte-for-byte. Regenerate deliberately after an intentional
+//! planner change and commit the refreshed artifacts (see README
+//! "Golden plan snapshots").
+
+use std::path::PathBuf;
+
+use galvatron::api::{MethodSpec, PlanReport, PlanRequest};
+
+struct GoldenCase {
+    model: &'static str,
+    cluster: &'static str,
+    method: MethodSpec,
+    memory_gb: Option<f64>,
+    max_batch: usize,
+    slug: &'static str,
+}
+
+fn cases() -> Vec<GoldenCase> {
+    vec![
+        GoldenCase {
+            model: "bert-huge-32",
+            cluster: "titan8",
+            method: MethodSpec::Bmw { ckpt: true },
+            memory_gb: Some(16.0),
+            max_batch: 32,
+            slug: "bert-huge-32_titan8_bmw_16g",
+        },
+        GoldenCase {
+            model: "t5-512/4-32",
+            cluster: "titan8",
+            method: MethodSpec::Base { ckpt: true },
+            memory_gb: Some(8.0),
+            max_batch: 32,
+            slug: "t5-512-4-32_titan8_base_8g",
+        },
+        // Mixed islands: pins the heterogeneous search space + the
+        // stage_slots artifact extension.
+        GoldenCase {
+            model: "bert-huge-32",
+            cluster: "hetero4",
+            method: MethodSpec::Bmw { ckpt: true },
+            memory_gb: None,
+            max_batch: 16,
+            slug: "bert-huge-32_hetero4_bmw",
+        },
+    ]
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn plan_json(case: &GoldenCase, threads: usize) -> String {
+    let mut req = PlanRequest::new(case.model, case.cluster)
+        .max_batch(case.max_batch)
+        .method(case.method.clone())
+        .threads(threads);
+    if let Some(gb) = case.memory_gb {
+        req = req.memory_gb(gb);
+    }
+    req.plan()
+        .unwrap_or_else(|e| panic!("{}: {e}", case.slug))
+        .to_json_string()
+}
+
+#[test]
+fn golden_plan_artifacts_are_byte_stable() {
+    let dir = golden_dir();
+    let bless_all = std::env::var("GALVATRON_BLESS").is_ok();
+    for case in cases() {
+        // In-process determinism first: worker count must never change
+        // the artifact bytes (homogeneous and mixed-island cases alike).
+        let json = plan_json(&case, 1);
+        assert_eq!(
+            json,
+            plan_json(&case, 8),
+            "{}: thread count changed the artifact",
+            case.slug
+        );
+        // The artifact round-trips losslessly before it becomes a golden.
+        let report = PlanReport::from_json_str(&json).expect("parse back");
+        assert_eq!(report.to_json_string(), json, "{}: unstable serialization", case.slug);
+
+        let path = dir.join(format!("{}.json", case.slug));
+        if bless_all || !path.exists() {
+            std::fs::create_dir_all(&dir).expect("create golden dir");
+            std::fs::write(&path, &json).expect("write golden");
+            eprintln!("blessed golden plan {}", path.display());
+        } else {
+            let golden = std::fs::read_to_string(&path).expect("read golden");
+            assert_eq!(
+                json,
+                golden,
+                "{}: plan artifact drifted from {} — if the change is intentional, \
+                 regenerate with GALVATRON_BLESS=1 cargo test --test golden_tests \
+                 and commit the refreshed artifact",
+                case.slug,
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_artifacts_resimulate() {
+    // A committed golden must stay loadable and simulatable: the artifact
+    // pipeline (plan → save → load → simulate) is part of the snapshot
+    // contract. Runs against freshly planned artifacts when goldens are
+    // not yet blessed.
+    let planner = galvatron::api::Planner::new();
+    for case in cases() {
+        let path = golden_dir().join(format!("{}.json", case.slug));
+        let report = if path.exists() {
+            PlanReport::load(&path).unwrap_or_else(|e| panic!("{}: {e}", case.slug))
+        } else {
+            PlanReport::from_json_str(&plan_json(&case, 1)).unwrap()
+        };
+        let sim = planner
+            .simulate_report(&report)
+            .unwrap_or_else(|e| panic!("{}: {e}", case.slug));
+        assert!(sim.throughput > 0.0);
+        // The DES tracker and the planner's Eq. 2 accounting differ by a
+        // small schedule-dependent slack; 5% mirrors the sim memory tests.
+        for (s, (&peak, &cap)) in
+            sim.stage_peak_mem.iter().zip(&sim.stage_capacity).enumerate()
+        {
+            assert!(
+                peak <= cap * 1.05,
+                "{}: stage {s} peak {:.2}G exceeds capacity {:.2}G",
+                case.slug,
+                peak / 1e9,
+                cap / 1e9
+            );
+        }
+    }
+}

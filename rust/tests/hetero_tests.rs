@@ -1,0 +1,164 @@
+//! Heterogeneous-cluster integration tests (ISSUE 3 acceptance):
+//!
+//!   * on a mixed 2×A100-80G + 2×RTX-TITAN-24G cluster the planner finds a
+//!     feasible strategy whose memory-heaviest pipeline stages sit on the
+//!     80G islands, with every stage inside its own island's budget;
+//!   * a homogeneous cluster built through the new island list produces
+//!     byte-identical plan artifacts to the uniform constructor (the
+//!     degenerate-case guarantee);
+//!   * typed `PlanError`s (no panics) for bad island CLI input;
+//!   * thread-count determinism on mixed-island clusters.
+
+use galvatron::api::{MethodSpec, PlanError, PlanRequest, Planner};
+use galvatron::cluster::{cluster_by_name, parse_islands, ClusterSpec, GpuSpec};
+use galvatron::util::GIB;
+
+#[test]
+fn mixed_cluster_places_memory_heavy_stages_on_big_islands() {
+    // The acceptance scenario: 2×A100-80G + 2×RTX-TITAN-24G, planned via
+    // the island syntax. hetero4 equivalently lists TITAN first, so the
+    // identity placement would leave the 1F1B-heavy stage 0 on 24G cards.
+    let report = PlanRequest::new("bert-huge-32", "hetero4")
+        .max_batch(16)
+        .method(MethodSpec::Bmw { ckpt: true })
+        .pipeline_degrees(&[2])
+        .plan()
+        .expect("feasible plan on the mixed fleet");
+    assert_eq!(report.plan.pp, 2);
+    let slots = report.plan.stage_slots.clone().expect("mixed cluster records placement");
+
+    let cluster = cluster_by_name("hetero4").unwrap();
+    let sites = cluster.stage_sites(2);
+    let caps: Vec<f64> =
+        (0..2).map(|s| sites[report.plan.slot_of(s)].gpu.mem_bytes).collect();
+    // Every stage fits the island it was assigned to...
+    for (s, stage) in report.stages.iter().enumerate() {
+        assert!(
+            stage.peak_mem_bytes <= caps[s],
+            "stage {s}: {:.2}G exceeds its island's {:.2}G",
+            stage.peak_mem_bytes / GIB,
+            caps[s] / GIB
+        );
+    }
+    // ...and the memory-heaviest stage sits on the largest-memory island.
+    let heaviest = report
+        .stages
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.peak_mem_bytes.total_cmp(&b.1.peak_mem_bytes))
+        .map(|(i, _)| i)
+        .unwrap();
+    let max_cap = caps.iter().cloned().fold(0.0, f64::max);
+    assert_eq!(
+        caps[heaviest],
+        max_cap,
+        "memory-heaviest stage {heaviest} (peaks {:?}) must be on the 80G island (slots {slots:?})",
+        report.stages.iter().map(|s| s.peak_mem_bytes / GIB).collect::<Vec<_>>()
+    );
+    assert_eq!(max_cap, 80.0 * GIB);
+}
+
+#[test]
+fn island_syntax_request_matches_hetero_preset_shape() {
+    // `--islands 2xRTX-TITAN-24G,2xA100-80G` resolves through the same
+    // path as the preset and plans successfully end-to-end.
+    let report = PlanRequest::new("bert-huge-32", "2xRTX-TITAN-24G,2xA100-80G")
+        .max_batch(16)
+        .plan()
+        .expect("island-syntax cluster plans");
+    assert_eq!(report.cluster, "2xRTX-TITAN-24G,2xA100-80G");
+    // The artifact re-resolves its cluster by the canonical island label.
+    let planner = Planner::new();
+    let sim = planner.simulate_report(&report).expect("resimulates from the label");
+    assert!(sim.throughput > 0.0);
+    assert_eq!(sim.stage_capacity.len(), report.plan.pp);
+}
+
+#[test]
+fn homogeneous_island_list_is_byte_identical_to_uniform_constructor() {
+    // The degenerate-case guarantee, testable without pre-PR artifacts:
+    // one island of 8 TITANs == the uniform constructor, down to the plan
+    // artifact bytes (same name so the reports agree on every field).
+    let uniform = ClusterSpec::new("x8", GpuSpec::titan_rtx(), 8, 8, 10.0 * GIB, 10.0 * GIB)
+        .unwrap()
+        .with_memory_budget(16.0 * GIB);
+    let mut islands = parse_islands("8xRTX-TITAN-24G").unwrap().with_memory_budget(16.0 * GIB);
+    islands.name = "x8".into();
+    assert!(uniform.is_homogeneous() && islands.is_homogeneous());
+
+    let plan_with = |cluster: ClusterSpec| {
+        PlanRequest::new("bert-huge-32", "unused")
+            .cluster_spec(cluster)
+            .max_batch(32)
+            .threads(2)
+            .plan()
+            .expect("feasible")
+            .to_json_string()
+    };
+    let a = plan_with(uniform);
+    let b = plan_with(islands);
+    assert_eq!(a, b, "island-list construction changed the homogeneous artifact");
+    // And homogeneous artifacts never carry a placement field.
+    assert!(!a.contains("stage_slots"), "{a}");
+}
+
+#[test]
+fn bad_island_input_is_a_typed_error_not_a_panic() {
+    let err = PlanRequest::new("bert-huge-32", "2xH100,2xRTX-TITAN-24G")
+        .max_batch(8)
+        .plan()
+        .unwrap_err();
+    match err {
+        PlanError::InvalidCluster { reason } => {
+            assert!(reason.contains("H100"), "{reason}");
+            assert!(reason.contains("known"), "diagnostic lists known classes: {reason}");
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+    // Non-power-of-two fleets diagnose instead of panicking deep in the
+    // search.
+    let err = PlanRequest::new("bert-huge-32", "2xA100-80G,4xRTX-TITAN-24G")
+        .max_batch(8)
+        .plan()
+        .unwrap_err();
+    assert!(matches!(err, PlanError::InvalidCluster { .. }), "{err:?}");
+    // Uniform --memory on a mixed fleet is rejected with a diagnostic.
+    let err = PlanRequest::new("bert-huge-32", "hetero4")
+        .memory_gb(16.0)
+        .max_batch(8)
+        .plan()
+        .unwrap_err();
+    match err {
+        PlanError::InvalidRequest { reason } => {
+            assert!(reason.contains("heterogeneous"), "{reason}")
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+}
+
+#[test]
+fn mixed_cluster_artifact_round_trips_with_placement() {
+    let report = PlanRequest::new("vit-huge-32", "hetero4")
+        .max_batch(16)
+        .plan()
+        .expect("feasible");
+    let text = report.to_json_string();
+    assert!(text.contains("stage_slots"), "mixed plan must record its placement: {text}");
+    let back = galvatron::api::PlanReport::from_json_str(&text).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.to_json_string(), text);
+    back.plan.validate(32, 4).unwrap();
+}
+
+#[test]
+fn thread_count_never_changes_mixed_island_artifacts() {
+    let plan_with = |threads: usize| {
+        PlanRequest::new("bert-huge-32", "hetero4")
+            .max_batch(16)
+            .threads(threads)
+            .plan()
+            .expect("feasible")
+            .to_json_string()
+    };
+    assert_eq!(plan_with(1), plan_with(8));
+}
