@@ -1,0 +1,84 @@
+//! Scenario: plan *your own* model — the declarative `ModelSpec` front
+//! door (ISSUE 4). Describes a GQA + MoE decoder-only model inline, plans
+//! it under bf16 + ZeRO numerics on a mixed-island cluster, and then plans
+//! a spec loaded from a JSON file (`examples/models/gpt3-1.3b.json`) the
+//! way the CLI's `--model-file` does.
+//!
+//! Run: `cargo run --release --example custom_model_spec`
+
+use galvatron::api::{PlanRequest, Planner};
+use galvatron::model::{
+    BlockSpec, Dtype, EmbeddingSpec, Family, ModelSpec, MoeSpec, TrainConfig,
+};
+use galvatron::util::GIB;
+
+fn main() -> anyhow::Result<()> {
+    let planner = Planner::new();
+
+    // 1. An inline spec: a 1.6B-ish decoder-only LM with grouped-query
+    //    attention and a mixture-of-experts FFN every block.
+    let spec = ModelSpec {
+        name: "MoE-GQA-LM".into(),
+        family: Family::DecoderOnly,
+        blocks: vec![BlockSpec {
+            kv_heads: Some(4),                              // GQA: 16 q heads, 4 kv heads
+            moe: Some(MoeSpec { experts: 8, top_k: 2 }),    // 8 experts, top-2 routing
+            ..BlockSpec::dense(24, 2048, 16, 2048)
+        }],
+        embedding: Some(EmbeddingSpec { vocab: 50257, positions: 2048, ..Default::default() }),
+        head: None,
+    };
+    println!("spec JSON:\n{}\n", spec.to_json());
+
+    // 2. Plan it with lean numerics: bf16 activations/params (fp32 master
+    //    weights accounted), Adam, ZeRO-sharded optimizer state.
+    let train = TrainConfig { dtype: Dtype::Bf16, zero: true, ..Default::default() };
+    let report = PlanRequest::new("ignored", "hetero4")
+        .model_spec(spec)
+        .train_config(train)
+        .max_batch(64)
+        .plan()?;
+    println!("{}", report.render());
+
+    // 3. The artifact records the spec + train config, so it re-simulates
+    //    without the original file or builder.
+    let sim = planner.simulate_report(&report)?;
+    println!(
+        "simulated: {:.2} samples/s; per-stage peak {:?} GiB (capacity {:?} GiB)\n",
+        sim.throughput,
+        sim.stage_peak_mem.iter().map(|b| (b / GIB * 10.0).round() / 10.0).collect::<Vec<_>>(),
+        sim.stage_capacity.iter().map(|b| b / GIB).collect::<Vec<_>>(),
+    );
+
+    // 4. The file-based form (what `--model-file` does). fp32 vs bf16+ZeRO
+    //    shows the dtype/optimizer footprint directly.
+    let file = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/models/gpt3-1.3b.json");
+    for (label, req) in [
+        ("fp32+adam", PlanRequest::new("ignored", "hetero4").model_file(file).max_batch(64)),
+        (
+            "bf16+adam+zero",
+            PlanRequest::new("ignored", "hetero4")
+                .model_file(file)
+                .train_config(train)
+                .max_batch(64),
+        ),
+    ] {
+        match req.plan() {
+            Ok(r) => {
+                let peak = r
+                    .stages
+                    .iter()
+                    .map(|s| s.peak_mem_bytes)
+                    .fold(0.0f64, f64::max);
+                println!(
+                    "GPT3-1.3B {label:<15} {:.2} samples/s, batch {}, max stage peak {:.1} GiB",
+                    r.throughput,
+                    r.plan.batch,
+                    peak / GIB
+                );
+            }
+            Err(e) => println!("GPT3-1.3B {label:<15} {e}"),
+        }
+    }
+    Ok(())
+}

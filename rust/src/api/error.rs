@@ -15,6 +15,10 @@ pub enum PlanError {
     UnknownMethod { name: String, suggestion: Option<String> },
     /// The request is structurally invalid (zero batch, bad schedule, ...).
     InvalidRequest { reason: String },
+    /// A model spec (inline, or loaded from a `--model-file` JSON path)
+    /// failed to load, parse, or validate — the typed surface of
+    /// [`crate::model::SpecError`].
+    InvalidModel { reason: String },
     /// The cluster description is invalid (bad island list, unknown GPU
     /// class, non-power-of-two shapes) — the typed surface of
     /// [`crate::cluster::ClusterError`].
@@ -46,7 +50,10 @@ impl fmt::Display for PlanError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             PlanError::UnknownModel { name, suggestion } => {
-                Self::write_unknown(f, "model", name, suggestion, "models")
+                // Mirror the `--islands` hint of InvalidCluster: the model
+                // argument has a second, file-based form.
+                Self::write_unknown(f, "model", name, suggestion, "models")?;
+                write!(f, "; a model argument ending in \".json\" is loaded as a ModelSpec file")
             }
             PlanError::UnknownCluster { name, suggestion } => {
                 Self::write_unknown(f, "cluster", name, suggestion, "clusters")
@@ -55,6 +62,7 @@ impl fmt::Display for PlanError {
                 Self::write_unknown(f, "method", name, suggestion, "methods")
             }
             PlanError::InvalidRequest { reason } => write!(f, "invalid plan request: {reason}"),
+            PlanError::InvalidModel { reason } => write!(f, "invalid model spec: {reason}"),
             PlanError::InvalidCluster { reason } => write!(f, "invalid cluster: {reason}"),
             PlanError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
             PlanError::Artifact { reason } => write!(f, "plan artifact error: {reason}"),
@@ -67,6 +75,12 @@ impl std::error::Error for PlanError {}
 impl From<crate::cluster::ClusterError> for PlanError {
     fn from(e: crate::cluster::ClusterError) -> Self {
         PlanError::InvalidCluster { reason: e.to_string() }
+    }
+}
+
+impl From<crate::model::SpecError> for PlanError {
+    fn from(e: crate::model::SpecError) -> Self {
+        PlanError::InvalidModel { reason: e.reason }
     }
 }
 
@@ -146,5 +160,17 @@ mod tests {
         assert!(msg.contains("bert-hug-32") && msg.contains("did you mean"), "{msg}");
         let e = PlanError::UnknownCluster { name: "xyz".into(), suggestion: None };
         assert!(!e.to_string().contains("did you mean"));
+    }
+
+    #[test]
+    fn unknown_model_hints_at_spec_files() {
+        // Mirrors the `--islands` hint of InvalidCluster: the error points
+        // at the file-based model form.
+        let e = PlanError::UnknownModel { name: "my-model".into(), suggestion: None };
+        let msg = e.to_string();
+        assert!(msg.contains(".json") && msg.contains("ModelSpec"), "{msg}");
+        // Cluster/method errors do not carry the model-file hint.
+        let e = PlanError::UnknownCluster { name: "xyz".into(), suggestion: None };
+        assert!(!e.to_string().contains("ModelSpec"));
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::cluster::ClusterSpec;
 use crate::cost::pipeline::Schedule;
-use crate::model::ModelProfile;
+use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::Dim;
 use crate::search::base::{optimize_traced, SearchConfig, SearchOutcome};
 use crate::search::bmw::optimize_bmw_traced;
@@ -77,6 +77,8 @@ pub struct SearchOverrides {
     /// Worker threads for the search engine's cell fan-out (`None` = auto;
     /// plans are identical for every value).
     pub threads: Option<usize>,
+    /// Training numerics (dtype/optimizer/ZeRO) for the memory accounting.
+    pub train: TrainConfig,
 }
 
 impl SearchOverrides {
@@ -88,6 +90,7 @@ impl SearchOverrides {
             microbatch_limit: None,
             pp_degrees: None,
             threads: None,
+            train: TrainConfig::default(),
         }
     }
 
@@ -109,6 +112,7 @@ impl SearchOverrides {
         if self.threads.is_some() {
             cfg.threads = self.threads;
         }
+        cfg.train = self.train;
         cfg
     }
 }

@@ -5,7 +5,10 @@
 //! The pieces:
 //!
 //!   * [`PlanRequest`] — builder describing *what* to plan: model and
-//!     cluster (by name or inline spec), memory budget, method, schedule,
+//!     cluster (by name, by declarative [`crate::model::ModelSpec`] —
+//!     inline or via `model_file("my-model.json")` — or as a compiled
+//!     profile), training numerics ([`crate::model::TrainConfig`]: dtype,
+//!     optimizer, ZeRO), memory budget, method, schedule,
 //!     batch/microbatch caps, overlap factor, pipeline-degree pins.
 //!   * [`MethodSpec`] — the typed strategy catalog (every row of the
 //!     paper's Tables II-VI); replaces the magic strings formerly

@@ -6,6 +6,7 @@
 use std::path::Path;
 
 use crate::cost::pipeline::Schedule;
+use crate::model::{model_by_name, ModelSpec, TrainConfig};
 use crate::parallel::ParallelPlan;
 use crate::search::engine::SearchTrace;
 use crate::search::SearchOutcome;
@@ -40,8 +41,15 @@ pub struct StageReport {
 /// re-simulate, and eventually execute it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanReport {
-    /// Model zoo name (re-resolvable via `model_by_name`).
+    /// Model zoo name (re-resolvable via `model_by_name`), or the name of
+    /// the recorded [`PlanReport::model_spec`].
     pub model: String,
+    /// The declarative model spec this plan was made from, when the model
+    /// came from a `--model-file` / inline spec that the zoo cannot
+    /// re-resolve by name. Keeps such artifacts self-contained for the
+    /// `simulate --plan` leg; `None` (and absent from the JSON) for zoo
+    /// models, so their artifacts keep the historical byte layout.
+    pub model_spec: Option<ModelSpec>,
     /// Cluster preset name (re-resolvable via `cluster_by_name`).
     pub cluster: String,
     /// Per-device memory budget the plan was found under, GB.
@@ -49,6 +57,9 @@ pub struct PlanReport {
     pub method: MethodSpec,
     pub schedule: Schedule,
     pub overlap_slowdown: f64,
+    /// Training numerics the memory accounting used. Serialized only when
+    /// non-default, keeping default artifacts byte-identical.
+    pub train: TrainConfig,
     pub max_batch: usize,
     pub plan: ParallelPlan,
     /// Estimated throughput, samples/second (Eq. 9).
@@ -102,8 +113,20 @@ impl PlanReport {
                 }
             })
             .collect();
+        // Record the spec only when the zoo cannot faithfully re-resolve
+        // the model by name: zoo-equivalent specs keep the artifact
+        // byte-identical to a by-name plan.
+        let model_spec = r
+            .model_spec
+            .as_ref()
+            .filter(|_| match model_by_name(&r.model_name) {
+                Some(zoo) => zoo != r.model,
+                None => true,
+            })
+            .cloned();
         PlanReport {
             model: r.model_name.clone(),
+            model_spec,
             cluster: r.cluster_name.clone(),
             // Heterogeneous clusters: the floor island's capacity (their
             // per-island budgets are fixed by the cluster itself).
@@ -111,6 +134,7 @@ impl PlanReport {
             method: r.method.clone(),
             schedule,
             overlap_slowdown: overlap,
+            train: r.train,
             max_batch: r.overrides.max_batch,
             plan: out.plan.clone(),
             throughput: out.cost.throughput,
@@ -125,7 +149,7 @@ impl PlanReport {
     // ---- JSON (de)serialization -----------------------------------------
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::num(PLAN_ARTIFACT_VERSION as f64)),
             ("model", Json::str(&self.model)),
             ("cluster", Json::str(&self.cluster)),
@@ -164,7 +188,16 @@ impl PlanReport {
                     None => Json::Null,
                 },
             ),
-        ])
+        ];
+        // Emitted only when present / non-default, so artifacts planned
+        // from zoo names with default numerics keep their byte layout.
+        if let Some(spec) = &self.model_spec {
+            fields.push(("model_spec", spec.to_json()));
+        }
+        if !self.train.is_default() {
+            fields.push(("train", self.train.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<PlanReport, PlanError> {
@@ -206,13 +239,24 @@ impl PlanReport {
             None | Some(Json::Null) => None,
             Some(t) => Some(SearchTrace::from_json(t).ok_or_else(|| bad("search_trace"))?),
         };
+        // Optional: absent for zoo models / default numerics.
+        let model_spec = match v.get("model_spec") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(ModelSpec::from_json(s).map_err(PlanError::from)?),
+        };
+        let train = match v.get("train") {
+            None | Some(Json::Null) => TrainConfig::default(),
+            Some(t) => TrainConfig::from_json(t).map_err(PlanError::from)?,
+        };
         Ok(PlanReport {
             model: gets("model")?,
+            model_spec,
             cluster: gets("cluster")?,
             memory_budget_gb: getn("memory_budget_gb")?,
             method,
             schedule,
             overlap_slowdown: getn("overlap_slowdown")?,
+            train,
             max_batch: v.get("max_batch").and_then(Json::as_usize).ok_or_else(|| bad("max_batch"))?,
             plan,
             throughput: getn("throughput")?,
@@ -229,8 +273,18 @@ impl PlanReport {
         self.to_json().to_string()
     }
 
-    /// Parse from a JSON string.
+    /// Parse from a JSON string. Recognizes the `OOM` marker the CLI's
+    /// `plan --out` writes for infeasible runs (kept byte-deterministic
+    /// for CI gates) and reports it as a clear artifact error instead of
+    /// a raw JSON parse failure.
     pub fn from_json_str(s: &str) -> Result<PlanReport, PlanError> {
+        if s.trim() == "OOM" {
+            return Err(PlanError::Artifact {
+                reason: "artifact is an OOM marker: the planning run found no feasible plan \
+                         (re-plan with a larger memory budget or different knobs)"
+                    .into(),
+            });
+        }
         let v = Json::parse(s)
             .map_err(|e| PlanError::Artifact { reason: format!("parse: {e}") })?;
         Self::from_json(&v)
@@ -256,8 +310,13 @@ impl PlanReport {
     /// Human-readable summary (plan shape + cost + per-stage diagnostics).
     pub fn render(&self) -> String {
         let mut out = String::new();
+        let train = if self.train.is_default() {
+            String::new()
+        } else {
+            format!(" | {}", self.train.label())
+        };
         out.push_str(&format!(
-            "{} on {} @ {:.0} GB | {} | {} schedule\n",
+            "{} on {} @ {:.0} GB | {} | {} schedule{train}\n",
             self.model,
             self.cluster,
             self.memory_budget_gb,

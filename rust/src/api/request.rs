@@ -3,23 +3,35 @@
 //! schedule and search knobs — plus the `Planner` facade that resolves and
 //! executes it.
 
+use std::path::{Path, PathBuf};
+
 use crate::cluster::{
     cluster_by_name, cluster_names, looks_like_islands, parse_islands, ClusterSpec,
 };
 use crate::cost::pipeline::Schedule;
-use crate::model::{model_by_name, model_names, ModelProfile};
-use crate::sim::{simulate, SimReport};
+use crate::model::{
+    model_by_name, model_names, Dtype, ModelProfile, ModelSpec, OptimizerKind, TrainConfig,
+};
+use crate::sim::{simulate_with, SimReport};
 use crate::util::GIB;
 
 use super::error::{suggest, PlanError};
 use super::method::{MethodSpec, SearchOverrides};
 use super::report::PlanReport;
 
-/// A model, referenced by zoo name or provided inline.
+/// A model: a zoo name, a declarative [`ModelSpec`] (inline or from a
+/// JSON file), or a pre-compiled [`ModelProfile`].
 #[derive(Debug, Clone)]
 pub enum ModelSource {
+    /// Zoo name (`galvatron models`); a name ending in `.json` is loaded
+    /// as a [`ModelSpec`] file.
     Name(String),
-    Spec(ModelProfile),
+    /// Declarative spec, compiled at resolve time.
+    Spec(ModelSpec),
+    /// Spec file path, loaded + compiled at resolve time.
+    File(PathBuf),
+    /// Pre-compiled layer profile (bypasses the spec layer).
+    Profile(ModelProfile),
 }
 
 /// A cluster, referenced by preset name or provided inline.
@@ -72,6 +84,14 @@ pub struct PlanRequest {
     /// override is rejected with a diagnostic.
     pub memory_gb: Option<f64>,
     pub method: MethodSpec,
+    /// Unresolved method name set by [`PlanRequest::method_name`];
+    /// resolved (and surfaced as a typed error) at `plan()` time, taking
+    /// precedence over `method`.
+    pub method_name: Option<String>,
+    /// Training numerics: dtype, optimizer, optional ZeRO sharding. The
+    /// default (fp32 + Adam, unsharded) reproduces the pre-spec planner
+    /// byte-for-byte.
+    pub train: TrainConfig,
     pub max_batch: usize,
     pub schedule: Option<Schedule>,
     pub overlap_slowdown: Option<f64>,
@@ -93,6 +113,8 @@ impl PlanRequest {
             cluster: ClusterSource::Name(cluster.to_string()),
             memory_gb: None,
             method: MethodSpec::Bmw { ckpt: true },
+            method_name: None,
+            train: TrainConfig::default(),
             max_batch: 512,
             schedule: None,
             overlap_slowdown: None,
@@ -102,9 +124,48 @@ impl PlanRequest {
         }
     }
 
-    /// Plan for an inline model profile instead of a zoo name.
-    pub fn model_spec(mut self, model: ModelProfile) -> Self {
-        self.model = ModelSource::Spec(model);
+    /// Plan for an inline declarative [`ModelSpec`] instead of a zoo name
+    /// (compiled — and validated, with errors at `plan()` time — through
+    /// the same path as `--model-file` specs).
+    pub fn model_spec(mut self, spec: ModelSpec) -> Self {
+        self.model = ModelSource::Spec(spec);
+        self
+    }
+
+    /// Plan for a [`ModelSpec`] JSON file (the `--model-file` form).
+    pub fn model_file(mut self, path: impl Into<PathBuf>) -> Self {
+        self.model = ModelSource::File(path.into());
+        self
+    }
+
+    /// Plan for a pre-compiled model profile (bypasses the spec layer).
+    pub fn model_profile(mut self, model: ModelProfile) -> Self {
+        self.model = ModelSource::Profile(model);
+        self
+    }
+
+    /// Set the training numerics (dtype / optimizer / ZeRO).
+    pub fn train_config(mut self, train: TrainConfig) -> Self {
+        self.train = train;
+        self
+    }
+
+    /// Set the parameter/activation dtype (fp32 master weights are
+    /// accounted automatically under mixed precision).
+    pub fn dtype(mut self, dtype: Dtype) -> Self {
+        self.train.dtype = dtype;
+        self
+    }
+
+    /// Set the optimizer whose state the memory model accounts for.
+    pub fn optimizer(mut self, optimizer: OptimizerKind) -> Self {
+        self.train.optimizer = optimizer;
+        self
+    }
+
+    /// Toggle ZeRO-style sharding of the optimizer state over the DP degree.
+    pub fn zero(mut self, zero: bool) -> Self {
+        self.train.zero = zero;
         self
     }
 
@@ -120,15 +181,29 @@ impl PlanRequest {
         self
     }
 
-    /// Choose the planning method (default: full Galvatron-BMW).
+    /// Choose the planning method (default: full Galvatron-BMW). Clears
+    /// any pending [`PlanRequest::method_name`] — the last setter wins.
     pub fn method(mut self, method: MethodSpec) -> Self {
         self.method = method;
+        self.method_name = None;
         self
     }
 
-    /// Choose the planning method by catalog name.
-    pub fn method_name(mut self, name: &str) -> Result<Self, PlanError> {
+    /// Choose the planning method by catalog name. Resolution is deferred
+    /// to `plan()` time, so the builder chain stays fluent and an unknown
+    /// name surfaces as a typed [`PlanError::UnknownMethod`] like every
+    /// other resolution error. Use [`PlanRequest::try_method_name`] to
+    /// resolve eagerly.
+    pub fn method_name(mut self, name: &str) -> Self {
+        self.method_name = Some(name.to_string());
+        self
+    }
+
+    /// Eagerly-resolving variant of [`PlanRequest::method_name`] for
+    /// callers that want the catalog error immediately.
+    pub fn try_method_name(mut self, name: &str) -> Result<Self, PlanError> {
         self.method = MethodSpec::parse(name)?;
+        self.method_name = None;
         Ok(self)
     }
 
@@ -183,17 +258,55 @@ pub struct ResolvedRequest {
     pub model_name: String,
     pub cluster_name: String,
     pub model: ModelProfile,
+    /// The declarative spec the model came from, when it was planned from
+    /// one ([`ModelSource::Spec`]/[`ModelSource::File`]/`.json` name).
+    pub model_spec: Option<ModelSpec>,
     pub cluster: ClusterSpec,
     pub method: MethodSpec,
+    pub train: TrainConfig,
     pub overrides: SearchOverrides,
 }
 
-/// Resolve a model name against the Table I zoo.
+/// Full model resolution for every [`ModelSource`] form: the display name
+/// the report will carry, the compiled profile, and the declarative spec
+/// when the model came from one (recorded into the artifact).
+fn resolve_model_source(
+    src: &ModelSource,
+) -> Result<(String, ModelProfile, Option<ModelSpec>), PlanError> {
+    match src {
+        ModelSource::Name(n) => {
+            if let Some(m) = model_by_name(n) {
+                return Ok((n.clone(), m, None));
+            }
+            if n.ends_with(".json") {
+                // The model-side counterpart of the `--islands` cluster
+                // syntax: a .json name is a spec file.
+                let spec = ModelSpec::load(Path::new(n))?;
+                let m = spec.compile()?;
+                return Ok((spec.name.clone(), m, Some(spec)));
+            }
+            Err(PlanError::UnknownModel {
+                name: n.clone(),
+                suggestion: suggest(n, model_names()),
+            })
+        }
+        ModelSource::Spec(spec) => {
+            let m = spec.compile()?;
+            Ok((spec.name.clone(), m, Some(spec.clone())))
+        }
+        ModelSource::File(path) => {
+            let spec = ModelSpec::load(path)?;
+            let m = spec.compile()?;
+            Ok((spec.name.clone(), m, Some(spec)))
+        }
+        ModelSource::Profile(m) => Ok((m.name.clone(), m.clone(), None)),
+    }
+}
+
+/// Resolve a model name against the Table I zoo; a name ending in `.json`
+/// is loaded (and compiled) as a [`ModelSpec`] file.
 pub fn resolve_model_name(name: &str) -> Result<ModelProfile, PlanError> {
-    model_by_name(name).ok_or_else(|| PlanError::UnknownModel {
-        name: name.to_string(),
-        suggestion: suggest(name, model_names()),
-    })
+    resolve_model_source(&ModelSource::Name(name.to_string())).map(|(_, m, _)| m)
 }
 
 /// Resolve a cluster preset name (physical memory budget) or an
@@ -224,10 +337,7 @@ impl Planner {
 
     /// Name resolution + validation without running the (expensive) search.
     pub fn resolve(&self, req: &PlanRequest) -> Result<ResolvedRequest, PlanError> {
-        let (model_name, model) = match &req.model {
-            ModelSource::Name(n) => (n.clone(), resolve_model_name(n)?),
-            ModelSource::Spec(m) => (m.name.clone(), m.clone()),
-        };
+        let (model_name, model, model_spec) = resolve_model_source(&req.model)?;
         let (cluster_name, mut cluster) = match &req.cluster {
             ClusterSource::Name(n) => (n.clone(), resolve_cluster_name(n)?),
             ClusterSource::Spec(c) => (c.name.clone(), c.clone()),
@@ -298,18 +408,26 @@ impl Planner {
                 }
             }
         }
+        // Deferred method-name resolution (the fluent `method_name` form).
+        let method = match &req.method_name {
+            Some(name) => MethodSpec::parse(name)?,
+            None => req.method.clone(),
+        };
         let mut overrides = SearchOverrides::new(req.max_batch);
         overrides.schedule = req.schedule;
         overrides.overlap_slowdown = req.overlap_slowdown;
         overrides.microbatch_limit = req.microbatch_limit;
         overrides.pp_degrees = req.pipeline_degrees.clone();
         overrides.threads = req.threads;
+        overrides.train = req.train;
         Ok(ResolvedRequest {
             model_name,
             cluster_name,
             model,
+            model_spec,
             cluster,
-            method: req.method.clone(),
+            method,
+            train: req.train,
             overrides,
         })
     }
@@ -334,16 +452,21 @@ impl Planner {
     }
 
     /// Re-run the discrete-event simulator for a saved report (the
-    /// `plan → simulate` artifact pipeline). Resolves the report's model
-    /// and cluster by name from the built-in catalogs, re-validates the
-    /// plan, and simulates it.
+    /// `plan → simulate` artifact pipeline). The model comes from the
+    /// report's recorded [`ModelSpec`] when present (plans made from
+    /// `--model-file` / inline specs), otherwise from the zoo by name; the
+    /// cluster resolves by name from the built-in catalogs. The plan is
+    /// re-validated before simulation.
     ///
-    /// A report planned from an inline [`PlanRequest::model_spec`] /
+    /// A report planned from an inline [`PlanRequest::model_profile`] /
     /// [`PlanRequest::cluster_spec`] carries only the spec's *name*,
     /// which the catalogs may not (faithfully) resolve — pass the
     /// original specs to [`Planner::simulate_plan`] instead.
     pub fn simulate_report(&self, report: &PlanReport) -> Result<SimReport, PlanError> {
-        let model = resolve_model_name(&report.model)?;
+        let model = match &report.model_spec {
+            Some(spec) => spec.compile()?,
+            None => resolve_model_name(&report.model)?,
+        };
         let mut cluster = resolve_cluster_name(&report.cluster)?;
         if cluster.is_homogeneous() {
             // Heterogeneous clusters fix per-island budgets via their GPU
@@ -367,7 +490,14 @@ impl Planner {
             .map_err(|e| PlanError::Artifact {
                 reason: format!("plan does not fit {}: {e}", report.model),
             })?;
-        Ok(simulate(model, cluster, &report.plan, report.schedule, report.overlap_slowdown))
+        Ok(simulate_with(
+            model,
+            cluster,
+            &report.plan,
+            report.schedule,
+            report.overlap_slowdown,
+            report.train,
+        ))
     }
 }
 
@@ -432,6 +562,67 @@ mod tests {
         let req = PlanRequest::new("bert-huge-32", "hetero4");
         let r = p.resolve(&req).unwrap();
         assert!(!r.cluster.is_homogeneous());
+    }
+
+    #[test]
+    fn method_name_resolves_at_plan_time() {
+        // The fluent form defers resolution: the chain never breaks, the
+        // typo surfaces as a typed error from plan()/resolve().
+        let req = PlanRequest::new("bert-huge-32", "titan8").method_name("bogus-method");
+        let err = Planner::new().resolve(&req).unwrap_err();
+        assert!(matches!(err, PlanError::UnknownMethod { .. }), "{err:?}");
+        let ok = PlanRequest::new("bert-huge-32", "titan8").method_name("bmw");
+        let r = Planner::new().resolve(&ok).unwrap();
+        assert_eq!(r.method, MethodSpec::Bmw { ckpt: true });
+        // The eager variant fails immediately.
+        assert!(PlanRequest::new("bert-huge-32", "titan8")
+            .try_method_name("bogus-method")
+            .is_err());
+        let eager = PlanRequest::new("bert-huge-32", "titan8").try_method_name("gpipe").unwrap();
+        assert_eq!(Planner::new().resolve(&eager).unwrap().method, MethodSpec::PurePipeline);
+        // Last setter wins: a typed .method(..) clears a pending name.
+        let last = PlanRequest::new("bert-huge-32", "titan8")
+            .method_name("gpipe")
+            .method(MethodSpec::Bmw { ckpt: true });
+        assert_eq!(Planner::new().resolve(&last).unwrap().method, MethodSpec::Bmw { ckpt: true });
+    }
+
+    #[test]
+    fn spec_sources_resolve_and_record_the_spec() {
+        use crate::model::spec_by_name;
+        let spec = spec_by_name("bert-huge-32").unwrap();
+        let req = PlanRequest::new("ignored", "titan8").model_spec(spec.clone());
+        let r = Planner::new().resolve(&req).unwrap();
+        assert_eq!(r.model_name, "BERT-Huge-32");
+        assert_eq!(r.model_spec.as_ref(), Some(&spec));
+        assert_eq!(r.model, crate::model::model_by_name("bert-huge-32").unwrap());
+
+        // A model *name* ending in .json loads the same spec from disk.
+        let path = std::env::temp_dir().join(format!("galvatron-req-{}.json", std::process::id()));
+        spec.save(&path).unwrap();
+        let req = PlanRequest::new(path.to_str().unwrap(), "titan8");
+        let r = Planner::new().resolve(&req).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(r.model_spec.as_ref(), Some(&spec));
+
+        // Missing files surface as typed model errors.
+        let req = PlanRequest::new("no-such-file.json", "titan8");
+        let err = Planner::new().resolve(&req).unwrap_err();
+        assert!(matches!(err, PlanError::InvalidModel { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn train_config_travels_through_resolution() {
+        use crate::model::{Dtype, OptimizerKind};
+        let req = PlanRequest::new("bert-huge-32", "titan8")
+            .dtype(Dtype::Bf16)
+            .optimizer(OptimizerKind::Sgd)
+            .zero(true);
+        let r = Planner::new().resolve(&req).unwrap();
+        assert_eq!(r.train.dtype, Dtype::Bf16);
+        assert_eq!(r.train.optimizer, OptimizerKind::Sgd);
+        assert!(r.train.zero);
+        assert_eq!(r.overrides.train, r.train);
     }
 
     #[test]

@@ -2,9 +2,9 @@
 //! search, plus the transformation cost R.
 
 use crate::cluster::{ClusterSpec, StageSite};
-use crate::model::LayerProfile;
+use crate::model::{LayerProfile, TrainConfig};
 use crate::parallel::comm::{ckpt_recompute_comm, layer_comm_volumes};
-use crate::parallel::memory::{layer_memory, LayerMemory};
+use crate::parallel::memory::{layer_memory_with, LayerMemory};
 use crate::parallel::{transform, Dim, Strategy};
 
 use super::overlapped_time;
@@ -100,12 +100,17 @@ pub struct CostEstimator {
     pub overlap_slowdown: f64,
     /// The island site this estimator prices (device FLOPs/memory + bus).
     pub site: StageSite,
+    /// Training numerics (dtype/optimizer/ZeRO) for the memory accounting.
+    /// The default (fp32 + Adam, unsharded) reproduces the historical
+    /// hardwired constants bit-for-bit. Time estimation stays calibrated
+    /// at fp32 — dtype affects memory only (see README).
+    pub train: TrainConfig,
 }
 
 impl CostEstimator {
     pub fn new(cluster: &ClusterSpec, pp: usize, overlap_slowdown: f64) -> Self {
         let site = cluster.floor_site(pp);
-        CostEstimator { cluster: cluster.clone(), pp, overlap_slowdown, site }
+        Self::with_site(cluster, pp, overlap_slowdown, site)
     }
 
     /// Estimator for pipeline slot `slot` of `cluster` at degree `pp`.
@@ -121,7 +126,19 @@ impl CostEstimator {
         overlap_slowdown: f64,
         site: StageSite,
     ) -> Self {
-        CostEstimator { cluster: cluster.clone(), pp, overlap_slowdown, site }
+        CostEstimator {
+            cluster: cluster.clone(),
+            pp,
+            overlap_slowdown,
+            site,
+            train: TrainConfig::default(),
+        }
+    }
+
+    /// Bind explicit training numerics (builder-style).
+    pub fn with_train(mut self, train: TrainConfig) -> Self {
+        self.train = train;
+        self
     }
 
     /// Memory budget of the priced stage's devices, bytes.
@@ -200,7 +217,7 @@ impl CostEstimator {
             fwd,
             bwd,
             bwd_sync,
-            mem: layer_memory(layer, strategy, b_m, extra_params),
+            mem: layer_memory_with(layer, strategy, b_m, extra_params, &self.train),
         }
     }
 
@@ -323,6 +340,27 @@ mod tests {
         let floor = CostEstimator::new(&c, 2, 1.3);
         let cfl = floor.layer_cost(&l, &Strategy::serial(false), 4.0, 0.0);
         assert_eq!(cfl.fwd, cs.fwd);
+    }
+
+    #[test]
+    fn train_config_shrinks_memory_not_time() {
+        use crate::model::{Dtype, TrainConfig};
+        let e = est(1);
+        let lean = est(1).with_train(TrainConfig {
+            dtype: Dtype::Bf16,
+            zero: true,
+            ..Default::default()
+        });
+        let l = layer();
+        let s = Strategy::single(Dim::Dp, 8, false);
+        let c32 = e.layer_cost(&l, &s, 8.0, 0.0);
+        let c16 = lean.layer_cost(&l, &s, 8.0, 0.0);
+        // bf16 activations halve, ZeRO shards the optimizer state over DP8.
+        assert!(c16.mem.o_f < 0.6 * c32.mem.o_f);
+        assert!(c16.mem.o_ms < c32.mem.o_ms);
+        // The time model stays fp32-calibrated.
+        assert_eq!(c16.fwd, c32.fwd);
+        assert_eq!(c16.bwd, c32.bwd);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod estimator;
 pub mod pipeline;
 
 pub use estimator::{CostEstimator, LayerCost, StageCosts};
-pub use pipeline::{plan_cost, PlanCost, StageCost};
+pub use pipeline::{plan_cost, plan_cost_with, PlanCost, StageCost};
 
 /// Default GPU streaming-multiprocessor contention factor (paper §V: "such
 /// contention could slow down the computation and communication by 1.3×").

@@ -2,7 +2,7 @@
 //! feasibility under 1F1B-Flush or GPipe scheduling.
 
 use crate::cluster::ClusterSpec;
-use crate::model::ModelProfile;
+use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::memory::{stage_peak_memory, LayerMemory};
 use crate::parallel::ParallelPlan;
 
@@ -56,13 +56,29 @@ pub struct PlanCost {
     pub alpha_m: f64,
 }
 
-/// Estimate the full cost of `plan` for `model` on `cluster` (Eq. 5/9).
+/// Estimate the full cost of `plan` for `model` on `cluster` (Eq. 5/9)
+/// under the default training numerics (fp32 + Adam, no ZeRO).
 pub fn plan_cost(
     model: &ModelProfile,
     cluster: &ClusterSpec,
     plan: &ParallelPlan,
     schedule: Schedule,
     overlap_slowdown: f64,
+) -> PlanCost {
+    plan_cost_with(model, cluster, plan, schedule, overlap_slowdown, TrainConfig::default())
+}
+
+/// [`plan_cost`] under explicit training numerics: the per-layer memory
+/// accounting (and thus per-stage peaks and feasibility) follows the
+/// dtype/optimizer/ZeRO configuration. The default `train` reproduces
+/// [`plan_cost`] bit-for-bit.
+pub fn plan_cost_with(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    schedule: Schedule,
+    overlap_slowdown: f64,
+    train: TrainConfig,
 ) -> PlanCost {
     // Each stage is priced on its assigned island slot (identity placement
     // unless the plan carries a heterogeneous stage→slot map); on a
@@ -80,7 +96,7 @@ pub fn plan_cost(
                 .find(|s| s.class == c as u32)
                 .expect("contiguous site class ids")
                 .clone();
-            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
+            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site).with_train(train)
         })
         .collect();
     let b_m = plan.microbatch_size();

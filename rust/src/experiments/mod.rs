@@ -57,6 +57,8 @@ impl ExpOptions {
 
 /// Resolve a model or panic with a did-you-mean hint (the regenerators
 /// are batch jobs; library users should prefer `api::resolve_model_name`).
+/// Accepts zoo names and, like the CLI, `.json` ModelSpec file paths — so
+/// `table2 --models my-model.json` sweeps a custom model.
 pub fn model(name: &str) -> ModelProfile {
     resolve_model_name(name).unwrap_or_else(|e| panic!("{e}"))
 }

@@ -10,7 +10,8 @@
 //!   train     run real-numerics e2e training over the AOT artifacts
 //!   profile   calibrate the cost model by profiling artifacts on PJRT-CPU
 //!   smoke     runtime smoke test (load + execute the axpy artifact)
-//!   models    list the Table I model zoo
+//!   models    list the Table I model zoo (--json emits ModelSpec JSON,
+//!             --file validates a spec file, --out-dir exports the zoo)
 //!   clusters  list cluster presets
 //!   methods   list the strategy catalog
 
@@ -24,8 +25,10 @@ const USAGE: &str = "\
 galvatron <command> [options]
 
 commands:
-  plan      --model <name> --cluster <name> --memory <GB> [--method <name>]
+  plan      --model <name> | --model-file model.json
+            --cluster <name> --memory <GB> [--method <name>]
             [--islands 2xA100-80G,2xRTX-TITAN-24G] [--max-batch N]
+            [--dtype fp32|fp16|bf16] [--optimizer sgd|adam] [--zero]
             [--schedule 1f1b|gpipe] [--threads N] [--out plan.json]
   simulate  --plan plan.json
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
@@ -36,7 +39,8 @@ commands:
   train     [--artifacts DIR] [--steps N] [--dp N] [--microbatches N] [--csv FILE] [--repeat-batch]
   profile   [--artifacts DIR] [--reps N]
   smoke     [--artifacts DIR]
-  models | clusters | methods
+  models    [--json] [--file spec.json] [--out-dir DIR]
+  clusters | methods
 ";
 
 fn exp_options(args: &Args) -> Result<ExpOptions> {
@@ -86,7 +90,24 @@ fn plan_request(args: &Args) -> Result<PlanRequest> {
     };
     let mut req = PlanRequest::new(args.get_or("model", "bert-huge-32"), &cluster)
         .max_batch(args.usize("max-batch", 512)?)
-        .method_name(args.get_or("method", "Galvatron-BMW"))?;
+        .method_name(args.get_or("method", "Galvatron-BMW"));
+    // `--model-file model.json` plans a declarative ModelSpec; it takes
+    // precedence over `--model` zoo names (which also accept .json paths).
+    if let Some(path) = args.get("model-file") {
+        req = req.model_file(path);
+    }
+    // Training numerics: dtype / optimizer / ZeRO sharding. The defaults
+    // (fp32 + Adam, unsharded) are the paper's setting.
+    if let Some(d) = args.get("dtype") {
+        req = req.dtype(d.parse::<galvatron::model::Dtype>().map_err(anyhow::Error::new)?);
+    }
+    if let Some(o) = args.get("optimizer") {
+        req = req
+            .optimizer(o.parse::<galvatron::model::OptimizerKind>().map_err(anyhow::Error::new)?);
+    }
+    if args.flag("zero") {
+        req = req.zero(true);
+    }
     if !heterogeneous || args.get("memory").is_some() {
         req = req.memory_gb(args.f64("memory", 16.0)?);
     }
@@ -120,6 +141,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         Ok(report) => report,
         Err(PlanError::Infeasible { .. }) => {
             println!("OOM: no feasible plan under this budget");
+            // Keep --out deterministic for CI `cmp` gates even on OOM.
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, "OOM\n")?;
+                println!("wrote OOM marker to {path}");
+            }
             return Ok(());
         }
         Err(e) => return Err(e.into()),
@@ -217,6 +243,73 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `galvatron models`: the zoo as a table; `--json` emits every model's
+/// declarative `ModelSpec`; `--file spec.json` compiles (validates) a
+/// single spec file instead; `--out-dir DIR` exports the zoo specs as
+/// JSON files (the source of `examples/models/`).
+fn cmd_models(args: &Args) -> Result<()> {
+    use galvatron::model::{model_names, spec_by_name, ModelSpec};
+    let entries: Vec<(String, ModelSpec)> = match args.get("file") {
+        Some(path) => {
+            let spec = ModelSpec::load(std::path::Path::new(path))?;
+            vec![(path.to_string(), spec)]
+        }
+        None => model_names()
+            .iter()
+            .map(|n| (n.to_string(), spec_by_name(n).expect("zoo spec")))
+            .collect(),
+    };
+    if let Some(dir) = args.get("out-dir") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        for (_, spec) in &entries {
+            // Name the file after the spec itself (not the lookup key,
+            // which is a whole path under --file).
+            let slug = spec.name.to_ascii_lowercase().replace('/', "-");
+            let path = dir.join(format!("{slug}.json"));
+            spec.save(&path)?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
+    if args.flag("json") {
+        println!(
+            "{}",
+            galvatron::util::json::Json::arr(entries.iter().map(|(_, s)| s.to_json()))
+        );
+        return Ok(());
+    }
+    let range = |lo: usize, hi: usize| {
+        if lo == hi {
+            format!("{lo}")
+        } else {
+            format!("{lo}-{hi}")
+        }
+    };
+    for (key, spec) in &entries {
+        let p = spec.compile()?;
+        let hidden = range(
+            spec.blocks.iter().map(|b| b.hidden).min().unwrap_or(0),
+            spec.blocks.iter().map(|b| b.hidden).max().unwrap_or(0),
+        );
+        let seq = range(
+            spec.blocks.iter().map(|b| b.seq).min().unwrap_or(0),
+            spec.blocks.iter().map(|b| b.seq).max().unwrap_or(0),
+        );
+        println!(
+            "{:<14} {:<15} {:>4} layers  {:>9.1}M params  hidden {:<9} seq {:<9} {:>9.1} MB act/sample",
+            key,
+            spec.family.key(),
+            p.n_layers(),
+            p.total_params() / 1e6,
+            hidden,
+            seq,
+            p.total_act_bytes() / 1e6
+        );
+    }
+    Ok(())
+}
+
 fn cmd_smoke(args: &Args) -> Result<()> {
     let rt = Runtime::new(std::path::Path::new(args.get_or("artifacts", "artifacts")))?;
     let man = rt.manifest()?;
@@ -235,7 +328,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["repeat-batch", "speedups"]);
+    let args = Args::from_env(&["repeat-batch", "speedups", "zero", "json"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "plan" => cmd_plan(&args)?,
@@ -275,18 +368,7 @@ fn main() -> Result<()> {
         "profile" => cmd_profile(&args)?,
         "smoke" => cmd_smoke(&args)?,
         "simulate" => cmd_simulate(&args)?,
-        "models" => {
-            for m in galvatron::model::model_names() {
-                let p = galvatron::model::model_by_name(m).unwrap();
-                println!(
-                    "{:<14} {:>4} layers  {:>8.1}M params  {:>9.1} MB act/sample",
-                    m,
-                    p.n_layers(),
-                    p.total_params() / 1e6,
-                    p.total_act_bytes() / 1e6
-                );
-            }
-        }
+        "models" => cmd_models(&args)?,
         "clusters" => {
             for c in galvatron::cluster::cluster_names() {
                 let cl = galvatron::cluster::cluster_by_name(c).unwrap();

@@ -11,12 +11,17 @@
 //! paper does not publish its exact accounting, we use the Megatron-style
 //! formula act_bytes = 4·(17·s·h + 2.5·a·s·s_kv) per sample, fp32).
 
+pub mod spec;
 pub mod zoo;
 
-pub use zoo::{model_by_name, model_names};
+pub use spec::{
+    BlockSpec, Dtype, EmbeddingSpec, Family, HeadSpec, ModelSpec, MoeSpec, OptimizerKind,
+    PatchSpec, SpecError, TrainConfig,
+};
+pub use zoo::{model_by_name, model_names, spec_by_name};
 
 /// One (composite) transformer layer as seen by the planner.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerProfile {
     /// Human-readable tag, e.g. "enc", "dec", "swin-s2".
     pub name: String,
@@ -86,7 +91,7 @@ impl LayerProfile {
 }
 
 /// A whole model: a layer sequence plus pre/post (embedding / head) params.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelProfile {
     pub name: String,
     pub layers: Vec<LayerProfile>,

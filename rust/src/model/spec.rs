@@ -1,0 +1,1099 @@
+//! Declarative model + training-configuration specs: the typed,
+//! JSON-loadable front door of the planner.
+//!
+//! A [`ModelSpec`] describes a model the way a user thinks about it —
+//! architecture family, runs of identical transformer blocks, embedding
+//! and head layers — and *compiles* to the [`ModelProfile`] layer sequence
+//! the search engine consumes (paper §III-A). The Table I zoo is itself
+//! expressed as `ModelSpec`s (`model::zoo`), so a spec loaded from
+//! `--model-file my-model.json` travels the exact same path as the
+//! built-in models.
+//!
+//! A [`TrainConfig`] describes the numerics of the training run — the
+//! parameter/activation dtype (with fp32 master weights under mixed
+//! precision), the optimizer (SGD or Adam), and optional ZeRO-style
+//! sharding of the optimizer state over the data-parallel degree. Its
+//! byte-per-parameter and activation-scale accounting replaces the
+//! hardwired fp32/Adam constants in the memory model; the default
+//! (fp32 + Adam, unsharded) reproduces those constants bit-for-bit, so
+//! plans and artifacts produced without an explicit train config are
+//! byte-identical to the pre-spec planner.
+//!
+//! Supported block features beyond the plain transformer layer:
+//!   * windowed attention (Swin-style kv context),
+//!   * grouped-query attention (`kv_heads` < `heads`),
+//!   * cross-attention decoder blocks (encoder-decoder family),
+//!   * MoE feed-forward blocks (`experts` routed `top_k` ways).
+
+use std::fmt;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::{LayerProfile, ModelProfile};
+
+/// A model spec failed to parse, validate, or compile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecError {
+    pub reason: String,
+}
+
+impl SpecError {
+    fn new(reason: impl Into<String>) -> SpecError {
+        SpecError { reason: reason.into() }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.reason)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Reject non-objects and unknown keys in user-authored JSON objects: a
+/// misspelled optional key (`"kv_head"`, `"windows"`, `"zer0"`) or a
+/// scalar where an object belongs must error, not silently describe a
+/// different model or training run.
+fn check_keys(v: &Json, allowed: &[&str], ctx: &str) -> Result<(), SpecError> {
+    let Json::Obj(m) = v else {
+        return Err(SpecError::new(format!(
+            "{ctx}: expected a JSON object with keys {{{}}}",
+            allowed.join(", ")
+        )));
+    };
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(SpecError::new(format!(
+                "{ctx}: unknown key {k:?} (allowed: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// TrainConfig
+// ---------------------------------------------------------------------------
+
+/// Numeric format of parameters and activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    Fp32,
+    Fp16,
+    Bf16,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Dtype::Fp32 => 4.0,
+            Dtype::Fp16 | Dtype::Bf16 => 2.0,
+        }
+    }
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Dtype::Fp32 => "fp32",
+            Dtype::Fp16 => "fp16",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Dtype, SpecError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fp32" | "float32" => Ok(Dtype::Fp32),
+            "fp16" | "float16" | "half" => Ok(Dtype::Fp16),
+            "bf16" | "bfloat16" => Ok(Dtype::Bf16),
+            other => Err(SpecError::new(format!(
+                "unknown dtype {other:?}; expected \"fp32\", \"fp16\" or \"bf16\""
+            ))),
+        }
+    }
+}
+
+/// Optimizer whose per-parameter state the memory model accounts for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Plain SGD: no per-parameter optimizer state.
+    Sgd,
+    /// Adam: two fp32 moments (8 bytes/param).
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn key(self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+}
+
+impl std::str::FromStr for OptimizerKind {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<OptimizerKind, SpecError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "adam" | "adamw" => Ok(OptimizerKind::Adam),
+            other => Err(SpecError::new(format!(
+                "unknown optimizer {other:?}; expected \"sgd\" or \"adam\""
+            ))),
+        }
+    }
+}
+
+/// Training numerics: dtype, optimizer, and optional ZeRO-style sharding of
+/// the optimizer state over the data-parallel degree.
+///
+/// Memory accounting per parameter:
+///   * parameter + gradient in `dtype` (never sharded beyond TP/SDP),
+///   * fp32 master weights when `dtype` is not fp32 (4 bytes),
+///   * optimizer moments (Adam: 8 bytes fp32; SGD: none),
+/// with the master + moment bytes divided by the strategy's DP degree when
+/// `zero` is set (ZeRO-1; SDP already shards everything, so `zero` only
+/// matters for replicated-DP strategies).
+///
+/// The default (fp32 + Adam, no ZeRO) is 4 + 4 + 8 = 16 bytes/param — the
+/// historical [`crate::parallel::memory::STATE_BYTES_PER_PARAM`] — and an
+/// activation scale of 1.0, so it reproduces the pre-spec planner
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainConfig {
+    pub dtype: Dtype,
+    pub optimizer: OptimizerKind,
+    /// Shard optimizer state (master weights + moments) over the DP degree.
+    pub zero: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { dtype: Dtype::Fp32, optimizer: OptimizerKind::Adam, zero: false }
+    }
+}
+
+impl TrainConfig {
+    /// Scale factor on the fp32-calibrated activation bytes of a
+    /// [`LayerProfile`] (1.0 for fp32, 0.5 for fp16/bf16).
+    pub fn act_scale(&self) -> f64 {
+        self.dtype.bytes() / 4.0
+    }
+
+    /// Parameter + gradient bytes per parameter (persistent on every
+    /// replica; never ZeRO-sharded).
+    pub fn param_grad_bytes(&self) -> f64 {
+        2.0 * self.dtype.bytes()
+    }
+
+    /// fp32 master copy (mixed precision only) + optimizer moment bytes
+    /// per parameter — the ZeRO-shardable part of the model state.
+    pub fn optimizer_state_bytes(&self) -> f64 {
+        let master = if self.dtype == Dtype::Fp32 { 0.0 } else { 4.0 };
+        let moments = match self.optimizer {
+            OptimizerKind::Adam => 8.0,
+            OptimizerKind::Sgd => 0.0,
+        };
+        master + moments
+    }
+
+    /// Model-state bytes per parameter for a strategy whose pure
+    /// data-parallel degree is `dp` (the divisor ZeRO shards over).
+    pub fn state_bytes_per_param(&self, dp: usize) -> f64 {
+        let shard = if self.zero { dp.max(1) as f64 } else { 1.0 };
+        self.param_grad_bytes() + self.optimizer_state_bytes() / shard
+    }
+
+    /// Model-state bytes per parameter with no ZeRO sharding applied —
+    /// the strategy-agnostic weight used by partition seeds.
+    pub fn unsharded_state_bytes(&self) -> f64 {
+        self.param_grad_bytes() + self.optimizer_state_bytes()
+    }
+
+    /// Whether this is the byte-compatible default (fp32 + Adam, no ZeRO).
+    pub fn is_default(&self) -> bool {
+        *self == TrainConfig::default()
+    }
+
+    /// Compact label like "bf16+adam+zero".
+    pub fn label(&self) -> String {
+        let mut s = format!("{}+{}", self.dtype.key(), self.optimizer.key());
+        if self.zero {
+            s.push_str("+zero");
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dtype", Json::str(self.dtype.key())),
+            ("optimizer", Json::str(self.optimizer.key())),
+            ("zero", Json::Bool(self.zero)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TrainConfig, SpecError> {
+        check_keys(v, &["dtype", "optimizer", "zero"], "train config")?;
+        let mut out = TrainConfig::default();
+        if let Some(d) = v.get("dtype") {
+            out.dtype = d
+                .as_str()
+                .ok_or_else(|| SpecError::new("train config: dtype must be a string"))?
+                .parse()?;
+        }
+        if let Some(o) = v.get("optimizer") {
+            out.optimizer = o
+                .as_str()
+                .ok_or_else(|| SpecError::new("train config: optimizer must be a string"))?
+                .parse()?;
+        }
+        if let Some(z) = v.get("zero") {
+            out.zero = z
+                .as_bool()
+                .ok_or_else(|| SpecError::new("train config: zero must be a boolean"))?;
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ModelSpec
+// ---------------------------------------------------------------------------
+
+/// Architecture family — determines block roles, layer naming, and
+/// family-specific extras (Swin patch-merging projections).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Causal decoder-only LM (GPT-style); optional grouped-query
+    /// attention via [`BlockSpec::kv_heads`].
+    DecoderOnly,
+    /// Bidirectional encoder-only model (BERT/ViT-style).
+    EncoderOnly,
+    /// Encoder stacks followed by cross-attending decoder stacks
+    /// (T5-style); blocks with `cross_seq` set are the decoders.
+    EncoderDecoder,
+    /// Hierarchical windowed-attention vision stages (Swin-style);
+    /// patch-merging projections between stacks are added automatically.
+    Windowed,
+}
+
+impl Family {
+    pub fn key(self) -> &'static str {
+        match self {
+            Family::DecoderOnly => "decoder-only",
+            Family::EncoderOnly => "encoder-only",
+            Family::EncoderDecoder => "encoder-decoder",
+            Family::Windowed => "windowed",
+        }
+    }
+}
+
+impl std::str::FromStr for Family {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Family, SpecError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "decoder-only" | "gpt" => Ok(Family::DecoderOnly),
+            "encoder-only" | "bert" => Ok(Family::EncoderOnly),
+            "encoder-decoder" | "t5" => Ok(Family::EncoderDecoder),
+            "windowed" | "swin" => Ok(Family::Windowed),
+            other => Err(SpecError::new(format!(
+                "unknown model family {other:?}; expected \"decoder-only\", \
+                 \"encoder-only\", \"encoder-decoder\" or \"windowed\""
+            ))),
+        }
+    }
+}
+
+/// MoE feed-forward description for a block run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeSpec {
+    /// Expert count (each expert is a full FFN).
+    pub experts: usize,
+    /// Experts each token is routed to.
+    pub top_k: usize,
+}
+
+/// One run of `count` identical transformer blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockSpec {
+    pub count: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// Sequence length (tokens/patches) seen by these blocks.
+    pub seq: usize,
+    /// Attention window (kv context); `None` = full attention over `seq`.
+    pub window: Option<usize>,
+    /// Grouped-query attention: key/value head count (`None` = `heads`).
+    pub kv_heads: Option<usize>,
+    /// Cross-attention to an encoder of this length (decoder blocks of the
+    /// encoder-decoder family).
+    pub cross_seq: Option<usize>,
+    /// Replace the dense FFN with a routed mixture of experts.
+    pub moe: Option<MoeSpec>,
+}
+
+impl BlockSpec {
+    /// Plain full-attention block run (the common case).
+    pub fn dense(count: usize, hidden: usize, heads: usize, seq: usize) -> BlockSpec {
+        BlockSpec {
+            count,
+            hidden,
+            heads,
+            seq,
+            window: None,
+            kv_heads: None,
+            cross_seq: None,
+            moe: None,
+        }
+    }
+
+    /// kv context length of one block.
+    fn kv_seq(&self) -> usize {
+        self.window.unwrap_or(self.seq)
+    }
+
+    fn validate(&self, family: Family, idx: usize) -> Result<(), SpecError> {
+        let at = |what: String| SpecError::new(format!("blocks[{idx}]: {what}"));
+        if self.count == 0 {
+            return Err(at("count must be >= 1".into()));
+        }
+        if self.hidden == 0 || self.heads == 0 || self.seq == 0 {
+            return Err(at("hidden, heads and seq must be >= 1".into()));
+        }
+        if self.hidden % self.heads != 0 {
+            return Err(at(format!(
+                "hidden {} is not divisible by heads {}",
+                self.hidden, self.heads
+            )));
+        }
+        if let Some(w) = self.window {
+            if w == 0 || w > self.seq {
+                return Err(at(format!("window {w} must be in 1..={}", self.seq)));
+            }
+        }
+        if let Some(kv) = self.kv_heads {
+            if kv == 0 || kv > self.heads || self.heads % kv != 0 {
+                return Err(at(format!(
+                    "kv_heads {kv} must divide heads {}",
+                    self.heads
+                )));
+            }
+        }
+        if let Some(moe) = self.moe {
+            if moe.experts < 2 {
+                return Err(at("moe.experts must be >= 2".into()));
+            }
+            if moe.top_k == 0 || moe.top_k > moe.experts {
+                return Err(at(format!(
+                    "moe.top_k {} must be in 1..={}",
+                    moe.top_k, moe.experts
+                )));
+            }
+        }
+        if self.cross_seq == Some(0) {
+            return Err(at("cross_seq must be >= 1".into()));
+        }
+        if self.cross_seq.is_some() {
+            if family != Family::EncoderDecoder {
+                return Err(at(format!(
+                    "cross_seq requires the encoder-decoder family (got {})",
+                    family.key()
+                )));
+            }
+            if self.kv_heads.is_some() || self.moe.is_some() || self.window.is_some() {
+                return Err(at(
+                    "kv_heads/moe/window are not supported on cross-attention \
+                     decoder blocks"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the `LayerProfile` of one block named `name`. Plain blocks
+    /// delegate to the calibrated zoo constructors (bit-identical to the
+    /// historical zoo); GQA/MoE blocks use the generalized formulas below.
+    fn layer(&self, name: &str) -> LayerProfile {
+        if let Some(cross) = self.cross_seq {
+            return LayerProfile::decoder(name, self.hidden, self.seq, self.heads, cross);
+        }
+        let plain_attn = self.kv_heads.map_or(true, |kv| kv == self.heads);
+        if plain_attn && self.moe.is_none() {
+            return LayerProfile::windowed_encoder(
+                name,
+                self.hidden,
+                self.seq,
+                self.heads,
+                self.kv_seq(),
+            );
+        }
+        // Generalized block: GQA shrinks the k/v projections by
+        // kv_heads/heads; MoE replicates the FFN weights across experts
+        // (plus an h×E router) and multiplies FFN compute/activations by
+        // top_k. ratio = 1, experts = top_k = 1 reduces to the standard
+        // 12h² + 13h / 24sh² + 4swh / 4(17sh + 2.5asw) block.
+        let (h, s, a) = (self.hidden as f64, self.seq as f64, self.heads as f64);
+        let w = self.kv_seq() as f64;
+        let ratio = self.kv_heads.map_or(1.0, |kv| kv as f64 / self.heads as f64);
+        let (e, k) = self.moe.map_or((1.0, 1.0), |m| (m.experts as f64, m.top_k as f64));
+        let router = if e > 1.0 { h * e } else { 0.0 };
+        let router_flops = if e > 1.0 { 2.0 * s * h * e } else { 0.0 };
+        LayerProfile {
+            name: name.to_string(),
+            hidden: self.hidden,
+            seq: self.seq,
+            heads: self.heads,
+            kv_seq: self.kv_seq(),
+            // attn q+o (2h²) + kv (2h²·ratio) + ffn (8h²·E) + router + biases.
+            params: (2.0 + 2.0 * ratio) * h * h + 8.0 * h * h * e + router + 13.0 * h,
+            // projections (4+4·ratio)sh² + ffn 16sh²·k + attention 4swh.
+            flops_fwd: (4.0 + 4.0 * ratio) * s * h * h
+                + 16.0 * s * h * h * k
+                + 4.0 * s * w * h
+                + router_flops,
+            // Of the calibrated 17sh activation term, 2sh are k/v
+            // projections (scaled by ratio) and 8sh the FFN intermediate
+            // (scaled by top_k); attention scores stay per q-head.
+            act_bytes: 4.0 * ((7.0 + 2.0 * ratio + 8.0 * k) * s * h + 2.5 * a * s * w),
+            bnd_bytes: 4.0 * s * h,
+        }
+    }
+}
+
+/// Patch-embedding front end (vision models): a `channels × size × size →
+/// hidden` projection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PatchSpec {
+    pub channels: usize,
+    pub size: usize,
+}
+
+/// Embedding-side layers, attributed to the first pipeline stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmbeddingSpec {
+    /// Token vocabulary rows (`vocab × hidden` params); 0 = none.
+    pub vocab: usize,
+    /// Learned position embeddings over this many positions; 0 = none.
+    pub positions: usize,
+    /// Patch-embedding projection (vision models).
+    pub patch: Option<PatchSpec>,
+    /// Additional embedding-side parameters not covered above (segment
+    /// embeddings, layer norms, ...), as a raw count.
+    pub extra_params: f64,
+}
+
+impl Default for EmbeddingSpec {
+    fn default() -> Self {
+        EmbeddingSpec { vocab: 0, positions: 0, patch: None, extra_params: 0.0 }
+    }
+}
+
+impl EmbeddingSpec {
+    /// Vocabulary-only embedding (tied LM head).
+    pub fn vocab(vocab: usize) -> EmbeddingSpec {
+        EmbeddingSpec { vocab, ..Default::default() }
+    }
+
+    fn params(&self, hidden: f64) -> f64 {
+        self.vocab as f64 * hidden
+            + self.positions as f64 * hidden
+            + self
+                .patch
+                .map_or(0.0, |p| (p.channels * p.size * p.size) as f64 * hidden)
+            + self.extra_params
+    }
+}
+
+/// Head-side (output) layers, attributed to the last pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HeadSpec {
+    /// Classification head: `hidden × classes` (+ `classes` bias terms).
+    Classifier { classes: usize, bias: bool },
+    /// BERT MLM-style head: `h×h` transform + norms + vocabulary bias
+    /// (`h² + 3h + vocab`; the tied decoder matrix is not re-counted).
+    MlmVocab { vocab: usize },
+}
+
+impl HeadSpec {
+    fn params(&self, hidden: f64) -> f64 {
+        match *self {
+            HeadSpec::Classifier { classes, bias } => {
+                hidden * classes as f64 + if bias { classes as f64 } else { 0.0 }
+            }
+            HeadSpec::MlmVocab { vocab } => hidden * hidden + 3.0 * hidden + vocab as f64,
+        }
+    }
+}
+
+/// A declarative model description: architecture family, block runs, and
+/// optional embedding/head layers. Compiles to the planner's
+/// [`ModelProfile`]; serializes to/from JSON (`--model-file`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: Family,
+    /// Block runs in model order.
+    pub blocks: Vec<BlockSpec>,
+    pub embedding: Option<EmbeddingSpec>,
+    pub head: Option<HeadSpec>,
+}
+
+impl ModelSpec {
+    /// Total block (layer) count.
+    pub fn n_layers(&self) -> usize {
+        self.blocks.iter().map(|b| b.count).sum()
+    }
+
+    /// Structural validation (also run by [`ModelSpec::compile`]).
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.name.trim().is_empty() {
+            return Err(SpecError::new("model name must not be empty"));
+        }
+        if self.blocks.is_empty() {
+            return Err(SpecError::new("model must have at least one block run"));
+        }
+        for (i, b) in self.blocks.iter().enumerate() {
+            b.validate(self.family, i)?;
+        }
+        if let Some(e) = &self.embedding {
+            if !(e.extra_params.is_finite() && e.extra_params >= 0.0) {
+                return Err(SpecError::new(format!(
+                    "embedding.extra_params must be a non-negative finite number, got {}",
+                    e.extra_params
+                )));
+            }
+        }
+        if self.family == Family::EncoderDecoder
+            && !self.blocks.iter().any(|b| b.cross_seq.is_some())
+        {
+            return Err(SpecError::new(
+                "encoder-decoder family needs at least one decoder block run \
+                 (a block with cross_seq set)",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Compile to the planner's layer-sequence view. The zoo specs
+    /// reproduce the historical constructors bit-for-bit (pinned by test).
+    pub fn compile(&self) -> Result<ModelProfile, SpecError> {
+        self.validate()?;
+        let mut layers = Vec::with_capacity(self.n_layers());
+        let (mut enc_i, mut dec_i) = (0usize, 0usize);
+        for (si, b) in self.blocks.iter().enumerate() {
+            for i in 0..b.count {
+                let name = match self.family {
+                    Family::Windowed => format!("s{si}l{i}"),
+                    Family::DecoderOnly => {
+                        let n = format!("dec{dec_i}");
+                        dec_i += 1;
+                        n
+                    }
+                    Family::EncoderOnly => {
+                        let n = format!("enc{enc_i}");
+                        enc_i += 1;
+                        n
+                    }
+                    Family::EncoderDecoder => {
+                        if b.cross_seq.is_some() {
+                            let n = format!("dec{dec_i}");
+                            dec_i += 1;
+                            n
+                        } else {
+                            let n = format!("enc{enc_i}");
+                            enc_i += 1;
+                            n
+                        }
+                    }
+                };
+                layers.push(b.layer(&name));
+            }
+        }
+
+        // Embedding params bind to the first block's hidden size; head
+        // params to the last block's.
+        let h0 = self.blocks[0].hidden as f64;
+        let h_last = self.blocks.last().unwrap().hidden as f64;
+        let mut pre_params = 0.0;
+        if self.family == Family::Windowed {
+            // Patch-merging projection into each next stage (4C -> 2C).
+            for wnd in self.blocks.windows(2) {
+                let h_next = wnd[1].hidden as f64;
+                pre_params += 2.0 * h_next * h_next;
+            }
+        }
+        if let Some(e) = &self.embedding {
+            pre_params += e.params(h0);
+        }
+        let post_params = self.head.map_or(0.0, |h| h.params(h_last));
+
+        Ok(ModelProfile { name: self.name.clone(), layers, pre_params, post_params })
+    }
+
+    // ---- JSON (de)serialization -----------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("family", Json::str(self.family.key())),
+            (
+                "blocks",
+                Json::arr(self.blocks.iter().map(|b| {
+                    let mut bf = vec![
+                        ("count", Json::num(b.count as f64)),
+                        ("hidden", Json::num(b.hidden as f64)),
+                        ("heads", Json::num(b.heads as f64)),
+                        ("seq", Json::num(b.seq as f64)),
+                    ];
+                    if let Some(w) = b.window {
+                        bf.push(("window", Json::num(w as f64)));
+                    }
+                    if let Some(kv) = b.kv_heads {
+                        bf.push(("kv_heads", Json::num(kv as f64)));
+                    }
+                    if let Some(c) = b.cross_seq {
+                        bf.push(("cross_seq", Json::num(c as f64)));
+                    }
+                    if let Some(m) = b.moe {
+                        bf.push((
+                            "moe",
+                            Json::obj(vec![
+                                ("experts", Json::num(m.experts as f64)),
+                                ("top_k", Json::num(m.top_k as f64)),
+                            ]),
+                        ));
+                    }
+                    Json::obj(bf)
+                })),
+            ),
+        ];
+        if let Some(e) = &self.embedding {
+            let mut ef = Vec::new();
+            if e.vocab > 0 {
+                ef.push(("vocab", Json::num(e.vocab as f64)));
+            }
+            if e.positions > 0 {
+                ef.push(("positions", Json::num(e.positions as f64)));
+            }
+            if let Some(p) = e.patch {
+                ef.push((
+                    "patch",
+                    Json::obj(vec![
+                        ("channels", Json::num(p.channels as f64)),
+                        ("size", Json::num(p.size as f64)),
+                    ]),
+                ));
+            }
+            if e.extra_params != 0.0 {
+                ef.push(("extra_params", Json::num(e.extra_params)));
+            }
+            fields.push(("embedding", Json::obj(ef)));
+        }
+        if let Some(h) = &self.head {
+            let hv = match *h {
+                HeadSpec::Classifier { classes, bias } => Json::obj(vec![
+                    ("classes", Json::num(classes as f64)),
+                    ("bias", Json::Bool(bias)),
+                ]),
+                HeadSpec::MlmVocab { vocab } => {
+                    Json::obj(vec![("mlm_vocab", Json::num(vocab as f64))])
+                }
+            };
+            fields.push(("head", hv));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelSpec, SpecError> {
+        let bad = |what: &str| SpecError::new(format!("model spec: missing or invalid {what}"));
+        // Counts/sizes must be exact non-negative integers — reject the
+        // silent truncation `Json::as_usize` would apply to e.g. 1280.9.
+        let exact_usize = |x: &Json| -> Option<usize> {
+            let n = x.as_f64()?;
+            if n.fract() == 0.0 && (0.0..=9.007199254740992e15).contains(&n) {
+                Some(n as usize)
+            } else {
+                None
+            }
+        };
+        check_keys(v, &["name", "family", "blocks", "embedding", "head"], "model spec")?;
+        let name = v.get("name").and_then(Json::as_str).ok_or_else(|| bad("name"))?.to_string();
+        let family: Family =
+            v.get("family").and_then(Json::as_str).ok_or_else(|| bad("family"))?.parse()?;
+        let mut blocks = Vec::new();
+        for (i, bv) in v
+            .get("blocks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("blocks (array)"))?
+            .iter()
+            .enumerate()
+        {
+            check_keys(
+                bv,
+                &["count", "hidden", "heads", "seq", "window", "kv_heads", "cross_seq", "moe"],
+                &format!("blocks[{i}]"),
+            )?;
+            let req = |key: &str| {
+                bv.get(key)
+                    .and_then(&exact_usize)
+                    .ok_or_else(|| bad(&format!("blocks[{i}].{key}")))
+            };
+            let opt = |key: &str| -> Result<Option<usize>, SpecError> {
+                match bv.get(key) {
+                    None | Some(Json::Null) => Ok(None),
+                    Some(x) => Ok(Some(
+                        exact_usize(x).ok_or_else(|| bad(&format!("blocks[{i}].{key}")))?,
+                    )),
+                }
+            };
+            let moe = match bv.get("moe") {
+                None | Some(Json::Null) => None,
+                Some(m) => {
+                    check_keys(m, &["experts", "top_k"], &format!("blocks[{i}].moe"))?;
+                    Some(MoeSpec {
+                        experts: m
+                            .get("experts")
+                            .and_then(&exact_usize)
+                            .ok_or_else(|| bad(&format!("blocks[{i}].moe.experts")))?,
+                        top_k: m
+                            .get("top_k")
+                            .and_then(&exact_usize)
+                            .ok_or_else(|| bad(&format!("blocks[{i}].moe.top_k")))?,
+                    })
+                }
+            };
+            blocks.push(BlockSpec {
+                count: req("count")?,
+                hidden: req("hidden")?,
+                heads: req("heads")?,
+                seq: req("seq")?,
+                window: opt("window")?,
+                kv_heads: opt("kv_heads")?,
+                cross_seq: opt("cross_seq")?,
+                moe,
+            });
+        }
+        let embedding = match v.get("embedding") {
+            None | Some(Json::Null) => None,
+            Some(ev) => {
+                // Absent fields default; present fields must be valid.
+                let field = |key: &str| -> Result<usize, SpecError> {
+                    match ev.get(key) {
+                        None | Some(Json::Null) => Ok(0),
+                        Some(x) => {
+                            exact_usize(x).ok_or_else(|| bad(&format!("embedding.{key}")))
+                        }
+                    }
+                };
+                check_keys(
+                    ev,
+                    &["vocab", "positions", "patch", "extra_params"],
+                    "embedding",
+                )?;
+                let patch = match ev.get("patch") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => {
+                        check_keys(p, &["channels", "size"], "embedding.patch")?;
+                        Some(PatchSpec {
+                            channels: p
+                                .get("channels")
+                                .and_then(&exact_usize)
+                                .ok_or_else(|| bad("embedding.patch.channels"))?,
+                            size: p
+                                .get("size")
+                                .and_then(&exact_usize)
+                                .ok_or_else(|| bad("embedding.patch.size"))?,
+                        })
+                    }
+                };
+                let extra_params = match ev.get("extra_params") {
+                    None | Some(Json::Null) => 0.0,
+                    Some(x) => x.as_f64().ok_or_else(|| bad("embedding.extra_params"))?,
+                };
+                Some(EmbeddingSpec {
+                    vocab: field("vocab")?,
+                    positions: field("positions")?,
+                    patch,
+                    extra_params,
+                })
+            }
+        };
+        let head = match v.get("head") {
+            None | Some(Json::Null) => None,
+            Some(hv) => {
+                check_keys(hv, &["classes", "bias", "mlm_vocab"], "head")?;
+                if hv.get("mlm_vocab").is_some()
+                    && (hv.get("classes").is_some() || hv.get("bias").is_some())
+                {
+                    return Err(SpecError::new(
+                        "head: \"mlm_vocab\" and \"classes\"/\"bias\" are mutually \
+                         exclusive — describe one head, not both",
+                    ));
+                }
+                if let Some(x) = hv.get("mlm_vocab") {
+                    Some(HeadSpec::MlmVocab {
+                        vocab: exact_usize(x).ok_or_else(|| bad("head.mlm_vocab"))?,
+                    })
+                } else if let Some(x) = hv.get("classes") {
+                    Some(HeadSpec::Classifier {
+                        classes: exact_usize(x).ok_or_else(|| bad("head.classes"))?,
+                        bias: hv.get("bias").and_then(Json::as_bool).unwrap_or(false),
+                    })
+                } else {
+                    return Err(bad("head (expected {\"classes\": ...} or {\"mlm_vocab\": ...})"));
+                }
+            }
+        };
+        let spec = ModelSpec { name, family, blocks, embedding, head };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from a JSON string.
+    pub fn from_json_str(s: &str) -> Result<ModelSpec, SpecError> {
+        let v = Json::parse(s).map_err(|e| SpecError::new(format!("model spec: {e}")))?;
+        Self::from_json(&v)
+    }
+
+    /// Load a spec from a `--model-file` JSON file.
+    pub fn load(path: &Path) -> Result<ModelSpec, SpecError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| SpecError::new(format!("reading {}: {e}", path.display())))?;
+        Self::from_json_str(&text)
+            .map_err(|e| SpecError::new(format!("{}: {e}", path.display())))
+    }
+
+    /// Write the spec as pretty-printed JSON — the byte format of the
+    /// committed `examples/models/*.json` files, so `galvatron models
+    /// --out-dir` regeneration is diff-clean (pinned by `spec_tests`).
+    pub fn save(&self, path: &Path) -> Result<(), SpecError> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| SpecError::new(format!("writing {}: {e}", path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpt_spec() -> ModelSpec {
+        ModelSpec {
+            name: "GPT-Test".into(),
+            family: Family::DecoderOnly,
+            blocks: vec![BlockSpec::dense(4, 1024, 16, 512)],
+            embedding: Some(EmbeddingSpec { vocab: 50257, positions: 512, ..Default::default() }),
+            head: None,
+        }
+    }
+
+    #[test]
+    fn default_train_config_matches_fp32_adam_constants() {
+        let t = TrainConfig::default();
+        assert!(t.is_default());
+        assert_eq!(t.state_bytes_per_param(1), 16.0);
+        assert_eq!(t.state_bytes_per_param(8), 16.0); // no zero -> no sharding
+        assert_eq!(t.act_scale(), 1.0);
+    }
+
+    #[test]
+    fn dtype_and_optimizer_accounting() {
+        let sgd = TrainConfig { optimizer: OptimizerKind::Sgd, ..Default::default() };
+        // Adam adds 8 bytes/param of fp32 state over SGD.
+        assert_eq!(TrainConfig::default().state_bytes_per_param(1) - sgd.state_bytes_per_param(1), 8.0);
+        let fp16 = TrainConfig { dtype: Dtype::Fp16, ..Default::default() };
+        // fp16: 2 param + 2 grad + 4 master + 8 moments.
+        assert_eq!(fp16.state_bytes_per_param(1), 16.0);
+        assert_eq!(fp16.act_scale(), 0.5);
+        // ZeRO shards master + moments over the DP degree.
+        let zero = TrainConfig { dtype: Dtype::Bf16, zero: true, ..Default::default() };
+        assert_eq!(zero.state_bytes_per_param(4), 4.0 + 12.0 / 4.0);
+        assert_eq!(zero.state_bytes_per_param(1), 16.0);
+    }
+
+    #[test]
+    fn train_config_json_round_trip() {
+        for t in [
+            TrainConfig::default(),
+            TrainConfig { dtype: Dtype::Bf16, optimizer: OptimizerKind::Sgd, zero: true },
+            TrainConfig { dtype: Dtype::Fp16, optimizer: OptimizerKind::Adam, zero: false },
+        ] {
+            let v = Json::parse(&t.to_json().to_string()).unwrap();
+            assert_eq!(TrainConfig::from_json(&v).unwrap(), t);
+        }
+        assert!("fp8".parse::<Dtype>().is_err());
+        assert!("lion".parse::<OptimizerKind>().is_err());
+    }
+
+    #[test]
+    fn compile_builds_layer_sequence() {
+        let m = gpt_spec().compile().unwrap();
+        assert_eq!(m.n_layers(), 4);
+        assert_eq!(m.layers[0].name, "dec0");
+        assert_eq!(m.layers[3].name, "dec3");
+        assert_eq!(m.pre_params, 50257.0 * 1024.0 + 512.0 * 1024.0);
+        assert_eq!(m.post_params, 0.0);
+    }
+
+    #[test]
+    fn gqa_shrinks_params_and_flops() {
+        let mut spec = gpt_spec();
+        let dense = spec.compile().unwrap();
+        spec.blocks[0].kv_heads = Some(4);
+        let gqa = spec.compile().unwrap();
+        assert!(gqa.layers[0].params < dense.layers[0].params);
+        assert!(gqa.layers[0].flops_fwd < dense.layers[0].flops_fwd);
+        assert!(gqa.layers[0].act_bytes < dense.layers[0].act_bytes);
+        // kv_heads == heads delegates to the calibrated dense block.
+        spec.blocks[0].kv_heads = Some(16);
+        let same = spec.compile().unwrap();
+        assert_eq!(same.layers[0].params, dense.layers[0].params);
+        assert_eq!(same.layers[0].act_bytes, dense.layers[0].act_bytes);
+    }
+
+    #[test]
+    fn moe_scales_ffn_params_not_flops_at_top1() {
+        let mut spec = gpt_spec();
+        let dense = spec.compile().unwrap();
+        spec.blocks[0].moe = Some(MoeSpec { experts: 8, top_k: 1 });
+        let moe = spec.compile().unwrap();
+        // 8 experts ≈ 7 extra FFNs of params...
+        assert!(moe.layers[0].params > 4.0 * dense.layers[0].params);
+        // ...but top-1 routing keeps FLOPs near the dense block (router only).
+        assert!(moe.layers[0].flops_fwd < 1.1 * dense.layers[0].flops_fwd);
+        spec.blocks[0].moe = Some(MoeSpec { experts: 8, top_k: 2 });
+        let top2 = spec.compile().unwrap();
+        assert!(top2.layers[0].flops_fwd > moe.layers[0].flops_fwd);
+        assert!(top2.layers[0].act_bytes > moe.layers[0].act_bytes);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = gpt_spec();
+        s.blocks.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = gpt_spec();
+        s.blocks[0].heads = 7; // 1024 % 7 != 0
+        assert!(s.validate().is_err());
+
+        let mut s = gpt_spec();
+        s.blocks[0].kv_heads = Some(5);
+        assert!(s.validate().is_err());
+
+        let mut s = gpt_spec();
+        s.blocks[0].window = Some(4096); // > seq
+        assert!(s.validate().is_err());
+
+        let mut s = gpt_spec();
+        s.blocks[0].moe = Some(MoeSpec { experts: 4, top_k: 5 });
+        assert!(s.validate().is_err());
+
+        // cross_seq outside the encoder-decoder family.
+        let mut s = gpt_spec();
+        s.blocks[0].cross_seq = Some(512);
+        assert!(s.validate().is_err());
+
+        // encoder-decoder without any decoder blocks.
+        let mut s = gpt_spec();
+        s.family = Family::EncoderDecoder;
+        assert!(s.validate().is_err());
+
+        // Negative / non-finite embedding extras.
+        let mut s = gpt_spec();
+        s.embedding.as_mut().unwrap().extra_params = -1e12;
+        assert!(s.validate().is_err());
+        s.embedding.as_mut().unwrap().extra_params = f64::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_keys() {
+        // A typo'd optional key must error, not silently plan a
+        // different model.
+        let typo = r#"{"name":"x","family":"decoder-only",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512,"kv_head":4}]}"#;
+        let err = ModelSpec::from_json_str(typo).unwrap_err();
+        assert!(err.reason.contains("kv_head"), "{err}");
+        let typo = r#"{"name":"x","famly":"decoder-only",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}]}"#;
+        assert!(ModelSpec::from_json_str(typo).is_err());
+        let typo = r#"{"dtype":"bf16","zer0":true}"#;
+        let v = Json::parse(typo).unwrap();
+        let err = TrainConfig::from_json(&v).unwrap_err();
+        assert!(err.reason.contains("zer0"), "{err}");
+    }
+
+    #[test]
+    fn from_json_rejects_non_object_sections_and_ambiguous_heads() {
+        // A scalar where an object belongs must not parse as "empty".
+        let scalar = r#"{"name":"x","family":"decoder-only",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}],
+            "embedding":50257}"#;
+        assert!(ModelSpec::from_json_str(scalar).is_err());
+        let v = Json::parse(r#""bf16+adam+zero""#).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        // Both head forms at once is ambiguous, not first-match-wins.
+        let both = r#"{"name":"x","family":"decoder-only",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}],
+            "head":{"classes":1000,"bias":true,"mlm_vocab":30522}}"#;
+        let err = ModelSpec::from_json_str(both).unwrap_err();
+        assert!(err.reason.contains("mutually"), "{err}");
+    }
+
+    #[test]
+    fn from_json_rejects_inexact_numerics() {
+        // Fractional sizes must error, not silently truncate.
+        let frac = r#"{"name":"x","family":"decoder-only",
+            "blocks":[{"count":2,"hidden":1280.9,"heads":16,"seq":512}]}"#;
+        assert!(ModelSpec::from_json_str(frac).is_err());
+        let neg = r#"{"name":"x","family":"decoder-only",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}],
+            "embedding":{"vocab":-5}}"#;
+        assert!(ModelSpec::from_json_str(neg).is_err());
+        let bad_head = r#"{"name":"x","family":"decoder-only",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}],
+            "head":{"mlm_vocab":1.5}}"#;
+        assert!(ModelSpec::from_json_str(bad_head).is_err());
+    }
+
+    #[test]
+    fn spec_json_round_trip() {
+        let mut spec = gpt_spec();
+        spec.blocks.push(BlockSpec {
+            count: 2,
+            hidden: 1024,
+            heads: 16,
+            seq: 512,
+            window: Some(128),
+            kv_heads: Some(4),
+            cross_seq: None,
+            moe: Some(MoeSpec { experts: 8, top_k: 2 }),
+        });
+        spec.head = Some(HeadSpec::Classifier { classes: 1000, bias: true });
+        let text = spec.to_json().to_string();
+        let back = ModelSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+        // Serialization is stable.
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let spec = gpt_spec();
+        let path = std::env::temp_dir().join(format!("galvatron-spec-{}.json", std::process::id()));
+        spec.save(&path).unwrap();
+        let back = ModelSpec::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, spec);
+        assert!(ModelSpec::load(Path::new("/nonexistent/spec.json")).is_err());
+    }
+}

@@ -1,4 +1,9 @@
-//! Model zoo: every model from Table I of the paper, plus a CLI lookup.
+//! Model zoo: every model from Table I of the paper, expressed as
+//! [`ModelSpec`] values and compiled through the declarative spec path —
+//! the same pipeline that serves `--model-file` specs. The historical
+//! constructor functions (`bert`, `vit`, `t5`, `swin`, `gpt3`) remain as
+//! thin fronts over the specs; compiled profiles are bit-identical to the
+//! pre-spec hand-written formulas (pinned by `spec_tests`).
 //!
 //! | Model        | Layers          | Hidden            | Params  | Act/sample |
 //! |--------------|-----------------|-------------------|---------|------------|
@@ -18,37 +23,87 @@
 //! | GPT3-39B     | 48              | 8192              | 39.1B   | 58645.34MB |
 //! | GPT3-65B     | 80              | 8192              | 64.9B   | 97557.98MB |
 
-use super::{LayerProfile, ModelProfile};
+use super::spec::{BlockSpec, EmbeddingSpec, Family, HeadSpec, ModelSpec, PatchSpec};
+use super::ModelProfile;
 
-const BERT_VOCAB: f64 = 30522.0;
-const T5_VOCAB: f64 = 32128.0;
-const GPT_VOCAB: f64 = 50257.0;
+const BERT_VOCAB: usize = 30522;
+const T5_VOCAB: usize = 32128;
+const GPT_VOCAB: usize = 50257;
+
+fn compiled(spec: ModelSpec) -> ModelProfile {
+    match spec.compile() {
+        Ok(m) => m,
+        Err(e) => panic!("invalid zoo spec {:?}: {e}", spec.name),
+    }
+}
+
+/// BERT-style encoder-only spec.
+pub fn bert_spec(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelSpec {
+    let h = hidden as f64;
+    ModelSpec {
+        name: name.to_string(),
+        family: Family::EncoderOnly,
+        blocks: vec![BlockSpec::dense(layers, hidden, heads, seq)],
+        embedding: Some(EmbeddingSpec {
+            vocab: BERT_VOCAB,
+            positions: seq,
+            patch: None,
+            // Segment embeddings + embedding layer norm (2h + 2h).
+            extra_params: 2.0 * h + 2.0 * h,
+        }),
+        // Pooler + MLM head transform (tied decoder not re-counted).
+        head: Some(HeadSpec::MlmVocab { vocab: BERT_VOCAB }),
+    }
+}
 
 /// BERT-style encoder-only model.
 pub fn bert(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelProfile {
-    let h = hidden as f64;
-    ModelProfile {
+    compiled(bert_spec(name, layers, hidden, heads, seq))
+}
+
+/// ViT-style encoder-only vision spec (patch-16 front end, ImageNet head).
+pub fn vit_spec(name: &str, layers: usize, hidden: usize, heads: usize, patches: usize) -> ModelSpec {
+    ModelSpec {
         name: name.to_string(),
-        layers: (0..layers)
-            .map(|i| LayerProfile::encoder(&format!("enc{i}"), hidden, seq, heads))
-            .collect(),
-        // token + position + segment embeddings + LN
-        pre_params: BERT_VOCAB * h + (seq as f64) * h + 2.0 * h + 2.0 * h,
-        // pooler + MLM head transform (tied decoder not re-counted)
-        post_params: h * h + 3.0 * h + BERT_VOCAB,
+        family: Family::EncoderOnly,
+        blocks: vec![BlockSpec::dense(layers, hidden, heads, patches)],
+        embedding: Some(EmbeddingSpec {
+            vocab: 0,
+            positions: patches + 1, // patches + CLS token
+            patch: Some(PatchSpec { channels: 3, size: 16 }),
+            extra_params: 0.0,
+        }),
+        head: Some(HeadSpec::Classifier { classes: 1000, bias: true }),
     }
 }
 
 /// ViT-style encoder-only vision model (patch embedding front end).
 pub fn vit(name: &str, layers: usize, hidden: usize, heads: usize, patches: usize) -> ModelProfile {
-    let h = hidden as f64;
-    ModelProfile {
+    compiled(vit_spec(name, layers, hidden, heads, patches))
+}
+
+/// T5-style encoder-decoder spec; `dec_seq` may differ (T5-512/4 imbalance).
+pub fn t5_spec(
+    name: &str,
+    enc_layers: usize,
+    dec_layers: usize,
+    hidden: usize,
+    heads: usize,
+    enc_seq: usize,
+    dec_seq: usize,
+) -> ModelSpec {
+    ModelSpec {
         name: name.to_string(),
-        layers: (0..layers)
-            .map(|i| LayerProfile::encoder(&format!("enc{i}"), hidden, patches, heads))
-            .collect(),
-        pre_params: 3.0 * 16.0 * 16.0 * h + (patches as f64 + 1.0) * h, // patch16 conv + pos
-        post_params: h * 1000.0 + 1000.0,                               // ImageNet-1K head
+        family: Family::EncoderDecoder,
+        blocks: vec![
+            BlockSpec::dense(enc_layers, hidden, heads, enc_seq),
+            BlockSpec {
+                cross_seq: Some(enc_seq),
+                ..BlockSpec::dense(dec_layers, hidden, heads, dec_seq)
+            },
+        ],
+        embedding: Some(EmbeddingSpec::vocab(T5_VOCAB)),
+        head: None, // tied LM head
     }
 }
 
@@ -62,65 +117,58 @@ pub fn t5(
     enc_seq: usize,
     dec_seq: usize,
 ) -> ModelProfile {
-    let h = hidden as f64;
-    let mut layers = Vec::new();
-    for i in 0..enc_layers {
-        layers.push(LayerProfile::encoder(&format!("enc{i}"), hidden, enc_seq, heads));
-    }
-    for i in 0..dec_layers {
-        layers.push(LayerProfile::decoder(&format!("dec{i}"), hidden, dec_seq, heads, enc_seq));
-    }
-    ModelProfile {
+    compiled(t5_spec(name, enc_layers, dec_layers, hidden, heads, enc_seq, dec_seq))
+}
+
+/// Swin-style hierarchical spec: per-stage (layers, hidden, patches,
+/// heads) with 7x7 = 49-token attention windows. Patch-merging
+/// projections between stages are added by the windowed-family compile.
+pub fn swin_spec(name: &str, stages: &[(usize, usize, usize, usize)]) -> ModelSpec {
+    const WINDOW: usize = 49;
+    ModelSpec {
         name: name.to_string(),
-        layers,
-        pre_params: T5_VOCAB * h,
-        post_params: 0.0, // tied LM head
+        family: Family::Windowed,
+        blocks: stages
+            .iter()
+            .map(|&(n, hidden, patches, heads)| BlockSpec {
+                window: Some(WINDOW),
+                ..BlockSpec::dense(n, hidden, heads, patches)
+            })
+            .collect(),
+        embedding: Some(EmbeddingSpec {
+            vocab: 0,
+            positions: 0,
+            patch: Some(PatchSpec { channels: 3, size: 4 }),
+            extra_params: 0.0,
+        }),
+        head: Some(HeadSpec::Classifier { classes: 1000, bias: false }),
     }
 }
 
-/// Swin-style hierarchical vision model: per-stage (layers, hidden, patches,
-/// heads) with 7x7 = 49-token attention windows.
+/// Swin-style hierarchical vision model.
 pub fn swin(name: &str, stages: &[(usize, usize, usize, usize)]) -> ModelProfile {
-    const WINDOW: usize = 49;
-    let mut layers = Vec::new();
-    let mut pre = 0.0;
-    for (si, &(n, hidden, patches, heads)) in stages.iter().enumerate() {
-        for i in 0..n {
-            layers.push(LayerProfile::windowed_encoder(
-                &format!("s{si}l{i}"),
-                hidden,
-                patches,
-                heads,
-                WINDOW,
-            ));
-        }
-        // Patch-merging projection into the next stage.
-        if si + 1 < stages.len() {
-            let h_next = stages[si + 1].1 as f64;
-            pre += 2.0 * h_next * h_next; // 4C -> 2C linear merge
-        }
-    }
-    let h0 = stages[0].1 as f64;
-    let h_last = stages.last().unwrap().1 as f64;
-    ModelProfile {
+    compiled(swin_spec(name, stages))
+}
+
+/// GPT-3-style decoder-only spec (causal self-attention only).
+pub fn gpt3_spec(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelSpec {
+    ModelSpec {
         name: name.to_string(),
-        layers,
-        pre_params: pre + 3.0 * 4.0 * 4.0 * h0, // patch4 embed + merges
-        post_params: h_last * 1000.0,
+        family: Family::DecoderOnly,
+        blocks: vec![BlockSpec::dense(layers, hidden, heads, seq)],
+        embedding: Some(EmbeddingSpec {
+            vocab: GPT_VOCAB,
+            positions: seq,
+            patch: None,
+            extra_params: 0.0,
+        }),
+        head: None, // tied
     }
 }
 
 /// GPT-3-style decoder-only model (causal self-attention only).
 pub fn gpt3(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelProfile {
-    let h = hidden as f64;
-    ModelProfile {
-        name: name.to_string(),
-        layers: (0..layers)
-            .map(|i| LayerProfile::encoder(&format!("dec{i}"), hidden, seq, heads))
-            .collect(),
-        pre_params: GPT_VOCAB * h + (seq as f64) * h,
-        post_params: 0.0, // tied
-    }
+    compiled(gpt3_spec(name, layers, hidden, heads, seq))
 }
 
 /// All Table I model names accepted by `model_by_name`.
@@ -144,8 +192,8 @@ pub fn model_names() -> Vec<&'static str> {
     ]
 }
 
-/// Look up a Table I model by (case-insensitive) name.
-pub fn model_by_name(name: &str) -> Option<ModelProfile> {
+/// Look up a Table I model's [`ModelSpec`] by (case-insensitive) name.
+pub fn spec_by_name(name: &str) -> Option<ModelSpec> {
     let swin_dims = |mid: usize| {
         vec![
             (2usize, 320usize, 3136usize, 10usize),
@@ -155,23 +203,28 @@ pub fn model_by_name(name: &str) -> Option<ModelProfile> {
         ]
     };
     Some(match name.to_ascii_lowercase().as_str() {
-        "bert-huge-32" => bert("BERT-Huge-32", 32, 1280, 20, 512),
-        "bert-huge-48" => bert("BERT-Huge-48", 48, 1280, 20, 512),
-        "bert-xhuge" => bert("BERT-xHuge", 128, 2560, 32, 512),
-        "vit-huge-32" => vit("ViT-Huge-32", 32, 1280, 16, 197),
-        "vit-huge-48" => vit("ViT-Huge-48", 48, 1280, 16, 197),
-        "vit-xhuge" => vit("ViT-xHuge", 128, 2560, 32, 197),
-        "t5-large-32" => t5("T5-Large-32", 16, 16, 1024, 16, 512, 512),
-        "t5-large-48" => t5("T5-Large-48", 24, 24, 1024, 16, 512, 512),
-        "t5-512/4-32" => t5("T5-512/4-32", 16, 16, 1024, 16, 512, 4),
-        "t5-512/4-48" => t5("T5-512/4-48", 24, 24, 1024, 16, 512, 4),
-        "swin-huge-32" => swin("Swin-Huge-32", &swin_dims(26)),
-        "swin-huge-48" => swin("Swin-Huge-48", &swin_dims(42)),
-        "gpt3-15b" => gpt3("GPT3-15B", 48, 5120, 40, 2048),
-        "gpt3-39b" => gpt3("GPT3-39B", 48, 8192, 64, 2048),
-        "gpt3-65b" => gpt3("GPT3-65B", 80, 8192, 64, 2048),
+        "bert-huge-32" => bert_spec("BERT-Huge-32", 32, 1280, 20, 512),
+        "bert-huge-48" => bert_spec("BERT-Huge-48", 48, 1280, 20, 512),
+        "bert-xhuge" => bert_spec("BERT-xHuge", 128, 2560, 32, 512),
+        "vit-huge-32" => vit_spec("ViT-Huge-32", 32, 1280, 16, 197),
+        "vit-huge-48" => vit_spec("ViT-Huge-48", 48, 1280, 16, 197),
+        "vit-xhuge" => vit_spec("ViT-xHuge", 128, 2560, 32, 197),
+        "t5-large-32" => t5_spec("T5-Large-32", 16, 16, 1024, 16, 512, 512),
+        "t5-large-48" => t5_spec("T5-Large-48", 24, 24, 1024, 16, 512, 512),
+        "t5-512/4-32" => t5_spec("T5-512/4-32", 16, 16, 1024, 16, 512, 4),
+        "t5-512/4-48" => t5_spec("T5-512/4-48", 24, 24, 1024, 16, 512, 4),
+        "swin-huge-32" => swin_spec("Swin-Huge-32", &swin_dims(26)),
+        "swin-huge-48" => swin_spec("Swin-Huge-48", &swin_dims(42)),
+        "gpt3-15b" => gpt3_spec("GPT3-15B", 48, 5120, 40, 2048),
+        "gpt3-39b" => gpt3_spec("GPT3-39B", 48, 8192, 64, 2048),
+        "gpt3-65b" => gpt3_spec("GPT3-65B", 80, 8192, 64, 2048),
         _ => return None,
     })
+}
+
+/// Look up a Table I model by (case-insensitive) name, compiled.
+pub fn model_by_name(name: &str) -> Option<ModelProfile> {
+    spec_by_name(name).map(compiled)
 }
 
 #[cfg(test)]
@@ -257,12 +310,30 @@ mod tests {
     fn all_names_resolve() {
         for name in model_names() {
             assert!(model_by_name(name).is_some(), "{name}");
+            assert!(spec_by_name(name).is_some(), "{name}");
         }
         assert!(model_by_name("nonexistent").is_none());
+        assert!(spec_by_name("nonexistent").is_none());
     }
 
     #[test]
     fn bert_is_homogeneous() {
         assert!(model_by_name("bert-huge-32").unwrap().is_homogeneous());
+    }
+
+    #[test]
+    fn zoo_layer_names_preserved() {
+        // The spec compile reproduces the historical layer tags.
+        let b = model_by_name("bert-huge-32").unwrap();
+        assert_eq!(b.layers[0].name, "enc0");
+        assert_eq!(b.layers[31].name, "enc31");
+        let g = model_by_name("gpt3-15b").unwrap();
+        assert_eq!(g.layers[0].name, "dec0");
+        let t = model_by_name("t5-large-32").unwrap();
+        assert_eq!(t.layers[15].name, "enc15");
+        assert_eq!(t.layers[16].name, "dec0");
+        let s = model_by_name("swin-huge-32").unwrap();
+        assert_eq!(s.layers[0].name, "s0l0");
+        assert_eq!(s.layers[31].name, "s3l1");
     }
 }

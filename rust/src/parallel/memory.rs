@@ -13,10 +13,13 @@
 //!   * CKPT keeps only boundary activations live through the forward pass
 //!     (O_f = bnd) and pays the intermediate as backward peak (O_b = int).
 
-use crate::model::LayerProfile;
+use crate::model::{LayerProfile, TrainConfig};
 use crate::parallel::Strategy;
 
-/// Bytes of model state per parameter: fp32 param + grad + Adam m + v.
+/// Bytes of model state per parameter under the *default* training
+/// numerics: fp32 param + grad + Adam m + v. The general accounting lives
+/// in [`TrainConfig::state_bytes_per_param`]; its default reproduces this
+/// constant exactly.
 pub const STATE_BYTES_PER_PARAM: f64 = 16.0;
 
 /// Memory footprint of one layer under one strategy.
@@ -40,16 +43,33 @@ impl LayerMemory {
 /// Compute the memory footprint of `layer` under `strategy` with microbatch
 /// size `b_m` (samples per microbatch, *before* batch splitting) and
 /// `extra_params` additional parameters attributed to this layer
-/// (embeddings on the first layer, heads on the last).
+/// (embeddings on the first layer, heads on the last), under the default
+/// training numerics (fp32 + Adam, no ZeRO).
 pub fn layer_memory(layer: &LayerProfile, strategy: &Strategy, b_m: f64, extra_params: f64) -> LayerMemory {
-    let params = layer.params + extra_params;
-    let o_ms = params * STATE_BYTES_PER_PARAM / strategy.state_shard() as f64;
+    layer_memory_with(layer, strategy, b_m, extra_params, &TrainConfig::default())
+}
 
-    // Samples this device actually processes per microbatch.
+/// [`layer_memory`] under explicit training numerics: model-state bytes
+/// follow the dtype/optimizer (with ZeRO sharding the optimizer state over
+/// the strategy's DP degree) and activation bytes scale with the dtype.
+/// The default `train` reproduces [`layer_memory`] bit-for-bit.
+pub fn layer_memory_with(
+    layer: &LayerProfile,
+    strategy: &Strategy,
+    b_m: f64,
+    extra_params: f64,
+    train: &TrainConfig,
+) -> LayerMemory {
+    let params = layer.params + extra_params;
+    let o_ms = params * train.state_bytes_per_param(strategy.dp()) / strategy.state_shard() as f64;
+
+    // Samples this device actually processes per microbatch; activations
+    // are stored in the training dtype.
     let local_samples = b_m / strategy.batch_split() as f64;
-    let bnd = layer.bnd_bytes * local_samples;
+    let scale = train.act_scale();
+    let bnd = layer.bnd_bytes * scale * local_samples;
     // TP shards the intermediate activations; boundary is replicated.
-    let int = layer.int_bytes() * local_samples / strategy.tp() as f64;
+    let int = layer.int_bytes() * scale * local_samples / strategy.tp() as f64;
 
     let (o_f, o_b) = if strategy.ckpt {
         (bnd, int)
@@ -149,6 +169,59 @@ mod tests {
         let with = layer_memory(&l, &Strategy::serial(false), 1.0, 1e6);
         let without = layer_memory(&l, &Strategy::serial(false), 1.0, 0.0);
         assert!((with.o_ms - without.o_ms - 16e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn train_config_default_is_bit_identical() {
+        use crate::model::TrainConfig;
+        let l = layer();
+        for strat in [
+            Strategy::serial(false),
+            Strategy::single(Dim::Dp, 4, true),
+            Strategy::single(Dim::Tp, 4, false),
+            Strategy::single(Dim::Sdp, 8, false),
+        ] {
+            let legacy = layer_memory(&l, &strat, 8.0, 1e6);
+            let dflt = layer_memory_with(&l, &strat, 8.0, 1e6, &TrainConfig::default());
+            assert_eq!(legacy.o_ms.to_bits(), dflt.o_ms.to_bits());
+            assert_eq!(legacy.o_f.to_bits(), dflt.o_f.to_bits());
+            assert_eq!(legacy.o_b.to_bits(), dflt.o_b.to_bits());
+        }
+        assert_eq!(TrainConfig::default().state_bytes_per_param(1), STATE_BYTES_PER_PARAM);
+    }
+
+    #[test]
+    fn fp16_halves_activations_keeps_states() {
+        use crate::model::{Dtype, TrainConfig};
+        let l = layer();
+        let s = Strategy::serial(false);
+        let fp32 = layer_memory_with(&l, &s, 8.0, 0.0, &TrainConfig::default());
+        let half = TrainConfig { dtype: Dtype::Fp16, ..Default::default() };
+        let fp16 = layer_memory_with(&l, &s, 8.0, 0.0, &half);
+        assert!((fp16.o_f - fp32.o_f / 2.0).abs() < 1.0, "fp16 activations must halve");
+        // fp16 Adam: 2 param + 2 grad + 4 master + 8 moments = 16 (same total).
+        assert_eq!(fp16.o_ms, fp32.o_ms);
+    }
+
+    #[test]
+    fn sgd_drops_adam_state_and_zero_shards_it() {
+        use crate::model::{OptimizerKind, TrainConfig};
+        let l = layer();
+        let dp4 = Strategy::single(Dim::Dp, 4, false);
+        let adam = layer_memory_with(&l, &dp4, 8.0, 0.0, &TrainConfig::default());
+        let sgd_cfg = TrainConfig { optimizer: OptimizerKind::Sgd, ..Default::default() };
+        let sgd = layer_memory_with(&l, &dp4, 8.0, 0.0, &sgd_cfg);
+        // Adam adds exactly 8 bytes/param of fp32 state over SGD.
+        assert!((adam.o_ms - sgd.o_ms - 8.0 * l.params).abs() < 1.0);
+        // ZeRO divides the optimizer state by the DP degree.
+        let zero_cfg = TrainConfig { zero: true, ..Default::default() };
+        let zero = layer_memory_with(&l, &dp4, 8.0, 0.0, &zero_cfg);
+        assert!((zero.o_ms - (8.0 + 8.0 / 4.0) * l.params).abs() < 1.0);
+        // Without a DP dimension there is nothing to shard over.
+        let serial = layer_memory_with(&l, &Strategy::serial(false), 8.0, 0.0, &zero_cfg);
+        assert!((serial.o_ms - 16.0 * l.params).abs() < 1.0);
+        // Activations are untouched by optimizer/ZeRO choices.
+        assert_eq!(zero.o_f, adam.o_f);
     }
 
     #[test]

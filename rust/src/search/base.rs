@@ -11,9 +11,9 @@
 //! ([`evaluate_partition`]) and the `optimize` front door.
 
 use crate::cluster::ClusterSpec;
-use crate::cost::pipeline::{plan_cost, PlanCost, Schedule};
+use crate::cost::pipeline::{plan_cost_with, PlanCost, Schedule};
 use crate::cost::CostEstimator;
-use crate::model::ModelProfile;
+use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::memory::LayerMemory;
 use crate::parallel::{ParallelPlan, Strategy};
 use crate::util::{pow2_divisors, MIB};
@@ -53,6 +53,10 @@ pub struct SearchConfig {
     /// `Some(0)`) resolves via `GALVATRON_THREADS` or the machine's
     /// available parallelism; results are identical for every value.
     pub threads: Option<usize>,
+    /// Training numerics (dtype/optimizer/ZeRO) for the memory accounting.
+    /// The default (fp32 + Adam, unsharded) keeps plans byte-identical to
+    /// the pre-spec planner.
+    pub train: TrainConfig,
 }
 
 impl Default for SearchConfig {
@@ -68,6 +72,7 @@ impl Default for SearchConfig {
             patience: 3,
             microbatch_limit: None,
             threads: None,
+            train: TrainConfig::default(),
         }
     }
 }
@@ -119,7 +124,10 @@ pub fn evaluate_partition(
     let sites = cluster.stage_sites(pp);
     let ests: Vec<CostEstimator> = sites
         .iter()
-        .map(|site| CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site.clone()))
+        .map(|site| {
+            CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site.clone())
+                .with_train(cfg.train)
+        })
         .collect();
     let b_m = batch as f64 / microbatches as f64;
 
@@ -158,7 +166,7 @@ pub fn evaluate_partition(
         microbatches,
         stage_slots: if cluster.is_homogeneous() { None } else { Some((0..pp).collect()) },
     };
-    let cost = plan_cost(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown);
+    let cost = plan_cost_with(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown, cfg.train);
     if !cost.feasible {
         return None;
     }

@@ -14,9 +14,9 @@
 use std::collections::VecDeque;
 
 use crate::cluster::ClusterSpec;
-use crate::cost::pipeline::plan_cost;
+use crate::cost::pipeline::plan_cost_with;
 use crate::cost::StageCosts;
-use crate::model::ModelProfile;
+use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::ParallelPlan;
 use crate::search::base::{LayerDiag, SearchConfig, SearchOutcome};
 use crate::search::bmw::{adjust_candidates, memory_balanced_partition_budgeted, proxy_stage_stats};
@@ -67,14 +67,24 @@ impl CellOutcome {
 /// Strategy-agnostic per-layer weights for the initial partitions
 /// (Strategy_Init: memory under an even split of states across the
 /// group) — shared by the BMW seed partition and the Table V ablations.
-fn strategy_init_weights(model: &ModelProfile, group: usize, b_m: f64) -> (Vec<f64>, Vec<f64>) {
+/// Activation bytes scale with the training dtype and model-state bytes
+/// with the dtype/optimizer; the default train config reproduces the
+/// historical fp32/Adam weights bit-for-bit.
+fn strategy_init_weights(
+    model: &ModelProfile,
+    group: usize,
+    b_m: f64,
+    train: TrainConfig,
+) -> (Vec<f64>, Vec<f64>) {
+    let act_scale = train.act_scale();
+    let state_bytes = train.unsharded_state_bytes();
     let act_w = model
         .layers
         .iter()
-        .map(|l| l.act_bytes * b_m / group as f64)
+        .map(|l| l.act_bytes * act_scale * b_m / group as f64)
         .collect();
     let ms_w = (0..model.n_layers())
-        .map(|i| (model.layers[i].params + model.extra_params(i)) * 16.0 / group as f64)
+        .map(|i| (model.layers[i].params + model.extra_params(i)) * state_bytes / group as f64)
         .collect();
     (act_w, ms_w)
 }
@@ -149,7 +159,7 @@ pub(crate) fn evaluate_partition_cached(
         microbatches,
         stage_slots: if cluster.is_homogeneous() { None } else { Some(placement.to_vec()) },
     };
-    let cost = plan_cost(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown);
+    let cost = plan_cost_with(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown, cfg.train);
     if !cost.feasible {
         return None;
     }
@@ -263,7 +273,7 @@ pub(crate) fn eval_bmw_cell(
     let group = ctx.group;
     for m in microbatch_options(cfg, batch, pp) {
         let b_m = batch as f64 / m as f64;
-        let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
+        let (act_w, ms_w) = strategy_init_weights(model, group, b_m, cfg.train);
         for placement in &ctx.placements {
             let (budgets, rates) = placement_budgets(ctx, placement);
             // Seeds re-derived against the placement's budgets/rates: p_m
@@ -371,7 +381,7 @@ pub(crate) fn eval_fixed_cell(
                 PartitionKind::TimeBalanced => rated_balanced_partition(flops_w, ctx.pp, &rates),
                 PartitionKind::MemoryBalanced => {
                     let b_m = batch as f64 / m as f64;
-                    let (act_w, ms_w) = strategy_init_weights(model, group, b_m);
+                    let (act_w, ms_w) = strategy_init_weights(model, group, b_m, cfg.train);
                     memory_balanced_partition_budgeted(
                         &act_w, &ms_w, ctx.pp, m, cfg.schedule, &budgets,
                     )

@@ -148,6 +148,7 @@ impl<'a> SearchEngine<'a> {
                             .expect("contiguous site class ids")
                             .clone();
                         CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site)
+                            .with_train(cfg.train)
                     })
                     .collect();
                 let placements = placement_candidates(&sites);

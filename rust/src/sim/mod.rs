@@ -21,7 +21,7 @@ pub mod schedule;
 use crate::cluster::ClusterSpec;
 use crate::cost::estimator::CostEstimator;
 use crate::cost::pipeline::Schedule;
-use crate::model::ModelProfile;
+use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::memory::LayerMemory;
 use crate::parallel::ParallelPlan;
 
@@ -112,6 +112,7 @@ fn build_stage_models(
     cluster: &ClusterSpec,
     plan: &ParallelPlan,
     overlap_slowdown: f64,
+    train: TrainConfig,
     sites: &[crate::cluster::StageSite],
 ) -> Vec<StageModel> {
     // Task durations come from each stage's assigned island (FLOP rate and
@@ -126,7 +127,7 @@ fn build_stage_models(
                 .find(|s| s.class == c as u32)
                 .expect("contiguous site class ids")
                 .clone();
-            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
+            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site).with_train(train)
         })
         .collect();
     let b_m = plan.microbatch_size();
@@ -175,7 +176,8 @@ fn build_stage_models(
     out
 }
 
-/// Simulate one training iteration of `plan`.
+/// Simulate one training iteration of `plan` under the default training
+/// numerics (fp32 + Adam, no ZeRO).
 pub fn simulate(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -183,10 +185,25 @@ pub fn simulate(
     schedule: Schedule,
     overlap_slowdown: f64,
 ) -> SimReport {
+    simulate_with(model, cluster, plan, schedule, overlap_slowdown, TrainConfig::default())
+}
+
+/// [`simulate`] under explicit training numerics: the per-stage memory
+/// timeline (and the capacity check in [`SimReport::fits_capacity`])
+/// follows the dtype/optimizer/ZeRO configuration. The default `train`
+/// reproduces [`simulate`] bit-for-bit.
+pub fn simulate_with(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    schedule: Schedule,
+    overlap_slowdown: f64,
+    train: TrainConfig,
+) -> SimReport {
     let p = plan.pp;
     let m = plan.microbatches;
     let sites = cluster.stage_sites(p);
-    let stages = build_stage_models(model, cluster, plan, overlap_slowdown, &sites);
+    let stages = build_stage_models(model, cluster, plan, overlap_slowdown, train, &sites);
     let link_bw = cluster.pipeline_link_bw(p);
 
     // Fixed per-device task order (the real schedule).
@@ -470,6 +487,40 @@ mod tests {
         let pl = plan(2, 8, 2, Strategy::single(Dim::Dp, 4, false), 32);
         let r = simulate(&model, &hom, &pl, Schedule::OneFOneB, 1.3);
         assert_eq!(r.stage_capacity, vec![24.0 * GIB, 24.0 * GIB]);
+    }
+
+    #[test]
+    fn lean_train_config_shrinks_sim_memory_only() {
+        use crate::model::{Dtype, TrainConfig};
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, false), 32);
+        let fp32 = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let lean = TrainConfig { dtype: Dtype::Bf16, zero: true, ..Default::default() };
+        let bf16 = simulate_with(&model, &cluster, &pl, Schedule::OneFOneB, 1.3, lean);
+        for s in 0..4 {
+            assert!(
+                bf16.stage_peak_mem[s] < fp32.stage_peak_mem[s],
+                "stage {s}: {} !< {}",
+                bf16.stage_peak_mem[s],
+                fp32.stage_peak_mem[s]
+            );
+        }
+        // Capacity is the device's, not the workload's.
+        assert_eq!(bf16.stage_capacity, fp32.stage_capacity);
+        // Time model is dtype-agnostic.
+        assert_eq!(bf16.iter_time, fp32.iter_time);
+        // The default config delegates bit-for-bit.
+        let dflt = simulate_with(
+            &model,
+            &cluster,
+            &pl,
+            Schedule::OneFOneB,
+            1.3,
+            TrainConfig::default(),
+        );
+        assert_eq!(dflt.stage_peak_mem, fp32.stage_peak_mem);
+        assert_eq!(dflt.iter_time, fp32.iter_time);
     }
 
     #[test]

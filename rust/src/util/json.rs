@@ -118,6 +118,55 @@ impl Json {
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
+
+    // ---- pretty serialization -------------------------------------------
+
+    /// Human-oriented serialization: 2-space indent, stable (sorted) key
+    /// order, trailing newline — the on-disk format of exported
+    /// `ModelSpec` files, byte-reproducible so regeneration is diff-clean.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent);
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    out.push_str("  ");
+                    item.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    out.push_str("  ");
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&pad);
+                out.push('}');
+            }
+            scalar => out.push_str(&scalar.to_string()),
+        }
+    }
 }
 
 impl fmt::Display for Json {
@@ -387,6 +436,22 @@ mod tests {
         let v = Json::parse("[3,1,2]").unwrap();
         assert_eq!(v.as_usize_vec(), Some(vec![3, 1, 2]));
         assert_eq!(Json::parse(r#"[1,"x"]"#).unwrap().as_usize_vec(), None);
+    }
+
+    #[test]
+    fn pretty_round_trips_and_indents() {
+        let src = r#"{"b":[1,2,{"x":"y"}],"a":true,"empty":{},"none":[]}"#;
+        let v = Json::parse(src).unwrap();
+        let pretty = v.to_pretty();
+        // Parses back to the same value.
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        // Shape: sorted keys, 2-space indent, trailing newline, empty
+        // containers stay compact.
+        assert!(pretty.starts_with("{\n  \"a\": true"), "{pretty}");
+        assert!(pretty.contains("\"empty\": {}"), "{pretty}");
+        assert!(pretty.contains("\"none\": []"), "{pretty}");
+        assert!(pretty.contains("    {\n      \"x\": \"y\"\n    }"), "{pretty}");
+        assert!(pretty.ends_with("}\n"), "{pretty}");
     }
 
     #[test]

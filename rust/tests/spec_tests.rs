@@ -1,0 +1,335 @@
+//! Integration tests for the declarative ModelSpec API (ISSUE 4):
+//!   * every zoo model round-trips `spec -> JSON -> spec -> compile`
+//!     bit-identically to the legacy constructor path,
+//!   * zoo-via-spec planning produces byte-identical PlanReport artifacts
+//!     under the default TrainConfig,
+//!   * randomized ModelSpec JSON round-trip property test,
+//!   * dtype/optimizer/ZeRO memory accounting end-to-end (the
+//!     `--model-file gpt3-1.3b.json --cluster hetero4 --dtype bf16 --zero`
+//!     acceptance scenario),
+//!   * the committed `examples/models/*.json` files stay in sync with the
+//!     zoo specs and compile.
+
+use std::path::PathBuf;
+
+use galvatron::api::{PlanError, PlanRequest, Planner};
+use galvatron::model::{
+    model_by_name, model_names, spec_by_name, BlockSpec, Dtype, EmbeddingSpec, Family, HeadSpec,
+    ModelSpec, MoeSpec, OptimizerKind, PatchSpec, TrainConfig,
+};
+use galvatron::util::rng::Rng;
+use galvatron::util::GIB;
+
+fn models_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("examples").join("models")
+}
+
+fn slug(name: &str) -> String {
+    name.to_ascii_lowercase().replace('/', "-")
+}
+
+#[test]
+fn zoo_specs_compile_bit_identical_to_constructors() {
+    for name in model_names() {
+        let spec = spec_by_name(name).unwrap();
+        let compiled = spec.compile().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let legacy = model_by_name(name).unwrap();
+        assert_eq!(compiled.name, legacy.name, "{name}");
+        assert_eq!(
+            compiled.pre_params.to_bits(),
+            legacy.pre_params.to_bits(),
+            "{name}: pre_params"
+        );
+        assert_eq!(
+            compiled.post_params.to_bits(),
+            legacy.post_params.to_bits(),
+            "{name}: post_params"
+        );
+        assert_eq!(compiled.layers.len(), legacy.layers.len(), "{name}");
+        for (i, (a, b)) in compiled.layers.iter().zip(&legacy.layers).enumerate() {
+            assert_eq!(a.name, b.name, "{name} layer {i}");
+            assert_eq!(a.params.to_bits(), b.params.to_bits(), "{name} layer {i} params");
+            assert_eq!(a.flops_fwd.to_bits(), b.flops_fwd.to_bits(), "{name} layer {i} flops");
+            assert_eq!(a.act_bytes.to_bits(), b.act_bytes.to_bits(), "{name} layer {i} act");
+            assert_eq!(a.bnd_bytes.to_bits(), b.bnd_bytes.to_bits(), "{name} layer {i} bnd");
+            assert_eq!(
+                (a.hidden, a.seq, a.heads, a.kv_seq),
+                (b.hidden, b.seq, b.heads, b.kv_seq),
+                "{name} layer {i} dims"
+            );
+        }
+    }
+}
+
+#[test]
+fn zoo_specs_json_round_trip() {
+    for name in model_names() {
+        let spec = spec_by_name(name).unwrap();
+        let text = spec.to_json().to_string();
+        let back = ModelSpec::from_json_str(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(back, spec, "{name}");
+        assert_eq!(back.to_json().to_string(), text, "{name}: unstable serialization");
+    }
+}
+
+#[test]
+fn zoo_via_spec_plans_byte_identical_artifacts() {
+    // The pinned guarantee of the API redesign: planning from the
+    // declarative spec (inline, default TrainConfig) emits the exact
+    // artifact bytes of the by-name path — the zoo-resolvable spec is not
+    // recorded, so nothing in the JSON differs. The by-name request uses
+    // the spec's display name (lookup is case-insensitive) so the
+    // artifact's `model` string matches.
+    for name in ["BERT-Huge-32", "T5-512/4-32"] {
+        let by_name = PlanRequest::new(name, "titan8")
+            .memory_gb(16.0)
+            .max_batch(32)
+            .plan()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let by_spec = PlanRequest::new("ignored", "titan8")
+            .model_spec(spec_by_name(name).unwrap())
+            .memory_gb(16.0)
+            .max_batch(32)
+            .plan()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(by_spec.model_spec.is_none(), "{name}: zoo-equivalent spec must not be recorded");
+        assert_eq!(
+            by_spec.to_json_string(),
+            by_name.to_json_string(),
+            "{name}: spec-planned artifact differs from by-name artifact"
+        );
+    }
+}
+
+fn random_spec(rng: &mut Rng) -> ModelSpec {
+    let family = match rng.below(4) {
+        0 => Family::DecoderOnly,
+        1 => Family::EncoderOnly,
+        2 => Family::EncoderDecoder,
+        _ => Family::Windowed,
+    };
+    let n_blocks = 1 + rng.below(3) as usize;
+    let mut blocks = Vec::new();
+    for bi in 0..n_blocks {
+        let heads = 1usize << rng.below(4); // 1, 2, 4, 8
+        let hidden = heads * 64 * (1 + rng.below(4) as usize);
+        let seq = 32 * (1 + rng.below(8) as usize);
+        let mut b = BlockSpec::dense(1 + rng.below(6) as usize, hidden, heads, seq);
+        if rng.below(3) == 0 {
+            b.window = Some(1 + rng.below(seq as u64) as usize);
+        }
+        // Decoder blocks of the encoder-decoder family carry cross
+        // attention and exclude the other modifiers; make the last block
+        // the decoder so the family constraint holds.
+        if family == Family::EncoderDecoder && bi + 1 == n_blocks {
+            b.window = None;
+            b.cross_seq = Some(32 * (1 + rng.below(8) as usize));
+        } else {
+            if rng.below(3) == 0 {
+                // A power-of-two divisor of heads (heads is a power of two).
+                let mut kv = 1usize << rng.below(4);
+                while kv > heads {
+                    kv /= 2;
+                }
+                b.kv_heads = Some(kv);
+            }
+            if rng.below(3) == 0 {
+                let experts = 2 + rng.below(7) as usize;
+                b.moe = Some(MoeSpec { experts, top_k: 1 + rng.below(experts as u64) as usize });
+            }
+        }
+        blocks.push(b);
+    }
+    let embedding = if rng.below(4) == 0 {
+        None
+    } else {
+        Some(EmbeddingSpec {
+            vocab: (rng.below(50000)) as usize,
+            positions: (rng.below(2048)) as usize,
+            patch: if rng.below(3) == 0 {
+                Some(PatchSpec { channels: 3, size: 4 << rng.below(3) })
+            } else {
+                None
+            },
+            extra_params: (rng.below(10000)) as f64,
+        })
+    };
+    let head = match rng.below(3) {
+        0 => None,
+        1 => Some(HeadSpec::Classifier { classes: 1 + rng.below(1000) as usize, bias: rng.below(2) == 0 }),
+        _ => Some(HeadSpec::MlmVocab { vocab: 1 + rng.below(50000) as usize }),
+    };
+    ModelSpec { name: format!("rand-{}", rng.below(1_000_000)), family, blocks, embedding, head }
+}
+
+#[test]
+fn random_specs_round_trip_through_json() {
+    // Property test: any valid spec survives JSON serialization exactly,
+    // and its compile is deterministic.
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut checked = 0usize;
+    while checked < 200 {
+        let spec = random_spec(&mut rng);
+        if spec.validate().is_err() {
+            continue; // only valid specs are expected to round-trip
+        }
+        checked += 1;
+        let text = spec.to_json().to_string();
+        let back = ModelSpec::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("round trip failed for {text}: {e}"));
+        assert_eq!(back, spec, "{text}");
+        let a = spec.compile().unwrap();
+        let b = back.compile().unwrap();
+        assert_eq!(a.total_params().to_bits(), b.total_params().to_bits());
+        assert_eq!(a.total_act_bytes().to_bits(), b.total_act_bytes().to_bits());
+        assert_eq!(a.n_layers(), b.n_layers());
+    }
+}
+
+#[test]
+fn example_spec_files_compile_and_match_zoo() {
+    let dir = models_dir();
+    // Every zoo model has a committed spec file that parses back to the
+    // in-tree spec AND is byte-identical to the canonical pretty format —
+    // so `galvatron models --out-dir examples/models` regeneration is
+    // diff-clean.
+    for name in model_names() {
+        let path = dir.join(format!("{}.json", slug(name)));
+        let file_spec = ModelSpec::load(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let spec = spec_by_name(name).unwrap();
+        assert_eq!(file_spec, spec, "{}", path.display());
+        let bytes = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            bytes,
+            spec.to_json().to_pretty(),
+            "{}: not in canonical pretty format (regenerate with \
+             `galvatron models --out-dir examples/models`)",
+            path.display()
+        );
+    }
+    // Every committed file (including non-zoo extras like gpt3-1.3b)
+    // parses, validates, and compiles.
+    let mut n = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("examples/models directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        n += 1;
+        let spec = ModelSpec::load(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let profile = spec.compile().unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(profile.total_params() > 0.0, "{}", path.display());
+    }
+    assert!(n > model_names().len(), "expected at least one non-zoo example spec");
+}
+
+#[test]
+fn gpt3_1_3b_spec_file_plans_lean_on_hetero4() {
+    // Acceptance: `galvatron plan --model-file examples/models/gpt3-1.3b.json
+    //             --cluster hetero4 --dtype bf16 --zero` is a valid plan
+    // whose simulated per-stage memory reflects the lean footprint.
+    let file = models_dir().join("gpt3-1.3b.json");
+    let lean = TrainConfig { dtype: Dtype::Bf16, zero: true, ..Default::default() };
+    let planner = Planner::new();
+    let report = PlanRequest::new("ignored", "hetero4")
+        .model_file(&file)
+        .train_config(lean)
+        .max_batch(64)
+        .plan()
+        .expect("bf16+zero plan must fit hetero4");
+    assert_eq!(report.model, "GPT3-1.3B");
+    assert_eq!(report.train, lean);
+    assert!(report.model_spec.is_some(), "non-zoo spec must be recorded in the artifact");
+    report
+        .plan
+        .validate(24, 4)
+        .expect("valid plan");
+
+    // The artifact is self-contained: save -> load -> simulate without the
+    // original file, and the simulated peaks respect per-island capacity.
+    let text = report.to_json_string();
+    let loaded = galvatron::api::PlanReport::from_json_str(&text).unwrap();
+    assert_eq!(loaded, report);
+    let sim = planner.simulate_report(&loaded).expect("simulate recorded spec");
+    assert!(sim.throughput > 0.0);
+    for (s, (&peak, &cap)) in sim.stage_peak_mem.iter().zip(&sim.stage_capacity).enumerate() {
+        assert!(
+            peak <= cap * 1.05,
+            "stage {s}: peak {:.2}G exceeds capacity {:.2}G",
+            peak / GIB,
+            cap / GIB
+        );
+    }
+
+    // Same plan re-simulated under fp32/Adam numerics uses strictly more
+    // memory on every stage — the dtype/optimizer footprint is real.
+    let spec = loaded.model_spec.clone().unwrap();
+    let model = spec.compile().unwrap();
+    let cluster = galvatron::cluster::cluster_by_name("hetero4").unwrap();
+    let lean_sim = galvatron::sim::simulate_with(
+        &model,
+        &cluster,
+        &loaded.plan,
+        loaded.schedule,
+        loaded.overlap_slowdown,
+        lean,
+    );
+    let fat_sim = galvatron::sim::simulate_with(
+        &model,
+        &cluster,
+        &loaded.plan,
+        loaded.schedule,
+        loaded.overlap_slowdown,
+        TrainConfig::default(),
+    );
+    for s in 0..loaded.plan.pp {
+        assert!(
+            lean_sim.stage_peak_mem[s] < fat_sim.stage_peak_mem[s],
+            "stage {s}: lean {:.2}G !< fp32 {:.2}G",
+            lean_sim.stage_peak_mem[s] / GIB,
+            fat_sim.stage_peak_mem[s] / GIB
+        );
+    }
+}
+
+#[test]
+fn train_config_changes_are_recorded_and_round_trip() {
+    let sgd = TrainConfig { optimizer: OptimizerKind::Sgd, ..Default::default() };
+    let report = PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(32)
+        .train_config(sgd)
+        .plan()
+        .expect("feasible");
+    assert_eq!(report.train, sgd);
+    let text = report.to_json_string();
+    assert!(text.contains("\"train\""), "non-default train config must serialize: {text}");
+    let back = galvatron::api::PlanReport::from_json_str(&text).unwrap();
+    assert_eq!(back, report);
+    // Default-config artifacts omit the key entirely (byte compat).
+    let dflt = PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(32)
+        .plan()
+        .unwrap();
+    assert!(!dflt.to_json_string().contains("\"train\""));
+    assert!(!dflt.to_json_string().contains("\"model_spec\""));
+}
+
+#[test]
+fn bad_spec_files_and_names_surface_typed_errors() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("galvatron-bad-spec-{}.json", std::process::id()));
+    std::fs::write(&path, "{\"name\": \"x\"}").unwrap();
+    let err = PlanRequest::new("ignored", "titan8")
+        .model_file(&path)
+        .plan()
+        .unwrap_err();
+    std::fs::remove_file(&path).ok();
+    assert!(matches!(err, PlanError::InvalidModel { .. }), "{err:?}");
+
+    // The unknown-model error hints at the .json spec-file form.
+    let err = PlanRequest::new("my-own-model", "titan8").plan().unwrap_err();
+    assert!(err.to_string().contains(".json"), "{err}");
+}
