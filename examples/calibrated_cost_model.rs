@@ -1,0 +1,74 @@
+//! Calibrated cost-model backend: synthesize a `ProfileDb` from the
+//! analytic model (the `galvatron calibrate --synthetic` form), plan with
+//! it, verify the recorded provenance, and show how a derated calibration
+//! (slower measured compute, lossy links) moves the estimates.
+//!
+//! The real-measurement pipeline is the same three steps with
+//! `galvatron calibrate` (PJRT layer profiles + collectives
+//! micro-benchmark) producing the DB instead of `ProfileDb::synthetic`.
+//!
+//! Run: `cargo run --release --example calibrated_cost_model`
+
+use galvatron::api::{resolve_cluster_name, CostModel, MethodSpec, PlanRequest, Planner, ProfileDb};
+
+fn main() -> anyhow::Result<()> {
+    let planner = Planner::new();
+    let cluster = resolve_cluster_name("titan8")?;
+
+    // 1. A synthetic DB: exact zoo shape coverage at the nominal FLOP
+    //    rate, collective points exactly on the bytes/bw line (alpha=0).
+    let db = ProfileDb::synthetic(&cluster);
+    println!(
+        "synthetic profile db: {} layer samples, {} collective points, hash {}",
+        db.layers.len(),
+        db.collectives.len(),
+        db.content_hash_hex()
+    );
+
+    let request = PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(64)
+        .method(MethodSpec::Bmw { ckpt: true });
+
+    // 2. Analytic vs synthetic-calibrated: byte-identical plans, but the
+    //    calibrated artifact records which cost model produced it.
+    let analytic = planner.plan(&request)?;
+    let calibrated = planner.plan(&request.clone().cost_model(CostModel::calibrated(db.clone())))?;
+    assert_eq!(analytic.plan, calibrated.plan);
+    assert_eq!(analytic.throughput.to_bits(), calibrated.throughput.to_bits());
+    println!(
+        "synthetic calibration reproduces the analytic plan: batch {}, {:.2} samples/s",
+        calibrated.plan.batch, calibrated.throughput
+    );
+    println!(
+        "recorded provenance: {}",
+        calibrated.cost_model.as_ref().expect("calibrated plans record provenance").label()
+    );
+
+    // 3. A derated calibration — as a real host measurement might look:
+    //    70% compute efficiency, 50us collective latency, 80% link
+    //    efficiency. The planner re-prices the whole search space.
+    let mut measured = db;
+    let eff = measured.ref_flops * 0.7;
+    for s in &mut measured.layers {
+        s.effective_flops = eff;
+    }
+    measured.alpha = 5e-5;
+    measured.beta = measured.ref_bw * 0.8;
+    let derated =
+        planner.plan(&request.clone().cost_model(CostModel::calibrated(measured.clone())))?;
+    println!(
+        "derated calibration: {:.2} samples/s (analytic said {:.2}); plan batch {} vs {}",
+        derated.throughput, analytic.throughput, derated.plan.batch, analytic.plan.batch
+    );
+
+    // 4. Simulate under the same backend the plan was priced with (the
+    //    `simulate --plan plan.json --profile-db db.json` leg).
+    let sim = planner
+        .simulate_report_costed(&derated, &CostModel::calibrated(measured))?;
+    println!(
+        "simulator cross-check under the calibrated backend: {:.2} samples/s",
+        sim.throughput
+    );
+    Ok(())
+}

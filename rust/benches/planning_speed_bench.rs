@@ -5,8 +5,13 @@
 //!   {"bench":"planning_speed","model":...,"cluster":...,"threads":N,
 //!    "plans_per_sec":...,"cache_hit_rate":...,"cells_explored":...}
 //!
+//! All cases are additionally written to `BENCH_planning.json` at the
+//! repository root (canonical pretty JSON) — the persistent planning-speed
+//! trajectory CI runs in release mode and uploads as an artifact.
+//!
 //! Run: `cargo bench --bench planning_speed_bench`
 
+use std::path::Path;
 use std::time::Duration;
 
 use galvatron::api::{MethodSpec, PlanRequest};
@@ -20,6 +25,7 @@ fn main() {
     if auto > 1 {
         thread_counts.push(auto);
     }
+    let mut results: Vec<Json> = Vec::new();
     for (model, cluster, budget) in
         [("bert-huge-32", "titan8", 16.0), ("t5-512/4-32", "titan8", 8.0)]
     {
@@ -47,19 +53,32 @@ fn main() {
                 },
                 Err(_) => (0.0, 0),
             };
-            println!(
-                "{}",
-                Json::obj(vec![
-                    ("bench", Json::str("planning_speed")),
-                    ("model", Json::str(model)),
-                    ("cluster", Json::str(cluster)),
-                    ("memory_gb", Json::num(budget)),
-                    ("threads", Json::num(threads as f64)),
-                    ("plans_per_sec", Json::num(plans_per_sec)),
-                    ("cache_hit_rate", Json::num(hit_rate)),
-                    ("cells_explored", Json::num(cells as f64)),
-                ])
-            );
+            let row = Json::obj(vec![
+                ("bench", Json::str("planning_speed")),
+                ("model", Json::str(model)),
+                ("cluster", Json::str(cluster)),
+                ("memory_gb", Json::num(budget)),
+                ("threads", Json::num(threads as f64)),
+                ("plans_per_sec", Json::num(plans_per_sec)),
+                ("cache_hit_rate", Json::num(hit_rate)),
+                ("cells_explored", Json::num(cells as f64)),
+            ]);
+            println!("{row}");
+            results.push(row);
         }
+    }
+    // Persist the trajectory at the repository root (the crate lives in
+    // rust/, so the root is the manifest dir's parent).
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf);
+    let out = root
+        .unwrap_or_else(|| Path::new(".").to_path_buf())
+        .join("BENCH_planning.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::str("planning_speed")),
+        ("results", Json::arr(results)),
+    ]);
+    match std::fs::write(&out, doc.to_pretty()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
 }

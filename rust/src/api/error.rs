@@ -23,6 +23,14 @@ pub enum PlanError {
     /// class, non-power-of-two shapes) — the typed surface of
     /// [`crate::cluster::ClusterError`].
     InvalidCluster { reason: String },
+    /// A cost-model profile database (`--profile-db`) could not be read,
+    /// parsed, or holds out-of-range data — the malformed surface of
+    /// [`crate::cost::ProfileDbError`].
+    InvalidProfileDb { reason: String },
+    /// A profile database loaded but lacks the samples the calibrated
+    /// cost-model backend needs (empty layer table, too few collective
+    /// points to fit the alpha-beta link model).
+    ProfileDbCoverage { reason: String },
     /// Every candidate plan exceeded the device memory budget ("OOM" in
     /// the paper's tables).
     Infeasible { reason: String },
@@ -64,6 +72,12 @@ impl fmt::Display for PlanError {
             PlanError::InvalidRequest { reason } => write!(f, "invalid plan request: {reason}"),
             PlanError::InvalidModel { reason } => write!(f, "invalid model spec: {reason}"),
             PlanError::InvalidCluster { reason } => write!(f, "invalid cluster: {reason}"),
+            PlanError::InvalidProfileDb { reason } => {
+                write!(f, "invalid profile db: {reason}")
+            }
+            PlanError::ProfileDbCoverage { reason } => {
+                write!(f, "profile db coverage: {reason}")
+            }
             PlanError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
             PlanError::Artifact { reason } => write!(f, "plan artifact error: {reason}"),
         }
@@ -81,6 +95,19 @@ impl From<crate::cluster::ClusterError> for PlanError {
 impl From<crate::model::SpecError> for PlanError {
     fn from(e: crate::model::SpecError) -> Self {
         PlanError::InvalidModel { reason: e.reason }
+    }
+}
+
+impl From<crate::cost::ProfileDbError> for PlanError {
+    fn from(e: crate::cost::ProfileDbError) -> Self {
+        match e {
+            crate::cost::ProfileDbError::Malformed { reason } => {
+                PlanError::InvalidProfileDb { reason }
+            }
+            crate::cost::ProfileDbError::Coverage { reason } => {
+                PlanError::ProfileDbCoverage { reason }
+            }
+        }
     }
 }
 

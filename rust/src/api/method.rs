@@ -79,6 +79,9 @@ pub struct SearchOverrides {
     pub threads: Option<usize>,
     /// Training numerics (dtype/optimizer/ZeRO) for the memory accounting.
     pub train: TrainConfig,
+    /// Cost-model backend (`None` keeps the default analytic formulas;
+    /// `Some(Calibrated)` prices the search from a loaded profile DB).
+    pub cost_model: Option<crate::cost::CostModel>,
 }
 
 impl SearchOverrides {
@@ -91,6 +94,7 @@ impl SearchOverrides {
             pp_degrees: None,
             threads: None,
             train: TrainConfig::default(),
+            cost_model: None,
         }
     }
 
@@ -113,6 +117,9 @@ impl SearchOverrides {
             cfg.threads = self.threads;
         }
         cfg.train = self.train;
+        if let Some(cm) = &self.cost_model {
+            cfg.cost_model = cm.clone();
+        }
         cfg
     }
 }

@@ -43,6 +43,7 @@ pub mod method;
 pub mod report;
 pub mod request;
 
+pub use crate::cost::{CostModel, CostProvenance, ProfileDb};
 pub use crate::search::engine::{CellTrace, SearchTrace};
 pub use error::{suggest, PlanError};
 pub use method::{MethodSpec, PartitionPolicy, SearchOverrides};

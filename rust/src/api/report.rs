@@ -6,6 +6,7 @@
 use std::path::Path;
 
 use crate::cost::pipeline::Schedule;
+use crate::cost::CostProvenance;
 use crate::model::{model_by_name, ModelSpec, TrainConfig};
 use crate::parallel::ParallelPlan;
 use crate::search::engine::SearchTrace;
@@ -60,6 +61,12 @@ pub struct PlanReport {
     /// Training numerics the memory accounting used. Serialized only when
     /// non-default, keeping default artifacts byte-identical.
     pub train: TrainConfig,
+    /// Which cost-model backend priced the search (backend name + profile
+    /// DB content hash). `None` — and absent from the JSON — for the
+    /// default analytic backend, so existing artifacts keep their byte
+    /// layout; `simulate --plan` compares this against the backend it is
+    /// about to simulate with and warns on mismatch.
+    pub cost_model: Option<CostProvenance>,
     pub max_batch: usize,
     pub plan: ParallelPlan,
     /// Estimated throughput, samples/second (Eq. 9).
@@ -135,6 +142,7 @@ impl PlanReport {
             schedule,
             overlap_slowdown: overlap,
             train: r.train,
+            cost_model: r.cost_model.provenance(),
             max_batch: r.overrides.max_batch,
             plan: out.plan.clone(),
             throughput: out.cost.throughput,
@@ -197,6 +205,9 @@ impl PlanReport {
         if !self.train.is_default() {
             fields.push(("train", self.train.to_json()));
         }
+        if let Some(prov) = &self.cost_model {
+            fields.push(("cost_model", prov.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -248,6 +259,11 @@ impl PlanReport {
             None | Some(Json::Null) => TrainConfig::default(),
             Some(t) => TrainConfig::from_json(t).map_err(PlanError::from)?,
         };
+        // Optional: absent for analytic (default-backend) plans.
+        let cost_model = match v.get("cost_model") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(CostProvenance::from_json(c).ok_or_else(|| bad("cost_model"))?),
+        };
         Ok(PlanReport {
             model: gets("model")?,
             model_spec,
@@ -257,6 +273,7 @@ impl PlanReport {
             schedule,
             overlap_slowdown: getn("overlap_slowdown")?,
             train,
+            cost_model,
             max_batch: v.get("max_batch").and_then(Json::as_usize).ok_or_else(|| bad("max_batch"))?,
             plan,
             throughput: getn("throughput")?,
@@ -315,8 +332,12 @@ impl PlanReport {
         } else {
             format!(" | {}", self.train.label())
         };
+        let backend = match &self.cost_model {
+            Some(prov) => format!(" | {} cost model", prov.label()),
+            None => String::new(),
+        };
         out.push_str(&format!(
-            "{} on {} @ {:.0} GB | {} | {} schedule{train}\n",
+            "{} on {} @ {:.0} GB | {} | {} schedule{train}{backend}\n",
             self.model,
             self.cluster,
             self.memory_budget_gb,

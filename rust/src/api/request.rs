@@ -9,10 +9,11 @@ use crate::cluster::{
     cluster_by_name, cluster_names, looks_like_islands, parse_islands, ClusterSpec,
 };
 use crate::cost::pipeline::Schedule;
+use crate::cost::{CostModel, ProfileDb};
 use crate::model::{
     model_by_name, model_names, Dtype, ModelProfile, ModelSpec, OptimizerKind, TrainConfig,
 };
-use crate::sim::{simulate_with, SimReport};
+use crate::sim::{simulate_costed, SimReport};
 use crate::util::GIB;
 
 use super::error::{suggest, PlanError};
@@ -102,6 +103,14 @@ pub struct PlanRequest {
     /// machine's available parallelism. The resulting plan (and its JSON
     /// artifact) is byte-identical for every value.
     pub threads: Option<usize>,
+    /// Path of a [`ProfileDb`] JSON file to plan with the calibrated
+    /// cost-model backend (the `--profile-db` CLI form); loaded and
+    /// validated at `plan()`/`resolve()` time, surfacing
+    /// [`PlanError::InvalidProfileDb`] / [`PlanError::ProfileDbCoverage`].
+    pub profile_db: Option<PathBuf>,
+    /// Explicit cost-model backend (the programmatic form of
+    /// [`PlanRequest::profile_db`]). `None` = the default analytic model.
+    pub cost_model: Option<CostModel>,
 }
 
 impl PlanRequest {
@@ -121,6 +130,8 @@ impl PlanRequest {
             microbatch_limit: None,
             pipeline_degrees: None,
             threads: None,
+            profile_db: None,
+            cost_model: None,
         }
     }
 
@@ -244,6 +255,26 @@ impl PlanRequest {
         self
     }
 
+    /// Plan with the calibrated cost-model backend loaded from a
+    /// [`ProfileDb`] JSON file (written by `galvatron calibrate`).
+    /// Resolution — and the malformed / insufficient-coverage diagnostics
+    /// — happen at `plan()` time. Clears any pending
+    /// [`PlanRequest::cost_model`] — the last setter wins.
+    pub fn profile_db(mut self, path: impl Into<PathBuf>) -> Self {
+        self.profile_db = Some(path.into());
+        self.cost_model = None;
+        self
+    }
+
+    /// Plan with an explicit cost-model backend (e.g. a [`ProfileDb`]
+    /// already in memory via [`CostModel::calibrated`]). Clears any
+    /// pending [`PlanRequest::profile_db`] — the last setter wins.
+    pub fn cost_model(mut self, cost_model: CostModel) -> Self {
+        self.cost_model = Some(cost_model);
+        self.profile_db = None;
+        self
+    }
+
     /// Convenience: plan with a default [`Planner`].
     pub fn plan(&self) -> Result<PlanReport, PlanError> {
         Planner::new().plan(self)
@@ -264,6 +295,10 @@ pub struct ResolvedRequest {
     pub cluster: ClusterSpec,
     pub method: MethodSpec,
     pub train: TrainConfig,
+    /// The cost-model backend the search prices with (analytic unless the
+    /// request carried a profile DB / explicit model). Its provenance is
+    /// recorded into the resulting [`PlanReport`] when non-default.
+    pub cost_model: CostModel,
     pub overrides: SearchOverrides,
 }
 
@@ -413,6 +448,14 @@ impl Planner {
             Some(name) => MethodSpec::parse(name)?,
             None => req.method.clone(),
         };
+        // Cost-model resolution: an explicit backend wins, else a profile
+        // DB path is loaded + validated here (malformed / insufficient
+        // coverage surface as typed errors), else analytic.
+        let cost_model = match (&req.cost_model, &req.profile_db) {
+            (Some(m), _) => m.clone(),
+            (None, Some(path)) => CostModel::calibrated(ProfileDb::load(path)?),
+            (None, None) => CostModel::Analytic,
+        };
         let mut overrides = SearchOverrides::new(req.max_batch);
         overrides.schedule = req.schedule;
         overrides.overlap_slowdown = req.overlap_slowdown;
@@ -420,6 +463,7 @@ impl Planner {
         overrides.pp_degrees = req.pipeline_degrees.clone();
         overrides.threads = req.threads;
         overrides.train = req.train;
+        overrides.cost_model = Some(cost_model.clone());
         Ok(ResolvedRequest {
             model_name,
             cluster_name,
@@ -428,6 +472,7 @@ impl Planner {
             cluster,
             method,
             train: req.train,
+            cost_model,
             overrides,
         })
     }
@@ -437,6 +482,14 @@ impl Planner {
     /// artifact carrying the structured search trace.
     pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
         let r = self.resolve(req)?;
+        self.plan_resolved(&r)
+    }
+
+    /// The search + packaging half of [`Planner::plan`] for callers that
+    /// already hold a [`ResolvedRequest`] (the CLI resolves once to print
+    /// the run header — and to load a `--profile-db` exactly once — then
+    /// plans from the same resolution).
+    pub fn plan_resolved(&self, r: &ResolvedRequest) -> Result<PlanReport, PlanError> {
         let (outcome, trace) = r.method.run_traced_with(&r.model, &r.cluster, &r.overrides);
         let outcome = outcome.ok_or_else(|| PlanError::Infeasible {
             reason: format!(
@@ -448,7 +501,7 @@ impl Planner {
                 r.overrides.max_batch
             ),
         })?;
-        Ok(PlanReport::from_outcome(&r, &outcome, Some(trace)))
+        Ok(PlanReport::from_outcome(r, &outcome, Some(trace)))
     }
 
     /// Re-run the discrete-event simulator for a saved report (the
@@ -463,6 +516,19 @@ impl Planner {
     /// which the catalogs may not (faithfully) resolve — pass the
     /// original specs to [`Planner::simulate_plan`] instead.
     pub fn simulate_report(&self, report: &PlanReport) -> Result<SimReport, PlanError> {
+        self.simulate_report_costed(report, &CostModel::Analytic)
+    }
+
+    /// [`Planner::simulate_report`] under an explicit cost-model backend
+    /// (the `simulate --profile-db` form). Simulating a calibrated plan
+    /// with a different backend than the one recorded in
+    /// [`PlanReport::cost_model`] is allowed but the caller should warn —
+    /// the CLI compares provenances and does.
+    pub fn simulate_report_costed(
+        &self,
+        report: &PlanReport,
+        cost_model: &CostModel,
+    ) -> Result<SimReport, PlanError> {
         let model = match &report.model_spec {
             Some(spec) => spec.compile()?,
             None => resolve_model_name(&report.model)?,
@@ -473,7 +539,7 @@ impl Planner {
             // classes; `memory_budget_gb` records only the floor there.
             cluster = cluster.with_memory_budget(report.memory_budget_gb * GIB);
         }
-        self.simulate_plan(&model, &cluster, report)
+        self.simulate_plan_costed(&model, &cluster, report, cost_model)
     }
 
     /// Simulate a report against explicitly provided model/cluster specs
@@ -484,19 +550,31 @@ impl Planner {
         cluster: &ClusterSpec,
         report: &PlanReport,
     ) -> Result<SimReport, PlanError> {
+        self.simulate_plan_costed(model, cluster, report, &CostModel::Analytic)
+    }
+
+    /// [`Planner::simulate_plan`] under an explicit cost-model backend.
+    pub fn simulate_plan_costed(
+        &self,
+        model: &ModelProfile,
+        cluster: &ClusterSpec,
+        report: &PlanReport,
+        cost_model: &CostModel,
+    ) -> Result<SimReport, PlanError> {
         report
             .plan
             .validate(model.n_layers(), cluster.n_devices())
             .map_err(|e| PlanError::Artifact {
                 reason: format!("plan does not fit {}: {e}", report.model),
             })?;
-        Ok(simulate_with(
+        Ok(simulate_costed(
             model,
             cluster,
             &report.plan,
             report.schedule,
             report.overlap_slowdown,
             report.train,
+            cost_model,
         ))
     }
 }
@@ -623,6 +701,47 @@ mod tests {
         assert_eq!(r.train.optimizer, OptimizerKind::Sgd);
         assert!(r.train.zero);
         assert_eq!(r.overrides.train, r.train);
+    }
+
+    #[test]
+    fn profile_db_resolution_and_typed_errors() {
+        use crate::cost::ProfileDb;
+        let p = Planner::new();
+        // Missing file surfaces the typed malformed error.
+        let req = PlanRequest::new("bert-huge-32", "titan8").profile_db("no-such-db.json");
+        let err = p.resolve(&req).unwrap_err();
+        assert!(matches!(err, PlanError::InvalidProfileDb { .. }), "{err:?}");
+        // A valid synthetic DB resolves to the calibrated backend.
+        let cluster = resolve_cluster_name("titan8").unwrap();
+        let db = ProfileDb::synthetic(&cluster);
+        let path = std::env::temp_dir().join(format!("galvatron-db-{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let req = PlanRequest::new("bert-huge-32", "titan8").profile_db(&path);
+        let r = p.resolve(&req).unwrap();
+        assert_eq!(r.cost_model.backend_name(), "calibrated");
+        assert_eq!(
+            r.cost_model.provenance().unwrap().db_hash,
+            db.content_hash_hex()
+        );
+        // An insufficient-coverage DB gets its own error class.
+        let mut thin = db.clone();
+        thin.layers.clear();
+        std::fs::write(&path, thin.to_pretty_string()).unwrap();
+        let err = p.resolve(&PlanRequest::new("bert-huge-32", "titan8").profile_db(&path));
+        std::fs::remove_file(&path).ok();
+        assert!(
+            matches!(err, Err(PlanError::ProfileDbCoverage { .. })),
+            "{err:?}"
+        );
+        // Without either setter the backend stays analytic and silent.
+        let r = p.resolve(&PlanRequest::new("bert-huge-32", "titan8")).unwrap();
+        assert!(r.cost_model.is_analytic());
+        assert_eq!(r.cost_model.provenance(), None);
+        // Last setter wins between the two forms.
+        let req = PlanRequest::new("bert-huge-32", "titan8")
+            .profile_db("stale.json")
+            .cost_model(crate::cost::CostModel::Analytic);
+        assert!(req.profile_db.is_none());
     }
 
     #[test]

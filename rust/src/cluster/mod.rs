@@ -123,6 +123,46 @@ pub struct StageSite {
     pub intra_limit: usize,
 }
 
+/// Alpha-beta link time model: the calibrated generalization of the pure
+/// `bytes / bw` division the analytic cost model uses everywhere. A
+/// transfer of `b` bytes over a link of nominal bandwidth `bw` costs
+///
+/// ```text
+///   alpha + b / (bw * efficiency)
+/// ```
+///
+/// where `alpha` is the fixed per-collective launch latency and
+/// `efficiency` is the achieved fraction of the nominal bandwidth
+/// (`beta / ref_bw` of a fitted [`crate::cost::ProfileDb`]). Keeping the
+/// calibration *relative* to the nominal bandwidth preserves the topology
+/// model: faster links stay faster, and the [`LinkModel::ideal`] model
+/// (`alpha = 0`, `efficiency = 1`) reproduces `bytes / bw` bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Fixed per-collective latency, seconds.
+    pub alpha: f64,
+    /// Achieved fraction of the nominal link bandwidth.
+    pub efficiency: f64,
+}
+
+impl LinkModel {
+    /// The analytic model: no latency, full nominal bandwidth.
+    pub fn ideal() -> LinkModel {
+        LinkModel { alpha: 0.0, efficiency: 1.0 }
+    }
+
+    /// Time to move `bytes` over a link of nominal bandwidth `bw`. Zero
+    /// bytes cost zero (no collective is launched), so alpha is never
+    /// charged for communication a strategy does not perform.
+    pub fn time(&self, bytes: f64, bw: f64) -> f64 {
+        if bytes <= 0.0 {
+            0.0
+        } else {
+            self.alpha + bytes / (bw * self.efficiency)
+        }
+    }
+}
+
 fn floor_gpu(a: &GpuSpec, b: &GpuSpec) -> GpuSpec {
     GpuSpec {
         name: if b.mem_bytes < a.mem_bytes { b.name.clone() } else { a.name.clone() },
@@ -641,5 +681,25 @@ mod tests {
         assert!(!looks_like_islands("titan8"));
         assert!(!looks_like_islands("a100x16"));
         assert!(!looks_like_islands(""));
+    }
+
+    #[test]
+    fn ideal_link_model_is_pure_division() {
+        let l = LinkModel::ideal();
+        let (bytes, bw) = (12345.678f64, 10.0 * GIB);
+        assert_eq!(l.time(bytes, bw).to_bits(), (bytes / bw).to_bits());
+        assert_eq!(l.time(0.0, bw), 0.0);
+    }
+
+    #[test]
+    fn fitted_link_model_adds_latency_and_derates_bandwidth() {
+        let l = LinkModel { alpha: 1e-5, efficiency: 0.5 };
+        let bw = 10.0 * GIB;
+        // Zero bytes never pay the latency.
+        assert_eq!(l.time(0.0, bw), 0.0);
+        // Nonzero transfers pay alpha plus the derated division.
+        let t = l.time(1e6, bw);
+        assert!((t - (1e-5 + 1e6 / (bw * 0.5))).abs() < 1e-15);
+        assert!(t > LinkModel::ideal().time(1e6, bw));
     }
 }

@@ -1,0 +1,658 @@
+//! The profiling database behind the `Calibrated` cost-model backend
+//! (paper §V: cost estimation "takes advantages from both sides" —
+//! profiling for computation, simulation for communication).
+//!
+//! A [`ProfileDb`] holds two kinds of measured samples:
+//!
+//!   * **layer samples** — per-(hidden, seq) forward wallclock from the
+//!     PJRT layer profiles, reduced to an *effective* FLOP rate. The
+//!     calibrated backend turns each sample into a compute-efficiency
+//!     ratio `effective_flops / ref_flops` against the nominal device
+//!     rate, interpolates it over `hidden` inside the covered range, and
+//!     falls back to the analytic roofline (ratio 1.0) outside coverage;
+//!   * **collective samples** — (wire bytes → seconds) points from an
+//!     in-process collectives micro-benchmark
+//!     ([`crate::coordinator::collectives`]), fitted by least squares to
+//!     the alpha-beta link model `t = alpha + bytes / beta`. Planning
+//!     applies the fit *relative* to the topology
+//!     ([`crate::cluster::LinkModel`]: latency `alpha` + bandwidth
+//!     efficiency `beta / ref_bw`), so multi-island bandwidth hierarchies
+//!     survive calibration.
+//!
+//! `galvatron calibrate` writes a DB from real measurements;
+//! `galvatron calibrate --synthetic` derives one deterministically from
+//! the analytic model (`alpha = 0`, efficiency 1.0, exact zoo shape
+//! coverage) — by construction that DB reproduces analytic plans
+//! bit-for-bit, which is what pins the backend seam in CI. The on-disk
+//! format is canonical pretty JSON ([`Json::to_pretty`]); the compact
+//! serialization defines the content hash recorded as plan provenance.
+
+use std::path::Path;
+
+use crate::cluster::{ClusterSpec, LinkModel};
+use crate::util::json::Json;
+use crate::util::MIB;
+
+/// Profile database format version (bump on breaking schema changes).
+pub const PROFILE_DB_VERSION: usize = 1;
+
+/// One profiled layer shape: measured forward wallclock on the
+/// calibration host, reduced to an effective FLOP rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSample {
+    pub hidden: usize,
+    pub seq: usize,
+    /// Samples per measured forward.
+    pub batch: usize,
+    /// Analytic forward FLOPs per sample of this shape.
+    pub flops_fwd: f64,
+    /// Measured seconds per sample.
+    pub seconds_per_sample: f64,
+    /// Achieved FLOP rate (`flops_fwd / seconds_per_sample`).
+    pub effective_flops: f64,
+}
+
+/// One measured collective: ring wire bytes per device → seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectiveSample {
+    /// "all_reduce" | "all_gather" | "reduce_scatter".
+    pub kind: String,
+    /// Wire bytes per participating device (ring-normalized).
+    pub bytes: f64,
+    pub seconds: f64,
+}
+
+/// Why a profile DB could not be loaded or used. `Malformed` covers
+/// unreadable/ill-typed/out-of-range data; `Coverage` covers structurally
+/// valid DBs that lack the samples the calibrated backend needs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProfileDbError {
+    Malformed { reason: String },
+    Coverage { reason: String },
+}
+
+impl std::fmt::Display for ProfileDbError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProfileDbError::Malformed { reason } => write!(f, "malformed profile db: {reason}"),
+            ProfileDbError::Coverage { reason } => {
+                write!(f, "insufficient profile db coverage: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProfileDbError {}
+
+/// A calibration database: layer compute samples + fitted link model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileDb {
+    /// Where the samples came from ("pjrt-cpu", "synthetic:titan8", ...).
+    pub source: String,
+    /// Nominal FLOP rate the layer efficiencies are measured against.
+    pub ref_flops: f64,
+    /// Nominal bandwidth of the measured link (the beta reference).
+    pub ref_bw: f64,
+    /// Fitted per-collective latency, seconds.
+    pub alpha: f64,
+    /// Fitted effective bandwidth, bytes/s.
+    pub beta: f64,
+    pub layers: Vec<LayerSample>,
+    pub collectives: Vec<CollectiveSample>,
+}
+
+impl ProfileDb {
+    /// Deterministic DB derived from the analytic model of `cluster`:
+    /// every distinct (hidden, seq) shape of the Table I zoo at exactly
+    /// the nominal FLOP rate, and collective points exactly on the
+    /// `bytes / intra_bw` line (`alpha = 0`, `beta = ref_bw`). Planning
+    /// with this DB reproduces analytic plans bit-for-bit.
+    pub fn synthetic(cluster: &ClusterSpec) -> ProfileDb {
+        let ref_flops = cluster.gpu().flops;
+        let ref_bw = cluster.intra_bw();
+        let mut layers: Vec<LayerSample> = Vec::new();
+        for name in crate::model::model_names() {
+            let m = crate::model::model_by_name(name).expect("zoo model resolves");
+            for l in &m.layers {
+                if !layers.iter().any(|s| s.hidden == l.hidden && s.seq == l.seq) {
+                    layers.push(LayerSample {
+                        hidden: l.hidden,
+                        seq: l.seq,
+                        batch: 1,
+                        flops_fwd: l.flops_fwd,
+                        seconds_per_sample: l.flops_fwd / ref_flops,
+                        effective_flops: ref_flops,
+                    });
+                }
+            }
+        }
+        layers.sort_by_key(|s| (s.hidden, s.seq));
+        let sizes = [1.0 * MIB, 4.0 * MIB, 16.0 * MIB, 64.0 * MIB];
+        let collectives = ["all_reduce", "all_gather", "reduce_scatter"]
+            .iter()
+            .flat_map(|kind| {
+                sizes.iter().map(move |&bytes| CollectiveSample {
+                    kind: kind.to_string(),
+                    bytes,
+                    seconds: bytes / ref_bw,
+                })
+            })
+            .collect();
+        ProfileDb {
+            source: format!("synthetic:{}", cluster.name),
+            ref_flops,
+            ref_bw,
+            alpha: 0.0,
+            beta: ref_bw,
+            layers,
+            collectives,
+        }
+    }
+
+    /// Build a DB from real measurements, fitting the alpha-beta link
+    /// model from the collective points.
+    pub fn from_measurements(
+        source: &str,
+        ref_flops: f64,
+        ref_bw: f64,
+        layers: Vec<LayerSample>,
+        collectives: Vec<CollectiveSample>,
+    ) -> Result<ProfileDb, ProfileDbError> {
+        let points: Vec<(f64, f64)> = collectives.iter().map(|c| (c.bytes, c.seconds)).collect();
+        let (alpha, beta) = fit_alpha_beta(&points).ok_or_else(|| ProfileDbError::Coverage {
+            reason: "need at least two collective samples of distinct sizes (with positive \
+                     slope) to fit the alpha-beta link model"
+                .into(),
+        })?;
+        let db = ProfileDb {
+            source: source.to_string(),
+            ref_flops,
+            ref_bw,
+            alpha,
+            beta,
+            layers,
+            collectives,
+        };
+        db.validate()?;
+        Ok(db)
+    }
+
+    /// Structural + coverage validation (run on every load).
+    pub fn validate(&self) -> Result<(), ProfileDbError> {
+        let bad = |reason: String| ProfileDbError::Malformed { reason };
+        let pos = |name: &str, v: f64| -> Result<(), ProfileDbError> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(bad(format!("{name} must be a positive finite number, got {v}")))
+            }
+        };
+        pos("ref_flops", self.ref_flops)?;
+        pos("ref_bw", self.ref_bw)?;
+        pos("beta", self.beta)?;
+        if !(self.alpha.is_finite() && self.alpha >= 0.0) {
+            return Err(bad(format!("alpha must be finite and >= 0, got {}", self.alpha)));
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.hidden == 0 || l.seq == 0 || l.batch == 0 {
+                return Err(bad(format!("layer sample {i}: hidden/seq/batch must be >= 1")));
+            }
+            pos(&format!("layer sample {i}: flops_fwd"), l.flops_fwd)?;
+            pos(&format!("layer sample {i}: seconds_per_sample"), l.seconds_per_sample)?;
+            pos(&format!("layer sample {i}: effective_flops"), l.effective_flops)?;
+        }
+        for (i, c) in self.collectives.iter().enumerate() {
+            pos(&format!("collective sample {i}: bytes"), c.bytes)?;
+            pos(&format!("collective sample {i}: seconds"), c.seconds)?;
+        }
+        // Coverage: the calibrated backend needs at least one compute
+        // sample and a fittable link model.
+        if self.layers.is_empty() {
+            return Err(ProfileDbError::Coverage {
+                reason: "no layer samples (the calibrated compute model has nothing to \
+                         interpolate; run `galvatron calibrate`)"
+                    .into(),
+            });
+        }
+        let mut sizes: Vec<u64> = self.collectives.iter().map(|c| c.bytes.to_bits()).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.len() < 2 {
+            return Err(ProfileDbError::Coverage {
+                reason: format!(
+                    "need collective samples at >= 2 distinct sizes to pin the alpha-beta \
+                     link model, got {}",
+                    sizes.len()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// The fitted link model, expressed relative to the measured link's
+    /// nominal bandwidth (see [`LinkModel`]).
+    pub fn link_model(&self) -> LinkModel {
+        LinkModel { alpha: self.alpha, efficiency: self.beta / self.ref_bw }
+    }
+
+    /// Compute-efficiency ratio for a (hidden, seq) layer shape: exact
+    /// sample match, else linear interpolation over `hidden` inside the
+    /// covered range (per hidden, the sample with the closest seq is
+    /// used), else `None` — outside coverage the caller falls back to the
+    /// analytic roofline.
+    pub fn efficiency_for(&self, hidden: usize, seq: usize) -> Option<f64> {
+        let mut by_hidden: Vec<&LayerSample> = Vec::new();
+        for s in &self.layers {
+            if s.hidden == hidden && s.seq == seq {
+                return Some(s.effective_flops / self.ref_flops);
+            }
+            match by_hidden.iter_mut().find(|b| b.hidden == s.hidden) {
+                Some(best) => {
+                    if (s.seq.abs_diff(seq), s.seq) < (best.seq.abs_diff(seq), best.seq) {
+                        *best = s;
+                    }
+                }
+                None => by_hidden.push(s),
+            }
+        }
+        let lo = by_hidden.iter().filter(|s| s.hidden <= hidden).max_by_key(|s| s.hidden)?;
+        let hi = by_hidden.iter().filter(|s| s.hidden >= hidden).min_by_key(|s| s.hidden)?;
+        let e0 = lo.effective_flops / self.ref_flops;
+        let e1 = hi.effective_flops / self.ref_flops;
+        if lo.hidden == hi.hidden {
+            Some(e0)
+        } else {
+            let t = (hidden - lo.hidden) as f64 / (hi.hidden - lo.hidden) as f64;
+            Some(e0 + (e1 - e0) * t)
+        }
+    }
+
+    // ---- JSON (de)serialization -----------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(PROFILE_DB_VERSION as f64)),
+            ("source", Json::str(&self.source)),
+            ("ref_flops", Json::num(self.ref_flops)),
+            ("ref_bw", Json::num(self.ref_bw)),
+            ("alpha", Json::num(self.alpha)),
+            ("beta", Json::num(self.beta)),
+            (
+                "layers",
+                Json::arr(self.layers.iter().map(|l| {
+                    Json::obj(vec![
+                        ("hidden", Json::num(l.hidden as f64)),
+                        ("seq", Json::num(l.seq as f64)),
+                        ("batch", Json::num(l.batch as f64)),
+                        ("flops_fwd", Json::num(l.flops_fwd)),
+                        ("seconds_per_sample", Json::num(l.seconds_per_sample)),
+                        ("effective_flops", Json::num(l.effective_flops)),
+                    ])
+                })),
+            ),
+            (
+                "collectives",
+                Json::arr(self.collectives.iter().map(|c| {
+                    Json::obj(vec![
+                        ("kind", Json::str(&c.kind)),
+                        ("bytes", Json::num(c.bytes)),
+                        ("seconds", Json::num(c.seconds)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProfileDb, ProfileDbError> {
+        let bad = |reason: String| ProfileDbError::Malformed { reason };
+        check_keys(
+            v,
+            &["version", "source", "ref_flops", "ref_bw", "alpha", "beta", "layers", "collectives"],
+            "profile db",
+        )?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing or invalid version".into()))?;
+        if version != PROFILE_DB_VERSION {
+            return Err(bad(format!(
+                "unsupported profile db version {version} (supported: {PROFILE_DB_VERSION})"
+            )));
+        }
+        let getf = |key: &str| -> Result<f64, ProfileDbError> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad(format!("missing or invalid {key}")))
+        };
+        let source = v
+            .get("source")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing or invalid source".into()))?
+            .to_string();
+        let mut layers = Vec::new();
+        for (i, lv) in v
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing or invalid layers array".into()))?
+            .iter()
+            .enumerate()
+        {
+            check_keys(
+                lv,
+                &["hidden", "seq", "batch", "flops_fwd", "seconds_per_sample", "effective_flops"],
+                &format!("layer sample {i}"),
+            )?;
+            let u = |key: &str| -> Result<usize, ProfileDbError> {
+                lv.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| bad(format!("layer sample {i}: missing or invalid {key}")))
+            };
+            let f = |key: &str| -> Result<f64, ProfileDbError> {
+                lv.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad(format!("layer sample {i}: missing or invalid {key}")))
+            };
+            layers.push(LayerSample {
+                hidden: u("hidden")?,
+                seq: u("seq")?,
+                batch: u("batch")?,
+                flops_fwd: f("flops_fwd")?,
+                seconds_per_sample: f("seconds_per_sample")?,
+                effective_flops: f("effective_flops")?,
+            });
+        }
+        let mut collectives = Vec::new();
+        for (i, cv) in v
+            .get("collectives")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing or invalid collectives array".into()))?
+            .iter()
+            .enumerate()
+        {
+            check_keys(cv, &["kind", "bytes", "seconds"], &format!("collective sample {i}"))?;
+            let f = |key: &str| -> Result<f64, ProfileDbError> {
+                cv.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad(format!("collective sample {i}: missing or invalid {key}")))
+            };
+            collectives.push(CollectiveSample {
+                kind: cv
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad(format!("collective sample {i}: missing or invalid kind")))?
+                    .to_string(),
+                bytes: f("bytes")?,
+                seconds: f("seconds")?,
+            });
+        }
+        let db = ProfileDb {
+            source,
+            ref_flops: getf("ref_flops")?,
+            ref_bw: getf("ref_bw")?,
+            alpha: getf("alpha")?,
+            beta: getf("beta")?,
+            layers,
+            collectives,
+        };
+        db.validate()?;
+        Ok(db)
+    }
+
+    /// Canonical on-disk form (2-space pretty JSON, sorted keys, trailing
+    /// newline — the [`Json::to_pretty`] format, byte-reproducible).
+    pub fn to_pretty_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ProfileDbError> {
+        std::fs::write(path, self.to_pretty_string()).map_err(|e| ProfileDbError::Malformed {
+            reason: format!("writing {}: {e}", path.display()),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ProfileDb, ProfileDbError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ProfileDbError::Malformed {
+            reason: format!("reading {}: {e}", path.display()),
+        })?;
+        let v = Json::parse(&text).map_err(|e| ProfileDbError::Malformed {
+            reason: format!("{}: {e}", path.display()),
+        })?;
+        Self::from_json(&v)
+    }
+
+    /// Content fingerprint (FNV-1a over the compact JSON serialization):
+    /// stable across save/load round trips, used as the memoization
+    /// provenance key and — in hex — as the `db_hash` a plan artifact
+    /// records.
+    pub fn content_hash(&self) -> u64 {
+        fnv1a64(self.to_json().to_string().as_bytes())
+    }
+
+    pub fn content_hash_hex(&self) -> String {
+        format!("{:016x}", self.content_hash())
+    }
+}
+
+/// Strict-key validation ([`crate::util::json::check_object_keys`])
+/// surfaced as a malformed-DB error.
+fn check_keys(v: &Json, allowed: &[&str], ctx: &str) -> Result<(), ProfileDbError> {
+    crate::util::json::check_object_keys(v, allowed, ctx)
+        .map_err(|reason| ProfileDbError::Malformed { reason })
+}
+
+/// FNV-1a 64-bit hash (deterministic across platforms/runs, unlike the
+/// std hasher).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Least-squares fit of `seconds = alpha + bytes / beta` over (bytes,
+/// seconds) points. Returns `(alpha, beta)` with alpha clamped to >= 0;
+/// `None` when fewer than two distinct sizes exist or the slope is not
+/// positive (no meaningful bandwidth).
+pub fn fit_alpha_beta(points: &[(f64, f64)]) -> Option<(f64, f64)> {
+    if points.len() < 2 {
+        return None;
+    }
+    let n = points.len() as f64;
+    let mx = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let var: f64 = points.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    let cov: f64 = points.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    if var <= 0.0 {
+        return None;
+    }
+    let slope = cov / var;
+    if !(slope.is_finite() && slope > 0.0) {
+        return None;
+    }
+    Some(((my - slope * mx).max(0.0), 1.0 / slope))
+}
+
+/// In-process collectives micro-benchmark: time ring-semantics
+/// all-reduce / all-gather / reduce-scatter over host buffers and report
+/// (ring wire bytes per device → seconds) points for the alpha-beta fit.
+/// Wallclock-derived — use [`ProfileDb::synthetic`] where determinism
+/// matters (CI).
+pub fn measure_collectives(reps: usize) -> Vec<CollectiveSample> {
+    use crate::coordinator::collectives::{all_gather, all_reduce, reduce_scatter};
+    use crate::parallel::comm::{allgather_bytes, allreduce_bytes};
+    use std::time::Instant;
+
+    let n = 4usize;
+    let reps = reps.max(1);
+    let mut rng = crate::util::rng::Rng::new(0xCA11B);
+    let mut out = Vec::new();
+    for shift in [14usize, 16, 18, 20] {
+        let len = (1usize << shift) / n * n;
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32 * 0.1).collect())
+            .collect();
+        let full_bytes = len as f64 * 4.0;
+
+        // Time only the collective: the per-rep buffer reset (all_reduce
+        // mutates in place) stays outside the clock so it cannot bias the
+        // alpha-beta fit against the copy-free collectives below.
+        let mut elapsed = std::time::Duration::ZERO;
+        for _ in 0..reps {
+            let mut bufs = base.clone();
+            let mut refs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            let t0 = Instant::now();
+            all_reduce(&mut refs);
+            elapsed += t0.elapsed();
+        }
+        out.push(CollectiveSample {
+            kind: "all_reduce".into(),
+            bytes: allreduce_bytes(n, full_bytes),
+            seconds: elapsed.as_secs_f64() / reps as f64,
+        });
+
+        let shards: Vec<&[f32]> = base.iter().map(|b| &b[..len / n]).collect();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = all_gather(&shards);
+        }
+        out.push(CollectiveSample {
+            kind: "all_gather".into(),
+            bytes: allgather_bytes(n, full_bytes),
+            seconds: t0.elapsed().as_secs_f64() / reps as f64,
+        });
+
+        let full: Vec<&[f32]> = base.iter().map(|b| b.as_slice()).collect();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = reduce_scatter(&full);
+        }
+        out.push(CollectiveSample {
+            kind: "reduce_scatter".into(),
+            bytes: allgather_bytes(n, full_bytes),
+            seconds: t0.elapsed().as_secs_f64() / reps as f64,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+
+    #[test]
+    fn synthetic_db_is_exact_analytic() {
+        let c = cluster_by_name("titan8").unwrap();
+        let db = ProfileDb::synthetic(&c);
+        db.validate().unwrap();
+        // Every zoo shape is covered at exactly ratio 1.0.
+        for s in &db.layers {
+            assert_eq!(db.efficiency_for(s.hidden, s.seq), Some(1.0));
+        }
+        // The link model is the ideal one.
+        assert_eq!(db.link_model(), LinkModel::ideal());
+        assert!(db.layers.len() > 3);
+        assert_eq!(db.collectives.len(), 12);
+    }
+
+    #[test]
+    fn efficiency_interpolates_and_falls_back() {
+        let mk = |hidden: usize, seq: usize, eff: f64| LayerSample {
+            hidden,
+            seq,
+            batch: 1,
+            flops_fwd: 1e9,
+            seconds_per_sample: 1e9 / eff,
+            effective_flops: eff,
+        };
+        let db = ProfileDb {
+            source: "test".into(),
+            ref_flops: 10.0,
+            ref_bw: 1e9,
+            alpha: 0.0,
+            beta: 1e9,
+            layers: vec![mk(1000, 512, 5.0), mk(2000, 512, 10.0), mk(2000, 128, 20.0)],
+            collectives: vec![],
+        };
+        // Exact (hidden, seq) hit.
+        assert_eq!(db.efficiency_for(1000, 512), Some(0.5));
+        assert_eq!(db.efficiency_for(2000, 128), Some(2.0));
+        // Exact hidden, nearest seq (ties -> smaller seq).
+        assert_eq!(db.efficiency_for(2000, 100), Some(2.0));
+        assert_eq!(db.efficiency_for(2000, 600), Some(1.0));
+        // Interpolation over hidden, per-hidden nearest seq: midway between
+        // eff 0.5 (h=1000) and eff 1.0 (h=2000@512).
+        assert_eq!(db.efficiency_for(1500, 512), Some(0.75));
+        // Outside coverage: analytic fallback.
+        assert_eq!(db.efficiency_for(100, 512), None);
+        assert_eq!(db.efficiency_for(4096, 512), None);
+    }
+
+    #[test]
+    fn alpha_beta_fit_recovers_exact_lines() {
+        // Points exactly on t = 2e-5 + bytes / 1e9.
+        let pts: Vec<(f64, f64)> = [1e6, 4e6, 16e6]
+            .iter()
+            .map(|&b| (b, 2e-5 + b / 1e9))
+            .collect();
+        let (alpha, beta) = fit_alpha_beta(&pts).unwrap();
+        assert!((alpha - 2e-5).abs() < 1e-12, "{alpha}");
+        assert!((beta - 1e9).abs() / 1e9 < 1e-9, "{beta}");
+        // Negative intercepts clamp to zero.
+        let pts: Vec<(f64, f64)> = [1e6, 4e6].iter().map(|&b| (b, b / 1e9 - 1e-6)).collect();
+        let (alpha, _) = fit_alpha_beta(&pts).unwrap();
+        assert_eq!(alpha, 0.0);
+        // Degenerate inputs refuse to fit.
+        assert!(fit_alpha_beta(&[(1e6, 1.0)]).is_none());
+        assert!(fit_alpha_beta(&[(1e6, 1.0), (1e6, 2.0)]).is_none());
+        assert!(fit_alpha_beta(&[(1e6, 2.0), (2e6, 1.0)]).is_none()); // negative slope
+    }
+
+    #[test]
+    fn json_round_trip_and_stable_hash() {
+        let db = ProfileDb::synthetic(&cluster_by_name("hetero4").unwrap());
+        let text = db.to_pretty_string();
+        let back = ProfileDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, db);
+        assert_eq!(back.content_hash(), db.content_hash());
+        // Distinct sources hash differently.
+        let other = ProfileDb::synthetic(&cluster_by_name("titan8").unwrap());
+        assert_ne!(other.content_hash(), db.content_hash());
+        assert_eq!(db.content_hash_hex().len(), 16);
+    }
+
+    #[test]
+    fn malformed_and_coverage_errors_are_typed() {
+        // Unknown key.
+        let v = Json::parse(r#"{"version":1,"bogus":2}"#).unwrap();
+        assert!(matches!(
+            ProfileDb::from_json(&v),
+            Err(ProfileDbError::Malformed { .. })
+        ));
+        // Empty layer table is a coverage error.
+        let mut db = ProfileDb::synthetic(&cluster_by_name("titan8").unwrap());
+        db.layers.clear();
+        assert!(matches!(db.validate(), Err(ProfileDbError::Coverage { .. })));
+        // One collective size cannot pin the fit.
+        let mut db = ProfileDb::synthetic(&cluster_by_name("titan8").unwrap());
+        db.collectives.truncate(1);
+        assert!(matches!(db.validate(), Err(ProfileDbError::Coverage { .. })));
+        // Nonpositive rates are malformed, not coverage.
+        let mut db = ProfileDb::synthetic(&cluster_by_name("titan8").unwrap());
+        db.beta = 0.0;
+        assert!(matches!(db.validate(), Err(ProfileDbError::Malformed { .. })));
+    }
+
+    #[test]
+    fn measured_collectives_fit() {
+        let samples = measure_collectives(1);
+        assert_eq!(samples.len(), 12);
+        assert!(samples.iter().all(|s| s.bytes > 0.0 && s.seconds > 0.0));
+        // The measured points are fittable (alpha-beta may be noisy but
+        // must exist: sizes span a 64x range).
+        let pts: Vec<(f64, f64)> = samples.iter().map(|s| (s.bytes, s.seconds)).collect();
+        assert!(fit_alpha_beta(&pts).is_some());
+    }
+}

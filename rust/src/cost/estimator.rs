@@ -3,10 +3,11 @@
 
 use crate::cluster::{ClusterSpec, StageSite};
 use crate::model::{LayerProfile, TrainConfig};
-use crate::parallel::comm::{ckpt_recompute_comm, layer_comm_volumes};
+use crate::parallel::comm::{ckpt_recompute_comm, layer_comm_volumes_with};
 use crate::parallel::memory::{layer_memory_with, LayerMemory};
 use crate::parallel::{transform, Dim, Strategy};
 
+use super::model::CostModel;
 use super::overlapped_time;
 
 /// Full cost of one layer under one strategy for one microbatch.
@@ -100,11 +101,17 @@ pub struct CostEstimator {
     pub overlap_slowdown: f64,
     /// The island site this estimator prices (device FLOPs/memory + bus).
     pub site: StageSite,
-    /// Training numerics (dtype/optimizer/ZeRO) for the memory accounting.
-    /// The default (fp32 + Adam, unsharded) reproduces the historical
-    /// hardwired constants bit-for-bit. Time estimation stays calibrated
-    /// at fp32 — dtype affects memory only (see README).
+    /// Training numerics (dtype/optimizer/ZeRO) for the memory accounting
+    /// and the parameter-collective wire bytes. The default (fp32 + Adam,
+    /// unsharded) reproduces the historical hardwired constants
+    /// bit-for-bit; fp16/bf16 halves DP/SDP communication volume while
+    /// compute and activation (TP) volumes stay fp32-calibrated (README).
     pub train: TrainConfig,
+    /// Where compute rates and link times come from: the analytic
+    /// formulas (default) or a calibrated [`crate::cost::ProfileDb`]
+    /// backend. The analytic backend reproduces the pre-backend estimator
+    /// bit-for-bit.
+    pub cost_model: CostModel,
 }
 
 impl CostEstimator {
@@ -132,12 +139,19 @@ impl CostEstimator {
             overlap_slowdown,
             site,
             train: TrainConfig::default(),
+            cost_model: CostModel::Analytic,
         }
     }
 
     /// Bind explicit training numerics (builder-style).
     pub fn with_train(mut self, train: TrainConfig) -> Self {
         self.train = train;
+        self
+    }
+
+    /// Bind a cost-model backend (builder-style; default analytic).
+    pub fn with_cost_model(mut self, cost_model: CostModel) -> Self {
+        self.cost_model = cost_model;
         self
     }
 
@@ -174,6 +188,12 @@ impl CostEstimator {
 
     /// c(l, s): the paper's per-layer cost under strategy `s` with
     /// microbatch size `b_m` and `extra_params` (embeddings/heads).
+    ///
+    /// Compute rides the device's nominal FLOP rate scaled by the cost
+    /// model's profiled per-shape efficiency; every collective goes
+    /// through the backend's [`crate::cluster::LinkModel`]. The analytic
+    /// backend (efficiency 1.0, ideal link) reproduces the historical
+    /// roofline + `bytes / bw` numbers bit-for-bit.
     pub fn layer_cost(
         &self,
         layer: &LayerProfile,
@@ -182,34 +202,40 @@ impl CostEstimator {
         extra_params: f64,
     ) -> LayerCost {
         let local_samples = b_m / strategy.batch_split() as f64;
-        let comp_fwd = layer.flops_fwd * local_samples
-            / strategy.tp() as f64
-            / self.site.gpu.flops;
+        let rate = self.site.gpu.flops
+            * self.cost_model.compute_efficiency(layer.hidden, layer.seq);
+        let comp_fwd = layer.flops_fwd * local_samples / strategy.tp() as f64 / rate;
         let comp_bwd = 2.0 * comp_fwd;
 
-        let vols = layer_comm_volumes(layer, strategy, b_m, extra_params);
+        let link = self.cost_model.link();
+        let vols = layer_comm_volumes_with(layer, strategy, b_m, extra_params, &self.train);
         let tp_bw = self.dim_bw(strategy, Dim::Tp);
         let sdp_bw = self.dim_bw(strategy, Dim::Sdp);
         let dp_bw = self.dim_bw(strategy, Dim::Dp);
 
         // Forward: TP all-reduces are blocking (activations are inputs of
         // the next op); SDP parameter gather overlaps compute.
-        let fwd = overlapped_time(comp_fwd + vols.tp_fwd / tp_bw, vols.sdp_fwd / sdp_bw, self.overlap_slowdown);
+        let fwd = overlapped_time(
+            comp_fwd + link.time(vols.tp_fwd, tp_bw),
+            link.time(vols.sdp_fwd, sdp_bw),
+            self.overlap_slowdown,
+        );
 
         // Backward (no sync): compute (+ CKPT recompute) + blocking TP,
         // overlapped with SDP gather/reduce-scatter.
         let recompute = if strategy.ckpt {
-            comp_fwd + ckpt_recompute_comm(&vols) / tp_bw
+            comp_fwd + link.time(ckpt_recompute_comm(&vols), tp_bw)
         } else {
             0.0
         };
-        let bwd_blocking = comp_bwd + recompute + vols.tp_bwd / tp_bw;
-        let bwd = overlapped_time(bwd_blocking, vols.sdp_bwd / sdp_bw, self.overlap_slowdown);
+        let bwd_blocking = comp_bwd + recompute + link.time(vols.tp_bwd, tp_bw);
+        let bwd =
+            overlapped_time(bwd_blocking, link.time(vols.sdp_bwd, sdp_bw), self.overlap_slowdown);
 
         // Last microbatch also carries the DP gradient all-reduce.
         let bwd_sync = overlapped_time(
             bwd_blocking,
-            vols.sdp_bwd / sdp_bw + vols.dp_grad / dp_bw,
+            link.time(vols.sdp_bwd, sdp_bw) + link.time(vols.dp_grad, dp_bw),
             self.overlap_slowdown,
         );
 
@@ -232,14 +258,16 @@ impl CostEstimator {
         // Redistribution rides the stage group's slowest internal link.
         let group = cur.degree().max(prev.degree());
         let bw = self.group_bw(group.max(1));
-        transform::transform_time(layer, prev, cur, b_m, bw)
+        self.cost_model.link().time(transform::transform_bytes(layer, prev, cur, b_m), bw)
     }
 
     /// Pipeline p2p time to ship a stage-boundary activation (and its
     /// gradient on the way back) for one microbatch.
     pub fn p2p_time(&self, boundary: &LayerProfile, strategy: &Strategy, b_m: f64) -> f64 {
         let local = b_m / strategy.batch_split() as f64;
-        boundary.bnd_bytes * local / self.cluster.pipeline_link_bw(self.pp)
+        self.cost_model
+            .link()
+            .time(boundary.bnd_bytes * local, self.cluster.pipeline_link_bw(self.pp))
     }
 }
 
@@ -343,7 +371,7 @@ mod tests {
     }
 
     #[test]
-    fn train_config_shrinks_memory_not_time() {
+    fn train_config_shrinks_memory_and_param_comm() {
         use crate::model::{Dtype, TrainConfig};
         let e = est(1);
         let lean = est(1).with_train(TrainConfig {
@@ -358,9 +386,65 @@ mod tests {
         // bf16 activations halve, ZeRO shards the optimizer state over DP8.
         assert!(c16.mem.o_f < 0.6 * c32.mem.o_f);
         assert!(c16.mem.o_ms < c32.mem.o_ms);
-        // The time model stays fp32-calibrated.
+        // Compute and activation comm stay fp32-calibrated...
         assert_eq!(c16.fwd, c32.fwd);
         assert_eq!(c16.bwd, c32.bwd);
+        // ...but the DP gradient all-reduce rides the wire in bf16, so the
+        // syncing microbatch gets cheaper.
+        assert!(c16.bwd_sync <= c32.bwd_sync);
+    }
+
+    #[test]
+    fn analytic_backend_is_bitwise_default() {
+        use crate::cost::CostModel;
+        let e = est(2);
+        let explicit = est(2).with_cost_model(CostModel::Analytic);
+        let l = layer();
+        for s in [
+            Strategy::serial(true),
+            Strategy::single(Dim::Dp, 4, false),
+            Strategy { levels: vec![(Dim::Dp, 2), (Dim::Tp, 2)], ckpt: false },
+        ] {
+            let a = e.layer_cost(&l, &s, 8.0, 1e6);
+            let b = explicit.layer_cost(&l, &s, 8.0, 1e6);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn calibrated_backend_scales_compute_and_links() {
+        use crate::cluster::LinkModel;
+        use crate::cost::{CostModel, ProfileDb};
+        let l = layer();
+        // A DB claiming the device achieves half its nominal FLOP rate on
+        // this shape, over a link with latency and 50% efficiency.
+        let mut db = ProfileDb::synthetic(&cluster_by_name("titan8").unwrap());
+        let ref_flops = db.ref_flops;
+        for s in &mut db.layers {
+            s.effective_flops = ref_flops / 2.0;
+        }
+        db.alpha = 1e-4;
+        db.beta = db.ref_bw / 2.0;
+        assert_eq!(db.link_model(), LinkModel { alpha: 1e-4, efficiency: 0.5 });
+
+        let analytic = est(1);
+        let cal = est(1).with_cost_model(CostModel::calibrated(db));
+        // Pure compute: exactly 2x slower at half the effective rate.
+        let a = analytic.layer_cost(&l, &Strategy::serial(false), 8.0, 0.0);
+        let c = cal.layer_cost(&l, &Strategy::serial(false), 8.0, 0.0);
+        assert!((c.fwd / a.fwd - 2.0).abs() < 1e-9, "{} vs {}", c.fwd, a.fwd);
+        // Memory accounting is backend-independent.
+        assert_eq!(a.mem, c.mem);
+        // Transform and p2p pay the fitted latency + derated bandwidth.
+        let s1 = Strategy::single(Dim::Dp, 8, false);
+        let s2 = Strategy::single(Dim::Tp, 8, false);
+        let rt_a = analytic.transform_cost(&l, &s1, &s2, 8.0);
+        let rt_c = cal.transform_cost(&l, &s1, &s2, 8.0);
+        assert!(rt_c > 2.0 * rt_a, "{rt_c} vs {rt_a}");
+        assert!(cal.p2p_time(&l, &s1, 8.0) > 2.0 * analytic.p2p_time(&l, &s1, 8.0));
+        // Same-strategy transforms stay free: alpha is never charged for
+        // communication that does not happen.
+        assert_eq!(cal.transform_cost(&l, &s1, &s1, 8.0), 0.0);
     }
 
     #[test]

@@ -12,12 +12,26 @@
 //!   * CKPT adds one forward recompute (+ its TP collectives) to backward;
 //!   * pipeline cost follows Eq. 5 / Eq. 9 with the last-microbatch
 //!     gradient-sync distinction.
+//!
+//! Cost *provenance* is a pluggable backend ([`model::CostModel`]): the
+//! analytic formulas above are the default, and a calibrated backend
+//! ([`calibration::ProfileDb`]) swaps in profiled compute efficiencies and
+//! a fitted alpha-beta link model — the paper's "take advantages from both
+//! sides" cost pipeline (profiling for computation, simulation for
+//! communication).
 
+pub mod calibration;
 pub mod estimator;
+pub mod model;
 pub mod pipeline;
 
+pub use calibration::{
+    fit_alpha_beta, measure_collectives, CollectiveSample, LayerSample, ProfileDb, ProfileDbError,
+    PROFILE_DB_VERSION,
+};
 pub use estimator::{CostEstimator, LayerCost, StageCosts};
-pub use pipeline::{plan_cost, plan_cost_with, PlanCost, StageCost};
+pub use model::{CostModel, CostProvenance};
+pub use pipeline::{plan_cost, plan_cost_full, plan_cost_with, PlanCost, StageCost};
 
 /// Default GPU streaming-multiprocessor contention factor (paper §V: "such
 /// contention could slow down the computation and communication by 1.3×").

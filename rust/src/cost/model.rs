@@ -1,0 +1,164 @@
+//! Pluggable cost-model backends: where per-layer compute rates and link
+//! times come from.
+//!
+//! The planner historically had one hardwired cost theory — closed-form
+//! FLOP rooflines and `bytes / bw` ring divisions. [`CostModel`] makes the
+//! provenance a first-class, swappable backend:
+//!
+//!   * [`CostModel::Analytic`] — the original formulas, unchanged. The
+//!     default everywhere; plans and artifacts are byte-identical to the
+//!     pre-backend planner.
+//!   * [`CostModel::Calibrated`] — a loaded [`ProfileDb`] of measured
+//!     samples: compute times scale by the profiled per-(hidden, seq)
+//!     efficiency (interpolated inside coverage, analytic outside it) and
+//!     link times follow the fitted alpha-beta model
+//!     (`alpha + bytes / beta`; `alpha = 0` at full efficiency reproduces
+//!     the analytic division exactly).
+//!
+//! Every consumer of costs — [`super::CostEstimator`], the search
+//! engine's memoized [`crate::search::engine::CostCache`] (whose keys
+//! carry [`CostModel::cache_fingerprint`] so entries never mix backends),
+//! [`super::pipeline::plan_cost_full`], and the simulator — takes the
+//! backend explicitly; [`CostModel::provenance`] is what a
+//! [`crate::api::PlanReport`] records so artifacts know which cost theory
+//! produced them.
+
+use std::sync::Arc;
+
+use crate::cluster::LinkModel;
+use crate::util::json::Json;
+
+use super::calibration::ProfileDb;
+
+/// The source of compute rates and link times for cost estimation.
+#[derive(Debug, Clone, Default)]
+pub enum CostModel {
+    /// Closed-form FLOP roofline + pure `bytes / bw` divisions (the
+    /// original cost theory; the default).
+    #[default]
+    Analytic,
+    /// Profiled compute efficiencies + fitted alpha-beta links from a
+    /// [`ProfileDb`] (shared — cloning a calibrated model is cheap).
+    Calibrated(Arc<ProfileDb>),
+}
+
+impl CostModel {
+    /// Wrap a loaded database as a calibrated backend.
+    pub fn calibrated(db: ProfileDb) -> CostModel {
+        CostModel::Calibrated(Arc::new(db))
+    }
+
+    pub fn is_analytic(&self) -> bool {
+        matches!(self, CostModel::Analytic)
+    }
+
+    /// Stable backend name ("analytic" / "calibrated").
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            CostModel::Analytic => "analytic",
+            CostModel::Calibrated(_) => "calibrated",
+        }
+    }
+
+    /// Provenance to record into plan artifacts; `None` for the default
+    /// analytic backend so existing artifacts stay byte-identical.
+    pub fn provenance(&self) -> Option<CostProvenance> {
+        match self {
+            CostModel::Analytic => None,
+            CostModel::Calibrated(db) => Some(CostProvenance {
+                backend: self.backend_name().to_string(),
+                db_hash: db.content_hash_hex(),
+            }),
+        }
+    }
+
+    /// Fingerprint folded into memoized cost-cache keys so entries from
+    /// different backends can never be confused (0 = analytic).
+    pub fn cache_fingerprint(&self) -> u64 {
+        match self {
+            CostModel::Analytic => 0,
+            CostModel::Calibrated(db) => db.content_hash(),
+        }
+    }
+
+    /// Compute-rate efficiency for a (hidden, seq) layer shape — the
+    /// factor the nominal device FLOP rate is scaled by. Exactly 1.0 for
+    /// the analytic backend and outside a calibrated DB's coverage.
+    pub fn compute_efficiency(&self, hidden: usize, seq: usize) -> f64 {
+        match self {
+            CostModel::Analytic => 1.0,
+            CostModel::Calibrated(db) => db.efficiency_for(hidden, seq).unwrap_or(1.0),
+        }
+    }
+
+    /// The link time model (ideal for analytic).
+    pub fn link(&self) -> LinkModel {
+        match self {
+            CostModel::Analytic => LinkModel::ideal(),
+            CostModel::Calibrated(db) => db.link_model(),
+        }
+    }
+}
+
+/// Which cost model produced a plan — recorded into [`crate::api::PlanReport`]
+/// artifacts (only when non-default) so `simulate --plan` can warn when a
+/// plan is re-evaluated under a different cost theory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostProvenance {
+    /// Backend name ("calibrated").
+    pub backend: String,
+    /// Content hash of the profile DB ([`ProfileDb::content_hash_hex`]).
+    pub db_hash: String,
+}
+
+impl CostProvenance {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::str(&self.backend)),
+            ("db_hash", Json::str(&self.db_hash)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<CostProvenance> {
+        Some(CostProvenance {
+            backend: v.get("backend")?.as_str()?.to_string(),
+            db_hash: v.get("db_hash")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Short display form, e.g. "calibrated (db 1a2b3c4d5e6f7081)".
+    pub fn label(&self) -> String {
+        format!("{} (db {})", self.backend, self.db_hash)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cluster_by_name;
+
+    #[test]
+    fn analytic_is_the_silent_default() {
+        let m = CostModel::default();
+        assert!(m.is_analytic());
+        assert_eq!(m.provenance(), None);
+        assert_eq!(m.cache_fingerprint(), 0);
+        assert_eq!(m.compute_efficiency(1280, 512), 1.0);
+        assert_eq!(m.link(), LinkModel::ideal());
+    }
+
+    #[test]
+    fn calibrated_carries_provenance_and_fingerprint() {
+        let db = ProfileDb::synthetic(&cluster_by_name("titan8").unwrap());
+        let hash = db.content_hash();
+        let m = CostModel::calibrated(db);
+        let p = m.provenance().unwrap();
+        assert_eq!(p.backend, "calibrated");
+        assert_eq!(p.db_hash, format!("{hash:016x}"));
+        assert_eq!(m.cache_fingerprint(), hash);
+        assert!(p.label().contains("calibrated"));
+        // Provenance JSON round-trips.
+        let v = Json::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(CostProvenance::from_json(&v), Some(p));
+    }
+}

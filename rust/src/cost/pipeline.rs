@@ -7,6 +7,7 @@ use crate::parallel::memory::{stage_peak_memory, LayerMemory};
 use crate::parallel::ParallelPlan;
 
 use super::estimator::CostEstimator;
+use super::model::CostModel;
 
 /// Pipeline schedule flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,9 +70,10 @@ pub fn plan_cost(
 }
 
 /// [`plan_cost`] under explicit training numerics: the per-layer memory
-/// accounting (and thus per-stage peaks and feasibility) follows the
-/// dtype/optimizer/ZeRO configuration. The default `train` reproduces
-/// [`plan_cost`] bit-for-bit.
+/// accounting (and thus per-stage peaks and feasibility) and the
+/// parameter-collective wire bytes follow the dtype/optimizer/ZeRO
+/// configuration. The default `train` reproduces [`plan_cost`]
+/// bit-for-bit.
 pub fn plan_cost_with(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -79,6 +81,22 @@ pub fn plan_cost_with(
     schedule: Schedule,
     overlap_slowdown: f64,
     train: TrainConfig,
+) -> PlanCost {
+    plan_cost_full(model, cluster, plan, schedule, overlap_slowdown, train, &CostModel::Analytic)
+}
+
+/// [`plan_cost_with`] under an explicit cost-model backend: compute rates
+/// and link times come from `cost_model` (profiled efficiencies + fitted
+/// alpha-beta links when calibrated). The analytic backend reproduces
+/// [`plan_cost_with`] bit-for-bit.
+pub fn plan_cost_full(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    schedule: Schedule,
+    overlap_slowdown: f64,
+    train: TrainConfig,
+    cost_model: &CostModel,
 ) -> PlanCost {
     // Each stage is priced on its assigned island slot (identity placement
     // unless the plan carries a heterogeneous stage→slot map); on a
@@ -96,7 +114,9 @@ pub fn plan_cost_with(
                 .find(|s| s.class == c as u32)
                 .expect("contiguous site class ids")
                 .clone();
-            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site).with_train(train)
+            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
+                .with_train(train)
+                .with_cost_model(cost_model.clone())
         })
         .collect();
     let b_m = plan.microbatch_size();

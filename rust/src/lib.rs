@@ -9,7 +9,10 @@
 //!   * [`cluster`] — device/island topology + bandwidth model.
 //!   * [`parallel`]— DP/SDP/TP/PP/CKPT strategy representation, memory and
 //!     collective-communication accounting.
-//!   * [`cost`]    — the paper's cost estimator (§V), incl. overlap slowdown.
+//!   * [`cost`]    — the paper's cost estimator (§V), incl. overlap
+//!     slowdown, behind pluggable [`cost::CostModel`] backends: the
+//!     analytic formulas (default) or a calibrated
+//!     [`cost::ProfileDb`] of profiled compute/collective samples.
 //!   * [`search`]  — decision-tree search space (§III), dynamic-programming
 //!     layer assignment + Galvatron-Base (§IV-A) and the BMW bi-objective
 //!     workload balancer (§IV-B), plus all baselines — all driven by the

@@ -9,6 +9,8 @@
 //!   fig4..7   regenerate the paper's figures
 //!   train     run real-numerics e2e training over the AOT artifacts
 //!   profile   calibrate the cost model by profiling artifacts on PJRT-CPU
+//!   calibrate write a ProfileDb (layer profiles + collectives micro-bench,
+//!             or --synthetic from the analytic model) for plan --profile-db
 //!   smoke     runtime smoke test (load + execute the axpy artifact)
 //!   models    list the Table I model zoo (--json emits ModelSpec JSON,
 //!             --file validates a spec file, --out-dir exports the zoo)
@@ -29,8 +31,9 @@ commands:
             --cluster <name> --memory <GB> [--method <name>]
             [--islands 2xA100-80G,2xRTX-TITAN-24G] [--max-batch N]
             [--dtype fp32|fp16|bf16] [--optimizer sgd|adam] [--zero]
-            [--schedule 1f1b|gpipe] [--threads N] [--out plan.json]
-  simulate  --plan plan.json
+            [--profile-db db.json] [--schedule 1f1b|gpipe] [--threads N]
+            [--out plan.json]
+  simulate  --plan plan.json [--profile-db db.json]
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
   table3 | table4 | table5 | table6     (same options)
@@ -38,6 +41,8 @@ commands:
   fig4 | fig5 | fig6 | fig7             [--max-batch N]
   train     [--artifacts DIR] [--steps N] [--dp N] [--microbatches N] [--csv FILE] [--repeat-batch]
   profile   [--artifacts DIR] [--reps N]
+  calibrate [--out db.json] [--artifacts DIR] [--reps N] [--coll-reps N]
+            | --synthetic [--cluster <name>] [--out db.json]
   smoke     [--artifacts DIR]
   models    [--json] [--file spec.json] [--out-dir DIR]
   clusters | methods
@@ -122,6 +127,10 @@ fn plan_request(args: &Args) -> Result<PlanRequest> {
     if let Some(t) = args.get("threads") {
         req = req.threads(t.parse().context("--threads expects an integer")?);
     }
+    // Calibrated cost-model backend from a `galvatron calibrate` DB.
+    if let Some(db) = args.get("profile-db") {
+        req = req.profile_db(db);
+    }
     Ok(req)
 }
 
@@ -137,7 +146,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
         resolved.cluster.budget_label(),
         resolved.method.canonical_name()
     );
-    let report = match planner.plan(&req) {
+    // Plan from the resolution above (avoids re-reading --profile-db).
+    let report = match planner.plan_resolved(&resolved) {
         Ok(report) => report,
         Err(PlanError::Infeasible { .. }) => {
             println!("OOM: no feasible plan under this budget");
@@ -151,7 +161,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         Err(e) => return Err(e.into()),
     };
     print!("{}", report.render());
-    let sim = planner.simulate_report(&report)?;
+    // Cross-check on the simulator under the same cost-model backend the
+    // search priced with (resolved once above).
+    let sim = planner.simulate_plan_costed(
+        &resolved.model,
+        &resolved.cluster,
+        &report,
+        &resolved.cost_model,
+    )?;
     println!(
         "simulated: {:.2} samples/s, iter {:.3}s, bubbles {:?}",
         sim.throughput,
@@ -166,7 +183,15 @@ fn cmd_plan(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    use galvatron::api::{CostModel, ProfileDb};
     let planner = Planner::new();
+    // The cost-model backend the simulation prices tasks with.
+    let cost_model = match args.get("profile-db") {
+        Some(path) => CostModel::calibrated(
+            ProfileDb::load(std::path::Path::new(path)).map_err(PlanError::from)?,
+        ),
+        None => CostModel::Analytic,
+    };
     let report = match args.get("plan") {
         Some(path) => {
             let report = PlanReport::load(std::path::Path::new(path))?;
@@ -179,9 +204,35 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             );
             report
         }
-        None => planner.plan(&plan_request(args)?)?,
+        None => {
+            // Hand the already-loaded backend to the planner so the DB is
+            // not read and validated from disk a second time.
+            let mut req = plan_request(args)?;
+            if !cost_model.is_analytic() {
+                req = req.cost_model(cost_model.clone());
+            }
+            planner.plan(&req)?
+        }
     };
-    let sim = planner.simulate_report(&report)?;
+    // Provenance check: a plan is only comparable to a simulation priced
+    // by the same cost theory that produced it.
+    if report.cost_model != cost_model.provenance() {
+        let recorded = report
+            .cost_model
+            .as_ref()
+            .map(|p| p.label())
+            .unwrap_or_else(|| "analytic".into());
+        let current = cost_model
+            .provenance()
+            .map(|p| p.label())
+            .unwrap_or_else(|| "analytic".into());
+        eprintln!(
+            "warning: plan artifact records the {recorded} cost model but is being \
+             simulated with {current}; estimated and simulated throughputs may not be \
+             comparable (pass the matching --profile-db to align them)"
+        );
+    }
+    let sim = planner.simulate_report_costed(&report, &cost_model)?;
     println!(
         "plan: est {:.2} samples/s | sim {:.2} samples/s",
         report.throughput, sim.throughput
@@ -240,6 +291,53 @@ fn cmd_profile(args: &Args) -> Result<()> {
     }
     let spec = galvatron::runtime::profile::calibrated_host_spec(&ms, 4.0 * galvatron::util::GIB);
     println!("calibrated host spec: {:.2} GFLOP/s effective", spec.flops / 1e9);
+    Ok(())
+}
+
+/// `galvatron calibrate`: write a cost-model [`galvatron::api::ProfileDb`]
+/// for `plan --profile-db`. The default path measures this host (PJRT
+/// layer profiles + in-process collectives micro-benchmark);
+/// `--synthetic` derives a deterministic DB from the analytic model of a
+/// cluster (exact zoo coverage, alpha=0) — the CI/byte-identity form.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use galvatron::api::ProfileDb;
+    let out = args.get_or("out", "profile-db.json").to_string();
+    let db = if args.flag("synthetic") {
+        let cluster = galvatron::api::resolve_cluster_name(args.get_or("cluster", "titan8"))?;
+        println!("deriving synthetic profile db from the analytic model of {}", cluster.name);
+        ProfileDb::synthetic(&cluster)
+    } else {
+        let rt = Runtime::new(std::path::Path::new(args.get_or("artifacts", "artifacts")))?;
+        let reps = args.usize("reps", 10)?;
+        let ms = galvatron::runtime::profile::profile_layers(&rt, reps)?;
+        for m in &ms {
+            println!(
+                "layer h={:<5} seq={:<5} batch={:<3} {:.2} ms/fwd  {:.2} GFLOP/s",
+                m.hidden,
+                m.seq,
+                m.batch,
+                m.seconds_per_fwd * 1e3,
+                m.effective_flops / 1e9
+            );
+        }
+        let layers = galvatron::runtime::profile::to_layer_samples(&ms);
+        let collectives =
+            galvatron::cost::measure_collectives(args.usize("coll-reps", 5)?);
+        // Efficiencies are recorded relative to the host device class's
+        // nominal rates (the `cpu` catalog entry).
+        let (host, host_bw) = galvatron::cluster::gpu_by_name("cpu").expect("cpu class exists");
+        ProfileDb::from_measurements("pjrt-cpu", host.flops, host_bw, layers, collectives)?
+    };
+    db.save(std::path::Path::new(&out))?;
+    println!(
+        "wrote profile db {out}: {} layer samples, {} collective points, alpha {:.3e} s, \
+         beta {:.2} GB/s, hash {}",
+        db.layers.len(),
+        db.collectives.len(),
+        db.alpha,
+        db.beta / 1e9,
+        db.content_hash_hex()
+    );
     Ok(())
 }
 
@@ -328,7 +426,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["repeat-batch", "speedups", "zero", "json"]);
+    let args = Args::from_env(&["repeat-batch", "speedups", "zero", "json", "synthetic"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "plan" => cmd_plan(&args)?,
@@ -366,6 +464,7 @@ fn main() -> Result<()> {
         }
         "train" => cmd_train(&args)?,
         "profile" => cmd_profile(&args)?,
+        "calibrate" => cmd_calibrate(&args)?,
         "smoke" => cmd_smoke(&args)?,
         "simulate" => cmd_simulate(&args)?,
         "models" => cmd_models(&args)?,

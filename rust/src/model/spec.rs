@@ -52,26 +52,12 @@ impl fmt::Display for SpecError {
 
 impl std::error::Error for SpecError {}
 
-/// Reject non-objects and unknown keys in user-authored JSON objects: a
-/// misspelled optional key (`"kv_head"`, `"windows"`, `"zer0"`) or a
-/// scalar where an object belongs must error, not silently describe a
-/// different model or training run.
+/// Strict-key validation ([`crate::util::json::check_object_keys`]: a
+/// misspelled optional key like `"kv_head"`, `"windows"`, `"zer0"` must
+/// error, not silently describe a different model or training run),
+/// surfaced as a spec error.
 fn check_keys(v: &Json, allowed: &[&str], ctx: &str) -> Result<(), SpecError> {
-    let Json::Obj(m) = v else {
-        return Err(SpecError::new(format!(
-            "{ctx}: expected a JSON object with keys {{{}}}",
-            allowed.join(", ")
-        )));
-    };
-    for k in m.keys() {
-        if !allowed.contains(&k.as_str()) {
-            return Err(SpecError::new(format!(
-                "{ctx}: unknown key {k:?} (allowed: {})",
-                allowed.join(", ")
-            )));
-        }
-    }
-    Ok(())
+    crate::util::json::check_object_keys(v, allowed, ctx).map_err(SpecError::new)
 }
 
 // ---------------------------------------------------------------------------

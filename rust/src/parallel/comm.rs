@@ -7,7 +7,7 @@
 //! so SDP (2× all-gather + 1× reduce-scatter over model states) moves 1.5×
 //! the bytes of DP's single all-reduce — paper Takeaway #3's premise.
 
-use crate::model::LayerProfile;
+use crate::model::{LayerProfile, TrainConfig};
 use crate::parallel::Strategy;
 
 /// Ring all-reduce bytes on the wire per device.
@@ -46,7 +46,8 @@ pub struct LayerCommVolumes {
     pub dp_grad: f64,
 }
 
-/// Compute communication volumes for `layer` under `strategy`.
+/// Compute communication volumes for `layer` under `strategy` with the
+/// default training numerics (fp32: the historical 4 B/param wire cost).
 ///
 /// `extra_params` — embedding/head params attributed to this layer.
 pub fn layer_comm_volumes(
@@ -55,9 +56,25 @@ pub fn layer_comm_volumes(
     b_m: f64,
     extra_params: f64,
 ) -> LayerCommVolumes {
+    layer_comm_volumes_with(layer, strategy, b_m, extra_params, &TrainConfig::default())
+}
+
+/// [`layer_comm_volumes`] under explicit training numerics: parameter and
+/// gradient collectives (SDP gathers/scatters, the DP gradient
+/// all-reduce) ride the wire in the training dtype, so fp16/bf16 halves
+/// their volume. Activation collectives (TP) keep the fp32 calibration of
+/// the layer profiles, matching the rest of the time model. The default
+/// `train` reproduces [`layer_comm_volumes`] bit-for-bit.
+pub fn layer_comm_volumes_with(
+    layer: &LayerProfile,
+    strategy: &Strategy,
+    b_m: f64,
+    extra_params: f64,
+    train: &TrainConfig,
+) -> LayerCommVolumes {
     let mut v = LayerCommVolumes::default();
     let params = layer.params + extra_params;
-    let param_bytes = params * 4.0; // fp32 weights/grads on the wire
+    let param_bytes = params * train.dtype.bytes(); // weights/grads on the wire
 
     // Activation tensor entering/leaving the layer on this device.
     let local_samples = b_m / strategy.batch_split() as f64;
@@ -161,6 +178,34 @@ mod tests {
         let v = layer_comm_volumes(&l, &s, 8.0, 0.0);
         let expect = allgather_bytes(2, l.params * 4.0 / 2.0);
         assert!((v.sdp_fwd - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn dtype_scales_param_collectives_only() {
+        use crate::model::{Dtype, TrainConfig};
+        let l = layer();
+        let bf16 = TrainConfig { dtype: Dtype::Bf16, ..Default::default() };
+        // DP grad all-reduce and SDP gathers halve; TP (activation)
+        // volumes keep the fp32 calibration.
+        let s = Strategy::single(Dim::Dp, 4, false);
+        let v32 = layer_comm_volumes(&l, &s, 8.0, 0.0);
+        let v16 = layer_comm_volumes_with(&l, &s, 8.0, 0.0, &bf16);
+        assert_eq!(v16.dp_grad, v32.dp_grad / 2.0);
+        let s = Strategy::single(Dim::Sdp, 4, false);
+        let v32 = layer_comm_volumes(&l, &s, 8.0, 0.0);
+        let v16 = layer_comm_volumes_with(&l, &s, 8.0, 0.0, &bf16);
+        assert_eq!(v16.sdp_fwd, v32.sdp_fwd / 2.0);
+        assert_eq!(v16.sdp_bwd, v32.sdp_bwd / 2.0);
+        let s = Strategy::single(Dim::Tp, 4, false);
+        let v32 = layer_comm_volumes(&l, &s, 8.0, 0.0);
+        let v16 = layer_comm_volumes_with(&l, &s, 8.0, 0.0, &bf16);
+        assert_eq!(v16, v32);
+        // The default config is the fp32 path bit-for-bit.
+        let s = Strategy::single(Dim::Sdp, 4, false);
+        assert_eq!(
+            layer_comm_volumes_with(&l, &s, 8.0, 0.0, &TrainConfig::default()),
+            layer_comm_volumes(&l, &s, 8.0, 0.0)
+        );
     }
 
     #[test]

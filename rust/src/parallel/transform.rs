@@ -39,11 +39,6 @@ pub fn transform_bytes(layer: &LayerProfile, prev: &Strategy, cur: &Strategy, b_
     layer.bnd_bytes * moved_samples
 }
 
-/// Time for the transformation given the link bandwidth (bytes/s).
-pub fn transform_time(layer: &LayerProfile, prev: &Strategy, cur: &Strategy, b_m: f64, bw: f64) -> f64 {
-    transform_bytes(layer, prev, cur, b_m) / bw
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,11 +84,15 @@ mod tests {
 
     #[test]
     fn time_scales_with_bandwidth() {
+        // Timing lives in cluster::LinkModel now; the ideal model over
+        // transform_bytes is the historical bytes/bw division.
+        use crate::cluster::LinkModel;
         let l = layer();
         let dp = Strategy::single(Dim::Dp, 2, false);
         let tp = Strategy::single(Dim::Tp, 2, false);
-        let t_fast = transform_time(&l, &dp, &tp, 8.0, 1e10);
-        let t_slow = transform_time(&l, &dp, &tp, 8.0, 1e9);
+        let bytes = transform_bytes(&l, &dp, &tp, 8.0);
+        let t_fast = LinkModel::ideal().time(bytes, 1e10);
+        let t_slow = LinkModel::ideal().time(bytes, 1e9);
         assert!((t_slow / t_fast - 10.0).abs() < 1e-6);
     }
 }

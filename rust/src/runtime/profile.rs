@@ -5,12 +5,18 @@
 //! measures per-forward wallclock, and derives the effective FLOP/s of
 //! this host — producing a calibrated [`GpuSpec`] so planner tests and the
 //! e2e example can agree with real execution on this machine.
+//!
+//! `galvatron calibrate` feeds these measurements (via
+//! [`to_layer_samples`]) plus the in-process collectives micro-benchmark
+//! into a persistent [`crate::cost::ProfileDb`], closing the loop from
+//! real execution back into planning.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cluster::GpuSpec;
+use crate::cost::LayerSample;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::rng::Rng;
 
@@ -67,6 +73,28 @@ pub fn profile_layers(rt: &Runtime, reps: usize) -> Result<Vec<ProfileMeasuremen
     Ok(out)
 }
 
+/// Convert PJRT measurements into [`crate::cost::ProfileDb`] layer
+/// samples (the compute half of `galvatron calibrate`).
+pub fn to_layer_samples(measurements: &[ProfileMeasurement]) -> Vec<LayerSample> {
+    measurements
+        .iter()
+        .map(|m| {
+            // Manifest flops_fwd is per *forward* (batch included); the DB
+            // schema is per sample, so both flops and seconds divide by
+            // batch — preserving effective_flops = flops / seconds.
+            let batch = m.batch.max(1) as f64;
+            LayerSample {
+                hidden: m.hidden,
+                seq: m.seq,
+                batch: m.batch,
+                flops_fwd: m.flops_fwd / batch,
+                seconds_per_sample: m.seconds_per_fwd / batch,
+                effective_flops: m.effective_flops,
+            }
+        })
+        .collect()
+}
+
 /// Calibrated "GPU" spec for this host: median effective FLOP/s.
 pub fn calibrated_host_spec(measurements: &[ProfileMeasurement], mem_bytes: f64) -> GpuSpec {
     let mut fl: Vec<f64> = measurements.iter().map(|m| m.effective_flops).collect();
@@ -96,5 +124,26 @@ mod tests {
         assert_eq!(spec.flops, 2e9);
         // Empty falls back to a sane default.
         assert!(calibrated_host_spec(&[], 1e9).flops > 0.0);
+    }
+
+    #[test]
+    fn measurements_convert_to_db_samples() {
+        let m = ProfileMeasurement {
+            hidden: 256,
+            seq: 128,
+            batch: 4,
+            flops_fwd: 1e9,
+            seconds_per_fwd: 0.2,
+            effective_flops: 5e9,
+        };
+        let s = to_layer_samples(&[m]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].hidden, 256);
+        assert_eq!(s[0].seconds_per_sample, 0.05);
+        // Per-sample flops: the manifest's per-forward count over batch.
+        assert_eq!(s[0].flops_fwd, 2.5e8);
+        assert_eq!(s[0].effective_flops, 5e9);
+        // The documented invariant holds: eff = flops / seconds.
+        assert_eq!(s[0].flops_fwd / s[0].seconds_per_sample, 5e9);
     }
 }

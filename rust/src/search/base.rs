@@ -11,8 +11,8 @@
 //! ([`evaluate_partition`]) and the `optimize` front door.
 
 use crate::cluster::ClusterSpec;
-use crate::cost::pipeline::{plan_cost_with, PlanCost, Schedule};
-use crate::cost::CostEstimator;
+use crate::cost::pipeline::{plan_cost_full, PlanCost, Schedule};
+use crate::cost::{CostEstimator, CostModel};
 use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::memory::LayerMemory;
 use crate::parallel::{ParallelPlan, Strategy};
@@ -57,6 +57,11 @@ pub struct SearchConfig {
     /// The default (fp32 + Adam, unsharded) keeps plans byte-identical to
     /// the pre-spec planner.
     pub train: TrainConfig,
+    /// Cost-model backend every estimator of this run binds to. The
+    /// default analytic backend keeps plans byte-identical to the
+    /// pre-backend planner; a calibrated backend prices the same search
+    /// from a loaded [`crate::cost::ProfileDb`].
+    pub cost_model: CostModel,
 }
 
 impl Default for SearchConfig {
@@ -73,6 +78,7 @@ impl Default for SearchConfig {
             microbatch_limit: None,
             threads: None,
             train: TrainConfig::default(),
+            cost_model: CostModel::Analytic,
         }
     }
 }
@@ -127,6 +133,7 @@ pub fn evaluate_partition(
         .map(|site| {
             CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site.clone())
                 .with_train(cfg.train)
+                .with_cost_model(cfg.cost_model.clone())
         })
         .collect();
     let b_m = batch as f64 / microbatches as f64;
@@ -166,7 +173,15 @@ pub fn evaluate_partition(
         microbatches,
         stage_slots: if cluster.is_homogeneous() { None } else { Some((0..pp).collect()) },
     };
-    let cost = plan_cost_with(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown, cfg.train);
+    let cost = plan_cost_full(
+        model,
+        cluster,
+        &plan,
+        cfg.schedule,
+        cfg.overlap_slowdown,
+        cfg.train,
+        &cfg.cost_model,
+    );
     if !cost.feasible {
         return None;
     }

@@ -38,12 +38,6 @@ pub fn memory_balanced_partition(
         return vec![n];
     }
     // Binary search the memory bottleneck.
-    let stage_weight = |s: usize, range: std::ops::Range<usize>| -> f64 {
-        let live = schedule.live_microbatches(s, stages, microbatches) as f64;
-        range
-            .map(|i| act_weights[i] * live + ms_weights[i])
-            .sum()
-    };
     let total_hi: f64 = (0..n)
         .map(|i| act_weights[i] * stages as f64 + ms_weights[i])
         .sum();
@@ -92,8 +86,6 @@ pub fn memory_balanced_partition(
     }
     let counts = best.unwrap_or_else(|| even_partition(n, stages));
     debug_assert_eq!(counts.iter().sum::<usize>(), n);
-    // Silence unused warning in release builds.
-    let _ = stage_weight;
     counts
 }
 

@@ -62,20 +62,26 @@ fn same_cost_profile(model: &ModelProfile, a: usize, b: usize) -> bool {
 }
 
 /// Outer key: everything except the strategy (which is matched by value in
-/// the inner list, avoiding a Strategy clone per lookup).
-type CellKey = (u32, u32, u64, u64); // (site class, layer class, b_m bits, extra_params bits)
+/// the inner list, avoiding a Strategy clone per lookup). The leading u64
+/// is the cost-model provenance fingerprint
+/// ([`crate::cost::CostModel::cache_fingerprint`], 0 = analytic): costs
+/// are pure functions of their key *and* the backend that priced them, so
+/// memoized entries from different backends must never be confused.
+type CellKey = (u64, u32, u32, u64, u64); // (provenance, site class, layer class, b_m bits, extra_params bits)
 
-/// Memoizing cost source bound to one (cluster, PP, overlap) placement
-/// context — the engine builds one per PP degree, holding one estimator
-/// per island site class of that degree.
+/// Memoizing cost source bound to one (cluster, PP, overlap, cost-model)
+/// placement context — the engine builds one per PP degree, holding one
+/// estimator per island site class of that degree.
 pub struct CostCache {
     /// Site-class-bound estimators, indexed by `StageSite::class`.
     ests: Vec<CostEstimator>,
     classes: Vec<u32>,
+    /// Cost-model fingerprint of the bound estimators (folded into keys).
+    provenance: u64,
     layer_costs: RwLock<HashMap<CellKey, Vec<(Strategy, LayerCost)>>>,
-    /// (site class, layer class, b_m bits) ->
+    /// (provenance, site class, layer class, b_m bits) ->
     /// [(prev batch-split, cur batch-split), R].
-    transforms: RwLock<HashMap<(u32, u32, u64), Vec<((usize, usize), f64)>>>,
+    transforms: RwLock<HashMap<(u64, u32, u32, u64), Vec<((usize, usize), f64)>>>,
     lookups: AtomicU64,
 }
 
@@ -89,9 +95,15 @@ impl CostCache {
     /// Cache over one estimator per island site class.
     pub fn with_sites(ests: Vec<CostEstimator>, classes: Vec<u32>) -> CostCache {
         assert!(!ests.is_empty());
+        let provenance = ests[0].cost_model.cache_fingerprint();
+        debug_assert!(
+            ests.iter().all(|e| e.cost_model.cache_fingerprint() == provenance),
+            "every site estimator of one cache must share a cost-model backend"
+        );
         CostCache {
             ests,
             classes,
+            provenance,
             layer_costs: RwLock::new(HashMap::new()),
             transforms: RwLock::new(HashMap::new()),
             lookups: AtomicU64::new(0),
@@ -139,7 +151,8 @@ impl CostCache {
         extra_params: f64,
     ) -> LayerCost {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let key: CellKey = (site, self.class_of(layer_idx), b_m.to_bits(), extra_params.to_bits());
+        let class = self.class_of(layer_idx);
+        let key: CellKey = (self.provenance, site, class, b_m.to_bits(), extra_params.to_bits());
         if let Some(row) = self.layer_costs.read().unwrap().get(&key) {
             if let Some((_, c)) = row.iter().find(|(s, _)| s == strategy) {
                 return *c;
@@ -170,7 +183,7 @@ impl CostCache {
         // fixed per site class (all catalog strategies span the full stage
         // group), so splits are a sufficient key.
         let splits = (prev.batch_split(), cur.batch_split());
-        let key = (site, self.class_of(layer_idx), b_m.to_bits());
+        let key = (self.provenance, site, self.class_of(layer_idx), b_m.to_bits());
         if let Some(row) = self.transforms.read().unwrap().get(&key) {
             if let Some((_, r)) = row.iter().find(|(sp, _)| *sp == splits) {
                 return *r;
@@ -298,6 +311,33 @@ mod tests {
                 assert_eq!(direct, cached, "{prev} -> {cur}");
             }
         }
+    }
+
+    #[test]
+    fn calibrated_cache_matches_its_backend_not_analytic() {
+        use crate::cost::{CostModel, ProfileDb};
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        // A DB claiming half the nominal FLOP rate everywhere.
+        let mut db = ProfileDb::synthetic(&cluster);
+        let half = db.ref_flops / 2.0;
+        for s in &mut db.layers {
+            s.effective_flops = half;
+        }
+        let backend = CostModel::calibrated(db);
+        let analytic = CostEstimator::new(&cluster, 1, 1.3);
+        let calibrated =
+            CostEstimator::new(&cluster, 1, 1.3).with_cost_model(backend.clone());
+        let cache_a = CostCache::new(analytic.clone(), layer_classes(&model));
+        let cache_c = CostCache::new(calibrated.clone(), layer_classes(&model));
+        let s = crate::parallel::Strategy::serial(false);
+        let a = cache_a.layer_cost_at(1, &model.layers[1], &s, 4.0, 0.0);
+        let c = cache_c.layer_cost_at(1, &model.layers[1], &s, 4.0, 0.0);
+        assert_eq!(a, analytic.layer_cost(&model.layers[1], &s, 4.0, 0.0));
+        assert_eq!(c, calibrated.layer_cost(&model.layers[1], &s, 4.0, 0.0));
+        assert!(c.fwd > a.fwd, "calibrated {} must exceed analytic {}", c.fwd, a.fwd);
+        // The provenance fingerprints keep the key spaces disjoint.
+        assert_ne!(backend.cache_fingerprint(), 0);
     }
 
     #[test]

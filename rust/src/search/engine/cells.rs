@@ -14,7 +14,7 @@
 use std::collections::VecDeque;
 
 use crate::cluster::ClusterSpec;
-use crate::cost::pipeline::plan_cost_with;
+use crate::cost::pipeline::plan_cost_full;
 use crate::cost::StageCosts;
 use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::ParallelPlan;
@@ -159,7 +159,15 @@ pub(crate) fn evaluate_partition_cached(
         microbatches,
         stage_slots: if cluster.is_homogeneous() { None } else { Some(placement.to_vec()) },
     };
-    let cost = plan_cost_with(model, cluster, &plan, cfg.schedule, cfg.overlap_slowdown, cfg.train);
+    let cost = plan_cost_full(
+        model,
+        cluster,
+        &plan,
+        cfg.schedule,
+        cfg.overlap_slowdown,
+        cfg.train,
+        &cfg.cost_model,
+    );
     if !cost.feasible {
         return None;
     }

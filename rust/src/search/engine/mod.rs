@@ -149,6 +149,7 @@ impl<'a> SearchEngine<'a> {
                             .clone();
                         CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site)
                             .with_train(cfg.train)
+                            .with_cost_model(cfg.cost_model.clone())
                     })
                     .collect();
                 let placements = placement_candidates(&sites);

@@ -20,6 +20,7 @@ pub mod schedule;
 
 use crate::cluster::ClusterSpec;
 use crate::cost::estimator::CostEstimator;
+use crate::cost::model::CostModel;
 use crate::cost::pipeline::Schedule;
 use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::memory::LayerMemory;
@@ -113,6 +114,7 @@ fn build_stage_models(
     plan: &ParallelPlan,
     overlap_slowdown: f64,
     train: TrainConfig,
+    cost_model: &CostModel,
     sites: &[crate::cluster::StageSite],
 ) -> Vec<StageModel> {
     // Task durations come from each stage's assigned island (FLOP rate and
@@ -127,7 +129,9 @@ fn build_stage_models(
                 .find(|s| s.class == c as u32)
                 .expect("contiguous site class ids")
                 .clone();
-            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site).with_train(train)
+            CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
+                .with_train(train)
+                .with_cost_model(cost_model.clone())
         })
         .collect();
     let b_m = plan.microbatch_size();
@@ -189,9 +193,10 @@ pub fn simulate(
 }
 
 /// [`simulate`] under explicit training numerics: the per-stage memory
-/// timeline (and the capacity check in [`SimReport::fits_capacity`])
-/// follows the dtype/optimizer/ZeRO configuration. The default `train`
-/// reproduces [`simulate`] bit-for-bit.
+/// timeline (and the capacity check in [`SimReport::fits_capacity`]) and
+/// the parameter-collective wire bytes follow the dtype/optimizer/ZeRO
+/// configuration. The default `train` reproduces [`simulate`]
+/// bit-for-bit.
 pub fn simulate_with(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -200,10 +205,28 @@ pub fn simulate_with(
     overlap_slowdown: f64,
     train: TrainConfig,
 ) -> SimReport {
+    simulate_costed(model, cluster, plan, schedule, overlap_slowdown, train, &CostModel::Analytic)
+}
+
+/// [`simulate_with`] under an explicit cost-model backend: task durations
+/// come from the backend's compute efficiencies and link model, so a
+/// calibrated plan can be cross-checked against the same cost theory that
+/// produced it. The analytic backend reproduces [`simulate_with`]
+/// bit-for-bit.
+pub fn simulate_costed(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    plan: &ParallelPlan,
+    schedule: Schedule,
+    overlap_slowdown: f64,
+    train: TrainConfig,
+    cost_model: &CostModel,
+) -> SimReport {
     let p = plan.pp;
     let m = plan.microbatches;
     let sites = cluster.stage_sites(p);
-    let stages = build_stage_models(model, cluster, plan, overlap_slowdown, train, &sites);
+    let stages =
+        build_stage_models(model, cluster, plan, overlap_slowdown, train, cost_model, &sites);
     let link_bw = cluster.pipeline_link_bw(p);
 
     // Fixed per-device task order (the real schedule).
@@ -508,8 +531,9 @@ mod tests {
         }
         // Capacity is the device's, not the workload's.
         assert_eq!(bf16.stage_capacity, fp32.stage_capacity);
-        // Time model is dtype-agnostic.
-        assert_eq!(bf16.iter_time, fp32.iter_time);
+        // Compute stays fp32-calibrated, but the DP gradient all-reduce
+        // rides the wire in bf16 — never slower, possibly faster.
+        assert!(bf16.iter_time <= fp32.iter_time);
         // The default config delegates bit-for-bit.
         let dflt = simulate_with(
             &model,
@@ -521,6 +545,43 @@ mod tests {
         );
         assert_eq!(dflt.stage_peak_mem, fp32.stage_peak_mem);
         assert_eq!(dflt.iter_time, fp32.iter_time);
+    }
+
+    #[test]
+    fn synthetic_backend_simulates_bit_identically() {
+        use crate::cost::{CostModel, ProfileDb};
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let pl = plan(4, 32, 8, Strategy::single(Dim::Dp, 2, false), 32);
+        let analytic = simulate(&model, &cluster, &pl, Schedule::OneFOneB, 1.3);
+        let synthetic = CostModel::calibrated(ProfileDb::synthetic(&cluster));
+        let cal = simulate_costed(
+            &model,
+            &cluster,
+            &pl,
+            Schedule::OneFOneB,
+            1.3,
+            TrainConfig::default(),
+            &synthetic,
+        );
+        assert_eq!(cal.iter_time.to_bits(), analytic.iter_time.to_bits());
+        assert_eq!(cal.stage_peak_mem, analytic.stage_peak_mem);
+        // A derated backend slows the simulated schedule down.
+        let mut db = ProfileDb::synthetic(&cluster);
+        let half = db.ref_flops / 2.0;
+        for s in &mut db.layers {
+            s.effective_flops = half;
+        }
+        let slow = simulate_costed(
+            &model,
+            &cluster,
+            &pl,
+            Schedule::OneFOneB,
+            1.3,
+            TrainConfig::default(),
+            &CostModel::calibrated(db),
+        );
+        assert!(slow.iter_time > analytic.iter_time);
     }
 
     #[test]

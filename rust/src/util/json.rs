@@ -169,6 +169,26 @@ impl Json {
     }
 }
 
+/// Strict-object validation shared by user-authored JSON schemas
+/// (`ModelSpec`, `ProfileDb`): reject non-objects and unknown keys — a
+/// misspelled optional key or a scalar where an object belongs must
+/// error, not silently describe something else. Returns the diagnostic as
+/// a plain `String`; each schema wraps it in its own error type.
+pub fn check_object_keys(v: &Json, allowed: &[&str], ctx: &str) -> Result<(), String> {
+    let Json::Obj(m) = v else {
+        return Err(format!(
+            "{ctx}: expected a JSON object with keys {{{}}}",
+            allowed.join(", ")
+        ));
+    };
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!("{ctx}: unknown key {k:?} (allowed: {})", allowed.join(", ")));
+        }
+    }
+    Ok(())
+}
+
 impl fmt::Display for Json {
     /// Compact serialization (stable key order via BTreeMap).
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -452,6 +472,16 @@ mod tests {
         assert!(pretty.contains("\"none\": []"), "{pretty}");
         assert!(pretty.contains("    {\n      \"x\": \"y\"\n    }"), "{pretty}");
         assert!(pretty.ends_with("}\n"), "{pretty}");
+    }
+
+    #[test]
+    fn strict_key_check() {
+        let v = Json::parse(r#"{"a":1,"b":2}"#).unwrap();
+        assert!(check_object_keys(&v, &["a", "b", "c"], "ctx").is_ok());
+        let err = check_object_keys(&v, &["a"], "ctx").unwrap_err();
+        assert!(err.contains("unknown key \"b\"") && err.contains("ctx"), "{err}");
+        let err = check_object_keys(&Json::num(3.0), &["a"], "ctx").unwrap_err();
+        assert!(err.contains("expected a JSON object"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! The cost-model backend seam (ISSUE 5 acceptance):
+//!
+//!   * a `Calibrated` backend fed a DB synthesized from the analytic model
+//!     (alpha = 0, exact zoo sample coverage) produces byte-identical plans
+//!     to `Analytic` — for two zoo models on both a homogeneous (titan8)
+//!     and a mixed-island (hetero4) cluster;
+//!   * malformed and insufficient-coverage DBs surface as their own typed
+//!     `PlanError` variants through the `--profile-db` path;
+//!   * `PlanReport` round-trips the recorded cost-model provenance, and
+//!     artifacts without the field (every pre-backend artifact) still load.
+
+use galvatron::api::{
+    resolve_cluster_name, CostModel, MethodSpec, PlanError, PlanReport, PlanRequest, Planner,
+    ProfileDb,
+};
+
+fn request(model: &str, cluster: &str) -> PlanRequest {
+    let mut req = PlanRequest::new(model, cluster)
+        .method(MethodSpec::Bmw { ckpt: true })
+        .max_batch(if cluster == "hetero4" { 32 } else { 64 });
+    if cluster != "hetero4" {
+        req = req.memory_gb(16.0);
+    }
+    req
+}
+
+#[test]
+fn synthetic_calibration_reproduces_analytic_plans_bitwise() {
+    for model in ["bert-huge-32", "t5-512/4-32"] {
+        for cluster in ["titan8", "hetero4"] {
+            let analytic = request(model, cluster).plan();
+            let db = ProfileDb::synthetic(&resolve_cluster_name(cluster).unwrap());
+            let calibrated =
+                request(model, cluster).cost_model(CostModel::calibrated(db.clone())).plan();
+            let (a, mut c) = match (analytic, calibrated) {
+                (Ok(a), Ok(c)) => (a, c),
+                (Err(PlanError::Infeasible { .. }), Err(PlanError::Infeasible { .. })) => continue,
+                (a, c) => panic!("{model}/{cluster}: feasibility diverged: {a:?} vs {c:?}"),
+            };
+            // The calibrated run records its provenance...
+            let prov = c.cost_model.clone().expect("calibrated plans record provenance");
+            assert_eq!(prov.backend, "calibrated");
+            assert_eq!(prov.db_hash, db.content_hash_hex());
+            // ...and modulo that record, the artifact is byte-identical:
+            // same plan, same costs, same stages, same search trace.
+            c.cost_model = None;
+            assert_eq!(
+                c.to_json_string(),
+                a.to_json_string(),
+                "{model}/{cluster}: synthetic calibration must not move the plan"
+            );
+        }
+    }
+}
+
+#[test]
+fn synthetic_calibration_simulates_bitwise_too() {
+    let report = request("bert-huge-32", "titan8").plan().expect("feasible");
+    let planner = Planner::new();
+    let analytic = planner.simulate_report(&report).unwrap();
+    let db = ProfileDb::synthetic(&resolve_cluster_name("titan8").unwrap());
+    let calibrated = planner
+        .simulate_report_costed(&report, &CostModel::calibrated(db))
+        .unwrap();
+    assert_eq!(calibrated.iter_time.to_bits(), analytic.iter_time.to_bits());
+    assert_eq!(calibrated.stage_peak_mem, analytic.stage_peak_mem);
+}
+
+#[test]
+fn derated_calibration_changes_estimates_but_stays_feasible_valid() {
+    // A DB claiming 50% compute efficiency and a lossy link must produce a
+    // valid plan with strictly worse estimated throughput than analytic.
+    let mut db = ProfileDb::synthetic(&resolve_cluster_name("titan8").unwrap());
+    let half = db.ref_flops / 2.0;
+    for s in &mut db.layers {
+        s.effective_flops = half;
+    }
+    db.alpha = 5e-5;
+    db.beta = db.ref_bw * 0.7;
+    let analytic = request("bert-huge-32", "titan8").plan().expect("feasible");
+    let derated = request("bert-huge-32", "titan8")
+        .cost_model(CostModel::calibrated(db))
+        .plan()
+        .expect("derated backend still finds a plan");
+    derated.plan.validate(32, 8).unwrap();
+    assert!(
+        derated.throughput < analytic.throughput,
+        "derated {} must trail analytic {}",
+        derated.throughput,
+        analytic.throughput
+    );
+}
+
+#[test]
+fn malformed_profile_db_paths_error_typed() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+
+    // Not JSON at all.
+    let garbage = dir.join(format!("galvatron-cal-garbage-{pid}.json"));
+    std::fs::write(&garbage, "not json {").unwrap();
+    let err = request("bert-huge-32", "titan8").profile_db(&garbage).plan().unwrap_err();
+    std::fs::remove_file(&garbage).ok();
+    assert!(matches!(err, PlanError::InvalidProfileDb { .. }), "{err:?}");
+
+    // Valid JSON, unknown key.
+    let wrong = dir.join(format!("galvatron-cal-wrong-{pid}.json"));
+    std::fs::write(&wrong, r#"{"version":1,"sauce":"typo"}"#).unwrap();
+    let err = request("bert-huge-32", "titan8").profile_db(&wrong).plan().unwrap_err();
+    std::fs::remove_file(&wrong).ok();
+    match &err {
+        PlanError::InvalidProfileDb { reason } => {
+            assert!(reason.contains("sauce"), "diagnostic names the bad key: {reason}")
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+
+    // Structurally valid but empty layer table: a coverage error.
+    let mut db = ProfileDb::synthetic(&resolve_cluster_name("titan8").unwrap());
+    db.layers.clear();
+    let thin = dir.join(format!("galvatron-cal-thin-{pid}.json"));
+    std::fs::write(&thin, db.to_pretty_string()).unwrap();
+    let err = request("bert-huge-32", "titan8").profile_db(&thin).plan().unwrap_err();
+    std::fs::remove_file(&thin).ok();
+    assert!(matches!(err, PlanError::ProfileDbCoverage { .. }), "{err:?}");
+
+    // A single collective point cannot pin the alpha-beta fit.
+    let mut db = ProfileDb::synthetic(&resolve_cluster_name("titan8").unwrap());
+    db.collectives.truncate(1);
+    let one = dir.join(format!("galvatron-cal-one-{pid}.json"));
+    std::fs::write(&one, db.to_pretty_string()).unwrap();
+    let err = request("bert-huge-32", "titan8").profile_db(&one).plan().unwrap_err();
+    std::fs::remove_file(&one).ok();
+    assert!(matches!(err, PlanError::ProfileDbCoverage { .. }), "{err:?}");
+}
+
+#[test]
+fn provenance_round_trips_and_legacy_artifacts_load() {
+    // Analytic plans do not serialize the field at all.
+    let analytic = request("bert-huge-32", "titan8").plan().expect("feasible");
+    let text = analytic.to_json_string();
+    assert!(!text.contains("cost_model"), "analytic artifacts stay provenance-free");
+    let back = PlanReport::from_json_str(&text).unwrap();
+    assert_eq!(back.cost_model, None);
+    assert_eq!(back, analytic);
+
+    // Calibrated plans round-trip the provenance record bit-for-bit.
+    let db = ProfileDb::synthetic(&resolve_cluster_name("titan8").unwrap());
+    let calibrated = request("bert-huge-32", "titan8")
+        .cost_model(CostModel::calibrated(db.clone()))
+        .plan()
+        .expect("feasible");
+    let text = calibrated.to_json_string();
+    assert!(text.contains("\"cost_model\""), "{text:.200}");
+    assert!(text.contains(&db.content_hash_hex()));
+    let back = PlanReport::from_json_str(&text).unwrap();
+    assert_eq!(back, calibrated);
+    assert_eq!(back.to_json_string(), text);
+    // The human rendering names the backend.
+    assert!(back.render().contains("calibrated"));
+
+    // Mistyped provenance is rejected, not silently dropped.
+    let bad = text.replace(
+        &format!("\"db_hash\":\"{}\"", db.content_hash_hex()),
+        "\"db_hash\":42",
+    );
+    assert!(matches!(
+        PlanReport::from_json_str(&bad),
+        Err(PlanError::Artifact { .. })
+    ));
+}
+
+#[test]
+fn profile_db_file_round_trips_through_the_cli_format() {
+    // save → load preserves content and hash (the canonical pretty form).
+    let db = ProfileDb::synthetic(&resolve_cluster_name("hetero4").unwrap());
+    let path =
+        std::env::temp_dir().join(format!("galvatron-cal-rt-{}.json", std::process::id()));
+    db.save(&path).unwrap();
+    let back = ProfileDb::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, db);
+    assert_eq!(back.content_hash_hex(), db.content_hash_hex());
+}
