@@ -9,6 +9,8 @@
 //!
 //! Run: `cargo run --release --example calibrated_cost_model`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{resolve_cluster_name, CostModel, MethodSpec, PlanRequest, Planner, ProfileDb};
 
 fn main() -> anyhow::Result<()> {

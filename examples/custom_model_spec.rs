@@ -6,6 +6,8 @@
 //!
 //! Run: `cargo run --release --example custom_model_spec`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{PlanRequest, Planner};
 use galvatron::model::{
     BlockSpec, Dtype, EmbeddingSpec, Family, ModelSpec, MoeSpec, TrainConfig,

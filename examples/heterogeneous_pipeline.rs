@@ -11,6 +11,8 @@
 //!
 //! Run: `cargo run --release --example heterogeneous_pipeline`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{MethodSpec, PlanRequest};
 use galvatron::cost::pipeline::Schedule;
 use galvatron::experiments::{cluster, model};

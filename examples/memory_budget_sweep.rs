@@ -9,6 +9,8 @@
 //!
 //! Run: `cargo run --release --example memory_budget_sweep`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{PlanError, PlanReport, PlanRequest};
 use galvatron::util::table::Table;
 

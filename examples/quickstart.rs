@@ -6,6 +6,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{MethodSpec, PlanError, PlanRequest, Planner};
 use galvatron::parallel::Dim;
 use galvatron::util::GIB;

@@ -4,6 +4,8 @@
 //!
 //! Run: `cargo bench --bench fig5_search_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Duration;
 
 use galvatron::cluster::cluster_by_name;

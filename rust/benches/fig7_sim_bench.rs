@@ -4,6 +4,8 @@
 //!
 //! Run: `cargo bench --bench fig7_sim_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Duration;
 
 use galvatron::cost::pipeline::{plan_cost, Schedule};

@@ -11,6 +11,8 @@
 //!
 //! Run: `cargo bench --bench planning_speed_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::Path;
 use std::time::Duration;
 
@@ -45,12 +47,22 @@ fn main() {
                 },
             );
             let plans_per_sec = 1.0 / r.mean.as_secs_f64();
-            // One traced run for the engine diagnostics.
+            // One traced run for the engine diagnostics. The produced
+            // artifact must also check clean: a planner that speeds up by
+            // emitting illegal plans is not faster, it is broken.
             let (hit_rate, cells) = match request().plan() {
-                Ok(report) => match report.search_trace {
-                    Some(t) => (t.cache_hit_rate(), t.cells_explored),
-                    None => (0.0, 0),
-                },
+                Ok(report) => {
+                    let check = galvatron::check::check_plan_text(&report.to_json_string());
+                    assert!(
+                        !check.has_errors(),
+                        "benched plan for {model} fails `galvatron check`:\n{}",
+                        check.render()
+                    );
+                    match report.search_trace {
+                        Some(t) => (t.cache_hit_rate(), t.cells_explored),
+                        None => (0.0, 0),
+                    }
+                }
                 Err(_) => (0.0, 0),
             };
             let row = Json::obj(vec![

@@ -3,6 +3,8 @@
 //!
 //! Run: `cargo bench --bench runtime_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::PathBuf;
 use std::time::Duration;
 

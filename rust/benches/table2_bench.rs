@@ -5,6 +5,8 @@
 //!
 //! Run: `cargo bench --bench table2_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Duration;
 
 use galvatron::api::MethodSpec;

@@ -6,6 +6,8 @@
 //!
 //! Run: `cargo bench --bench table3_scalability_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Duration;
 
 use galvatron::api::{MethodSpec, SearchOverrides};

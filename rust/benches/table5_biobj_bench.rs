@@ -4,6 +4,8 @@
 //!
 //! Run: `cargo bench --bench table5_biobj_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Duration;
 
 use galvatron::api::{MethodSpec, PartitionPolicy};

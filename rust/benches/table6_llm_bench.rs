@@ -4,6 +4,8 @@
 //!
 //! Run: `cargo bench --bench table6_llm_bench`
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::time::Duration;
 
 use galvatron::api::MethodSpec;

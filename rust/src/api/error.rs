@@ -36,6 +36,10 @@ pub enum PlanError {
     Infeasible { reason: String },
     /// A plan artifact could not be read, written, or parsed.
     Artifact { reason: String },
+    /// A plan artifact parsed but failed the static checker's
+    /// Error-severity gate (see [`crate::check::gate`]): the plan it
+    /// describes is illegal for the model/cluster it names.
+    InvalidArtifact { diagnostics: Vec<crate::check::Diagnostic> },
 }
 
 impl PlanError {
@@ -80,6 +84,13 @@ impl fmt::Display for PlanError {
             }
             PlanError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
             PlanError::Artifact { reason } => write!(f, "plan artifact error: {reason}"),
+            PlanError::InvalidArtifact { diagnostics } => {
+                write!(f, "invalid plan artifact: {} error(s)", diagnostics.len())?;
+                for d in diagnostics {
+                    write!(f, "; {d}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -155,6 +166,7 @@ where
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

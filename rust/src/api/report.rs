@@ -21,6 +21,30 @@ use super::request::{parse_schedule, schedule_key, ResolvedRequest};
 /// Artifact format version (bump on breaking schema changes).
 pub const PLAN_ARTIFACT_VERSION: usize = 1;
 
+/// Every top-level key a version-1 plan artifact may carry. Shared by the
+/// strict [`PlanReport::from_json`] schema and the checker's GAL0010
+/// unknown-key rule; extend it together with [`PlanReport::to_json`].
+pub const PLAN_ARTIFACT_KEYS: &[&str] = &[
+    "version",
+    "model",
+    "model_spec",
+    "cluster",
+    "memory_budget_gb",
+    "method",
+    "schedule",
+    "overlap_slowdown",
+    "train",
+    "cost_model",
+    "max_batch",
+    "plan",
+    "throughput",
+    "iter_time",
+    "alpha_t",
+    "alpha_m",
+    "stages",
+    "search_trace",
+];
+
 /// Per-stage diagnostics carried by a report.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageReport {
@@ -213,6 +237,10 @@ impl PlanReport {
 
     pub fn from_json(v: &Json) -> Result<PlanReport, PlanError> {
         let bad = |what: &str| PlanError::Artifact { reason: format!("missing or invalid {what}") };
+        // Same strictness ModelSpec already has: a misspelled key must
+        // error, not silently describe a different plan.
+        crate::util::json::check_object_keys(v, PLAN_ARTIFACT_KEYS, "plan artifact")
+            .map_err(|reason| PlanError::Artifact { reason })?;
         let version = v.get("version").and_then(Json::as_usize).ok_or_else(|| bad("version"))?;
         if version != PLAN_ARTIFACT_VERSION {
             return Err(PlanError::Artifact {

@@ -501,7 +501,12 @@ impl Planner {
                 r.overrides.max_batch
             ),
         })?;
-        Ok(PlanReport::from_outcome(r, &outcome, Some(trace)))
+        let report = PlanReport::from_outcome(r, &outcome, Some(trace));
+        // Self-check: the search's own invariants, re-proved on the
+        // artifact by the cheap Error-severity rules. A failure here is a
+        // planner bug surfacing as a typed diagnostic, not a panic.
+        crate::check::gate(&r.model, &r.cluster, &report)?;
+        Ok(report)
     }
 
     /// Re-run the discrete-event simulator for a saved report (the
@@ -561,12 +566,10 @@ impl Planner {
         report: &PlanReport,
         cost_model: &CostModel,
     ) -> Result<SimReport, PlanError> {
-        report
-            .plan
-            .validate(model.n_layers(), cluster.n_devices())
-            .map_err(|e| PlanError::Artifact {
-                reason: format!("plan does not fit {}: {e}", report.model),
-            })?;
+        // The static checker's Error-severity gate subsumes the old bare
+        // `plan.validate` call: shape legality plus device divisibility,
+        // strategy degrees, microbatching and stage-slot placement.
+        crate::check::gate(model, cluster, report)?;
         Ok(simulate_costed(
             model,
             cluster,
@@ -580,6 +583,7 @@ impl Planner {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

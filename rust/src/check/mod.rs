@@ -1,0 +1,409 @@
+//! Static analysis over planner artifacts: a compiler-style rule engine
+//! that verifies `PlanReport` and `ModelSpec` JSON before it flows into
+//! `simulate --plan` (or, per the ROADMAP, a planning-as-a-service
+//! daemon). The search enforces the paper's invariants implicitly while
+//! it runs; this pass re-proves them on the *artifact*, so a hand-edited,
+//! stale, or corrupted plan is rejected with a typed diagnostic instead
+//! of silently simulating something else.
+//!
+//! The pieces:
+//!   * [`Diagnostic`] — one finding: a stable `GAL0xxx` code, a
+//!     [`Severity`], a message, a JSON-path span into the artifact, and
+//!     an optional suggestion.
+//!   * [`Checker`] — one rule; [`registry`] lists every rule across the
+//!     three artifact classes (plan legality, artifact consistency,
+//!     spec/cluster lints).
+//!   * [`CheckReport`] — the findings of a run, renderable as a human
+//!     table ([`CheckReport::render`]) or machine JSON
+//!     ([`CheckReport::to_json`]).
+//!   * [`gate`] — the cheap Error-severity subset that
+//!     `PlanRequest::plan()` and `simulate --plan` run on every artifact,
+//!     surfacing failures as [`PlanError::InvalidArtifact`].
+//!
+//! The CLI surface is `galvatron check` (see the README's "Verifying
+//! plans and specs" section for the diagnostic-code table and the
+//! exit-code contract).
+
+pub mod plan_rules;
+pub mod spec_rules;
+
+use std::fmt;
+
+use crate::api::{PlanError, PlanReport};
+use crate::cluster::ClusterSpec;
+use crate::model::{ModelProfile, ModelSpec};
+use crate::util::json::Json;
+use crate::util::GIB;
+
+/// How bad a finding is. `Error` findings make `galvatron check` exit
+/// non-zero and [`gate`] reject the artifact; `Warn`/`Note` are advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    /// Stable machine name ("error" / "warning" / "note").
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warning",
+            Severity::Note => "note",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// One finding of a [`Checker`] rule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable rule code, e.g. `"GAL0004"`. Codes never change meaning;
+    /// retired codes are not reused.
+    pub code: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    /// JSON-path span into the checked artifact, e.g.
+    /// `"$.plan.microbatches"` (`"$"` for whole-artifact findings).
+    pub path: String,
+    /// Optional actionable hint.
+    pub suggestion: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(
+        code: &'static str,
+        severity: Severity,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity,
+            message: message.into(),
+            path: path.into(),
+            suggestion: None,
+        }
+    }
+
+    pub fn error(code: &'static str, path: impl Into<String>, message: impl Into<String>) -> Self {
+        Self::new(code, Severity::Error, path, message)
+    }
+
+    pub fn warn(code: &'static str, path: impl Into<String>, message: impl Into<String>) -> Self {
+        Self::new(code, Severity::Warn, path, message)
+    }
+
+    pub fn note(code: &'static str, path: impl Into<String>, message: impl Into<String>) -> Self {
+        Self::new(code, Severity::Note, path, message)
+    }
+
+    /// Attach an actionable suggestion.
+    pub fn suggest(mut self, s: impl Into<String>) -> Self {
+        self.suggestion = Some(s.into());
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]: {} (at {})", self.severity, self.code, self.message, self.path)
+    }
+}
+
+/// Everything a rule may look at. Fields are optional because different
+/// entry points hold different artifacts (a plan check has no raw spec;
+/// a spec check has no report); every rule skips silently when the data
+/// it needs is absent.
+#[derive(Default)]
+pub struct CheckContext<'a> {
+    /// Raw artifact text (OOM-marker rules look at exact bytes).
+    pub plan_text: Option<&'a str>,
+    /// Parsed artifact JSON (`None` when the text is not JSON at all).
+    pub raw_plan: Option<&'a Json>,
+    /// Typed report, when `PlanReport::from_json` accepted the artifact.
+    pub report: Option<&'a PlanReport>,
+    /// Error text of a failed `PlanReport` parse.
+    pub parse_error: Option<String>,
+    /// The resolved model the report refers to, or why it did not resolve.
+    pub model: Option<&'a ModelProfile>,
+    pub model_error: Option<String>,
+    /// The resolved cluster (memory budget applied), or why not.
+    pub cluster: Option<&'a ClusterSpec>,
+    pub cluster_error: Option<String>,
+    /// Raw model-spec JSON (the `check --model-file` form).
+    pub raw_spec: Option<&'a Json>,
+}
+
+/// One static-analysis rule.
+pub trait Checker {
+    /// Stable diagnostic code this rule emits (e.g. `"GAL0004"`).
+    fn code(&self) -> &'static str;
+    /// Short kebab-case rule name (e.g. `"microbatch-divisibility"`).
+    fn name(&self) -> &'static str;
+    /// One-line description for the rule catalog.
+    fn description(&self) -> &'static str;
+    /// Cheap rules additionally run inside the planner / `simulate --plan`
+    /// gate on every artifact (no cost-model re-derivation allowed here).
+    fn cheap(&self) -> bool {
+        false
+    }
+    fn check(&self, ctx: &CheckContext, out: &mut Vec<Diagnostic>);
+}
+
+/// The findings of one [`run`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CheckReport {
+    /// All findings, most severe first (then by code, then by path).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl CheckReport {
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors().next().is_some()
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    /// Fold another report's findings in (the CLI checks several artifacts
+    /// into one `--json` report).
+    pub fn merge(&mut self, other: CheckReport) {
+        self.diagnostics.extend(other.diagnostics);
+        sort_diagnostics(&mut self.diagnostics);
+    }
+
+    /// Machine-readable form (`galvatron check --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("errors", Json::num(self.count(Severity::Error) as f64)),
+            ("warnings", Json::num(self.count(Severity::Warn) as f64)),
+            ("notes", Json::num(self.count(Severity::Note) as f64)),
+            (
+                "diagnostics",
+                Json::arr(self.diagnostics.iter().map(|d| {
+                    let mut fields = vec![
+                        ("code", Json::str(d.code)),
+                        ("severity", Json::str(d.severity.as_str())),
+                        ("message", Json::str(&d.message)),
+                        ("path", Json::str(&d.path)),
+                    ];
+                    if let Some(s) = &d.suggestion {
+                        fields.push(("suggestion", Json::str(s)));
+                    }
+                    Json::obj(fields)
+                })),
+            ),
+        ])
+    }
+
+    /// Human rendering: one block per finding plus a severity tally.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{d}\n"));
+            if let Some(s) = &d.suggestion {
+                out.push_str(&format!("  help: {s}\n"));
+            }
+        }
+        out.push_str(&format!(
+            "{} error(s), {} warning(s), {} note(s)\n",
+            self.count(Severity::Error),
+            self.count(Severity::Warn),
+            self.count(Severity::Note)
+        ));
+        out
+    }
+}
+
+fn sort_diagnostics(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        b.severity
+            .cmp(&a.severity)
+            .then_with(|| a.code.cmp(b.code))
+            .then_with(|| a.path.cmp(&b.path))
+    });
+}
+
+/// Every rule, across all three artifact classes.
+pub fn registry() -> Vec<Box<dyn Checker>> {
+    let mut rules = plan_rules::rules();
+    rules.extend(spec_rules::rules());
+    rules
+}
+
+/// Run the full registry over a context.
+pub fn run(ctx: &CheckContext) -> CheckReport {
+    let mut diagnostics = Vec::new();
+    for rule in registry() {
+        rule.check(ctx, &mut diagnostics);
+    }
+    sort_diagnostics(&mut diagnostics);
+    CheckReport { diagnostics }
+}
+
+/// Resolve the model a report refers to, exactly as `simulate --plan`
+/// would: the embedded spec when present, else the zoo by name.
+pub fn resolve_report_model(report: &PlanReport) -> Result<ModelProfile, PlanError> {
+    match &report.model_spec {
+        Some(spec) => Ok(spec.compile()?),
+        None => crate::api::resolve_model_name(&report.model),
+    }
+}
+
+/// Resolve the cluster a report refers to, with the recorded memory
+/// budget applied on homogeneous clusters (heterogeneous clusters fix
+/// per-island budgets via their GPU classes). A non-positive or
+/// non-finite recorded budget is left unapplied — GAL0014 flags it.
+pub fn resolve_report_cluster(report: &PlanReport) -> Result<ClusterSpec, PlanError> {
+    let mut cluster = crate::api::resolve_cluster_name(&report.cluster)?;
+    let gb = report.memory_budget_gb;
+    if cluster.is_homogeneous() && gb.is_finite() && gb > 0.0 {
+        cluster = cluster.with_memory_budget(gb * GIB);
+    }
+    Ok(cluster)
+}
+
+/// Check one plan-artifact text end to end: parse, resolve the model and
+/// cluster it names, and run the full registry. Resolution failures are
+/// findings (GAL0012/GAL0013/GAL0014), not panics or early returns.
+pub fn check_plan_text(text: &str) -> CheckReport {
+    let raw = Json::parse(text).ok();
+    let mut parse_error = None;
+    let report = match PlanReport::from_json_str(text) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            parse_error = Some(e.to_string());
+            None
+        }
+    };
+    let mut model = None;
+    let mut model_error = None;
+    let mut cluster = None;
+    let mut cluster_error = None;
+    if let Some(r) = &report {
+        match resolve_report_model(r) {
+            Ok(m) => model = Some(m),
+            Err(e) => model_error = Some(e.to_string()),
+        }
+        match resolve_report_cluster(r) {
+            Ok(c) => cluster = Some(c),
+            Err(e) => cluster_error = Some(e.to_string()),
+        }
+    }
+    let ctx = CheckContext {
+        plan_text: Some(text),
+        raw_plan: raw.as_ref(),
+        report: report.as_ref(),
+        parse_error,
+        model: model.as_ref(),
+        model_error,
+        cluster: cluster.as_ref(),
+        cluster_error,
+        raw_spec: None,
+    };
+    run(&ctx)
+}
+
+/// Check one model-spec JSON document (the `check --model-file` form).
+/// With a cluster, the never-fits lints (GAL0030/GAL0031) run too.
+pub fn check_model_json(v: &Json, cluster: Option<&ClusterSpec>) -> CheckReport {
+    let model = ModelSpec::from_json(v).ok().and_then(|s| s.compile().ok());
+    let ctx = CheckContext {
+        raw_spec: Some(v),
+        model: model.as_ref(),
+        cluster,
+        ..Default::default()
+    };
+    run(&ctx)
+}
+
+/// The cheap Error-severity gate `PlanRequest::plan()` and
+/// `simulate --plan` run on every artifact before acting on it: plan
+/// legality against the resolved model and cluster, no re-derivation.
+pub fn gate(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    report: &PlanReport,
+) -> Result<(), PlanError> {
+    let ctx = CheckContext {
+        report: Some(report),
+        model: Some(model),
+        cluster: Some(cluster),
+        ..Default::default()
+    };
+    let mut diagnostics = Vec::new();
+    for rule in registry() {
+        if rule.cheap() {
+            rule.check(&ctx, &mut diagnostics);
+        }
+    }
+    diagnostics.retain(|d| d.severity == Severity::Error);
+    if diagnostics.is_empty() {
+        Ok(())
+    } else {
+        sort_diagnostics(&mut diagnostics);
+        Err(PlanError::InvalidArtifact { diagnostics })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_names() {
+        assert!(Severity::Error > Severity::Warn);
+        assert!(Severity::Warn > Severity::Note);
+        assert_eq!(Severity::Warn.as_str(), "warning");
+    }
+
+    #[test]
+    fn registry_codes_are_unique_per_rule_name() {
+        let rules = registry();
+        assert!(rules.len() >= 12, "expected a full rule catalog, got {}", rules.len());
+        let mut names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), rules.len(), "duplicate rule names");
+        for r in &rules {
+            assert!(r.code().starts_with("GAL0"), "{}", r.code());
+            assert!(!r.description().is_empty());
+        }
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let mut rep = CheckReport::default();
+        rep.merge(CheckReport {
+            diagnostics: vec![
+                Diagnostic::note("GAL0011", "$", "an OOM marker"),
+                Diagnostic::error("GAL0004", "$.plan.microbatches", "7 does not divide 8")
+                    .suggest("use a divisor of the batch"),
+            ],
+        });
+        // Errors sort first.
+        assert_eq!(rep.diagnostics[0].code, "GAL0004");
+        assert!(rep.has_errors());
+        assert_eq!(rep.count(Severity::Error), 1);
+        let text = rep.render();
+        assert!(text.contains("error[GAL0004]"), "{text}");
+        assert!(text.contains("help: use a divisor"), "{text}");
+        assert!(text.contains("1 error(s), 0 warning(s), 1 note(s)"), "{text}");
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"code\":\"GAL0004\""), "{json}");
+        assert!(json.contains("\"suggestion\""), "{json}");
+    }
+}

@@ -1,0 +1,767 @@
+//! Plan-artifact rules: plan legality over the device cube (paper §III),
+//! the Eq. 7/8 memory-sandwich conditions (§IV-B), per-stage capacity
+//! re-derivation, and `PlanReport` cross-field coherence.
+
+use crate::api::report::PLAN_ARTIFACT_KEYS;
+use crate::api::suggest;
+use crate::cost::pipeline::plan_cost_full;
+use crate::cost::CostModel;
+use crate::parallel::memory::STATE_BYTES_PER_PARAM;
+use crate::search::bmw::memory_balanced_partition;
+use crate::search::partition::balanced_partition;
+use crate::util::json::Json;
+use crate::util::{pow2_divisors, GIB};
+
+use super::{CheckContext, Checker, Diagnostic};
+
+/// A rule as data: stable code, catalog strings, gate eligibility, and
+/// the check function itself.
+struct Rule {
+    code: &'static str,
+    name: &'static str,
+    description: &'static str,
+    cheap: bool,
+    check: fn(&CheckContext, &mut Vec<Diagnostic>),
+}
+
+impl Checker for Rule {
+    fn code(&self) -> &'static str {
+        self.code
+    }
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn description(&self) -> &'static str {
+        self.description
+    }
+    fn cheap(&self) -> bool {
+        self.cheap
+    }
+    fn check(&self, ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+        (self.check)(ctx, out);
+    }
+}
+
+pub fn rules() -> Vec<Box<dyn Checker>> {
+    vec![
+        Box::new(Rule {
+            code: "GAL0001",
+            name: "partition-shape",
+            description: "partition arity matches pp, covers every model layer, no empty stage",
+            cheap: true,
+            check: partition_shape,
+        }),
+        Box::new(Rule {
+            code: "GAL0002",
+            name: "device-divisibility",
+            description: "pipeline degree divides the cluster's device count",
+            cheap: true,
+            check: device_divisibility,
+        }),
+        Box::new(Rule {
+            code: "GAL0003",
+            name: "strategy-degree",
+            description: "every layer strategy covers exactly its stage's device group",
+            cheap: true,
+            check: strategy_degree,
+        }),
+        Box::new(Rule {
+            code: "GAL0004",
+            name: "microbatch-divisibility",
+            description: "microbatch count divides the global batch",
+            cheap: true,
+            check: microbatch_divisibility,
+        }),
+        Box::new(Rule {
+            code: "GAL0005",
+            name: "stage-slots",
+            description: "stage_slots is a permutation of the cluster's pipeline slots",
+            cheap: true,
+            check: stage_slots,
+        }),
+        Box::new(Rule {
+            code: "GAL0006",
+            name: "stage-memory",
+            description: "re-derived per-stage peak memory fits each slot's island budget",
+            cheap: false,
+            check: stage_memory,
+        }),
+        Box::new(Rule {
+            code: "GAL0007",
+            name: "memory-sandwich",
+            description: "partition honors the Eq. 7/8 balance sandwich between p_m and p_t",
+            cheap: false,
+            check: memory_sandwich,
+        }),
+        Box::new(Rule {
+            code: "GAL0010",
+            name: "unknown-artifact-key",
+            description: "plan artifact carries only known top-level keys",
+            cheap: false,
+            check: unknown_artifact_key,
+        }),
+        Box::new(Rule {
+            code: "GAL0011",
+            name: "oom-marker",
+            description: "OOM marker files are well-formed (exactly \"OOM\\n\")",
+            cheap: false,
+            check: oom_marker,
+        }),
+        Box::new(Rule {
+            code: "GAL0012",
+            name: "artifact-parse",
+            description: "artifact parses as a PlanReport",
+            cheap: false,
+            check: artifact_parse,
+        }),
+        Box::new(Rule {
+            code: "GAL0013",
+            name: "model-resolution",
+            description: "the artifact's model resolves and matches its embedded spec",
+            cheap: false,
+            check: model_resolution,
+        }),
+        Box::new(Rule {
+            code: "GAL0014",
+            name: "cluster-budget",
+            description: "the artifact's cluster resolves and its memory budget is coherent",
+            cheap: false,
+            check: cluster_budget,
+        }),
+        Box::new(Rule {
+            code: "GAL0015",
+            name: "cost-provenance",
+            description: "recorded cost-model provenance names a known backend and a hex hash",
+            cheap: false,
+            check: cost_provenance,
+        }),
+        Box::new(Rule {
+            code: "GAL0016",
+            name: "cost-drift",
+            description: "recorded cost figures match an analytic re-derivation",
+            cheap: false,
+            check: cost_drift,
+        }),
+        Box::new(Rule {
+            code: "GAL0017",
+            name: "trace-consistency",
+            description: "search_trace cell counts and best cell are internally consistent",
+            cheap: false,
+            check: trace_consistency,
+        }),
+        Box::new(Rule {
+            code: "GAL0018",
+            name: "batch-exceeds-max",
+            description: "the plan's global batch stays within the request's max_batch",
+            cheap: true,
+            check: batch_exceeds_max,
+        }),
+        Box::new(Rule {
+            code: "GAL0019",
+            name: "rederivation-skipped",
+            description: "notes when calibrated provenance disables analytic re-derivation",
+            cheap: false,
+            check: rederivation_skipped,
+        }),
+    ]
+}
+
+// ---- plan legality ------------------------------------------------------
+
+fn partition_shape(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let p = &r.plan;
+    if p.partition.len() != p.pp {
+        out.push(Diagnostic::error(
+            "GAL0001",
+            "$.plan.partition",
+            format!("partition has {} entries but pp = {}", p.partition.len(), p.pp),
+        ));
+    }
+    for (i, &c) in p.partition.iter().enumerate() {
+        if c == 0 {
+            out.push(Diagnostic::error(
+                "GAL0001",
+                format!("$.plan.partition[{i}]"),
+                format!("stage {i} is empty (zero layers)"),
+            ));
+        }
+    }
+    if let Some(m) = ctx.model {
+        let covered: usize = p.partition.iter().sum();
+        if covered != m.n_layers() {
+            out.push(Diagnostic::error(
+                "GAL0001",
+                "$.plan.partition",
+                format!(
+                    "partition covers {covered} layers but {} has {}",
+                    r.model,
+                    m.n_layers()
+                ),
+            ));
+        }
+        if p.strategies.len() != m.n_layers() {
+            out.push(Diagnostic::error(
+                "GAL0001",
+                "$.plan.strategies",
+                format!(
+                    "plan records {} layer strategies for a {}-layer model",
+                    p.strategies.len(),
+                    m.n_layers()
+                ),
+            ));
+        }
+    }
+}
+
+fn device_divisibility(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(c) = ctx.cluster else { return };
+    let n = c.n_devices();
+    let pp = r.plan.pp;
+    if pp == 0 || n % pp != 0 {
+        let degrees = pow2_divisors(n)
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        out.push(
+            Diagnostic::error(
+                "GAL0002",
+                "$.plan.pp",
+                format!("pipeline degree {pp} does not divide the {n} devices of {}", r.cluster),
+            )
+            .suggest(format!("searchable degrees on {}: {degrees}", r.cluster)),
+        );
+    }
+}
+
+fn strategy_degree(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(c) = ctx.cluster else { return };
+    let p = &r.plan;
+    let n = c.n_devices();
+    if p.pp == 0 || n % p.pp != 0 {
+        return; // GAL0002 owns the divisibility failure.
+    }
+    let group = n / p.pp;
+    let offenders: Vec<usize> =
+        (0..p.strategies.len()).filter(|&i| p.strategies[i].degree() != group).collect();
+    if let Some(&first) = offenders.first() {
+        let mut msg = format!(
+            "layer {first} strategy {} covers {} devices but the stage group size is {group}",
+            p.strategies[first].label(),
+            p.strategies[first].degree()
+        );
+        if offenders.len() > 1 {
+            msg.push_str(&format!(" ({} more layers affected)", offenders.len() - 1));
+        }
+        out.push(Diagnostic::error("GAL0003", format!("$.plan.strategies[{first}]"), msg));
+    }
+}
+
+fn microbatch_divisibility(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let p = &r.plan;
+    if p.microbatches == 0 || p.batch == 0 {
+        out.push(Diagnostic::error(
+            "GAL0004",
+            "$.plan.microbatches",
+            format!("batch {} / microbatches {} must both be >= 1", p.batch, p.microbatches),
+        ));
+    } else if p.batch % p.microbatches != 0 {
+        out.push(
+            Diagnostic::error(
+                "GAL0004",
+                "$.plan.microbatches",
+                format!(
+                    "global batch {} is not divisible into {} microbatches",
+                    p.batch, p.microbatches
+                ),
+            )
+            .suggest(format!("use a microbatch count dividing {}", p.batch)),
+        );
+    }
+}
+
+fn stage_slots(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let p = &r.plan;
+    let Some(slots) = &p.stage_slots else { return };
+    if slots.len() != p.pp {
+        out.push(Diagnostic::error(
+            "GAL0005",
+            "$.plan.stage_slots",
+            format!("stage_slots has {} entries but pp = {}", slots.len(), p.pp),
+        ));
+    } else {
+        let mut seen = vec![false; p.pp];
+        for (s, &slot) in slots.iter().enumerate() {
+            if slot >= p.pp {
+                out.push(Diagnostic::error(
+                    "GAL0005",
+                    format!("$.plan.stage_slots[{s}]"),
+                    format!("stage {s} assigned to slot {slot}, outside 0..{}", p.pp),
+                ));
+            } else if seen[slot] {
+                out.push(Diagnostic::error(
+                    "GAL0005",
+                    format!("$.plan.stage_slots[{s}]"),
+                    format!("slot {slot} assigned to more than one stage"),
+                ));
+            } else {
+                seen[slot] = true;
+            }
+        }
+    }
+    if let Some(c) = ctx.cluster {
+        if c.is_homogeneous() {
+            out.push(Diagnostic::note(
+                "GAL0005",
+                "$.plan.stage_slots",
+                format!(
+                    "stage_slots recorded on homogeneous cluster {}: placement is the \
+                     identity there and the planner never records it",
+                    r.cluster
+                ),
+            ));
+        }
+    }
+}
+
+fn stage_memory(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(m) = ctx.model else { return };
+    let Some(c) = ctx.cluster else { return };
+    if r.cost_model.is_some() {
+        return; // GAL0019 notes the skip: analytic re-derivation would lie.
+    }
+    if r.plan.validate(m.n_layers(), c.n_devices()).is_err() {
+        return; // structural rules own that failure; re-derivation would panic
+    }
+    let cost = plan_cost_full(
+        m,
+        c,
+        &r.plan,
+        r.schedule,
+        r.overlap_slowdown,
+        r.train,
+        &CostModel::Analytic,
+    );
+    let sites = c.stage_sites(r.plan.pp);
+    for (s, st) in cost.stages.iter().enumerate() {
+        let slot = r.plan.slot_of(s);
+        let cap = sites[slot].gpu.mem_bytes;
+        if st.peak_mem > cap {
+            out.push(
+                Diagnostic::error(
+                    "GAL0006",
+                    format!("$.stages[{s}]"),
+                    format!(
+                        "stage {s} needs {:.2} GiB but slot {slot} ({}) offers {:.2} GiB",
+                        st.peak_mem / GIB,
+                        sites[slot].gpu.name,
+                        cap / GIB
+                    ),
+                )
+                .suggest(
+                    "re-plan with a larger memory budget, more microbatches, or checkpointing",
+                ),
+            );
+        }
+    }
+}
+
+fn memory_sandwich(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(m) = ctx.model else { return };
+    let p = &r.plan;
+    let n = m.n_layers();
+    // Structural preconditions are GAL0001/GAL0004's findings; the
+    // sandwich is only meaningful on a well-formed multi-stage partition.
+    if p.pp < 2
+        || p.pp > n
+        || p.partition.len() != p.pp
+        || p.partition.iter().sum::<usize>() != n
+        || p.partition.iter().any(|&c| c == 0)
+        || p.microbatches == 0
+        || p.batch == 0
+    {
+        return;
+    }
+    let flops: Vec<f64> = m.layers.iter().map(|l| l.flops_fwd).collect();
+    let act: Vec<f64> = m.layers.iter().map(|l| l.act_bytes).collect();
+    let ms: Vec<f64> = m.layers.iter().map(|l| l.params * STATE_BYTES_PER_PARAM).collect();
+    let p_t = balanced_partition(&flops, p.pp);
+    let p_m = memory_balanced_partition(&act, &ms, p.pp, p.microbatches, r.schedule);
+    let b_m = p.microbatch_size();
+    let time_alpha = |counts: &[usize]| alpha(&stage_sums(&flops, counts));
+    let mem_alpha = |counts: &[usize]| {
+        let act_s = stage_sums(&act, counts);
+        let ms_s = stage_sums(&ms, counts);
+        let per: Vec<f64> = (0..counts.len())
+            .map(|s| {
+                let live = r.schedule.live_microbatches(s, counts.len(), p.microbatches) as f64;
+                ms_s[s] + live * b_m * act_s[s]
+            })
+            .collect();
+        alpha(&per)
+    };
+    // Eq. 7/8: the accepted partition p' sits between p_m and p_t on both
+    // balance degrees, so alpha_t(p') >= alpha_t(p_m) and alpha_m(p') >=
+    // alpha_m(p_t). Proxy weights + slack keep legitimate plans clear.
+    const SLACK: f64 = 0.05;
+    let a_t = time_alpha(&p.partition);
+    let a_t_floor = time_alpha(&p_m);
+    if a_t + SLACK < a_t_floor {
+        out.push(
+            Diagnostic::warn(
+                "GAL0007",
+                "$.plan.partition",
+                format!(
+                    "Eq. 7 sandwich violated: time balance alpha_t≈{a_t:.3} falls below even \
+                     the memory-balanced partition's {a_t_floor:.3}"
+                ),
+            )
+            .suggest("BMW accepts only partitions at least as time-balanced as p_m"),
+        );
+    }
+    let a_m = mem_alpha(&p.partition);
+    let a_m_floor = mem_alpha(&p_t);
+    if a_m + SLACK < a_m_floor {
+        out.push(
+            Diagnostic::warn(
+                "GAL0007",
+                "$.plan.partition",
+                format!(
+                    "Eq. 8 sandwich violated: memory balance alpha_m≈{a_m:.3} falls below even \
+                     the time-balanced partition's {a_m_floor:.3}"
+                ),
+            )
+            .suggest("BMW accepts only partitions at least as memory-balanced as p_t"),
+        );
+    }
+}
+
+fn stage_sums(weights: &[f64], counts: &[usize]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(counts.len());
+    let mut i = 0usize;
+    for &c in counts {
+        out.push(weights[i..i + c].iter().sum());
+        i += c;
+    }
+    out
+}
+
+fn alpha(per_stage: &[f64]) -> f64 {
+    let max = per_stage.iter().cloned().fold(0.0, f64::max);
+    let sum: f64 = per_stage.iter().sum();
+    if sum > 0.0 {
+        1.0 - max / sum
+    } else {
+        0.0
+    }
+}
+
+// ---- artifact consistency -----------------------------------------------
+
+fn raw_unknown_keys(raw: &Json) -> Vec<&str> {
+    match raw {
+        Json::Obj(m) => m
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !PLAN_ARTIFACT_KEYS.contains(k))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn unknown_artifact_key(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(raw) = ctx.raw_plan else { return };
+    for k in raw_unknown_keys(raw) {
+        let mut d = Diagnostic::error(
+            "GAL0010",
+            "$",
+            format!("unknown top-level key {k:?} in plan artifact"),
+        );
+        if let Some(s) = suggest(k, PLAN_ARTIFACT_KEYS.iter().copied()) {
+            d = d.suggest(format!("did you mean {s:?}?"));
+        }
+        out.push(d);
+    }
+}
+
+fn oom_marker(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(text) = ctx.plan_text else { return };
+    if text == "OOM\n" {
+        out.push(
+            Diagnostic::note(
+                "GAL0011",
+                "$",
+                "artifact is an OOM marker: the planning run found no feasible plan",
+            )
+            .suggest("re-plan with a larger memory budget or different knobs"),
+        );
+    } else if text.trim() == "OOM" {
+        out.push(Diagnostic::warn(
+            "GAL0011",
+            "$",
+            "malformed OOM marker: expected exactly \"OOM\\n\"",
+        ));
+    }
+}
+
+fn artifact_parse(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(e) = &ctx.parse_error else { return };
+    if ctx.plan_text.is_some_and(|t| t.trim() == "OOM") {
+        return; // GAL0011 owns marker files.
+    }
+    if ctx.raw_plan.is_some_and(|raw| !raw_unknown_keys(raw).is_empty()) {
+        return; // GAL0010 carries the precise unknown-key finding.
+    }
+    out.push(Diagnostic::error(
+        "GAL0012",
+        "$",
+        format!("artifact does not parse as a PlanReport: {e}"),
+    ));
+}
+
+fn model_resolution(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    if let Some(e) = &ctx.model_error {
+        out.push(Diagnostic::error(
+            "GAL0013",
+            "$.model",
+            format!("the artifact's model does not resolve: {e}"),
+        ));
+    }
+    let Some(r) = ctx.report else { return };
+    if let Some(spec) = &r.model_spec {
+        if spec.name != r.model {
+            out.push(Diagnostic::error(
+                "GAL0013",
+                "$.model",
+                format!(
+                    "embedded model_spec is named {:?} but the artifact says {:?}",
+                    spec.name, r.model
+                ),
+            ));
+        }
+    }
+}
+
+fn cluster_budget(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    if let Some(e) = &ctx.cluster_error {
+        out.push(Diagnostic::error(
+            "GAL0014",
+            "$.cluster",
+            format!("the artifact's cluster does not resolve: {e}"),
+        ));
+    }
+    let Some(r) = ctx.report else { return };
+    let gb = r.memory_budget_gb;
+    if !(gb.is_finite() && gb > 0.0) {
+        out.push(Diagnostic::error(
+            "GAL0014",
+            "$.memory_budget_gb",
+            format!("memory budget must be a positive finite number of GB, got {gb}"),
+        ));
+    } else if let Some(c) = ctx.cluster {
+        if !c.is_homogeneous() {
+            let floor = c.gpu().mem_bytes / GIB;
+            if (gb - floor).abs() > 1e-9 {
+                out.push(Diagnostic::error(
+                    "GAL0014",
+                    "$.memory_budget_gb",
+                    format!(
+                        "heterogeneous cluster {}: memory_budget_gb must record the floor \
+                         island's {floor} GB, got {gb}",
+                        r.cluster
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn cost_provenance(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(prov) = &r.cost_model else { return };
+    if prov.backend != "calibrated" {
+        out.push(Diagnostic::error(
+            "GAL0015",
+            "$.cost_model",
+            format!(
+                "unknown cost-model backend {:?} (known non-default backends: \"calibrated\")",
+                prov.backend
+            ),
+        ));
+    }
+    if prov.db_hash.len() != 16 || !prov.db_hash.chars().all(|c| c.is_ascii_hexdigit()) {
+        out.push(Diagnostic::error(
+            "GAL0015",
+            "$.cost_model",
+            format!(
+                "db_hash {:?} is not a 16-digit hex content hash of a profile DB",
+                prov.db_hash
+            ),
+        ));
+    }
+}
+
+fn drifted(recorded: f64, recomputed: f64) -> bool {
+    let scale = recorded.abs().max(recomputed.abs()).max(1e-12);
+    (recorded - recomputed).abs() / scale > 1e-9
+}
+
+fn cost_drift(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(m) = ctx.model else { return };
+    let Some(c) = ctx.cluster else { return };
+    if r.cost_model.is_some() {
+        return; // GAL0019 notes the skip.
+    }
+    if r.plan.validate(m.n_layers(), c.n_devices()).is_err() {
+        return;
+    }
+    let cost = plan_cost_full(
+        m,
+        c,
+        &r.plan,
+        r.schedule,
+        r.overlap_slowdown,
+        r.train,
+        &CostModel::Analytic,
+    );
+    // Serialized f64s round-trip exactly, so untampered artifacts match
+    // the re-derivation bit-for-bit; the tolerance only absorbs noise.
+    for (field, recorded, recomputed) in [
+        ("throughput", r.throughput, cost.throughput),
+        ("iter_time", r.iter_time, cost.iter_time),
+        ("alpha_t", r.alpha_t, cost.alpha_t),
+        ("alpha_m", r.alpha_m, cost.alpha_m),
+    ] {
+        if drifted(recorded, recomputed) {
+            out.push(Diagnostic::warn(
+                "GAL0016",
+                format!("$.{field}"),
+                format!(
+                    "recorded {field} {recorded} disagrees with the analytic \
+                     re-derivation {recomputed}"
+                ),
+            ));
+        }
+    }
+    if r.stages.len() != cost.stages.len() {
+        out.push(Diagnostic::warn(
+            "GAL0016",
+            "$.stages",
+            format!(
+                "artifact records {} stage entries but the plan has {} stages",
+                r.stages.len(),
+                cost.stages.len()
+            ),
+        ));
+        return;
+    }
+    for (s, (rec, com)) in r.stages.iter().zip(&cost.stages).enumerate() {
+        if drifted(rec.peak_mem_bytes, com.peak_mem)
+            || drifted(rec.time_nosync, com.time_nosync)
+            || drifted(rec.time_sync, com.time_sync)
+        {
+            out.push(Diagnostic::warn(
+                "GAL0016",
+                format!("$.stages[{s}]"),
+                format!(
+                    "stage {s} diagnostics drifted from the re-derivation \
+                     (peak {:.4}/{:.4} GiB, mb time {:.6}/{:.6}s)",
+                    rec.peak_mem_bytes / GIB,
+                    com.peak_mem / GIB,
+                    rec.time_nosync,
+                    com.time_nosync
+                ),
+            ));
+            break;
+        }
+    }
+}
+
+fn trace_consistency(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(t) = &r.search_trace else { return };
+    if t.cells.len() != t.cells_explored + t.cells_discarded {
+        out.push(Diagnostic::warn(
+            "GAL0017",
+            "$.search_trace",
+            format!(
+                "trace records {} cells but cells_explored + cells_discarded = {}",
+                t.cells.len(),
+                t.cells_explored + t.cells_discarded
+            ),
+        ));
+    }
+    if t.cells_oom > t.cells_explored {
+        out.push(Diagnostic::warn(
+            "GAL0017",
+            "$.search_trace.cells_oom",
+            format!("cells_oom {} exceeds cells_explored {}", t.cells_oom, t.cells_explored),
+        ));
+    }
+    let evaluations: usize =
+        t.cells.iter().filter(|c| !c.discarded).map(|c| c.evaluations).sum();
+    if evaluations != t.evaluations {
+        out.push(Diagnostic::warn(
+            "GAL0017",
+            "$.search_trace.evaluations",
+            format!(
+                "trace claims {} evaluations but its explored cells sum to {evaluations}",
+                t.evaluations
+            ),
+        ));
+    }
+    if let Some((batch, pp)) = t.best_cell {
+        if !t.cells.iter().any(|c| c.batch == batch && c.pp == pp) {
+            out.push(Diagnostic::warn(
+                "GAL0017",
+                "$.search_trace.best_cell",
+                format!("best_cell ({batch}, {pp}) is not among the recorded cells"),
+            ));
+        } else if r.plan.batch != batch || r.plan.pp != pp {
+            out.push(Diagnostic::warn(
+                "GAL0017",
+                "$.search_trace.best_cell",
+                format!(
+                    "best_cell ({batch}, {pp}) disagrees with the plan's (batch {}, pp {})",
+                    r.plan.batch, r.plan.pp
+                ),
+            ));
+        }
+    }
+}
+
+fn batch_exceeds_max(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    if r.plan.batch > r.max_batch {
+        out.push(Diagnostic::error(
+            "GAL0018",
+            "$.plan.batch",
+            format!(
+                "plan batch {} exceeds the request's max_batch {}",
+                r.plan.batch, r.max_batch
+            ),
+        ));
+    }
+}
+
+fn rederivation_skipped(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(prov) = &r.cost_model else { return };
+    out.push(Diagnostic::note(
+        "GAL0019",
+        "$.cost_model",
+        format!(
+            "stage-memory and cost-drift re-derivation skipped: the plan was priced by the \
+             {} backend and the analytic model would disagree by design",
+            prov.label()
+        ),
+    ));
+}

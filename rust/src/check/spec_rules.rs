@@ -1,0 +1,261 @@
+//! Spec and cluster lints: `ModelSpec` smells flagged on the raw JSON
+//! (so each finding carries a precise `$.blocks[i]` path even when
+//! `ModelSpec::from_json` rejects the document wholesale), plus island
+//! configurations that can never host the model.
+
+use crate::model::ModelSpec;
+use crate::util::json::Json;
+use crate::util::GIB;
+
+use super::{CheckContext, Checker, Diagnostic};
+
+struct Rule {
+    code: &'static str,
+    name: &'static str,
+    description: &'static str,
+    cheap: bool,
+    check: fn(&CheckContext, &mut Vec<Diagnostic>),
+}
+
+impl Checker for Rule {
+    fn code(&self) -> &'static str {
+        self.code
+    }
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn description(&self) -> &'static str {
+        self.description
+    }
+    fn cheap(&self) -> bool {
+        self.cheap
+    }
+    fn check(&self, ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+        (self.check)(ctx, out);
+    }
+}
+
+pub fn rules() -> Vec<Box<dyn Checker>> {
+    vec![
+        Box::new(Rule {
+            code: "GAL0020",
+            name: "spec-invalid",
+            description: "model spec compiles under ModelSpec::from_json",
+            cheap: false,
+            check: spec_invalid,
+        }),
+        Box::new(Rule {
+            code: "GAL0021",
+            name: "moe-routing",
+            description: "MoE routing is satisfiable: 1 <= top_k <= experts, experts >= 2",
+            cheap: false,
+            check: moe_routing,
+        }),
+        Box::new(Rule {
+            code: "GAL0022",
+            name: "gqa-heads",
+            description: "grouped-query attention: kv_heads divides heads",
+            cheap: false,
+            check: gqa_heads,
+        }),
+        Box::new(Rule {
+            code: "GAL0023",
+            name: "attention-window",
+            description: "attention window is positive and no wider than seq",
+            cheap: false,
+            check: attention_window,
+        }),
+        Box::new(Rule {
+            code: "GAL0024",
+            name: "window-redundant",
+            description: "window == seq is full attention spelled the long way",
+            cheap: false,
+            check: window_redundant,
+        }),
+        Box::new(Rule {
+            code: "GAL0030",
+            name: "model-never-fits",
+            description: "cluster's total memory can hold the model weights at all",
+            cheap: true,
+            check: model_never_fits,
+        }),
+        Box::new(Rule {
+            code: "GAL0031",
+            name: "island-share",
+            description: "every island can hold its uniform share of the model weights",
+            cheap: false,
+            check: island_share,
+        }),
+    ]
+}
+
+// ---- ModelSpec smells (raw JSON) ----------------------------------------
+
+fn spec_invalid(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(raw) = ctx.raw_spec else { return };
+    if let Err(e) = ModelSpec::from_json(raw) {
+        out.push(Diagnostic::error(
+            "GAL0020",
+            "$",
+            format!("model spec does not compile: {}", e.reason),
+        ));
+    }
+}
+
+/// Visit each block object in a raw spec, tolerating shapes
+/// `ModelSpec::from_json` would reject — lints point at what they can.
+fn each_block(raw: &Json, mut f: impl FnMut(usize, &Json)) {
+    let Some(blocks) = raw.get("blocks").and_then(Json::as_arr) else { return };
+    for (i, b) in blocks.iter().enumerate() {
+        if matches!(b, Json::Obj(_)) {
+            f(i, b);
+        }
+    }
+}
+
+fn field(b: &Json, key: &str) -> Option<usize> {
+    b.get(key).and_then(Json::as_usize)
+}
+
+fn moe_routing(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(raw) = ctx.raw_spec else { return };
+    each_block(raw, |i, b| {
+        let Some(moe) = b.get("moe") else { return };
+        let (Some(experts), Some(top_k)) = (field(moe, "experts"), field(moe, "top_k"))
+        else {
+            return; // malformed moe object is GAL0020's finding
+        };
+        if top_k == 0 || top_k > experts {
+            out.push(
+                Diagnostic::error(
+                    "GAL0021",
+                    format!("$.blocks[{i}].moe"),
+                    format!("top_k {top_k} cannot route over {experts} experts"),
+                )
+                .suggest(format!("pick top_k in 1..={experts}")),
+            );
+        }
+        if experts < 2 {
+            out.push(
+                Diagnostic::error(
+                    "GAL0021",
+                    format!("$.blocks[{i}].moe"),
+                    format!("{experts} expert(s) is not a mixture"),
+                )
+                .suggest("drop the moe section for a dense FFN, or use >= 2 experts"),
+            );
+        }
+    });
+}
+
+fn gqa_heads(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(raw) = ctx.raw_spec else { return };
+    each_block(raw, |i, b| {
+        let Some(kv) = field(b, "kv_heads") else { return };
+        let Some(heads) = field(b, "heads") else { return };
+        if kv == 0 || kv > heads || heads % kv != 0 {
+            out.push(
+                Diagnostic::error(
+                    "GAL0022",
+                    format!("$.blocks[{i}].kv_heads"),
+                    format!("kv_heads {kv} must divide heads {heads}"),
+                )
+                .suggest(format!("use a divisor of {heads} (kv_heads == heads is dense MHA)")),
+            );
+        }
+    });
+}
+
+fn attention_window(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(raw) = ctx.raw_spec else { return };
+    each_block(raw, |i, b| {
+        let Some(w) = field(b, "window") else { return };
+        let Some(seq) = field(b, "seq") else { return };
+        if w == 0 || w > seq {
+            out.push(
+                Diagnostic::error(
+                    "GAL0023",
+                    format!("$.blocks[{i}].window"),
+                    format!("attention window {w} must be in 1..=seq ({seq})"),
+                )
+                .suggest("widen seq or shrink the window; omit window for full attention"),
+            );
+        }
+    });
+}
+
+fn window_redundant(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(raw) = ctx.raw_spec else { return };
+    each_block(raw, |i, b| {
+        let (Some(w), Some(seq)) = (field(b, "window"), field(b, "seq")) else { return };
+        if w == seq {
+            out.push(
+                Diagnostic::note(
+                    "GAL0024",
+                    format!("$.blocks[{i}].window"),
+                    format!("window {w} equals seq: this is full attention spelled the long way"),
+                )
+                .suggest("drop the window key"),
+            );
+        }
+    });
+}
+
+// ---- cluster fit ---------------------------------------------------------
+
+/// fp32 weights alone — the loosest possible necessary condition; optimizer
+/// state, gradients and activations only add to it.
+const WEIGHT_BYTES_PER_PARAM: f64 = 4.0;
+
+fn model_never_fits(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(m) = ctx.model else { return };
+    let Some(c) = ctx.cluster else { return };
+    let weight_bytes = m.total_params() * WEIGHT_BYTES_PER_PARAM;
+    let capacity: f64 = c.islands.iter().map(|i| i.count as f64 * i.gpu.mem_bytes).sum();
+    if weight_bytes > capacity {
+        out.push(
+            Diagnostic::error(
+                "GAL0030",
+                "$.cluster",
+                format!(
+                    "{} needs {:.1} GiB for fp32 weights alone but {} totals {:.1} GiB: \
+                     no parallel plan can ever fit",
+                    m.name,
+                    weight_bytes / GIB,
+                    c.name,
+                    capacity / GIB
+                ),
+            )
+            .suggest("use a larger cluster or a smaller model"),
+        );
+    }
+}
+
+fn island_share(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(m) = ctx.model else { return };
+    let Some(c) = ctx.cluster else { return };
+    let weight_bytes = m.total_params() * WEIGHT_BYTES_PER_PARAM;
+    if weight_bytes
+        > c.islands.iter().map(|i| i.count as f64 * i.gpu.mem_bytes).sum::<f64>()
+    {
+        return; // GAL0030 already says it can never fit anywhere.
+    }
+    let share = weight_bytes / c.n_devices() as f64;
+    for (i, isl) in c.islands.iter().enumerate() {
+        if isl.gpu.mem_bytes < share {
+            out.push(Diagnostic::warn(
+                "GAL0031",
+                "$.cluster",
+                format!(
+                    "island {i} ({}x{}) holds {:.1} GiB/device but a uniform weight shard \
+                     is {:.1} GiB: stages placed there will need aggressive offload or \
+                     skewed partitions",
+                    isl.count,
+                    isl.gpu.name,
+                    isl.gpu.mem_bytes / GIB,
+                    share / GIB
+                ),
+            ));
+        }
+    }
+}

@@ -316,7 +316,7 @@ impl ClusterSpec {
                 }
                 start = end;
             }
-            let gpu = gpu.expect("cluster has devices");
+            let gpu = gpu.unwrap_or_else(|| unreachable!("cluster has devices"));
             sites.push(StageSite { class: 0, gpu, intra_bw: intra, intra_limit: min_count.min(g) });
         }
         // Assign class ids by first occurrence of each distinct site shape.
@@ -470,7 +470,9 @@ pub fn parse_islands(spec: &str) -> Result<ClusterSpec, ClusterError> {
 pub fn cluster_by_name(name: &str) -> Option<ClusterSpec> {
     // Effective bandwidths (~80% of line rate): PCIe3 x16 ≈ 10 GB/s,
     // NVLink(A100) ≈ 200 GB/s, 100 Gb IB ≈ 10 GB/s, 400 Gb IB ≈ 40 GB/s.
-    let preset = |c: Result<ClusterSpec, ClusterError>| c.expect("static preset is valid");
+    let preset = |c: Result<ClusterSpec, ClusterError>| {
+        c.unwrap_or_else(|_| unreachable!("static preset is valid"))
+    };
     Some(match name.to_ascii_lowercase().as_str() {
         // 8x RTX TITAN, single node, PCIe 3.0 (Table II).
         "titan8" => {
@@ -545,6 +547,7 @@ pub fn cluster_names() -> Vec<&'static str> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -72,6 +72,7 @@ pub fn reduce_scatter(full: &[&[f32]]) -> Vec<Vec<f32>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

@@ -67,6 +67,7 @@ impl SyntheticCorpus {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -272,6 +272,7 @@ impl CostEstimator {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;

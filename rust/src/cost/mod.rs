@@ -52,6 +52,7 @@ pub fn overlapped_time(comp: f64, comm: f64, slowdown: f64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -267,6 +267,7 @@ pub fn estimation_errors(mname: &str) -> Option<(f64, f64)> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::parallel::Strategy;

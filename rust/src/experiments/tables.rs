@@ -216,8 +216,8 @@ pub fn speedup_summary(
     ];
     let bmw: std::collections::BTreeMap<&str, f64> = results
         .iter()
-        .filter(|(m, _, t)| m == "Galvatron-BMW" && t.is_some())
-        .map(|(_, model, t)| (model.as_str(), t.unwrap()))
+        .filter(|(m, _, _)| m == "Galvatron-BMW")
+        .filter_map(|(_, model, t)| (*t).map(|tp| (model.as_str(), tp)))
         .collect();
     let mut best_vs_pure: f64 = 0.0;
     let mut best_vs_hybrid: f64 = 0.0;
@@ -238,6 +238,7 @@ pub fn speedup_summary(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -19,6 +19,9 @@
 //!     parallel memoized [`search::engine`] (shared cost caches,
 //!     thread-fanned batch × PP sweeps, deterministic reduction, and
 //!     [`search::engine::SearchTrace`] artifacts).
+//!   * [`check`]   — static analysis over planner artifacts: typed
+//!     `GAL0xxx` diagnostics re-proving plan legality, artifact
+//!     consistency and spec/cluster lints (`galvatron check`).
 //!   * [`sim`]     — discrete-event cluster simulator (ground truth for
 //!     Fig. 4/7-style experiments; substitutes the GPU testbed).
 //!   * [`runtime`] — PJRT-CPU execution of AOT artifacts (HLO text).
@@ -27,6 +30,7 @@
 //!   * [`util`]    — JSON/RNG/CLI/table/bench substrates.
 
 pub mod api;
+pub mod check;
 pub mod cluster;
 pub mod search;
 pub mod sim;

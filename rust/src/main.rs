@@ -5,6 +5,8 @@
 //!             (optionally persisting it with --out plan.json)
 //!   simulate  cross-check a plan on the discrete-event simulator, either
 //!             re-planned from names or loaded from --plan plan.json
+//!   check     statically verify plan artifacts / ModelSpec files with
+//!             typed GAL0xxx diagnostics (exit 1 on any error)
 //!   table2..6 regenerate the paper's tables
 //!   fig4..7   regenerate the paper's figures
 //!   train     run real-numerics e2e training over the AOT artifacts
@@ -35,6 +37,9 @@ commands:
             [--out plan.json]
   simulate  --plan plan.json [--profile-db db.json]
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
+  check     --plan plan.json and/or --model-file spec.json
+            [--cluster <name> | --islands <spec>] [--json]
+            (static verifier: exits 1 on any error-severity diagnostic)
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
   table3 | table4 | table5 | table6     (same options)
   hetero    heterogeneous-cluster sweep [--models a,b] [--max-batch N]
@@ -243,6 +248,52 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `galvatron check`: run the static verifier (typed `GAL0xxx`
+/// diagnostics; see README "Verifying plans and specs") over a plan
+/// artifact and/or a ModelSpec file. Exit code 1 on any Error-severity
+/// finding, 0 otherwise (warnings and notes are advisory).
+fn cmd_check(args: &Args) -> Result<()> {
+    use galvatron::check::{self, CheckReport};
+    let mut report = CheckReport::default();
+    let mut checked = Vec::new();
+    if let Some(path) = args.get("plan") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan artifact {path}"))?;
+        report.merge(check::check_plan_text(&text));
+        checked.push(path);
+    }
+    if let Some(path) = args.get("model-file") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model spec {path}"))?;
+        let v = galvatron::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path} is not JSON: {e}"))?;
+        // Spec lints run standalone; with a cluster the never-fits
+        // lints (GAL0030/GAL0031) run too.
+        let cluster = match args.get("islands").or_else(|| args.get("cluster")) {
+            Some(name) => Some(galvatron::api::resolve_cluster_name(name)?),
+            None => None,
+        };
+        report.merge(check::check_model_json(&v, cluster.as_ref()));
+        checked.push(path);
+    }
+    anyhow::ensure!(
+        !checked.is_empty(),
+        "check needs --plan plan.json and/or --model-file spec.json"
+    );
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        for path in &checked {
+            println!("checked {path}");
+        }
+        print!("{}", report.render());
+    }
+    if report.has_errors() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = galvatron::coordinator::TrainerConfig {
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),
@@ -325,7 +376,8 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
             galvatron::cost::measure_collectives(args.usize("coll-reps", 5)?);
         // Efficiencies are recorded relative to the host device class's
         // nominal rates (the `cpu` catalog entry).
-        let (host, host_bw) = galvatron::cluster::gpu_by_name("cpu").expect("cpu class exists");
+        let (host, host_bw) = galvatron::cluster::gpu_by_name("cpu")
+            .ok_or_else(|| anyhow::anyhow!("cpu device class missing from the catalog"))?;
         ProfileDb::from_measurements("pjrt-cpu", host.flops, host_bw, layers, collectives)?
     };
     db.save(std::path::Path::new(&out))?;
@@ -354,7 +406,7 @@ fn cmd_models(args: &Args) -> Result<()> {
         }
         None => model_names()
             .iter()
-            .map(|n| (n.to_string(), spec_by_name(n).expect("zoo spec")))
+            .filter_map(|n| spec_by_name(n).map(|s| (n.to_string(), s)))
             .collect(),
     };
     if let Some(dir) = args.get("out-dir") {
@@ -467,10 +519,11 @@ fn main() -> Result<()> {
         "calibrate" => cmd_calibrate(&args)?,
         "smoke" => cmd_smoke(&args)?,
         "simulate" => cmd_simulate(&args)?,
+        "check" => cmd_check(&args)?,
         "models" => cmd_models(&args)?,
         "clusters" => {
             for c in galvatron::cluster::cluster_names() {
-                let cl = galvatron::cluster::cluster_by_name(c).unwrap();
+                let Some(cl) = galvatron::cluster::cluster_by_name(c) else { continue };
                 let islands = cl
                     .islands
                     .iter()

@@ -608,7 +608,7 @@ impl ModelSpec {
         // Embedding params bind to the first block's hidden size; head
         // params to the last block's.
         let h0 = self.blocks[0].hidden as f64;
-        let h_last = self.blocks.last().unwrap().hidden as f64;
+        let h_last = self.blocks.last().map_or(0, |b| b.hidden) as f64;
         let mut pre_params = 0.0;
         if self.family == Family::Windowed {
             // Patch-merging projection into each next stage (4C -> 2C).
@@ -868,6 +868,7 @@ impl ModelSpec {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -228,6 +228,7 @@ pub fn model_by_name(name: &str) -> Option<ModelProfile> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::MIB;

@@ -111,6 +111,7 @@ pub fn ckpt_recompute_comm(v: &LayerCommVolumes) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::LayerProfile;

@@ -109,6 +109,7 @@ pub fn stage_forward_memory(mems: &[LayerMemory]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::LayerProfile;

@@ -40,6 +40,7 @@ pub fn transform_bytes(layer: &LayerProfile, prev: &Strategy, cur: &Strategy, b_
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::LayerProfile;

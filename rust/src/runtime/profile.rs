@@ -104,6 +104,7 @@ pub fn calibrated_host_spec(measurements: &[ProfileMeasurement], mem_bytes: f64)
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

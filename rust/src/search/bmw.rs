@@ -210,6 +210,7 @@ pub fn gb(bytes: f64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;

@@ -105,6 +105,7 @@ pub fn total_candidates(n: usize, opts: &SpaceOptions) -> usize {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

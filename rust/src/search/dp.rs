@@ -113,11 +113,20 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
     let class_of: Vec<usize> = input
         .strategies
         .iter()
-        .map(|s| splits.binary_search(&s.batch_split()).unwrap())
+        .map(|s| {
+            splits
+                .binary_search(&s.batch_split())
+                .unwrap_or_else(|_| unreachable!("split deduped from this strategy set"))
+        })
         .collect();
     // Representative strategy per class (transform cost only reads split).
     let class_rep: Vec<usize> = (0..nc)
-        .map(|c| class_of.iter().position(|&x| x == c).unwrap())
+        .map(|c| {
+            class_of
+                .iter()
+                .position(|&x| x == c)
+                .unwrap_or_else(|| unreachable!("every class has a member"))
+        })
         .collect();
     // r_class[l][ci][cj]: per-batch transform cost between split classes.
     let mut r_class: Vec<Vec<Vec<f64>>> = Vec::with_capacity(nl);
@@ -264,6 +273,7 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;

@@ -132,8 +132,8 @@ impl CostCache {
     /// Distinct entries resident (the union of keys touched — also
     /// deterministic across thread counts; see module docs on races).
     pub fn entries(&self) -> u64 {
-        let lc: usize = self.layer_costs.read().unwrap().values().map(Vec::len).sum();
-        let tc: usize = self.transforms.read().unwrap().values().map(Vec::len).sum();
+        let lc: usize = self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).values().map(Vec::len).sum();
+        let tc: usize = self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).values().map(Vec::len).sum();
         (lc + tc) as u64
     }
 
@@ -153,13 +153,13 @@ impl CostCache {
         self.lookups.fetch_add(1, Ordering::Relaxed);
         let class = self.class_of(layer_idx);
         let key: CellKey = (self.provenance, site, class, b_m.to_bits(), extra_params.to_bits());
-        if let Some(row) = self.layer_costs.read().unwrap().get(&key) {
+        if let Some(row) = self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key) {
             if let Some((_, c)) = row.iter().find(|(s, _)| s == strategy) {
                 return *c;
             }
         }
         let c = self.ests[site as usize].layer_cost(layer, strategy, b_m, extra_params);
-        let mut map = self.layer_costs.write().unwrap();
+        let mut map = self.layer_costs.write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let row = map.entry(key).or_default();
         // Re-check: another worker may have inserted while we computed.
         if !row.iter().any(|(s, _)| s == strategy) {
@@ -184,13 +184,13 @@ impl CostCache {
         // group), so splits are a sufficient key.
         let splits = (prev.batch_split(), cur.batch_split());
         let key = (self.provenance, site, self.class_of(layer_idx), b_m.to_bits());
-        if let Some(row) = self.transforms.read().unwrap().get(&key) {
+        if let Some(row) = self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key) {
             if let Some((_, r)) = row.iter().find(|(sp, _)| *sp == splits) {
                 return *r;
             }
         }
         let r = self.ests[site as usize].transform_cost(layer, prev, cur, b_m);
-        let mut map = self.transforms.write().unwrap();
+        let mut map = self.transforms.write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let row = map.entry(key).or_default();
         if !row.iter().any(|(sp, _)| *sp == splits) {
             row.push((splits, r));
@@ -257,6 +257,7 @@ impl StageCosts for SiteCosts<'_> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;

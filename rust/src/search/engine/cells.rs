@@ -341,7 +341,7 @@ pub(crate) fn eval_bmw_cell(
                     .enumerate()
                     .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
-                    .unwrap();
+                    .unwrap_or(0);
                 // Validation limit (3): max stage memory under p_t.
                 let (_, mems_pt) = proxy_stage_stats(&diags, &p_t, m, cfg.schedule);
                 let mem_cap_pt = mems_pt.iter().cloned().fold(0.0, f64::max);

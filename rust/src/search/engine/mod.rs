@@ -145,7 +145,7 @@ impl<'a> SearchEngine<'a> {
                         let site = sites
                             .iter()
                             .find(|s| s.class == c as u32)
-                            .expect("contiguous site class ids")
+                            .unwrap_or_else(|| unreachable!("contiguous site class ids"))
                             .clone();
                         CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site)
                             .with_train(cfg.train)
@@ -263,13 +263,18 @@ impl<'a> SearchEngine<'a> {
                     }
                     let (batch, ctx_idx) = wave_cells[i];
                     let out = self.eval_cell(batch, ctx_idx);
-                    *slots[i].lock().unwrap() = Some(out);
+                    *slots[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                        Some(out);
                 });
             }
         });
         slots
             .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("worker filled every wave slot"))
+            .map(|s| {
+                s.into_inner()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .unwrap_or_else(|| unreachable!("worker filled every wave slot"))
+            })
             .collect()
     }
 
@@ -294,6 +299,7 @@ impl<'a> SearchEngine<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;

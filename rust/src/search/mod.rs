@@ -71,6 +71,7 @@ pub fn schedule_name(s: Schedule) -> &'static str {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

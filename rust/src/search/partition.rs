@@ -232,6 +232,7 @@ pub fn balance_degree(weights: &[f64], counts: &[usize]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

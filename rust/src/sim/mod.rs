@@ -127,7 +127,7 @@ fn build_stage_models(
             let site = sites
                 .iter()
                 .find(|s| s.class == c as u32)
-                .expect("contiguous site class ids")
+                .unwrap_or_else(|| unreachable!("contiguous site class ids"))
                 .clone();
             CostEstimator::with_site(cluster, plan.pp, overlap_slowdown, site)
                 .with_train(train)
@@ -366,6 +366,7 @@ pub fn simulate_costed(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::cluster::cluster_by_name;

@@ -79,6 +79,7 @@ pub fn max_live(order: &[Task]) -> usize {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

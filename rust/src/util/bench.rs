@@ -61,6 +61,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult 
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -16,20 +16,20 @@ impl Args {
     /// that take no value.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
         let mut out = Args::default();
-        let mut iter = raw.into_iter().peekable();
+        let mut iter = raw.into_iter();
         while let Some(a) = iter.next() {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if flag_names.contains(&stripped) {
                     out.flags.push(stripped.to_string());
-                } else if iter.peek().is_some() {
+                } else if let Some(value) = iter.next() {
                     // Any option not declared as a flag takes the next token
                     // as its value — even one that itself starts with "--"
                     // (e.g. `--models --foo`); the old lookahead silently
                     // turned such options into flags and re-parsed their
                     // value as a separate option.
-                    out.options.insert(stripped.to_string(), iter.next().unwrap());
+                    out.options.insert(stripped.to_string(), value);
                 } else {
                     out.flags.push(stripped.to_string());
                 }
@@ -76,6 +76,7 @@ impl Args {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

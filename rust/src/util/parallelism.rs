@@ -42,6 +42,7 @@ pub fn resolve_from(requested: Option<usize>, env: Option<&str>, detected: usize
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -71,6 +71,7 @@ pub fn tp_cell(throughput: Option<(f64, usize)>) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -3,6 +3,8 @@
 //! suggestion quality, and the serializable `PlanReport` artifact
 //! (ISSUE 1 acceptance: plan → simulate round-trips through JSON).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{
     MethodSpec, PlanError, PlanReport, PlanRequest, Planner, PLAN_ARTIFACT_VERSION,
 };

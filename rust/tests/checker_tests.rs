@@ -1,0 +1,478 @@
+//! Golden diagnostic tests for `galvatron check` (the `src/check` engine).
+//!
+//! Each rule in the registry is pinned by one corrupted artifact: we plan
+//! once, mutate the serialized JSON the way a buggy producer (or a human
+//! editor) would, and assert the exact stable `GAL0xxx` code, severity,
+//! and json-path the checker reports. Clean artifacts from both a
+//! homogeneous and a heterogeneous cluster must come back error-free, so
+//! the rules cannot rot into false positives either.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use galvatron::api::{MethodSpec, PlanError, PlanReport, PlanRequest, Planner};
+use galvatron::check::{check_model_json, check_plan_text, CheckReport, Severity};
+use galvatron::model::ModelSpec;
+use galvatron::util::json::Json;
+use galvatron::util::GIB;
+
+// ---- fixtures -------------------------------------------------------------
+
+/// One real plan artifact per test binary: bert-huge-32 on titan8 with the
+/// pipeline degree pinned to 4, so mutations can rely on pp=4 / group=2.
+fn titan8_plan() -> &'static str {
+    static PLAN: OnceLock<String> = OnceLock::new();
+    PLAN.get_or_init(|| {
+        PlanRequest::new("bert-huge-32", "titan8")
+            .memory_gb(16.0)
+            .max_batch(32)
+            .pipeline_degrees(&[4])
+            .method(MethodSpec::Bmw { ckpt: true })
+            .plan()
+            .expect("baseline titan8 plan")
+            .to_json_string()
+    })
+}
+
+fn hetero4_plan() -> &'static str {
+    static PLAN: OnceLock<String> = OnceLock::new();
+    PLAN.get_or_init(|| {
+        PlanRequest::new("bert-huge-32", "hetero4")
+            .max_batch(16)
+            .method(MethodSpec::Bmw { ckpt: true })
+            .plan()
+            .expect("baseline hetero4 plan")
+            .to_json_string()
+    })
+}
+
+/// Parse an artifact, hand its top-level object to the closure, and
+/// re-serialize. Corruptions stay valid JSON so they exercise the typed
+/// rules rather than the parser.
+fn mutate(base: &str, f: impl FnOnce(&mut BTreeMap<String, Json>)) -> String {
+    let Json::Obj(mut top) = Json::parse(base).expect("artifact parses") else {
+        panic!("artifact is not a JSON object");
+    };
+    f(&mut top);
+    Json::Obj(top).to_string()
+}
+
+fn plan_obj(top: &mut BTreeMap<String, Json>) -> &mut BTreeMap<String, Json> {
+    match top.get_mut("plan") {
+        Some(Json::Obj(m)) => m,
+        other => panic!("artifact has no plan object: {other:?}"),
+    }
+}
+
+fn num(m: &BTreeMap<String, Json>, key: &str) -> f64 {
+    match m.get(key) {
+        Some(Json::Num(n)) => *n,
+        other => panic!("expected number at {key}, got {other:?}"),
+    }
+}
+
+fn set_num(m: &mut BTreeMap<String, Json>, key: &str, v: f64) {
+    m.insert(key.to_string(), Json::num(v));
+}
+
+// ---- assertions -----------------------------------------------------------
+
+fn assert_diag(report: &CheckReport, code: &str, severity: Severity, path: &str) {
+    assert!(
+        report
+            .diagnostics
+            .iter()
+            .any(|d| d.code == code && d.severity == severity && d.path == path),
+        "expected {severity}[{code}] at {path}; checker said:\n{}",
+        report.render()
+    );
+}
+
+fn assert_no_code(report: &CheckReport, code: &str) {
+    assert!(
+        report.diagnostics.iter().all(|d| d.code != code),
+        "did not expect {code}; checker said:\n{}",
+        report.render()
+    );
+}
+
+// ---- clean artifacts pass -------------------------------------------------
+
+#[test]
+fn clean_titan8_artifact_has_no_errors() {
+    let report = check_plan_text(titan8_plan());
+    assert!(!report.has_errors(), "clean artifact flagged:\n{}", report.render());
+}
+
+#[test]
+fn clean_hetero4_artifact_has_no_errors() {
+    let report = check_plan_text(hetero4_plan());
+    assert!(!report.has_errors(), "clean hetero artifact flagged:\n{}", report.render());
+}
+
+// ---- plan legality (GAL0001..GAL0007) -------------------------------------
+
+#[test]
+fn gal0001_partition_layer_coverage() {
+    let text = mutate(titan8_plan(), |top| {
+        match plan_obj(top).get_mut("partition") {
+            Some(Json::Arr(a)) => {
+                let Json::Num(n) = &mut a[0] else { panic!("partition[0] is a number") };
+                *n += 1.0;
+            }
+            other => panic!("partition array: {other:?}"),
+        }
+    });
+    assert_diag(&check_plan_text(&text), "GAL0001", Severity::Error, "$.plan.partition");
+}
+
+#[test]
+fn gal0002_pipeline_degree_divides_devices() {
+    let text = mutate(titan8_plan(), |top| set_num(plan_obj(top), "pp", 3.0));
+    // titan8 has 8 devices; pp=3 does not divide them.
+    assert_diag(&check_plan_text(&text), "GAL0002", Severity::Error, "$.plan.pp");
+}
+
+#[test]
+fn gal0003_strategy_degree_matches_group() {
+    let text = mutate(titan8_plan(), |top| {
+        match plan_obj(top).get_mut("strategies") {
+            // Degree 4 on a pp=4 slice of 8 devices (group size 2).
+            Some(Json::Arr(a)) => a[0] = Json::str("TP2-DP2"),
+            other => panic!("strategies array: {other:?}"),
+        }
+    });
+    assert_diag(&check_plan_text(&text), "GAL0003", Severity::Error, "$.plan.strategies[0]");
+}
+
+#[test]
+fn gal0004_microbatches_divide_batch() {
+    // No power-of-two batch is divisible by 3.
+    let text = mutate(titan8_plan(), |top| set_num(plan_obj(top), "microbatches", 3.0));
+    assert_diag(&check_plan_text(&text), "GAL0004", Severity::Error, "$.plan.microbatches");
+}
+
+#[test]
+fn gal0005_stage_slots_must_be_a_permutation() {
+    let text = mutate(titan8_plan(), |top| {
+        plan_obj(top).insert(
+            "stage_slots".to_string(),
+            Json::arr((0..4).map(|_| Json::num(0.0))),
+        );
+    });
+    let report = check_plan_text(&text);
+    // Slot 0 is claimed twice (first repeat is stage 1) ...
+    assert_diag(&report, "GAL0005", Severity::Error, "$.plan.stage_slots[1]");
+    // ... and titan8 is homogeneous, where the planner never records slots.
+    assert_diag(&report, "GAL0005", Severity::Note, "$.plan.stage_slots");
+}
+
+#[test]
+fn gal0006_stage_memory_rederivation() {
+    // Shrink the recorded budget to 0.5 GB: every stage's re-derived peak
+    // now exceeds the capacity the artifact claims it was planned under.
+    let text = mutate(titan8_plan(), |top| set_num(top, "memory_budget_gb", 0.5));
+    assert_diag(&check_plan_text(&text), "GAL0006", Severity::Error, "$.stages[0]");
+}
+
+#[test]
+fn gal0007_memory_sandwich_violation() {
+    // A maximally lopsided partition is less time-balanced than even the
+    // memory-balanced partition p_m, violating the Eq. 7 side.
+    let text = mutate(titan8_plan(), |top| {
+        plan_obj(top).insert(
+            "partition".to_string(),
+            Json::arr([29, 1, 1, 1].iter().map(|&c| Json::num(f64::from(c)))),
+        );
+    });
+    assert_diag(&check_plan_text(&text), "GAL0007", Severity::Warn, "$.plan.partition");
+}
+
+// ---- artifact consistency (GAL0010..GAL0019) ------------------------------
+
+#[test]
+fn gal0010_unknown_top_level_key() {
+    let text = mutate(titan8_plan(), |top| {
+        top.insert("zer0".to_string(), Json::num(1.0));
+    });
+    let report = check_plan_text(&text);
+    assert_diag(&report, "GAL0010", Severity::Error, "$");
+    // The precise unknown-key finding owns the failure; no generic parse error.
+    assert_no_code(&report, "GAL0012");
+}
+
+#[test]
+fn gal0011_oom_markers() {
+    let report = check_plan_text("OOM\n");
+    assert_diag(&report, "GAL0011", Severity::Note, "$");
+    assert!(!report.has_errors(), "well-formed marker is not an error:\n{}", report.render());
+    // A marker missing its newline is malformed but still recognizably OOM.
+    let report = check_plan_text("OOM");
+    assert_diag(&report, "GAL0011", Severity::Warn, "$");
+    assert_no_code(&report, "GAL0012");
+}
+
+#[test]
+fn gal0012_unparseable_artifact() {
+    assert_diag(&check_plan_text("{ not json"), "GAL0012", Severity::Error, "$");
+}
+
+#[test]
+fn gal0013_model_does_not_resolve() {
+    let text = mutate(titan8_plan(), |top| {
+        top.insert("model".to_string(), Json::str("no-such-model"));
+    });
+    assert_diag(&check_plan_text(&text), "GAL0013", Severity::Error, "$.model");
+}
+
+#[test]
+fn gal0014_cluster_does_not_resolve() {
+    let text = mutate(titan8_plan(), |top| {
+        top.insert("cluster".to_string(), Json::str("no-such-cluster"));
+    });
+    assert_diag(&check_plan_text(&text), "GAL0014", Severity::Error, "$.cluster");
+}
+
+#[test]
+fn gal0014_budget_must_be_positive() {
+    let text = mutate(titan8_plan(), |top| set_num(top, "memory_budget_gb", -3.0));
+    assert_diag(&check_plan_text(&text), "GAL0014", Severity::Error, "$.memory_budget_gb");
+}
+
+#[test]
+fn gal0015_bogus_cost_provenance() {
+    let text = mutate(titan8_plan(), |top| {
+        top.insert(
+            "cost_model".to_string(),
+            Json::obj(vec![("backend", Json::str("bogus")), ("db_hash", Json::str("nothex"))]),
+        );
+    });
+    let report = check_plan_text(&text);
+    assert_diag(&report, "GAL0015", Severity::Error, "$.cost_model");
+}
+
+#[test]
+fn gal0016_recorded_cost_drift() {
+    let text = mutate(titan8_plan(), |top| {
+        let t = num(top, "throughput");
+        set_num(top, "throughput", t + 1.0);
+    });
+    assert_diag(&check_plan_text(&text), "GAL0016", Severity::Warn, "$.throughput");
+}
+
+#[test]
+fn gal0017_trace_evaluation_count() {
+    let text = mutate(titan8_plan(), |top| {
+        match top.get_mut("search_trace") {
+            Some(Json::Obj(t)) => {
+                let e = num(t, "evaluations");
+                set_num(t, "evaluations", e + 5.0);
+            }
+            other => panic!("fresh plan records a search_trace: {other:?}"),
+        }
+    });
+    assert_diag(
+        &check_plan_text(&text),
+        "GAL0017",
+        Severity::Warn,
+        "$.search_trace.evaluations",
+    );
+}
+
+#[test]
+fn gal0018_batch_exceeds_max() {
+    let text = mutate(titan8_plan(), |top| {
+        let batch = num(plan_obj(top), "batch");
+        set_num(top, "max_batch", batch - 1.0);
+    });
+    assert_diag(&check_plan_text(&text), "GAL0018", Severity::Error, "$.plan.batch");
+}
+
+#[test]
+fn gal0019_calibrated_provenance_skips_rederivation() {
+    let text = mutate(titan8_plan(), |top| {
+        top.insert(
+            "cost_model".to_string(),
+            Json::obj(vec![
+                ("backend", Json::str("calibrated")),
+                ("db_hash", Json::str("0123456789abcdef")),
+            ]),
+        );
+    });
+    let report = check_plan_text(&text);
+    assert_diag(&report, "GAL0019", Severity::Note, "$.cost_model");
+    // Well-formed provenance: no GAL0015, and the analytic re-derivation
+    // rules stand down rather than disagreeing by design.
+    assert_no_code(&report, "GAL0015");
+    assert_no_code(&report, "GAL0006");
+    assert_no_code(&report, "GAL0016");
+}
+
+// ---- spec and cluster lints (GAL0020..GAL0031) ----------------------------
+
+fn spec(s: &str) -> Json {
+    Json::parse(s).expect("test spec parses")
+}
+
+#[test]
+fn clean_spec_has_no_findings() {
+    let v = spec(
+        r#"{"name":"toy","family":"gpt",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}]}"#,
+    );
+    let report = check_model_json(&v, None);
+    assert!(report.diagnostics.is_empty(), "clean spec flagged:\n{}", report.render());
+}
+
+#[test]
+fn gal0020_spec_with_unknown_key() {
+    let v = spec(
+        r#"{"name":"toy","family":"gpt","zer0":1,
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512}]}"#,
+    );
+    assert_diag(&check_model_json(&v, None), "GAL0020", Severity::Error, "$");
+}
+
+#[test]
+fn gal0021_moe_routing_unsatisfiable() {
+    let v = spec(
+        r#"{"name":"toy","family":"gpt",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512,
+                       "moe":{"experts":4,"top_k":5}}]}"#,
+    );
+    assert_diag(&check_model_json(&v, None), "GAL0021", Severity::Error, "$.blocks[0].moe");
+}
+
+#[test]
+fn gal0022_kv_heads_must_divide_heads() {
+    let v = spec(
+        r#"{"name":"toy","family":"gpt",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512,"kv_heads":5}]}"#,
+    );
+    assert_diag(&check_model_json(&v, None), "GAL0022", Severity::Error, "$.blocks[0].kv_heads");
+}
+
+#[test]
+fn gal0023_window_wider_than_seq() {
+    let v = spec(
+        r#"{"name":"toy","family":"gpt",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512,"window":4096}]}"#,
+    );
+    assert_diag(&check_model_json(&v, None), "GAL0023", Severity::Error, "$.blocks[0].window");
+}
+
+#[test]
+fn gal0024_window_equal_to_seq_is_redundant() {
+    let v = spec(
+        r#"{"name":"toy","family":"gpt",
+            "blocks":[{"count":2,"hidden":1024,"heads":16,"seq":512,"window":512}]}"#,
+    );
+    let report = check_model_json(&v, None);
+    assert_diag(&report, "GAL0024", Severity::Note, "$.blocks[0].window");
+    // window == seq passes ModelSpec::validate: a note, never an error.
+    assert!(!report.has_errors(), "redundant window is advisory:\n{}", report.render());
+}
+
+/// ~32B-parameter decoder: far too big for cpu4 (16 GiB total), but small
+/// enough that hetero4 (208 GiB total) could hold it — just not with a
+/// uniform shard on the 24 GiB TITAN island.
+fn big_spec() -> Json {
+    spec(
+        r#"{"name":"whale","family":"gpt",
+            "blocks":[{"count":40,"hidden":8192,"heads":64,"seq":512}]}"#,
+    )
+}
+
+#[test]
+fn gal0030_model_never_fits_cluster() {
+    let v = big_spec();
+    let cluster = galvatron::api::resolve_cluster_name("cpu4").expect("cpu4 preset");
+    // Precondition for the rule: fp32 weights alone exceed total capacity.
+    let m = ModelSpec::from_json(&v).expect("spec").compile().expect("profile");
+    assert!(m.total_params() * 4.0 > 16.0 * GIB, "test model sized for cpu4 overflow");
+    assert_diag(
+        &check_model_json(&v, Some(&cluster)),
+        "GAL0030",
+        Severity::Error,
+        "$.cluster",
+    );
+}
+
+#[test]
+fn gal0031_island_cannot_hold_uniform_share() {
+    let v = big_spec();
+    let cluster = galvatron::api::resolve_cluster_name("hetero4").expect("hetero4 preset");
+    // Preconditions: fits in aggregate (no GAL0030), but a uniform 4-way
+    // shard overflows the 24 GiB TITAN island.
+    let m = ModelSpec::from_json(&v).expect("spec").compile().expect("profile");
+    let weights = m.total_params() * 4.0;
+    assert!(weights <= 208.0 * GIB, "test model must fit hetero4 in aggregate");
+    assert!(weights / 4.0 > 24.0 * GIB, "uniform shard must overflow the TITAN island");
+    let report = check_model_json(&v, Some(&cluster));
+    assert_diag(&report, "GAL0031", Severity::Warn, "$.cluster");
+    assert_no_code(&report, "GAL0030");
+}
+
+// ---- strict artifact keys (PlanReport::from_json_str) ----------------------
+
+#[test]
+fn from_json_str_rejects_unknown_top_level_keys() {
+    let text = mutate(titan8_plan(), |top| {
+        top.insert("zer0".to_string(), Json::num(1.0));
+    });
+    match PlanReport::from_json_str(&text) {
+        Err(PlanError::Artifact { reason }) => {
+            assert!(reason.contains("zer0"), "reason names the key: {reason}");
+            assert!(reason.contains("unknown key"), "reason says why: {reason}");
+        }
+        other => panic!("expected Artifact error, got {other:?}"),
+    }
+}
+
+#[test]
+fn artifact_without_optional_keys_still_loads() {
+    // Pre-engine artifacts carry no search_trace; they must keep loading
+    // (and checking clean) under the strict key set.
+    let text = mutate(titan8_plan(), |top| {
+        top.remove("search_trace");
+        top.remove("model_spec");
+    });
+    let report = PlanReport::from_json_str(&text).expect("legacy artifact loads");
+    assert!(report.search_trace.is_none());
+    assert!(!check_plan_text(&text).has_errors());
+}
+
+// ---- the planner/simulator gate -------------------------------------------
+
+#[test]
+fn simulate_rejects_corrupted_artifact_via_gate() {
+    let text = mutate(titan8_plan(), |top| {
+        match plan_obj(top).get_mut("partition") {
+            Some(Json::Arr(a)) => {
+                let Json::Num(n) = &mut a[0] else { panic!("partition[0] is a number") };
+                *n += 1.0;
+            }
+            other => panic!("partition array: {other:?}"),
+        }
+    });
+    let report = PlanReport::from_json_str(&text).expect("shape-corrupt artifact still parses");
+    match Planner::new().simulate_report(&report) {
+        Err(PlanError::InvalidArtifact { diagnostics }) => {
+            assert!(
+                diagnostics.iter().any(|d| d.code == "GAL0001"),
+                "gate surfaces the partition finding: {diagnostics:?}"
+            );
+            let msg = PlanError::InvalidArtifact { diagnostics }.to_string();
+            assert!(msg.contains("invalid plan artifact"), "{msg}");
+        }
+        other => panic!("expected InvalidArtifact, got {other:?}"),
+    }
+}
+
+#[test]
+fn simulate_accepts_clean_artifact() {
+    let report = PlanReport::from_json_str(titan8_plan()).expect("clean artifact loads");
+    Planner::new().simulate_report(&report).expect("clean artifact simulates");
+}

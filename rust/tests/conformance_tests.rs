@@ -4,6 +4,8 @@
 //! cluster and a mixed-island cluster — the Fig. 7 relationship, checked
 //! across the whole model zoo instead of one case.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{MethodSpec, PlanError, PlanRequest, Planner};
 use galvatron::cost::pipeline::Schedule;
 use galvatron::model::model_names;

@@ -8,6 +8,8 @@
 //!     single-worker run;
 //!   * artifacts — the `search_trace` field round-trips through JSON.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use galvatron::api::{MethodSpec, PlanReport, PlanRequest};
 use galvatron::cluster::cluster_by_name;
 use galvatron::cost::{CostEstimator, StageCosts};

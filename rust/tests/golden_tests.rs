@@ -10,6 +10,8 @@
 //! planner change and commit the refreshed artifacts (see README
 //! "Golden plan snapshots").
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::PathBuf;
 
 use galvatron::api::{MethodSpec, PlanReport, PlanRequest};

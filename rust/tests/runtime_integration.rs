@@ -1,6 +1,8 @@
 //! Integration tests over the PJRT runtime + coordinator, using the AOT
 //! artifacts built by `make artifacts` (skipped gracefully if absent).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::PathBuf;
 
 use galvatron::coordinator::{Trainer, TrainerConfig};

@@ -10,6 +10,8 @@
 //!   * the committed `examples/models/*.json` files stay in sync with the
 //!     zoo specs and compile.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::PathBuf;
 
 use galvatron::api::{PlanError, PlanRequest, Planner};
