@@ -1,13 +1,23 @@
-//! Bench: planner throughput in plans/second, emitted as JSON lines so CI
-//! and future PRs can track planning speed as a first-class metric.
+//! Bench: planner throughput in plans/second, cold and warm, emitted as
+//! JSON lines so CI and future PRs can track planning speed as a
+//! first-class metric.
 //!
 //! Each line is one case:
-//!   {"bench":"planning_speed","model":...,"cluster":...,"threads":N,
-//!    "plans_per_sec":...,"cache_hit_rate":...,"cells_explored":...}
+//!   {"bench":"planning_speed","model":...,"cluster":...,"backend":...,
+//!    "threads":N,"plans_per_sec":...,"plans_per_sec_warm":...,
+//!    "warm_speedup":...,"cache_hit_rate":...,"cells_explored":...}
+//!
+//! `plans_per_sec` is the cold number (no `--cache-dir`), the metric the
+//! regression gate tracks; `plans_per_sec_warm` re-plans the identical
+//! request against a primed persistent cache, where the planner answers
+//! from its stored artifact without searching. The warm artifact is
+//! asserted byte-identical to the cold one — the cache may only remove
+//! work, never change a plan.
 //!
 //! All cases are additionally written to `BENCH_planning.json` at the
 //! repository root (canonical pretty JSON) — the persistent planning-speed
-//! trajectory CI runs in release mode and uploads as an artifact.
+//! trajectory CI runs in release mode, gates against `BENCH_baseline.json`
+//! (`scripts/bench_gate.py`), and uploads as an artifact.
 //!
 //! Run: `cargo bench --bench planning_speed_bench`
 
@@ -16,10 +26,35 @@
 use std::path::Path;
 use std::time::Duration;
 
-use galvatron::api::{MethodSpec, PlanRequest};
+use galvatron::api::{resolve_cluster_name, CostModel, MethodSpec, PlanRequest, ProfileDb};
 use galvatron::util::bench::bench;
 use galvatron::util::json::Json;
 use galvatron::util::parallelism::resolve_worker_count;
+
+struct Case {
+    model: &'static str,
+    cluster: &'static str,
+    /// `None` keeps the preset's physical budget (heterogeneous clusters
+    /// reject uniform overrides).
+    memory_gb: Option<f64>,
+    /// Cost-model backend: analytic, or calibrated from a synthetic
+    /// profile DB (prices differ; cache keys must therefore differ too).
+    backend: &'static str,
+}
+
+fn cases() -> Vec<Case> {
+    vec![
+        Case { model: "bert-huge-32", cluster: "titan8", memory_gb: Some(16.0), backend: "analytic" },
+        Case { model: "t5-512/4-32", cluster: "titan8", memory_gb: Some(8.0), backend: "analytic" },
+        Case { model: "bert-huge-32", cluster: "hetero4", memory_gb: None, backend: "analytic" },
+        Case {
+            model: "bert-huge-32",
+            cluster: "titan8",
+            memory_gb: Some(16.0),
+            backend: "calibrated",
+        },
+    ]
+}
 
 fn main() {
     let auto = resolve_worker_count(None);
@@ -28,50 +63,84 @@ fn main() {
         thread_counts.push(auto);
     }
     let mut results: Vec<Json> = Vec::new();
-    for (model, cluster, budget) in
-        [("bert-huge-32", "titan8", 16.0), ("t5-512/4-32", "titan8", 8.0)]
-    {
+    for case in cases() {
+        let Case { model, cluster, memory_gb, backend } = case;
+        let cost_model = match backend {
+            "calibrated" => {
+                let c = resolve_cluster_name(cluster).expect("bench cluster resolves");
+                Some(CostModel::calibrated(ProfileDb::synthetic(&c)))
+            }
+            _ => None,
+        };
         for &threads in &thread_counts {
             let request = || {
-                PlanRequest::new(model, cluster)
-                    .memory_gb(budget)
+                let mut req = PlanRequest::new(model, cluster)
                     .max_batch(64)
                     .method(MethodSpec::Bmw { ckpt: true })
-                    .threads(threads)
+                    .threads(threads);
+                if let Some(gb) = memory_gb {
+                    req = req.memory_gb(gb);
+                }
+                if let Some(m) = &cost_model {
+                    req = req.cost_model(m.clone());
+                }
+                req
             };
-            let r = bench(
-                &format!("planning_speed/{model}/threads={threads}"),
-                Duration::from_secs(3),
-                || {
-                    let _ = request().plan();
-                },
-            );
+            let label = format!("planning_speed/{model}/{cluster}/{backend}/threads={threads}");
+            // ---- cold: no cache directory, full search every iteration.
+            let r = bench(&format!("{label}/cold"), Duration::from_secs(3), || {
+                let _ = request().plan();
+            });
             let plans_per_sec = 1.0 / r.mean.as_secs_f64();
             // One traced run for the engine diagnostics. The produced
             // artifact must also check clean: a planner that speeds up by
             // emitting illegal plans is not faster, it is broken.
-            let (hit_rate, cells) = match request().plan() {
-                Ok(report) => {
-                    let check = galvatron::check::check_plan_text(&report.to_json_string());
-                    assert!(
-                        !check.has_errors(),
-                        "benched plan for {model} fails `galvatron check`:\n{}",
-                        check.render()
-                    );
-                    match report.search_trace {
-                        Some(t) => (t.cache_hit_rate(), t.cells_explored),
-                        None => (0.0, 0),
-                    }
-                }
-                Err(_) => (0.0, 0),
+            let cold = request().plan().expect("bench case plans");
+            let cold_text = cold.to_json_string();
+            let check = galvatron::check::check_plan_text(&cold_text);
+            assert!(
+                !check.has_errors(),
+                "benched plan for {model} fails `galvatron check`:\n{}",
+                check.render()
+            );
+            let (hit_rate, cells) = match &cold.search_trace {
+                Some(t) => (t.cache_hit_rate(), t.cells_explored),
+                None => (0.0, 0),
             };
+            // ---- warm: prime a fresh cache directory once, then re-plan
+            // the identical request against it.
+            let cache_dir = std::env::temp_dir().join(format!(
+                "galvatron-bench-{}-{}",
+                std::process::id(),
+                results.len()
+            ));
+            let warm_text =
+                request().cache_dir(&cache_dir).plan().expect("priming run plans").to_json_string();
+            assert_eq!(
+                cold_text, warm_text,
+                "{label}: priming (cold, cache-dir) artifact differs from the cache-less one"
+            );
+            let r = bench(&format!("{label}/warm"), Duration::from_secs(3), || {
+                let _ = request().cache_dir(&cache_dir).plan();
+            });
+            let plans_per_sec_warm = 1.0 / r.mean.as_secs_f64();
+            let warm_text =
+                request().cache_dir(&cache_dir).plan().expect("warm run plans").to_json_string();
+            assert_eq!(
+                cold_text, warm_text,
+                "{label}: warm artifact differs from cold — the cache changed the plan"
+            );
+            std::fs::remove_dir_all(&cache_dir).ok();
             let row = Json::obj(vec![
                 ("bench", Json::str("planning_speed")),
                 ("model", Json::str(model)),
                 ("cluster", Json::str(cluster)),
-                ("memory_gb", Json::num(budget)),
+                ("memory_gb", Json::num(memory_gb.unwrap_or(0.0))),
+                ("backend", Json::str(backend)),
                 ("threads", Json::num(threads as f64)),
                 ("plans_per_sec", Json::num(plans_per_sec)),
+                ("plans_per_sec_warm", Json::num(plans_per_sec_warm)),
+                ("warm_speedup", Json::num(plans_per_sec_warm / plans_per_sec)),
                 ("cache_hit_rate", Json::num(hit_rate)),
                 ("cells_explored", Json::num(cells as f64)),
             ]);

@@ -82,6 +82,8 @@ pub struct SearchOverrides {
     /// Cost-model backend (`None` keeps the default analytic formulas;
     /// `Some(Calibrated)` prices the search from a loaded profile DB).
     pub cost_model: Option<crate::cost::CostModel>,
+    /// Persistent planning cache directory (`None` = no persistence).
+    pub cache_dir: Option<std::path::PathBuf>,
 }
 
 impl SearchOverrides {
@@ -95,6 +97,7 @@ impl SearchOverrides {
             threads: None,
             train: TrainConfig::default(),
             cost_model: None,
+            cache_dir: None,
         }
     }
 
@@ -119,6 +122,9 @@ impl SearchOverrides {
         cfg.train = self.train;
         if let Some(cm) = &self.cost_model {
             cfg.cost_model = cm.clone();
+        }
+        if let Some(dir) = &self.cache_dir {
+            cfg.cache_dir = Some(dir.clone());
         }
         cfg
     }

@@ -44,11 +44,11 @@ pub mod report;
 pub mod request;
 
 pub use crate::cost::{CostModel, CostProvenance, ProfileDb};
-pub use crate::search::engine::{CellTrace, SearchTrace};
+pub use crate::search::engine::{CellTrace, SearchTiming, SearchTrace};
 pub use error::{suggest, PlanError};
 pub use method::{MethodSpec, PartitionPolicy, SearchOverrides};
 pub use report::{PlanReport, StageReport, PLAN_ARTIFACT_KEYS, PLAN_ARTIFACT_VERSION};
 pub use request::{
-    parse_schedule, resolve_cluster_name, resolve_model_name, schedule_key, ClusterSource,
-    ModelSource, PlanRequest, Planner, ResolvedRequest,
+    parse_schedule, request_fingerprint, resolve_cluster_name, resolve_model_name, schedule_key,
+    ClusterSource, ModelSource, PlanRequest, Planner, ResolvedRequest,
 };

@@ -111,6 +111,12 @@ pub struct PlanRequest {
     /// Explicit cost-model backend (the programmatic form of
     /// [`PlanRequest::profile_db`]). `None` = the default analytic model.
     pub cost_model: Option<CostModel>,
+    /// Persistent planning cache directory (the `--cache-dir` CLI form).
+    /// `None` falls back to the `GALVATRON_CACHE_DIR` environment variable
+    /// at `resolve()` time; when neither is set, nothing is persisted.
+    /// The cache never changes a plan — warm and cold artifacts are
+    /// byte-identical — it only removes recomputation.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl PlanRequest {
@@ -132,6 +138,7 @@ impl PlanRequest {
             threads: None,
             profile_db: None,
             cost_model: None,
+            cache_dir: None,
         }
     }
 
@@ -275,6 +282,14 @@ impl PlanRequest {
         self
     }
 
+    /// Persist and reuse planning state under `dir` (the `--cache-dir`
+    /// form): memoized cost tables warm-start compatible later runs, and
+    /// an identical request returns its artifact without searching.
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
     /// Convenience: plan with a default [`Planner`].
     pub fn plan(&self) -> Result<PlanReport, PlanError> {
         Planner::new().plan(self)
@@ -300,6 +315,50 @@ pub struct ResolvedRequest {
     /// recorded into the resulting [`PlanReport`] when non-default.
     pub cost_model: CostModel,
     pub overrides: SearchOverrides,
+    /// Persistent planning cache directory (request field or the
+    /// `GALVATRON_CACHE_DIR` environment fallback; `None` = no cache).
+    pub cache_dir: Option<PathBuf>,
+}
+
+/// Fingerprint identifying a resolved request up to plan equality: two
+/// requests with equal fingerprints produce byte-identical artifacts, so
+/// the persistent cache may answer one with the other's stored
+/// [`PlanReport`]. Hashes the artifact schema version, resolved names,
+/// model/cluster content, the declarative spec (it is embedded in the
+/// artifact), the full method, training numerics, the cost-model
+/// provenance, and every search override *except* `threads` and
+/// `cache_dir` — both are proven not to change the artifact.
+pub fn request_fingerprint(r: &ResolvedRequest) -> u64 {
+    use crate::search::engine::persist;
+    let mut fp = persist::Fingerprint::new();
+    fp.u64(crate::api::report::PLAN_ARTIFACT_VERSION as u64);
+    fp.str(&r.model_name).str(&r.cluster_name);
+    persist::hash_model(&mut fp, &r.model);
+    persist::hash_cluster(&mut fp, &r.cluster);
+    match &r.model_spec {
+        Some(spec) => fp.str(&spec.to_json().to_string()),
+        None => fp.str("-"),
+    };
+    fp.str(&r.method.to_json().to_string());
+    persist::hash_train(&mut fp, &r.train);
+    fp.u64(r.cost_model.cache_fingerprint());
+    let o = &r.overrides;
+    fp.usize(o.max_batch);
+    fp.str(o.schedule.map(schedule_key).unwrap_or("-"));
+    fp.f64(o.overlap_slowdown.unwrap_or(-1.0));
+    fp.usize(o.microbatch_limit.map_or(0, |m| m + 1));
+    match &o.pp_degrees {
+        Some(pps) => {
+            fp.usize(pps.len() + 1);
+            for &pp in pps {
+                fp.usize(pp);
+            }
+        }
+        None => {
+            fp.usize(0);
+        }
+    }
+    fp.finish()
 }
 
 /// Full model resolution for every [`ModelSource`] form: the display name
@@ -464,6 +523,11 @@ impl Planner {
         overrides.threads = req.threads;
         overrides.train = req.train;
         overrides.cost_model = Some(cost_model.clone());
+        let cache_dir = req
+            .cache_dir
+            .clone()
+            .or_else(|| std::env::var_os("GALVATRON_CACHE_DIR").map(PathBuf::from));
+        overrides.cache_dir = cache_dir.clone();
         Ok(ResolvedRequest {
             model_name,
             cluster_name,
@@ -474,6 +538,7 @@ impl Planner {
             train: req.train,
             cost_model,
             overrides,
+            cache_dir,
         })
     }
 
@@ -490,6 +555,26 @@ impl Planner {
     /// the run header — and to load a `--profile-db` exactly once — then
     /// plans from the same resolution).
     pub fn plan_resolved(&self, r: &ResolvedRequest) -> Result<PlanReport, PlanError> {
+        use crate::search::engine::persist;
+        // Request-level warm hit: an identical resolved request (see
+        // [`request_fingerprint`]) returns its stored artifact without
+        // searching. The entry is re-proved by the same Error-severity
+        // gate a fresh plan passes through; anything that fails to parse
+        // or validate is treated as corrupt and planned cold.
+        let request_fp = r.cache_dir.as_deref().map(|dir| (dir, request_fingerprint(r)));
+        if let Some((dir, fp)) = request_fp {
+            if let Some(v) = persist::load_plan_entry(dir, fp) {
+                match PlanReport::from_json(&v) {
+                    Ok(report) if crate::check::gate(&r.model, &r.cluster, &report).is_ok() => {
+                        return Ok(report);
+                    }
+                    _ => eprintln!(
+                        "warning: ignoring invalid cached plan entry {} (planning cold)",
+                        persist::plan_file_path(dir, fp).display()
+                    ),
+                }
+            }
+        }
         let (outcome, trace) = r.method.run_traced_with(&r.model, &r.cluster, &r.overrides);
         let outcome = outcome.ok_or_else(|| PlanError::Infeasible {
             reason: format!(
@@ -506,6 +591,9 @@ impl Planner {
         // artifact by the cheap Error-severity rules. A failure here is a
         // planner bug surfacing as a typed diagnostic, not a panic.
         crate::check::gate(&r.model, &r.cluster, &report)?;
+        if let Some((dir, fp)) = request_fp {
+            persist::store_plan_entry(dir, fp, &report.to_json());
+        }
         Ok(report)
     }
 

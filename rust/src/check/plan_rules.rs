@@ -163,6 +163,13 @@ pub fn rules() -> Vec<Box<dyn Checker>> {
             cheap: false,
             check: rederivation_skipped,
         }),
+        Box::new(Rule {
+            code: "GAL0025",
+            name: "cache-hit-rate",
+            description: "notes when a large search saw an unusually low cost-cache hit rate",
+            cheap: false,
+            check: cache_hit_rate,
+        }),
     ]
 }
 
@@ -747,6 +754,37 @@ fn batch_exceeds_max(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
             format!(
                 "plan batch {} exceeds the request's max_batch {}",
                 r.plan.batch, r.max_batch
+            ),
+        ));
+    }
+}
+
+/// Below this many cost-cache lookups the hit rate is dominated by the
+/// unavoidable first-touch misses of a small search and says nothing.
+const CACHE_RATE_MIN_LOOKUPS: u64 = 10_000;
+/// Large searches re-price the same (site, layer, strategy) keys across
+/// many (batch, pp) cells; a rate under this suggests the memoization
+/// (or a warm-started cache) is not being shared the way it should be.
+const CACHE_RATE_FLOOR: f64 = 0.5;
+
+fn cache_hit_rate(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(r) = ctx.report else { return };
+    let Some(t) = &r.search_trace else { return };
+    if t.cache_lookups < CACHE_RATE_MIN_LOOKUPS || t.cache_entries > t.cache_lookups {
+        return; // Too small to judge, or incoherent (GAL0017 territory).
+    }
+    let rate = 1.0 - (t.cache_entries as f64 / t.cache_lookups as f64);
+    if rate < CACHE_RATE_FLOOR {
+        out.push(Diagnostic::note(
+            "GAL0025",
+            "$.search_trace",
+            format!(
+                "cost-cache hit rate {:.0}% over {} lookups is below the expected {:.0}%: \
+                 the run repriced most keys instead of reusing them (cold cache on a \
+                 cache-unfriendly sweep, or a --cache-dir miss)",
+                rate * 100.0,
+                t.cache_lookups,
+                CACHE_RATE_FLOOR * 100.0
             ),
         ));
     }

@@ -34,7 +34,7 @@ commands:
             [--islands 2xA100-80G,2xRTX-TITAN-24G] [--max-batch N]
             [--dtype fp32|fp16|bf16] [--optimizer sgd|adam] [--zero]
             [--profile-db db.json] [--schedule 1f1b|gpipe] [--threads N]
-            [--out plan.json]
+            [--cache-dir DIR] [--out plan.json]
   simulate  --plan plan.json [--profile-db db.json]
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
   check     --plan plan.json and/or --model-file spec.json
@@ -136,6 +136,10 @@ fn plan_request(args: &Args) -> Result<PlanRequest> {
     if let Some(db) = args.get("profile-db") {
         req = req.profile_db(db);
     }
+    // Persistent planning cache (also reachable via GALVATRON_CACHE_DIR).
+    if let Some(dir) = args.get("cache-dir") {
+        req = req.cache_dir(dir);
+    }
     Ok(req)
 }
 
@@ -166,6 +170,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
         Err(e) => return Err(e.into()),
     };
     print!("{}", report.render());
+    // Wall-clock breakdown (cold vs warm-start); never part of the artifact.
+    if let Some(t) = report.search_trace.as_ref().and_then(|t| t.timing_summary()) {
+        println!("{t}");
+    }
     // Cross-check on the simulator under the same cost-model backend the
     // search priced with (resolved once above).
     let sim = planner.simulate_plan_costed(

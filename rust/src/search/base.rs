@@ -62,6 +62,12 @@ pub struct SearchConfig {
     /// pre-backend planner; a calibrated backend prices the same search
     /// from a loaded [`crate::cost::ProfileDb`].
     pub cost_model: CostModel,
+    /// Directory of the persistent planning cache
+    /// ([`crate::search::engine::persist`]). `None` (the default) keeps
+    /// every run self-contained; with a directory, the engine warm-starts
+    /// its cost tables from compatible prior runs and flushes what it
+    /// learned. Never changes a plan — only its wall time.
+    pub cache_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for SearchConfig {
@@ -79,6 +85,7 @@ impl Default for SearchConfig {
             threads: None,
             train: TrainConfig::default(),
             cost_model: CostModel::Analytic,
+            cache_dir: None,
         }
     }
 }

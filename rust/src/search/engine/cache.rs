@@ -9,11 +9,22 @@
 //! model pays for at most two distinct layers (the embedding-bearing
 //! first/head-bearing last layer being the usual second class).
 //!
+//! Keys are fully flat: the strategy is packed into a `u64`
+//! ([`strategy_key`] — ordered levels + CKPT bit, injective for the whole
+//! catalog space), so every lookup is one `HashMap` probe instead of the
+//! former linear scan of a `Vec<(Strategy, LayerCost)>` row under the read
+//! lock. The same packed keys are what [`super::persist`] serializes.
+//!
 //! Heterogeneous clusters: a cost additionally depends on the island class
 //! the stage runs on (FLOP rate, bus bandwidth, memory), so every key
 //! carries the site class and the cache holds one bound estimator per
 //! class. A homogeneous cluster has a single class 0 — its keys, lookup
-//! counts and entries are identical to the pre-island cache.
+//! counts and entries are identical to the pre-island cache. Since
+//! [`crate::cost::CostEstimator::layer_cost`] never reads the PP binding
+//! (only p2p pricing does, and p2p is never cached), the engine shares one
+//! cache across every PP degree of a run, with site classes deduplicated
+//! run-wide. Keys carry the microbatch size `b_m` — not the global batch —
+//! so adjacent batch sizes of the sweep reuse each other's entries too.
 //!
 //! Thread safety: the cache is shared by every worker of the engine's
 //! (batch × PP) fan-out. Values are pure functions of their key, so a
@@ -21,6 +32,14 @@
 //! results and the insert path re-checks under the write lock, keeping the
 //! entry count (and thus the serialized `SearchTrace` cache statistics)
 //! independent of the thread count.
+//!
+//! Persistence: [`CostCache::attach_persist`] loads a prior run's tables
+//! (translated from stable site fingerprints to this run's class ids) as a
+//! read-only second level consulted on an in-memory miss. A disk hit is
+//! inserted into the in-memory map exactly like a computed value, so the
+//! lookup/entry counters — and therefore the serialized trace — are
+//! byte-identical warm vs cold. [`CostCache::flush_persist`] merges the
+//! run's tables back to disk.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,7 +47,9 @@ use std::sync::RwLock;
 
 use crate::cost::estimator::{CostEstimator, LayerCost, StageCosts};
 use crate::model::{LayerProfile, ModelProfile};
-use crate::parallel::Strategy;
+use crate::parallel::{Dim, Strategy};
+
+use super::persist::PersistHandle;
 
 /// Map each layer to a cost class: two layers share a class iff their
 /// profiles *and* attributed embedding/head params are identical, making
@@ -61,28 +82,62 @@ fn same_cost_profile(model: &ModelProfile, a: usize, b: usize) -> bool {
         && model.extra_params(a) == model.extra_params(b)
 }
 
-/// Outer key: everything except the strategy (which is matched by value in
-/// the inner list, avoiding a Strategy clone per lookup). The leading u64
-/// is the cost-model provenance fingerprint
-/// ([`crate::cost::CostModel::cache_fingerprint`], 0 = analytic): costs
-/// are pure functions of their key *and* the backend that priced them, so
-/// memoized entries from different backends must never be confused.
-type CellKey = (u64, u32, u32, u64, u64); // (provenance, site class, layer class, b_m bits, extra_params bits)
+/// Pack a [`Strategy`] into a `u64` key: bit 0 is the CKPT flag, then one
+/// byte per level (outermost first) holding `(dim_tag << 6) | log2(degree)`.
+/// Level *order* matters to cost (outer levels ride slower links), degrees
+/// are powers of two ≥ 2 and dim tags are nonzero, so every level byte is
+/// nonzero and the packing is injective for up to 7 levels (the catalog
+/// has at most 3: the distinct dims DP/SDP/TP).
+pub(crate) fn strategy_key(s: &Strategy) -> u64 {
+    debug_assert!(s.levels.len() <= 7, "strategy has more levels than the packed key holds");
+    let mut k: u64 = u64::from(s.ckpt);
+    for (i, (dim, degree)) in s.levels.iter().enumerate().take(7) {
+        let tag: u64 = match dim {
+            Dim::Dp => 1,
+            Dim::Sdp => 2,
+            Dim::Tp => 3,
+        };
+        let byte = (tag << 6) | (degree.trailing_zeros() as u64 & 0x3f);
+        k |= byte << (8 * (i as u64 + 1));
+    }
+    k
+}
 
-/// Memoizing cost source bound to one (cluster, PP, overlap, cost-model)
-/// placement context — the engine builds one per PP degree, holding one
-/// estimator per island site class of that degree.
+/// Flat key of one memoized layer cost. The leading u64 is the cost-model
+/// provenance fingerprint ([`crate::cost::CostModel::cache_fingerprint`],
+/// 0 = analytic): costs are pure functions of their key *and* the backend
+/// that priced them, so memoized entries from different backends must
+/// never be confused.
+pub(crate) type LayerKey = (u64, u32, u32, u64, u64, u64); // (provenance, site class, layer class, b_m bits, extra_params bits, strategy key)
+
+/// Flat key of one memoized transform cost R. The trailing u64 packs the
+/// (prev, cur) batch-split degrees: R depends on the strategies only
+/// through their splits (parallel::transform) and on the group's slowest
+/// link, which is fixed per site class.
+pub(crate) type TransformKey = (u64, u32, u32, u64, u64); // (provenance, site class, layer class, b_m bits, packed splits)
+
+pub(crate) fn pack_splits(prev: usize, cur: usize) -> u64 {
+    ((prev as u64) << 32) | (cur as u64 & 0xffff_ffff)
+}
+
+/// Memoizing cost source shared by every cell of a search run, holding one
+/// bound estimator per island site class (run-wide deduplicated across PP
+/// degrees by the engine).
 pub struct CostCache {
     /// Site-class-bound estimators, indexed by `StageSite::class`.
     ests: Vec<CostEstimator>,
     classes: Vec<u32>,
     /// Cost-model fingerprint of the bound estimators (folded into keys).
     provenance: u64,
-    layer_costs: RwLock<HashMap<CellKey, Vec<(Strategy, LayerCost)>>>,
-    /// (provenance, site class, layer class, b_m bits) ->
-    /// [(prev batch-split, cur batch-split), R].
-    transforms: RwLock<HashMap<(u64, u32, u32, u64), Vec<((usize, usize), f64)>>>,
+    layer_costs: RwLock<HashMap<LayerKey, LayerCost>>,
+    transforms: RwLock<HashMap<TransformKey, f64>>,
     lookups: AtomicU64,
+    /// Read-only warm-start tables loaded from the persistent cache,
+    /// consulted on an in-memory miss (disk hits are re-inserted into the
+    /// in-memory maps so the counters match a cold run exactly).
+    disk_layer: HashMap<LayerKey, LayerCost>,
+    disk_transforms: HashMap<TransformKey, f64>,
+    persist: Option<PersistHandle>,
 }
 
 impl CostCache {
@@ -107,7 +162,35 @@ impl CostCache {
             layer_costs: RwLock::new(HashMap::new()),
             transforms: RwLock::new(HashMap::new()),
             lookups: AtomicU64::new(0),
+            disk_layer: HashMap::new(),
+            disk_transforms: HashMap::new(),
+            persist: None,
         }
+    }
+
+    /// Bind a persistent cache directory: loads any valid prior tables for
+    /// this context (stale/corrupt/mismatched files are ignored with a
+    /// warning) and arms [`CostCache::flush_persist`]. `site_fps` maps this
+    /// run's site class ids to their stable content fingerprints. Returns
+    /// `(warm_start, entries_loaded)`.
+    pub fn attach_persist(&mut self, handle: PersistHandle) -> (bool, u64) {
+        let (warm, layer, transforms) = handle.load(self.provenance);
+        let loaded = (layer.len() + transforms.len()) as u64;
+        self.disk_layer = layer;
+        self.disk_transforms = transforms;
+        self.persist = Some(handle);
+        (warm, loaded)
+    }
+
+    /// Merge this run's tables into the persistent cache (no-op without
+    /// [`CostCache::attach_persist`]; IO errors degrade to a warning).
+    pub fn flush_persist(&self) {
+        let Some(handle) = &self.persist else { return };
+        let layer =
+            self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).clone();
+        let transforms =
+            self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).clone();
+        handle.flush(&layer, &transforms);
     }
 
     /// The underlying (uncached) estimator for `site_class`.
@@ -130,10 +213,11 @@ impl CostCache {
     }
 
     /// Distinct entries resident (the union of keys touched — also
-    /// deterministic across thread counts; see module docs on races).
+    /// deterministic across thread counts and across warm/cold starts; see
+    /// module docs on races and on the disk second level).
     pub fn entries(&self) -> u64 {
-        let lc: usize = self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).values().map(Vec::len).sum();
-        let tc: usize = self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).values().map(Vec::len).sum();
+        let lc = self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).len();
+        let tc = self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).len();
         (lc + tc) as u64
     }
 
@@ -151,21 +235,33 @@ impl CostCache {
         extra_params: f64,
     ) -> LayerCost {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let class = self.class_of(layer_idx);
-        let key: CellKey = (self.provenance, site, class, b_m.to_bits(), extra_params.to_bits());
-        if let Some(row) = self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key) {
-            if let Some((_, c)) = row.iter().find(|(s, _)| s == strategy) {
-                return *c;
-            }
+        let key: LayerKey = (
+            self.provenance,
+            site,
+            self.class_of(layer_idx),
+            b_m.to_bits(),
+            extra_params.to_bits(),
+            strategy_key(strategy),
+        );
+        if let Some(c) =
+            self.layer_costs.read().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key)
+        {
+            return *c;
         }
-        let c = self.ests[site as usize].layer_cost(layer, strategy, b_m, extra_params);
-        let mut map = self.layer_costs.write().unwrap_or_else(std::sync::PoisonError::into_inner);
-        let row = map.entry(key).or_default();
-        // Re-check: another worker may have inserted while we computed.
-        if !row.iter().any(|(s, _)| s == strategy) {
-            row.push((strategy.clone(), c));
-        }
-        c
+        // Persisted values are bit-identical to recomputed ones (the key
+        // carries the cost-model provenance), so either source may fill
+        // the in-memory entry.
+        let c = match self.disk_layer.get(&key) {
+            Some(c) => *c,
+            None => self.ests[site as usize].layer_cost(layer, strategy, b_m, extra_params),
+        };
+        // Re-check under the write lock: another worker may have inserted.
+        *self
+            .layer_costs
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .entry(key)
+            .or_insert(c)
     }
 
     fn transform_cost_for(
@@ -178,24 +274,28 @@ impl CostCache {
         b_m: f64,
     ) -> f64 {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        // R depends on the strategies only through their batch-split degrees
-        // (parallel::transform) and on the group's slowest link, which is
-        // fixed per site class (all catalog strategies span the full stage
-        // group), so splits are a sufficient key.
-        let splits = (prev.batch_split(), cur.batch_split());
-        let key = (self.provenance, site, self.class_of(layer_idx), b_m.to_bits());
-        if let Some(row) = self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key) {
-            if let Some((_, r)) = row.iter().find(|(sp, _)| *sp == splits) {
-                return *r;
-            }
+        let key: TransformKey = (
+            self.provenance,
+            site,
+            self.class_of(layer_idx),
+            b_m.to_bits(),
+            pack_splits(prev.batch_split(), cur.batch_split()),
+        );
+        if let Some(r) =
+            self.transforms.read().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key)
+        {
+            return *r;
         }
-        let r = self.ests[site as usize].transform_cost(layer, prev, cur, b_m);
-        let mut map = self.transforms.write().unwrap_or_else(std::sync::PoisonError::into_inner);
-        let row = map.entry(key).or_default();
-        if !row.iter().any(|(sp, _)| *sp == splits) {
-            row.push((splits, r));
-        }
-        r
+        let r = match self.disk_transforms.get(&key) {
+            Some(r) => *r,
+            None => self.ests[site as usize].transform_cost(layer, prev, cur, b_m),
+        };
+        *self
+            .transforms
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .entry(key)
+            .or_insert(r)
     }
 }
 
@@ -273,6 +373,27 @@ mod tests {
         // Interior layers identical; first/last differ via embeddings/head.
         assert!(distinct <= 3, "expected <=3 classes, got {distinct}: {classes:?}");
         assert_eq!(classes[1], classes[2]);
+    }
+
+    #[test]
+    fn strategy_key_is_injective_over_the_catalog() {
+        // Every catalog strategy for every group size must map to a
+        // distinct key; level order must matter.
+        use std::collections::HashMap;
+        for group in [1usize, 2, 4, 8] {
+            let cands = candidate_strategies(group, &SpaceOptions::default());
+            let mut seen: HashMap<u64, &Strategy> = HashMap::new();
+            for s in &cands {
+                if let Some(prev) = seen.insert(strategy_key(s), s) {
+                    panic!("key collision at group {group}: {prev} vs {s}");
+                }
+            }
+        }
+        let ab = Strategy { levels: vec![(Dim::Dp, 2), (Dim::Tp, 4)], ckpt: false };
+        let ba = Strategy { levels: vec![(Dim::Tp, 4), (Dim::Dp, 2)], ckpt: false };
+        assert_ne!(strategy_key(&ab), strategy_key(&ba), "level order must be keyed");
+        let ck = Strategy { levels: ab.levels.clone(), ckpt: true };
+        assert_ne!(strategy_key(&ab), strategy_key(&ck), "ckpt must be keyed");
     }
 
     #[test]

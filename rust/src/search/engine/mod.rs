@@ -24,14 +24,16 @@
 //! `search::dp` remains the pure per-stage kernel.
 
 pub mod cache;
+pub mod persist;
 pub mod trace;
 mod cells;
 
 pub use cache::{layer_classes, CostCache, SiteCosts};
-pub use trace::{CellTrace, SearchTrace};
+pub use trace::{CellTrace, SearchTiming, SearchTrace};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::cluster::{ClusterSpec, StageSite};
 use crate::cost::CostEstimator;
@@ -63,9 +65,10 @@ pub enum CellAlgo {
 }
 
 /// Precomputed per-PP-degree context shared by all cells of that degree:
-/// stage group size, the candidate catalog, the island slot sites, the
-/// candidate stage→slot placements, and the memoized cost cache (one
-/// bound estimator per island site class).
+/// stage group size, the candidate catalog, the island slot sites (their
+/// `class` rewritten to *run-wide* registry ids), the candidate
+/// stage→slot placements, and a handle on the run-wide memoized cost
+/// cache shared by every PP degree.
 pub(crate) struct PpContext {
     pub pp: usize,
     pub group: usize,
@@ -78,7 +81,60 @@ pub(crate) struct PpContext {
     /// homogeneous cluster collapses to the identity alone, so its cell
     /// evaluation counts — and trace — are unchanged.
     pub placements: Vec<Vec<usize>>,
-    pub cache: CostCache,
+    pub cache: Arc<CostCache>,
+}
+
+/// One entry of the run-wide site registry: a distinct cost signature over
+/// every explored PP degree, plus its stable persistence fingerprint.
+///
+/// Memoized costs never read the PP binding (only p2p pricing does, and
+/// p2p is never cached), so two slot sites are cost-equivalent iff their
+/// device class and *effective bandwidth profile over the spans they
+/// price* agree. A site whose `intra_limit` covers its whole stage group
+/// (`saturated`) prices every span at `intra_bw` — all such sites with the
+/// same (gpu, intra_bw) merge into one class regardless of PP degree,
+/// which is what lets e.g. titan8's PP=1/2/4/8 contexts share one table.
+/// Unsaturated sites (mixed-island stages that can spill to `inter_bw`)
+/// merge only on an exact (gpu, intra_bw, intra_limit) match.
+struct SiteClass {
+    /// Representative site; for saturated classes, the member with the
+    /// largest `intra_limit` seen, so the bound estimator serves every
+    /// merged context's spans from the intra branch.
+    site: StageSite,
+    /// A PP degree the representative occurred at (any member is valid:
+    /// cached costs never depend on it).
+    pp: usize,
+    saturated: bool,
+    /// Stable content fingerprint (see [`persist::site_fingerprint`]).
+    fp: u64,
+}
+
+fn register_site(registry: &mut Vec<SiteClass>, site: &StageSite, group: usize, pp: usize) -> u32 {
+    let saturated = site.intra_limit >= group;
+    let found = registry.iter().position(|e| {
+        e.saturated == saturated
+            && e.site.gpu == site.gpu
+            && e.site.intra_bw == site.intra_bw
+            && (saturated || e.site.intra_limit == site.intra_limit)
+    });
+    match found {
+        Some(i) => {
+            if saturated && site.intra_limit > registry[i].site.intra_limit {
+                registry[i].site = site.clone();
+                registry[i].pp = pp;
+            }
+            i as u32
+        }
+        None => {
+            registry.push(SiteClass {
+                site: site.clone(),
+                pp,
+                saturated,
+                fp: persist::site_fingerprint(site, saturated),
+            });
+            (registry.len() - 1) as u32
+        }
+    }
 }
 
 /// Candidate stage→slot placements for one PP degree. The capacity-ranked
@@ -118,7 +174,13 @@ pub struct SearchEngine<'a> {
     algo: CellAlgo,
     threads: usize,
     contexts: Vec<PpContext>,
+    /// The run-wide cost cache every context shares (one bound estimator
+    /// per registry site class, deduplicated across PP degrees).
+    cache: Arc<CostCache>,
     flops_w: Vec<f64>,
+    precompute_secs: f64,
+    warm_start: bool,
+    persisted_entries: u64,
 }
 
 impl<'a> SearchEngine<'a> {
@@ -128,43 +190,73 @@ impl<'a> SearchEngine<'a> {
         cfg: &'a SearchConfig,
         algo: CellAlgo,
     ) -> SearchEngine<'a> {
+        let t0 = Instant::now();
         let threads = resolve_worker_count(cfg.threads);
         let classes = layer_classes(model);
-        let contexts: Vec<PpContext> = pp_degrees(model, cluster, cfg)
+        // Pass 1: build per-degree contexts against a run-wide site
+        // registry, rewriting each slot's class to its registry id.
+        let mut registry: Vec<SiteClass> = Vec::new();
+        let mut parts: Vec<(usize, usize, Vec<Strategy>, Vec<StageSite>, Vec<Vec<usize>>)> =
+            Vec::new();
+        for pp in pp_degrees(model, cluster, cfg) {
+            let group = cluster.n_devices() / pp;
+            let candidates = stage_candidates(cfg, group);
+            let mut sites = cluster.stage_sites(pp);
+            for site in &mut sites {
+                site.class = register_site(&mut registry, site, group, pp);
+            }
+            let placements = placement_candidates(&sites);
+            parts.push((pp, group, candidates, sites, placements));
+        }
+        // Pass 2: one bound estimator per registry class, one shared cache.
+        let ests: Vec<CostEstimator> = registry
+            .iter()
+            .map(|e| {
+                CostEstimator::with_site(cluster, e.pp, cfg.overlap_slowdown, e.site.clone())
+                    .with_train(cfg.train)
+                    .with_cost_model(cfg.cost_model.clone())
+            })
+            .collect();
+        let site_fps: Vec<u64> = registry.iter().map(|e| e.fp).collect();
+        let mut cache = CostCache::with_sites(ests, classes);
+        let (warm_start, persisted_entries) = match &cfg.cache_dir {
+            Some(dir) => {
+                let context_fp = persist::context_fingerprint(model, cluster, cfg);
+                cache.attach_persist(persist::PersistHandle::new(
+                    dir.clone(),
+                    context_fp,
+                    site_fps,
+                ))
+            }
+            None => (false, 0),
+        };
+        let cache = Arc::new(cache);
+        let contexts: Vec<PpContext> = parts
             .into_iter()
-            .map(|pp| {
-                let group = cluster.n_devices() / pp;
-                let candidates = stage_candidates(cfg, group);
-                let sites = cluster.stage_sites(pp);
-                // One bound estimator per distinct island site class (a
-                // homogeneous cluster has exactly one, class 0).
-                let n_classes =
-                    sites.iter().map(|s| s.class).max().map(|c| c as usize + 1).unwrap_or(1);
-                let ests: Vec<CostEstimator> = (0..n_classes)
-                    .map(|c| {
-                        let site = sites
-                            .iter()
-                            .find(|s| s.class == c as u32)
-                            .unwrap_or_else(|| unreachable!("contiguous site class ids"))
-                            .clone();
-                        CostEstimator::with_site(cluster, pp, cfg.overlap_slowdown, site)
-                            .with_train(cfg.train)
-                            .with_cost_model(cfg.cost_model.clone())
-                    })
-                    .collect();
-                let placements = placement_candidates(&sites);
-                PpContext {
-                    pp,
-                    group,
-                    candidates,
-                    sites,
-                    placements,
-                    cache: CostCache::with_sites(ests, classes.clone()),
-                }
+            .map(|(pp, group, candidates, sites, placements)| PpContext {
+                pp,
+                group,
+                candidates,
+                sites,
+                placements,
+                cache: Arc::clone(&cache),
             })
             .collect();
         let flops_w = model.layers.iter().map(|l| l.flops_fwd).collect();
-        SearchEngine { model, cluster, cfg, algo, threads, contexts, flops_w }
+        let precompute_secs = t0.elapsed().as_secs_f64();
+        SearchEngine {
+            model,
+            cluster,
+            cfg,
+            algo,
+            threads,
+            contexts,
+            cache,
+            flops_w,
+            precompute_secs,
+            warm_start,
+            persisted_entries,
+        }
     }
 
     /// Worker count this engine resolved (for diagnostics).
@@ -175,6 +267,7 @@ impl<'a> SearchEngine<'a> {
     /// Run the full sweep: fan cells out, reduce in order, return the best
     /// outcome (if any plan fit) plus the structured search trace.
     pub fn run(&self) -> (Option<SearchOutcome>, SearchTrace) {
+        let t_run = Instant::now();
         let batches = crate::search::batch_candidates(self.cfg.max_batch);
         let per_batch = self.contexts.len();
         let mut trace = SearchTrace::default();
@@ -201,14 +294,15 @@ impl<'a> SearchEngine<'a> {
                     // Computed in this look-ahead wave, but the patience
                     // rule already ended the sweep at an earlier batch:
                     // record the work, discard the results.
-                    for cell in slice {
+                    for (cell, secs) in slice {
                         trace.cells_discarded += 1;
                         trace.cells.push(cell.to_trace(true));
+                        trace.timing.cell_secs.push((cell.batch, cell.pp, *secs));
                     }
                     continue;
                 }
                 let mut any_feasible = false;
-                for cell in slice {
+                for (cell, secs) in slice {
                     any_feasible |= cell.feasible;
                     trace.cells_explored += 1;
                     trace.evaluations += cell.evaluations;
@@ -216,6 +310,7 @@ impl<'a> SearchEngine<'a> {
                         trace.cells_oom += 1;
                     }
                     trace.cells.push(cell.to_trace(false));
+                    trace.timing.cell_secs.push((cell.batch, cell.pp, *secs));
                     if let Some(out) = &cell.best {
                         if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
                             best = Some(out.clone());
@@ -237,22 +332,32 @@ impl<'a> SearchEngine<'a> {
             }
         }
 
-        for ctx in &self.contexts {
-            trace.cache_lookups += ctx.cache.lookups();
-            trace.cache_entries += ctx.cache.entries();
-        }
+        // The run-wide cache is shared by every context: read its
+        // statistics once (the former per-context sum double-counted
+        // nothing, but there is only one cache now).
+        trace.cache_lookups = self.cache.lookups();
+        trace.cache_entries = self.cache.entries();
+        // Persist what this run learned (no-op without a cache dir).
+        self.cache.flush_persist();
+        let search_secs = t_run.elapsed().as_secs_f64();
+        trace.timing.precompute_secs = self.precompute_secs;
+        trace.timing.search_secs = search_secs;
+        trace.timing.total_secs = self.precompute_secs + search_secs;
+        trace.timing.warm_start = self.warm_start;
+        trace.timing.persisted_entries = self.persisted_entries;
         (best, trace)
     }
 
     /// Compute one wave of cells, fanning out across the worker pool.
-    /// Results come back in input order regardless of completion order.
-    fn run_wave(&self, wave_cells: &[(usize, usize)]) -> Vec<CellOutcome> {
+    /// Results come back in input order regardless of completion order,
+    /// each with its wall time (diagnostics only — never serialized).
+    fn run_wave(&self, wave_cells: &[(usize, usize)]) -> Vec<(CellOutcome, f64)> {
         let workers = self.threads.min(wave_cells.len()).max(1);
         if workers <= 1 {
-            return wave_cells.iter().map(|&(b, c)| self.eval_cell(b, c)).collect();
+            return wave_cells.iter().map(|&(b, c)| self.eval_cell_timed(b, c)).collect();
         }
         let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<CellOutcome>>> =
+        let slots: Vec<Mutex<Option<(CellOutcome, f64)>>> =
             wave_cells.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..workers {
@@ -262,7 +367,7 @@ impl<'a> SearchEngine<'a> {
                         break;
                     }
                     let (batch, ctx_idx) = wave_cells[i];
-                    let out = self.eval_cell(batch, ctx_idx);
+                    let out = self.eval_cell_timed(batch, ctx_idx);
                     *slots[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
                         Some(out);
                 });
@@ -276,6 +381,12 @@ impl<'a> SearchEngine<'a> {
                     .unwrap_or_else(|| unreachable!("worker filled every wave slot"))
             })
             .collect()
+    }
+
+    fn eval_cell_timed(&self, batch: usize, ctx_idx: usize) -> (CellOutcome, f64) {
+        let t = Instant::now();
+        let out = self.eval_cell(batch, ctx_idx);
+        (out, t.elapsed().as_secs_f64())
     }
 
     fn eval_cell(&self, batch: usize, ctx_idx: usize) -> CellOutcome {
@@ -339,6 +450,79 @@ mod tests {
         assert!(trace.cache_lookups > trace.cache_entries);
         assert!(trace.cache_hit_rate() > 0.5, "hit rate {}", trace.cache_hit_rate());
         assert!(trace.best_cell.is_some());
+    }
+
+    #[test]
+    fn run_wide_registry_merges_saturated_sites_across_pp() {
+        // titan8: every PP degree's slots are saturated (the intra limit
+        // equals the stage group) with one gpu/bus shape, so the whole run
+        // shares a single cost class — the cross-PP sharing the run-wide
+        // cache exists for.
+        let hom = cluster_by_name("titan8").unwrap();
+        let mut registry: Vec<SiteClass> = Vec::new();
+        for pp in [1usize, 2, 4, 8] {
+            let group = hom.n_devices() / pp;
+            for site in hom.stage_sites(pp) {
+                register_site(&mut registry, &site, group, pp);
+            }
+        }
+        assert_eq!(registry.len(), 1, "homogeneous cluster must collapse to one class");
+        assert!(registry[0].saturated);
+        // hetero4: the PP=1 whole-cluster slot spans both islands
+        // (unsaturated: groups can spill to the inter link), while the
+        // saturated per-island classes of PP=2 and PP=4 merge.
+        let het = cluster_by_name("hetero4").unwrap();
+        let mut reg: Vec<SiteClass> = Vec::new();
+        for pp in [1usize, 2, 4] {
+            let group = het.n_devices() / pp;
+            for site in het.stage_sites(pp) {
+                register_site(&mut reg, &site, group, pp);
+            }
+        }
+        assert_eq!(reg.len(), 3, "floor + two island classes");
+        assert!(!reg[0].saturated, "pp=1 spanning slot can spill to inter_bw");
+        // Distinct classes keep distinct persistence fingerprints.
+        let mut fps: Vec<u64> = reg.iter().map(|e| e.fp).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), reg.len());
+    }
+
+    #[test]
+    fn shared_cache_matches_per_degree_costs() {
+        // The run-wide cache must return bit-identical costs to a direct
+        // per-PP estimator for every degree it serves — the saturation
+        // merge may never change a value.
+        use crate::cost::StageCosts;
+        use crate::search::decision_tree::{candidate_strategies, SpaceOptions};
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap().with_memory_budget(16.0 * GIB);
+        let c = SearchConfig::default();
+        let engine = SearchEngine::new(&model, &cluster, &c, CellAlgo::Even);
+        for ctx in &engine.contexts {
+            let direct = crate::cost::CostEstimator::new(&cluster, ctx.pp, c.overlap_slowdown)
+                .with_train(c.train)
+                .with_cost_model(c.cost_model.clone());
+            let cands = candidate_strategies(ctx.group, &SpaceOptions::default());
+            let class = ctx.sites[0].class;
+            for s in cands.iter().take(6) {
+                for b_m in [1.0f64, 4.0] {
+                    let via_cache = ctx.cache.site_costs(class).layer_cost_at(
+                        1,
+                        &model.layers[1],
+                        s,
+                        b_m,
+                        0.0,
+                    );
+                    assert_eq!(
+                        via_cache,
+                        direct.layer_cost(&model.layers[1], s, b_m, 0.0),
+                        "pp={} {s} b_m={b_m}",
+                        ctx.pp
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,562 @@
+//! Cross-run persistence for the planner's memoized cost tables and for
+//! whole plan artifacts (the `--cache-dir` / `GALVATRON_CACHE_DIR`
+//! feature).
+//!
+//! Two kinds of entries live in a cache directory:
+//!
+//!   * `costs-<context>.bin` — the [`super::cache::CostCache`] layer-cost
+//!     and transform tables of one *cost context*, a length-prefixed
+//!     little-endian binary with a versioned header. The context
+//!     fingerprint ([`context_fingerprint`]) hashes everything a memoized
+//!     cost value can depend on: the model's layer profiles and attributed
+//!     embedding/head params, the cluster's islands and links, the overlap
+//!     slowdown, the training numerics, and the cost-model provenance
+//!     fingerprint. Anything else (batch caps, schedules, thread counts,
+//!     search spaces) only selects *which* keys are queried, never their
+//!     values, so runs that differ only in those share one cost file.
+//!   * `plan-<request>.json` — a whole serialized
+//!     [`crate::api::PlanReport`] keyed by a request fingerprint computed
+//!     in `api::request`: an identical `PlanRequest` returns its artifact
+//!     without searching at all (the warm-start path for daemons and
+//!     sweeps).
+//!
+//! Site classes are run-local ids (assigned by the engine's registry in
+//! discovery order, which depends on the explored PP degrees), so the
+//! persisted keys replace them with stable *site fingerprints*
+//! ([`site_fingerprint`]) and the loader translates back into whatever ids
+//! the current run assigned. Entries for sites the current run does not
+//! use are preserved across a flush, never dropped.
+//!
+//! Failure policy: a missing file is a cold start; a corrupt, truncated,
+//! version-skewed or fingerprint-mismatched file is *ignored with a
+//! warning* and planning proceeds cold — the cache can never change a
+//! plan, only its wall time. Writes go through a temp file + atomic rename
+//! and degrade to a warning on IO errors.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::cluster::{ClusterSpec, StageSite};
+use crate::cost::calibration::fnv1a64;
+use crate::cost::estimator::LayerCost;
+use crate::model::ModelProfile;
+use crate::parallel::memory::LayerMemory;
+use crate::search::base::SearchConfig;
+use crate::util::json::Json;
+
+use super::cache::{LayerKey, TransformKey};
+
+/// Bump when the binary layout of `costs-*.bin` changes.
+const COST_FILE_VERSION: u32 = 1;
+/// Bump when the JSON layout of `plan-*.json` changes.
+const PLAN_FILE_VERSION: u64 = 1;
+const COST_MAGIC: &[u8; 4] = b"GVCC";
+
+fn warn(msg: &str) {
+    eprintln!("warning: {msg}");
+}
+
+// ---- fingerprints ---------------------------------------------------------
+
+/// Byte-accumulating FNV-1a hasher over heterogeneous fields.
+#[derive(Default)]
+pub(crate) struct Fingerprint {
+    buf: Vec<u8>,
+}
+
+impl Fingerprint {
+    pub(crate) fn new() -> Fingerprint {
+        Fingerprint::default()
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub(crate) fn usize(&mut self, v: usize) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub(crate) fn str(&mut self, s: &str) -> &mut Self {
+        // Length-prefix so concatenated strings cannot alias.
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub(crate) fn finish(&self) -> u64 {
+        fnv1a64(&self.buf)
+    }
+}
+
+/// Stable content fingerprint of one site class of the engine's run-wide
+/// registry. `saturated` marks classes whose intra-island limit covers
+/// every group the class prices (their effective bandwidth profile is
+/// constant `intra_bw`), which is what lets the registry merge them across
+/// PP degrees; the concrete limit is hashed only for unsaturated sites.
+pub(crate) fn site_fingerprint(site: &StageSite, saturated: bool) -> u64 {
+    let mut fp = Fingerprint::new();
+    fp.str(&site.gpu.name).f64(site.gpu.mem_bytes).f64(site.gpu.flops).f64(site.intra_bw);
+    if saturated {
+        fp.u64(u64::MAX);
+    } else {
+        fp.usize(site.intra_limit);
+    }
+    fp.finish()
+}
+
+/// Fold a model's cost-relevant content (layer profiles + attributed
+/// embedding/head params) into `fp`. Names are deliberately excluded:
+/// they never enter a cost formula.
+pub(crate) fn hash_model(fp: &mut Fingerprint, model: &ModelProfile) {
+    fp.usize(model.n_layers());
+    for (i, l) in model.layers.iter().enumerate() {
+        fp.usize(l.hidden)
+            .usize(l.seq)
+            .usize(l.heads)
+            .usize(l.kv_seq)
+            .f64(l.params)
+            .f64(l.flops_fwd)
+            .f64(l.act_bytes)
+            .f64(l.bnd_bytes)
+            .f64(model.extra_params(i));
+    }
+}
+
+/// Fold a cluster's cost-relevant content (islands, budgets, links) into
+/// `fp`. Memory budgets are part of the resolved cluster, so a different
+/// `--memory` lands in a different cache context.
+pub(crate) fn hash_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
+    fp.usize(cluster.islands.len());
+    for isl in &cluster.islands {
+        fp.str(&isl.gpu.name)
+            .f64(isl.gpu.mem_bytes)
+            .f64(isl.gpu.flops)
+            .usize(isl.count)
+            .f64(isl.intra_bw);
+    }
+    fp.f64(cluster.inter_bw);
+}
+
+/// Fold training numerics into `fp` (dtype/optimizer/ZeRO all change
+/// memoized memory terms).
+pub(crate) fn hash_train(fp: &mut Fingerprint, train: &crate::model::TrainConfig) {
+    fp.u64(train.dtype as u64).u64(train.optimizer as u64).u64(u64::from(train.zero));
+}
+
+/// Fingerprint of everything a memoized cost value depends on. Two runs
+/// with equal context fingerprints may share cost tables; anything that
+/// could change a cached value (model content, cluster shape or links,
+/// overlap, training numerics, cost-model backend) changes the
+/// fingerprint and therefore the cache file. Batch caps, schedules,
+/// search spaces and thread counts only select *which* keys are queried,
+/// never their values, so they are deliberately excluded.
+pub fn context_fingerprint(
+    model: &ModelProfile,
+    cluster: &ClusterSpec,
+    cfg: &SearchConfig,
+) -> u64 {
+    let mut fp = Fingerprint::new();
+    fp.u64(u64::from(COST_FILE_VERSION));
+    hash_model(&mut fp, model);
+    hash_cluster(&mut fp, cluster);
+    fp.f64(cfg.overlap_slowdown);
+    hash_train(&mut fp, &cfg.train);
+    fp.u64(cfg.cost_model.cache_fingerprint());
+    fp.finish()
+}
+
+// ---- file paths -----------------------------------------------------------
+
+/// Path of the cost-table file for one context fingerprint.
+pub fn cost_file_path(dir: &Path, context_fp: u64) -> PathBuf {
+    dir.join(format!("costs-{context_fp:016x}.bin"))
+}
+
+/// Path of the persisted plan artifact for one request fingerprint.
+pub fn plan_file_path(dir: &Path, request_fp: u64) -> PathBuf {
+    dir.join(format!("plan-{request_fp:016x}.json"))
+}
+
+// ---- binary encode/decode -------------------------------------------------
+
+/// Raw persisted tables, keyed by (provenance, site *fingerprint*, ...) —
+/// the stable on-disk form of the cache's run-local keys.
+#[derive(Default)]
+pub(crate) struct CostStore {
+    pub(crate) layer: HashMap<(u64, u64, u32, u64, u64, u64), LayerCost>,
+    pub(crate) transforms: HashMap<(u64, u64, u32, u64, u64), f64>,
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn u32(&mut self) -> Option<u32> {
+        let s = self.b.get(self.pos..self.pos + 4)?;
+        self.pos += 4;
+        Some(u32::from_le_bytes(s.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        let s = self.b.get(self.pos..self.pos + 8)?;
+        self.pos += 8;
+        Some(u64::from_le_bytes(s.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+}
+
+fn encode_cost_store(context_fp: u64, store: &CostStore) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(
+        24 + 4 + store.layer.len() * 92 + store.transforms.len() * 44,
+    );
+    buf.extend_from_slice(COST_MAGIC);
+    push_u32(&mut buf, COST_FILE_VERSION);
+    push_u64(&mut buf, context_fp);
+    push_u64(&mut buf, store.layer.len() as u64);
+    push_u64(&mut buf, store.transforms.len() as u64);
+    // Deterministic record order so identical stores encode identically.
+    let mut layer: Vec<_> = store.layer.iter().collect();
+    layer.sort_unstable_by_key(|(k, _)| **k);
+    for (&(prov, site_fp, class, b_m, extra, strat), c) in layer {
+        push_u64(&mut buf, prov);
+        push_u64(&mut buf, site_fp);
+        push_u32(&mut buf, class);
+        push_u64(&mut buf, b_m);
+        push_u64(&mut buf, extra);
+        push_u64(&mut buf, strat);
+        for v in [c.fwd, c.bwd, c.bwd_sync, c.mem.o_ms, c.mem.o_f, c.mem.o_b] {
+            push_u64(&mut buf, v.to_bits());
+        }
+    }
+    let mut transforms: Vec<_> = store.transforms.iter().collect();
+    transforms.sort_unstable_by_key(|(k, _)| **k);
+    for (&(prov, site_fp, class, b_m, splits), r) in transforms {
+        push_u64(&mut buf, prov);
+        push_u64(&mut buf, site_fp);
+        push_u32(&mut buf, class);
+        push_u64(&mut buf, b_m);
+        push_u64(&mut buf, splits);
+        push_u64(&mut buf, r.to_bits());
+    }
+    buf
+}
+
+fn decode_cost_store(bytes: &[u8], context_fp: u64) -> Result<CostStore, &'static str> {
+    if bytes.get(..4) != Some(COST_MAGIC.as_slice()) {
+        return Err("bad magic");
+    }
+    let mut r = Reader { b: bytes, pos: 4 };
+    let version = r.u32().ok_or("truncated header")?;
+    if version != COST_FILE_VERSION {
+        return Err("version mismatch");
+    }
+    let fp = r.u64().ok_or("truncated header")?;
+    if fp != context_fp {
+        return Err("context fingerprint mismatch");
+    }
+    let n_layer = r.u64().ok_or("truncated header")?;
+    let n_transform = r.u64().ok_or("truncated header")?;
+    let expect = r.pos as u64 + n_layer * 92 + n_transform * 44;
+    if bytes.len() as u64 != expect {
+        return Err("truncated or oversized body");
+    }
+    let mut store = CostStore::default();
+    for _ in 0..n_layer {
+        let key = (
+            r.u64().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+            r.u32().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+        );
+        let cost = LayerCost {
+            fwd: r.f64().ok_or("truncated record")?,
+            bwd: r.f64().ok_or("truncated record")?,
+            bwd_sync: r.f64().ok_or("truncated record")?,
+            mem: LayerMemory {
+                o_ms: r.f64().ok_or("truncated record")?,
+                o_f: r.f64().ok_or("truncated record")?,
+                o_b: r.f64().ok_or("truncated record")?,
+            },
+        };
+        store.layer.insert(key, cost);
+    }
+    for _ in 0..n_transform {
+        let key = (
+            r.u64().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+            r.u32().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+            r.u64().ok_or("truncated record")?,
+        );
+        store.transforms.insert(key, r.f64().ok_or("truncated record")?);
+    }
+    Ok(store)
+}
+
+/// Write `bytes` to `path` atomically (temp file in the same directory +
+/// rename), creating the directory if needed. Warns instead of failing.
+fn write_atomic(path: &Path, bytes: &[u8]) {
+    let Some(dir) = path.parent() else {
+        warn(&format!("planner cache path {} has no parent directory", path.display()));
+        return;
+    };
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        warn(&format!("could not create planner cache dir {}: {e}", dir.display()));
+        return;
+    }
+    let tmp = dir.join(format!(
+        ".{}.{}.tmp",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("cache-entry"),
+        std::process::id()
+    ));
+    if let Err(e) = std::fs::write(&tmp, bytes) {
+        warn(&format!("could not write planner cache file {}: {e}", tmp.display()));
+        return;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        warn(&format!("could not publish planner cache file {}: {e}", path.display()));
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+// ---- the cost-table handle ------------------------------------------------
+
+/// Binding of one engine run to its persistent cost file: the directory,
+/// the run's context fingerprint, and the map from run-local site class
+/// ids to stable site fingerprints.
+pub struct PersistHandle {
+    dir: PathBuf,
+    context_fp: u64,
+    site_fps: Vec<u64>,
+}
+
+impl PersistHandle {
+    pub fn new(dir: PathBuf, context_fp: u64, site_fps: Vec<u64>) -> PersistHandle {
+        PersistHandle { dir, context_fp, site_fps }
+    }
+
+    fn read_store(&self) -> Option<CostStore> {
+        let path = cost_file_path(&self.dir, self.context_fp);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                warn(&format!("could not read planner cache file {}: {e}", path.display()));
+                return None;
+            }
+        };
+        match decode_cost_store(&bytes, self.context_fp) {
+            Ok(store) => Some(store),
+            Err(reason) => {
+                warn(&format!(
+                    "ignoring planner cache file {} ({reason}); planning cold",
+                    path.display()
+                ));
+                None
+            }
+        }
+    }
+
+    /// Load the persisted tables, translated to this run's site class ids.
+    /// Entries for sites or cost-model provenances the run does not use
+    /// are skipped (they stay on disk). Returns `(warm_start, ...)`.
+    pub(crate) fn load(
+        &self,
+        provenance: u64,
+    ) -> (bool, HashMap<LayerKey, LayerCost>, HashMap<TransformKey, f64>) {
+        let Some(store) = self.read_store() else {
+            return (false, HashMap::new(), HashMap::new());
+        };
+        let class_of = |site_fp: u64| -> Option<u32> {
+            self.site_fps.iter().position(|&fp| fp == site_fp).map(|i| i as u32)
+        };
+        let mut layer = HashMap::with_capacity(store.layer.len());
+        for (&(prov, site_fp, class, b_m, extra, strat), &c) in &store.layer {
+            if prov != provenance {
+                continue;
+            }
+            if let Some(site) = class_of(site_fp) {
+                layer.insert((prov, site, class, b_m, extra, strat), c);
+            }
+        }
+        let mut transforms = HashMap::with_capacity(store.transforms.len());
+        for (&(prov, site_fp, class, b_m, splits), &r) in &store.transforms {
+            if prov != provenance {
+                continue;
+            }
+            if let Some(site) = class_of(site_fp) {
+                transforms.insert((prov, site, class, b_m, splits), r);
+            }
+        }
+        (true, layer, transforms)
+    }
+
+    /// Merge this run's tables into the on-disk store (union with whatever
+    /// is there; re-read at flush time so concurrent runs lose at most
+    /// their own last write, never corrupt the file).
+    pub(crate) fn flush(
+        &self,
+        layer: &HashMap<LayerKey, LayerCost>,
+        transforms: &HashMap<TransformKey, f64>,
+    ) {
+        let mut store = self.read_store().unwrap_or_default();
+        let before = store.layer.len() + store.transforms.len();
+        for (&(prov, site, class, b_m, extra, strat), &c) in layer {
+            let site_fp = self.site_fps[site as usize];
+            store.layer.insert((prov, site_fp, class, b_m, extra, strat), c);
+        }
+        for (&(prov, site, class, b_m, splits), &r) in transforms {
+            let site_fp = self.site_fps[site as usize];
+            store.transforms.insert((prov, site_fp, class, b_m, splits), r);
+        }
+        if store.layer.len() + store.transforms.len() == before && before > 0 {
+            // Nothing new to say: don't churn the file (keeps warm re-runs
+            // read-only, which also keeps them fast).
+            return;
+        }
+        let bytes = encode_cost_store(self.context_fp, &store);
+        write_atomic(&cost_file_path(&self.dir, self.context_fp), &bytes);
+    }
+}
+
+// ---- whole-plan entries ---------------------------------------------------
+
+/// Load a persisted plan artifact for `request_fp`. Returns the embedded
+/// report JSON value, or `None` (with a warning unless simply absent).
+pub fn load_plan_entry(dir: &Path, request_fp: u64) -> Option<Json> {
+    let path = plan_file_path(dir, request_fp);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+        Err(e) => {
+            warn(&format!("could not read planner cache file {}: {e}", path.display()));
+            return None;
+        }
+    };
+    let invalid = |reason: &str| {
+        warn(&format!(
+            "ignoring planner cache file {} ({reason}); planning cold",
+            path.display()
+        ));
+    };
+    let v = match Json::parse(&text) {
+        Ok(v) => v,
+        Err(_) => {
+            invalid("not valid JSON");
+            return None;
+        }
+    };
+    match v.get("version").and_then(Json::as_f64) {
+        Some(ver) if ver == PLAN_FILE_VERSION as f64 => {}
+        _ => {
+            invalid("version mismatch");
+            return None;
+        }
+    }
+    match v.get("request_fingerprint").and_then(Json::as_str) {
+        Some(fp) if fp == format!("{request_fp:016x}") => {}
+        _ => {
+            invalid("request fingerprint mismatch");
+            return None;
+        }
+    }
+    match v.get("report") {
+        Some(report) => Some(report.clone()),
+        None => {
+            invalid("no report field");
+            None
+        }
+    }
+}
+
+/// Persist a plan artifact under `request_fp` (atomic write; IO errors
+/// degrade to a warning — the cache is an accelerator, never a gate).
+pub fn store_plan_entry(dir: &Path, request_fp: u64, report: &Json) {
+    let doc = Json::obj(vec![
+        ("version", Json::num(PLAN_FILE_VERSION as f64)),
+        ("request_fingerprint", Json::str(&format!("{request_fp:016x}"))),
+        ("report", report.clone()),
+    ]);
+    write_atomic(&plan_file_path(dir, request_fp), doc.to_string().as_bytes());
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn sample_store() -> CostStore {
+        let mut store = CostStore::default();
+        store.layer.insert(
+            (0, 7, 1, 4.5f64.to_bits(), 0.0f64.to_bits(), 0x41),
+            LayerCost {
+                fwd: 0.25,
+                bwd: 0.5,
+                bwd_sync: 0.75,
+                mem: LayerMemory { o_ms: 1.0, o_f: 2.0, o_b: 3.0 },
+            },
+        );
+        store.transforms.insert((0, 7, 1, 4.5f64.to_bits(), (2 << 32) | 4), 0.125);
+        store
+    }
+
+    #[test]
+    fn cost_store_binary_round_trip() {
+        let store = sample_store();
+        let bytes = encode_cost_store(0xdead_beef, &store);
+        let back = decode_cost_store(&bytes, 0xdead_beef).unwrap();
+        assert_eq!(back.layer.len(), 1);
+        assert_eq!(back.transforms.len(), 1);
+        let key = *store.layer.keys().next().unwrap();
+        assert_eq!(back.layer[&key], store.layer[&key]);
+        let tkey = *store.transforms.keys().next().unwrap();
+        assert_eq!(back.transforms[&tkey].to_bits(), 0.125f64.to_bits());
+        // Deterministic encoding.
+        assert_eq!(bytes, encode_cost_store(0xdead_beef, &back));
+    }
+
+    #[test]
+    fn decode_rejects_corruption_and_skew() {
+        let bytes = encode_cost_store(1, &sample_store());
+        assert!(decode_cost_store(&bytes, 2).is_err(), "fingerprint mismatch");
+        assert!(decode_cost_store(&bytes[..bytes.len() - 1], 1).is_err(), "truncated");
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(decode_cost_store(&bad_magic, 1).is_err(), "magic");
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 0xff;
+        assert!(decode_cost_store(&bad_version, 1).is_err(), "version");
+        assert!(decode_cost_store(&[], 1).is_err(), "empty");
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_length_sensitive() {
+        let a = Fingerprint::new().str("ab").str("c").finish();
+        let b = Fingerprint::new().str("a").str("bc").finish();
+        assert_ne!(a, b, "length prefixes must prevent aliasing");
+        let c = Fingerprint::new().u64(1).u64(2).finish();
+        let d = Fingerprint::new().u64(2).u64(1).finish();
+        assert_ne!(c, d);
+    }
+}

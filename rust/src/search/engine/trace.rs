@@ -63,9 +63,40 @@ impl CellTrace {
     }
 }
 
+/// Wall-clock and warm-start provenance of one engine run. Diagnostics
+/// only: never serialized into artifacts and excluded from the trace's
+/// `PartialEq`, so the byte-determinism guarantees (threads=1 vs threads=N,
+/// warm vs cold cache) are unaffected by how long anything took.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTiming {
+    /// Full engine run: precompute + sweep (seconds).
+    pub total_secs: f64,
+    /// Context construction: catalogs, site registry, cache load (seconds).
+    pub precompute_secs: f64,
+    /// The (batch × PP) fan-out and ordered reduction (seconds).
+    pub search_secs: f64,
+    /// Per computed cell `(batch, pp, seconds)`, in reduction order.
+    pub cell_secs: Vec<(usize, usize, f64)>,
+    /// Persisted cost tables were found and loaded for this run.
+    pub warm_start: bool,
+    /// Cost entries loaded from the persistent cache at startup.
+    pub persisted_entries: u64,
+}
+
+impl SearchTiming {
+    fn merge(&mut self, other: SearchTiming) {
+        self.total_secs += other.total_secs;
+        self.precompute_secs += other.precompute_secs;
+        self.search_secs += other.search_secs;
+        self.cell_secs.extend(other.cell_secs);
+        self.warm_start |= other.warm_start;
+        self.persisted_entries += other.persisted_entries;
+    }
+}
+
 /// Aggregate diagnostics of one engine run (or, for composite methods like
 /// Alpa, of several merged runs).
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default)]
 pub struct SearchTrace {
     /// Every computed cell, in deterministic enumeration order.
     pub cells: Vec<CellTrace>,
@@ -86,6 +117,25 @@ pub struct SearchTrace {
     pub cache_entries: u64,
     /// (batch, pp) of the cell holding the winning plan.
     pub best_cell: Option<(usize, usize)>,
+    /// Wall-clock + warm-start diagnostics (not serialized, not compared).
+    pub timing: SearchTiming,
+}
+
+/// Everything except `timing` (wall time is nondeterministic by nature, so
+/// it must not break `assert_eq!(trace_t1, trace_t8)` or warm-vs-cold
+/// artifact comparisons).
+impl PartialEq for SearchTrace {
+    fn eq(&self, other: &Self) -> bool {
+        self.cells == other.cells
+            && self.cells_explored == other.cells_explored
+            && self.cells_discarded == other.cells_discarded
+            && self.cells_skipped == other.cells_skipped
+            && self.cells_oom == other.cells_oom
+            && self.evaluations == other.evaluations
+            && self.cache_lookups == other.cache_lookups
+            && self.cache_entries == other.cache_entries
+            && self.best_cell == other.best_cell
+    }
 }
 
 impl SearchTrace {
@@ -111,6 +161,25 @@ impl SearchTrace {
         self.cache_lookups += other.cache_lookups;
         self.cache_entries += other.cache_entries;
         self.best_cell = None;
+        self.timing.merge(other.timing);
+    }
+
+    /// One-line wall-clock summary for CLI output (empty when the trace
+    /// was deserialized from an artifact, which carries no timing).
+    pub fn timing_summary(&self) -> Option<String> {
+        let t = &self.timing;
+        if t.total_secs <= 0.0 {
+            return None;
+        }
+        let warm = if t.warm_start {
+            format!("warm ({} persisted entries)", t.persisted_entries)
+        } else {
+            "cold".to_string()
+        };
+        Some(format!(
+            "timing: {:.3}s total ({:.3}s precompute, {:.3}s search), cache start: {warm}",
+            t.total_secs, t.precompute_secs, t.search_secs,
+        ))
     }
 
     /// One-line human summary for CLI output.
@@ -172,6 +241,7 @@ impl SearchTrace {
                     Some((pair[0], pair[1]))
                 }
             },
+            timing: SearchTiming::default(),
         })
     }
 }
@@ -209,7 +279,21 @@ mod tests {
             cache_lookups: 1000,
             cache_entries: 100,
             best_cell: Some((8, 2)),
+            timing: SearchTiming::default(),
         }
+    }
+
+    #[test]
+    fn timing_never_affects_equality_or_serialization() {
+        let a = sample();
+        let mut b = sample();
+        b.timing.total_secs = 42.0;
+        b.timing.warm_start = true;
+        b.timing.cell_secs.push((8, 2, 1.5));
+        assert_eq!(a, b, "wall time must not break trace equality");
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(b.timing_summary().is_some());
+        assert!(a.timing_summary().is_none());
     }
 
     #[test]

@@ -310,6 +310,37 @@ fn gal0019_calibrated_provenance_skips_rederivation() {
     assert_no_code(&report, "GAL0016");
 }
 
+#[test]
+fn gal0025_low_cache_hit_rate_on_large_search() {
+    // A big sweep whose trace says most lookups missed: 20k lookups but
+    // 15k distinct entries is a 25% hit rate, well under the 50% floor.
+    let text = mutate(titan8_plan(), |top| {
+        match top.get_mut("search_trace") {
+            Some(Json::Obj(t)) => {
+                set_num(t, "cache_lookups", 20_000.0);
+                set_num(t, "cache_entries", 15_000.0);
+            }
+            other => panic!("fresh plan records a search_trace: {other:?}"),
+        }
+    });
+    let report = check_plan_text(&text);
+    assert_diag(&report, "GAL0025", Severity::Note, "$.search_trace");
+    // Small searches say nothing either way: the clean pinned-pp artifact
+    // is far below the lookup floor and must stay silent.
+    assert_no_code(&check_plan_text(titan8_plan()), "GAL0025");
+    // Nor does a large search with a healthy rate.
+    let text = mutate(titan8_plan(), |top| {
+        match top.get_mut("search_trace") {
+            Some(Json::Obj(t)) => {
+                set_num(t, "cache_lookups", 20_000.0);
+                set_num(t, "cache_entries", 2_000.0);
+            }
+            other => panic!("fresh plan records a search_trace: {other:?}"),
+        }
+    });
+    assert_no_code(&check_plan_text(&text), "GAL0025");
+}
+
 // ---- spec and cluster lints (GAL0020..GAL0031) ----------------------------
 
 fn spec(s: &str) -> Json {

@@ -1,0 +1,226 @@
+//! Integration tests for the persistent planning cache (`--cache-dir` /
+//! `GALVATRON_CACHE_DIR`).
+//!
+//! The contract under test: the cache may only remove recomputation,
+//! never change a plan. Warm artifacts must be byte-identical to cold
+//! ones at any thread count; anything unreadable — corrupt bytes, a
+//! version skew, a fingerprint mismatch — is ignored with a warning and
+//! the planner falls back to a cold search.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::{Path, PathBuf};
+
+use galvatron::api::{request_fingerprint, MethodSpec, PlanReport, PlanRequest, Planner};
+use galvatron::util::json::Json;
+
+/// A small pinned request (single pipeline degree, modest batch sweep) so
+/// every test plans in milliseconds.
+fn request(threads: usize) -> PlanRequest {
+    PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(16)
+        .pipeline_degrees(&[4])
+        .method(MethodSpec::Bmw { ckpt: true })
+        .threads(threads)
+}
+
+/// Per-test scratch cache directory, cleared on entry so reruns start cold.
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("galvatron-persist-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn files_matching(dir: &Path, prefix: &str, suffix: &str) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(Result::ok)
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.starts_with(prefix) && n.ends_with(suffix))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+fn cost_files(dir: &Path) -> Vec<PathBuf> {
+    files_matching(dir, "costs-", ".bin")
+}
+
+fn plan_files(dir: &Path) -> Vec<PathBuf> {
+    files_matching(dir, "plan-", ".json")
+}
+
+#[test]
+fn warm_and_cold_artifacts_are_byte_identical_across_threads() {
+    let cold = request(1).plan().unwrap().to_json_string();
+    let dir = fresh_dir("identical");
+    // Priming run: plans cold but writes the cost table and the artifact.
+    let primed = request(1).cache_dir(&dir).plan().unwrap().to_json_string();
+    assert_eq!(cold, primed, "a cache directory must not change the plan");
+    assert_eq!(cost_files(&dir).len(), 1, "one cost table per context fingerprint");
+    assert_eq!(plan_files(&dir).len(), 1, "one stored artifact per request fingerprint");
+    // Warm runs answer from the store — at any worker-thread count.
+    for threads in [1usize, 8] {
+        let warm = request(threads).cache_dir(&dir).plan().unwrap().to_json_string();
+        assert_eq!(cold, warm, "warm artifact differs at threads={threads}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cost_table_warm_start_reproduces_the_cold_artifact() {
+    let cold = request(1).plan().unwrap().to_json_string();
+    let dir = fresh_dir("cost-only");
+    request(1).cache_dir(&dir).plan().unwrap();
+    for f in plan_files(&dir) {
+        std::fs::remove_file(f).unwrap();
+    }
+    // With the stored artifact gone the planner must search again, now
+    // warm-started from the persisted cost tables alone.
+    let warm = request(8).cache_dir(&dir).plan().unwrap().to_json_string();
+    assert_eq!(cold, warm, "cost-table warm start changed the plan");
+    assert_eq!(plan_files(&dir).len(), 1, "the searched artifact is stored again");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_or_mismatched_cost_files_fall_back_cold() {
+    let cold = request(1).plan().unwrap().to_json_string();
+    let dir = fresh_dir("corrupt");
+    request(1).cache_dir(&dir).plan().unwrap();
+    let cost = cost_files(&dir);
+    assert_eq!(cost.len(), 1);
+    // Garbage bytes: not even the magic survives.
+    std::fs::write(&cost[0], b"not a cost cache").unwrap();
+    for f in plan_files(&dir) {
+        std::fs::remove_file(f).unwrap();
+    }
+    let warm = request(1).cache_dir(&dir).plan().unwrap().to_json_string();
+    assert_eq!(cold, warm, "corrupt cost file leaked into the plan");
+    // That run flushed a valid store again; now flip the embedded context
+    // fingerprint (bytes 8..16, after magic + version) — a well-formed
+    // file for a *different* context must be ignored the same way.
+    let mut bytes = std::fs::read(&cost[0]).unwrap();
+    for b in &mut bytes[8..16] {
+        *b ^= 0xff;
+    }
+    std::fs::write(&cost[0], &bytes).unwrap();
+    for f in plan_files(&dir) {
+        std::fs::remove_file(f).unwrap();
+    }
+    let warm = request(1).cache_dir(&dir).plan().unwrap().to_json_string();
+    assert_eq!(cold, warm, "fingerprint-mismatched cost file leaked into the plan");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn request_level_hits_return_the_stored_artifact_without_searching() {
+    let dir = fresh_dir("hit");
+    let cold = request(1).cache_dir(&dir).plan().unwrap();
+    let files = plan_files(&dir);
+    assert_eq!(files.len(), 1);
+    // Tamper the stored throughput: if the next plan() returns the
+    // tampered number, it came from the store, not from a search.
+    let text = std::fs::read_to_string(&files[0]).unwrap();
+    let Json::Obj(mut top) = Json::parse(&text).unwrap() else {
+        panic!("plan entry is not a JSON object");
+    };
+    match top.get_mut("report") {
+        Some(Json::Obj(r)) => {
+            let t = match r.get("throughput") {
+                Some(Json::Num(n)) => *n,
+                other => panic!("report has a numeric throughput: {other:?}"),
+            };
+            r.insert("throughput".to_string(), Json::num(t + 1.0));
+        }
+        other => panic!("plan entry has a report object: {other:?}"),
+    }
+    std::fs::write(&files[0], Json::Obj(top).to_string()).unwrap();
+    let warm = request(1).cache_dir(&dir).plan().unwrap();
+    assert!(
+        (warm.throughput - (cold.throughput + 1.0)).abs() < 1e-6,
+        "expected the stored (tampered) throughput back, got {} vs cold {}",
+        warm.throughput,
+        cold.throughput
+    );
+    // Now break the entry's fingerprint: the loader must refuse it, plan
+    // cold (recovering the true throughput), and re-store the entry.
+    let text = std::fs::read_to_string(&files[0]).unwrap();
+    let Json::Obj(mut top) = Json::parse(&text).unwrap() else {
+        panic!("plan entry is not a JSON object");
+    };
+    top.insert("request_fingerprint".to_string(), Json::str("00000000deadbeef"));
+    std::fs::write(&files[0], Json::Obj(top).to_string()).unwrap();
+    let fresh = request(1).cache_dir(&dir).plan().unwrap();
+    assert!(
+        (fresh.throughput - cold.throughput).abs() < 1e-6,
+        "fingerprint mismatch must fall back to a cold search"
+    );
+    // The cold fallback re-stored a valid entry: the next run hits it.
+    let again = request(1).cache_dir(&dir).plan().unwrap();
+    assert_eq!(again.to_json_string(), fresh.to_json_string());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stored_plan_entry_is_versioned_and_fingerprinted() {
+    let dir = fresh_dir("entry");
+    let report = request(1).cache_dir(&dir).plan().unwrap();
+    let files = plan_files(&dir);
+    assert_eq!(files.len(), 1);
+    let v = Json::parse(&std::fs::read_to_string(&files[0]).unwrap()).unwrap();
+    assert_eq!(v.get("version").and_then(Json::as_usize), Some(1));
+    let fp = v.get("request_fingerprint").and_then(Json::as_str).unwrap().to_string();
+    assert_eq!(fp.len(), 16, "fingerprint is 16 hex digits: {fp:?}");
+    assert!(fp.chars().all(|c| c.is_ascii_hexdigit()), "{fp:?}");
+    // The file is named after the same fingerprint it records.
+    assert_eq!(
+        files[0].file_name().unwrap().to_str().unwrap(),
+        format!("plan-{fp}.json")
+    );
+    // The embedded report round-trips to the exact artifact bytes.
+    let stored = PlanReport::from_json(v.get("report").unwrap()).unwrap();
+    assert_eq!(stored.to_json_string(), report.to_json_string());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn request_fingerprint_ignores_threads_but_tracks_content() {
+    let p = Planner::new();
+    let base = p.resolve(&request(1)).unwrap();
+    // Worker threads never change the artifact, so they must not change
+    // the fingerprint either — a t8 run may answer a t1 request.
+    let same = p.resolve(&request(8)).unwrap();
+    assert_eq!(request_fingerprint(&base), request_fingerprint(&same));
+    // Anything that can change the plan changes the fingerprint.
+    let bigger = p.resolve(&request(1).max_batch(32)).unwrap();
+    assert_ne!(request_fingerprint(&base), request_fingerprint(&bigger));
+    let tighter = p.resolve(&request(1).memory_gb(12.0)).unwrap();
+    assert_ne!(request_fingerprint(&base), request_fingerprint(&tighter));
+    let unpinned = p.resolve(&request(1).pipeline_degrees(&[2])).unwrap();
+    assert_ne!(request_fingerprint(&base), request_fingerprint(&unpinned));
+}
+
+#[test]
+fn env_var_fallback_and_request_field_precedence() {
+    let p = Planner::new();
+    let dir = fresh_dir("env");
+    std::env::set_var("GALVATRON_CACHE_DIR", &dir);
+    let r = p.resolve(&request(1)).unwrap();
+    let explicit = p.resolve(&request(1).cache_dir("/elsewhere")).unwrap();
+    std::env::remove_var("GALVATRON_CACHE_DIR");
+    assert_eq!(r.cache_dir.as_deref(), Some(dir.as_path()));
+    // An explicit request field wins over the environment.
+    assert_eq!(explicit.cache_dir.as_deref(), Some(Path::new("/elsewhere")));
+    // Without either, nothing is persisted.
+    let none = p.resolve(&request(1)).unwrap();
+    assert_eq!(none.cache_dir, None);
+}

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Planning-speed regression gate over BENCH_planning.json.
+
+Reads the trajectory the `planning_speed_bench` bench just wrote at the
+repository root and enforces two properties:
+
+  1. Warm floor: every case's `warm_speedup` (request-level cache hit vs
+     cold search) must be at least WARM_SPEEDUP_FLOOR. This is
+     machine-independent — both numbers come from the same run.
+  2. Regression: each case's cold `plans_per_sec` must stay above
+     DROP_TOLERANCE x the committed BENCH_baseline.json number for the
+     same (model, cluster, backend, threads) row. Machine-dependent, so
+     the baseline must be blessed on the reference (CI) machine.
+
+Usage:
+    python3 scripts/bench_gate.py            # gate (CI)
+    python3 scripts/bench_gate.py --bless    # adopt the current numbers
+                                             # as BENCH_baseline.json
+
+While BENCH_baseline.json is the committed placeholder (no blessed
+numbers yet), the regression half is skipped with a notice and only the
+warm floor is enforced.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CURRENT = ROOT / "BENCH_planning.json"
+BASELINE = ROOT / "BENCH_baseline.json"
+
+# A cold run may be up to 30% slower than the blessed baseline before the
+# gate fails: CI machines are noisy, order-of-magnitude regressions are not.
+DROP_TOLERANCE = 0.70
+# The warm path answers from the stored artifact without searching; if it
+# is not at least this much faster than the cold search, the cache broke.
+WARM_SPEEDUP_FLOOR = 10.0
+
+
+def row_key(row):
+    return (
+        row["model"],
+        row["cluster"],
+        row.get("backend", "analytic"),
+        int(row["threads"]),
+    )
+
+
+def load(path):
+    try:
+        return json.loads(path.read_text())
+    except FileNotFoundError:
+        sys.exit(f"bench gate: {path} not found — run `cargo bench --bench planning_speed_bench` first")
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench gate: {path} is not valid JSON: {e}")
+
+
+def bless(current):
+    doc = {
+        "bench": "planning_speed",
+        "note": "Blessed planning-speed baseline; regenerate with `python3 scripts/bench_gate.py --bless`.",
+        "results": current.get("results", []),
+    }
+    BASELINE.write_text(json.dumps(doc, indent=2, sort_keys=False) + "\n")
+    print(f"bench gate: blessed {len(doc['results'])} rows into {BASELINE}")
+
+
+def main():
+    current = load(CURRENT)
+    rows = current.get("results", [])
+    if not rows:
+        sys.exit(f"bench gate: {CURRENT} has no results")
+
+    if "--bless" in sys.argv[1:]:
+        bless(current)
+        return
+
+    failures = []
+
+    for row in rows:
+        speedup = row.get("warm_speedup")
+        if speedup is None:
+            failures.append(f"{row_key(row)}: no warm_speedup recorded")
+        elif speedup < WARM_SPEEDUP_FLOOR:
+            failures.append(
+                f"{row_key(row)}: warm_speedup {speedup:.1f}x is below the "
+                f"{WARM_SPEEDUP_FLOOR:.0f}x floor "
+                f"(cold {row.get('plans_per_sec', 0):.2f}/s, "
+                f"warm {row.get('plans_per_sec_warm', 0):.2f}/s)"
+            )
+        else:
+            print(f"bench gate: {row_key(row)}: warm_speedup {speedup:.1f}x ok")
+
+    baseline = load(BASELINE)
+    if baseline.get("placeholder"):
+        print(
+            "bench gate: BENCH_baseline.json is the unblessed placeholder — "
+            "regression check skipped. Bless on the reference machine with "
+            "`python3 scripts/bench_gate.py --bless` and commit the file."
+        )
+    else:
+        by_key = {row_key(r): r for r in rows}
+        for base in baseline.get("results", []):
+            key = row_key(base)
+            cur = by_key.get(key)
+            if cur is None:
+                failures.append(f"{key}: in the baseline but missing from this run")
+                continue
+            floor = DROP_TOLERANCE * base["plans_per_sec"]
+            if cur["plans_per_sec"] < floor:
+                failures.append(
+                    f"{key}: cold {cur['plans_per_sec']:.2f} plans/s is below "
+                    f"{floor:.2f} ({DROP_TOLERANCE:.0%} of the baseline "
+                    f"{base['plans_per_sec']:.2f})"
+                )
+            else:
+                print(
+                    f"bench gate: {key}: cold {cur['plans_per_sec']:.2f} plans/s "
+                    f"vs baseline {base['plans_per_sec']:.2f} ok"
+                )
+
+    if failures:
+        print("bench gate: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench gate: all checks passed")
+
+
+if __name__ == "__main__":
+    main()
