@@ -1,0 +1,161 @@
+//! Bench: `galvatron serve` throughput in plans/second under concurrent
+//! clients, cold (empty persistent cache) and warm (freshly started
+//! daemon over a primed `--cache-dir`), emitted as JSON lines.
+//!
+//! Each row is one client count:
+//!   {"bench":"serving","clients":N,"requests":...,
+//!    "plans_per_sec_cold":...,"plans_per_sec_warm":...,"warm_speedup":...,
+//!    "dedup_hit_rate_cold":...,"dedup_hit_rate_warm":...,
+//!    "searched_cold":...,"searched_warm":...}
+//!
+//! Every served artifact is asserted byte-identical to the CLI artifact
+//! for the same request (`PlanRequest::plan()` at threads=1) — serving
+//! may only remove work, never change a plan. The warm daemon must beat
+//! the cold one by >= 10x for the single-client repeat workload, the
+//! same floor the planning-speed bench holds the planner cache to.
+//!
+//! All rows are additionally written to `BENCH_serving.json` at the
+//! repository root, which CI uploads as an artifact.
+//!
+//! Run: `cargo bench --bench serving_bench`
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use galvatron::api::{MethodSpec, PlanRequest};
+use galvatron::serve::ServeState;
+use galvatron::util::json::Json;
+use galvatron::util::parallelism::{install_worker_budget, resolve_worker_count};
+
+/// Eight distinct requests (by max batch) over the same model/cluster —
+/// the pool every client cycles through, at a per-client phase offset so
+/// concurrent clients collide on in-flight fingerprints.
+const BATCHES: [usize; 8] = [40, 44, 48, 52, 56, 60, 64, 68];
+
+fn request_line(max_batch: usize) -> String {
+    format!(
+        r#"{{"cluster":"titan8","max_batch":{max_batch},"memory_gb":16,"model":"bert-huge-32"}}"#
+    )
+}
+
+/// The CLI ground truth for one pool entry: same knobs, single thread.
+fn expected_artifact(max_batch: usize) -> String {
+    PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(max_batch)
+        .method(MethodSpec::Bmw { ckpt: true })
+        .threads(1)
+        .plan()
+        .expect("bench request plans")
+        .to_json_string()
+}
+
+/// Drive `clients` concurrent request streams, each issuing the whole
+/// pool once, asserting byte-identity for every response. Returns the
+/// wall-clock seconds for the phase.
+fn run_phase(state: &Arc<ServeState>, clients: usize, expected: &[String]) -> f64 {
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let state = Arc::clone(state);
+            scope.spawn(move || {
+                for k in 0..BATCHES.len() {
+                    let idx = (c + k) % BATCHES.len();
+                    let outcome = state.handle_line(&request_line(BATCHES[idx]));
+                    assert!(outcome.ok, "serve request failed: {}", outcome.envelope);
+                    let artifact = outcome.artifact.expect("ok outcome carries the artifact");
+                    assert_eq!(
+                        artifact.as_str(),
+                        expected[idx],
+                        "served artifact for max_batch={} differs from the CLI artifact",
+                        BATCHES[idx]
+                    );
+                }
+            });
+        }
+    });
+    start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    // Exactly what the daemon does at startup: one machine-wide worker
+    // budget that concurrent searches draw from.
+    install_worker_budget(resolve_worker_count(None));
+    let expected: Vec<String> = BATCHES.iter().map(|&b| expected_artifact(b)).collect();
+    let mut results: Vec<Json> = Vec::new();
+    for &clients in &[1usize, 4, 16] {
+        let cache_dir = std::env::temp_dir().join(format!(
+            "galvatron-serving-bench-{}-{clients}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&cache_dir).ok();
+        let requests = (clients * BATCHES.len()) as f64;
+
+        // ---- cold: fresh daemon, no persistent cache — every distinct
+        // request is a full search (identical concurrent requests still
+        // dedup/memo: that IS the daemon under load).
+        let cold_state = Arc::new(ServeState::new(None));
+        let cold_secs = run_phase(&cold_state, clients, &expected);
+        let cold = cold_state.stats();
+
+        // ---- prime the persistent store (untimed, single client).
+        let prime_state = Arc::new(ServeState::new(Some(cache_dir.clone())));
+        run_phase(&prime_state, 1, &expected);
+
+        // ---- warm: fresh daemon over the primed cache — the "restart
+        // the service" case the persistent store exists for.
+        let warm_state = Arc::new(ServeState::new(Some(cache_dir.clone())));
+        let warm_secs = run_phase(&warm_state, clients, &expected);
+        let warm = warm_state.stats();
+        std::fs::remove_dir_all(&cache_dir).ok();
+
+        let plans_per_sec_cold = requests / cold_secs;
+        let plans_per_sec_warm = requests / warm_secs;
+        let warm_speedup = plans_per_sec_warm / plans_per_sec_cold;
+        if clients == 1 {
+            assert!(
+                warm_speedup >= 10.0,
+                "warm serving speedup {warm_speedup:.2}x is below the 10x floor \
+                 (cold {plans_per_sec_cold:.2} plans/s, warm {plans_per_sec_warm:.2} plans/s)"
+            );
+        }
+        assert_eq!(
+            warm.searched, 0,
+            "a warm daemon re-searched {} requests the store already holds",
+            warm.searched
+        );
+        let row = Json::obj(vec![
+            ("bench", Json::str("serving")),
+            ("model", Json::str("bert-huge-32")),
+            ("cluster", Json::str("titan8")),
+            ("clients", Json::num(clients as f64)),
+            ("requests", Json::num(requests)),
+            ("plans_per_sec_cold", Json::num(plans_per_sec_cold)),
+            ("plans_per_sec_warm", Json::num(plans_per_sec_warm)),
+            ("warm_speedup", Json::num(warm_speedup)),
+            ("dedup_hit_rate_cold", Json::num(cold.dedup_hits as f64 / requests)),
+            ("dedup_hit_rate_warm", Json::num(warm.dedup_hits as f64 / requests)),
+            ("searched_cold", Json::num(cold.searched as f64)),
+            ("searched_warm", Json::num(warm.searched as f64)),
+            ("store_hits_warm", Json::num(warm.store_hits as f64)),
+        ]);
+        println!("{row}");
+        results.push(row);
+    }
+    // Persist next to BENCH_planning.json at the repository root.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf);
+    let out = root
+        .unwrap_or_else(|| Path::new(".").to_path_buf())
+        .join("BENCH_serving.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("results", Json::arr(results)),
+    ]);
+    match std::fs::write(&out, doc.to_pretty()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

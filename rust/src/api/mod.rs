@@ -50,5 +50,5 @@ pub use method::{MethodSpec, PartitionPolicy, SearchOverrides};
 pub use report::{PlanReport, StageReport, PLAN_ARTIFACT_KEYS, PLAN_ARTIFACT_VERSION};
 pub use request::{
     parse_schedule, request_fingerprint, resolve_cluster_name, resolve_model_name, schedule_key,
-    ClusterSource, ModelSource, PlanRequest, Planner, ResolvedRequest,
+    ClusterSource, ModelSource, PlanRequest, PlanSource, Planner, ResolvedRequest,
 };

@@ -419,6 +419,17 @@ pub fn resolve_cluster_name(name: &str) -> Result<ClusterSpec, PlanError> {
     })
 }
 
+/// How a [`Planner::plan_resolved_sourced`] call obtained its report:
+/// a request-level warm hit from the persistent plan store, or a fresh
+/// search. Informational only — the artifact bytes are identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Answered from the cache-dir plan store without searching.
+    Stored,
+    /// Produced by running the method's search.
+    Searched,
+}
+
 /// The planning facade: resolves a [`PlanRequest`], runs the method's
 /// search, and packages the result as a serializable [`PlanReport`].
 #[derive(Debug, Default)]
@@ -555,6 +566,17 @@ impl Planner {
     /// the run header — and to load a `--profile-db` exactly once — then
     /// plans from the same resolution).
     pub fn plan_resolved(&self, r: &ResolvedRequest) -> Result<PlanReport, PlanError> {
+        self.plan_resolved_sourced(r).map(|(report, _)| report)
+    }
+
+    /// [`Planner::plan_resolved`], additionally reporting where the answer
+    /// came from — a request-level warm hit or a fresh search. The serve
+    /// daemon uses the source to label responses; the bytes are identical
+    /// either way.
+    pub fn plan_resolved_sourced(
+        &self,
+        r: &ResolvedRequest,
+    ) -> Result<(PlanReport, PlanSource), PlanError> {
         use crate::search::engine::persist;
         // Request-level warm hit: an identical resolved request (see
         // [`request_fingerprint`]) returns its stored artifact without
@@ -566,12 +588,12 @@ impl Planner {
             if let Some(v) = persist::load_plan_entry(dir, fp) {
                 match PlanReport::from_json(&v) {
                     Ok(report) if crate::check::gate(&r.model, &r.cluster, &report).is_ok() => {
-                        return Ok(report);
+                        return Ok((report, PlanSource::Stored));
                     }
-                    _ => eprintln!(
-                        "warning: ignoring invalid cached plan entry {} (planning cold)",
+                    _ => crate::util::diag::warn(&format!(
+                        "ignoring invalid cached plan entry {} (planning cold)",
                         persist::plan_file_path(dir, fp).display()
-                    ),
+                    )),
                 }
             }
         }
@@ -594,7 +616,7 @@ impl Planner {
         if let Some((dir, fp)) = request_fp {
             persist::store_plan_entry(dir, fp, &report.to_json());
         }
-        Ok(report)
+        Ok((report, PlanSource::Searched))
     }
 
     /// Re-run the discrete-event simulator for a saved report (the

@@ -24,6 +24,8 @@
 //!     consistency and spec/cluster lints (`galvatron check`).
 //!   * [`sim`]     — discrete-event cluster simulator (ground truth for
 //!     Fig. 4/7-style experiments; substitutes the GPU testbed).
+//!   * [`serve`]   — long-lived planning-as-a-service daemon (JSONL +
+//!     HTTP/1.1 transports, in-flight request dedup, warm caches).
 //!   * [`runtime`] — PJRT-CPU execution of AOT artifacts (HLO text).
 //!   * [`coordinator`] — real-numerics distributed training driver
 //!     (pipeline + data parallel + collectives) over the runtime.
@@ -33,6 +35,7 @@ pub mod api;
 pub mod check;
 pub mod cluster;
 pub mod search;
+pub mod serve;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;

@@ -7,6 +7,8 @@
 //!             re-planned from names or loaded from --plan plan.json
 //!   check     statically verify plan artifacts / ModelSpec files with
 //!             typed GAL0xxx diagnostics (exit 1 on any error)
+//!   serve     long-lived planning daemon: JSONL on stdin/stdout or
+//!             HTTP/1.1 (--http), warm caches + in-flight request dedup
 //!   table2..6 regenerate the paper's tables
 //!   fig4..7   regenerate the paper's figures
 //!   train     run real-numerics e2e training over the AOT artifacts
@@ -40,6 +42,10 @@ commands:
   check     --plan plan.json and/or --model-file spec.json
             [--cluster <name> | --islands <spec>] [--json]
             (static verifier: exits 1 on any error-severity diagnostic)
+  serve     [--cache-dir DIR] [--http ADDR:PORT] [--workers N] [--threads N]
+            (planning daemon: JSONL requests on stdin, one response per
+            line on stdout, until EOF; --http serves POST /plan,
+            POST /plan/artifact and GET /health instead)
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
   table3 | table4 | table5 | table6     (same options)
   hetero    heterogeneous-cluster sweep [--models a,b] [--max-batch N]
@@ -239,11 +245,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .provenance()
             .map(|p| p.label())
             .unwrap_or_else(|| "analytic".into());
-        eprintln!(
-            "warning: plan artifact records the {recorded} cost model but is being \
+        galvatron::util::diag::warn(&format!(
+            "plan artifact records the {recorded} cost model but is being \
              simulated with {current}; estimated and simulated throughputs may not be \
              comparable (pass the matching --profile-db to align them)"
-        );
+        ));
     }
     let sim = planner.simulate_report_costed(&report, &cost_model)?;
     println!(
@@ -264,32 +270,55 @@ fn cmd_check(args: &Args) -> Result<()> {
     use galvatron::check::{self, CheckReport};
     let mut report = CheckReport::default();
     let mut checked = Vec::new();
-    if let Some(path) = args.get("plan") {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading plan artifact {path}"))?;
-        report.merge(check::check_plan_text(&text));
-        checked.push(path);
-    }
-    if let Some(path) = args.get("model-file") {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading model spec {path}"))?;
-        let v = galvatron::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("{path} is not JSON: {e}"))?;
-        // Spec lints run standalone; with a cluster the never-fits
-        // lints (GAL0030/GAL0031) run too.
-        let cluster = match args.get("islands").or_else(|| args.get("cluster")) {
-            Some(name) => Some(galvatron::api::resolve_cluster_name(name)?),
-            None => None,
-        };
-        report.merge(check::check_model_json(&v, cluster.as_ref()));
-        checked.push(path);
-    }
+    let run = |report: &mut CheckReport, checked: &mut Vec<String>| -> Result<()> {
+        if let Some(path) = args.get("plan") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading plan artifact {path}"))?;
+            report.merge(check::check_plan_text(&text));
+            checked.push(path.to_string());
+        }
+        if let Some(path) = args.get("model-file") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading model spec {path}"))?;
+            let v = galvatron::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{path} is not JSON: {e}"))?;
+            // Spec lints run standalone; with a cluster the never-fits
+            // lints (GAL0030/GAL0031) run too.
+            let cluster = match args.get("islands").or_else(|| args.get("cluster")) {
+                Some(name) => Some(galvatron::api::resolve_cluster_name(name)?),
+                None => None,
+            };
+            report.merge(check::check_model_json(&v, cluster.as_ref()));
+            checked.push(path.to_string());
+        }
+        Ok(())
+    };
+    // In --json mode operational warnings join the payload (the
+    // `diag_warnings` array — distinct from the report's numeric
+    // `warnings` count) instead of interleaving with it on stderr.
+    let (result, diag_warnings) = if args.flag("json") {
+        galvatron::util::diag::capture(|| run(&mut report, &mut checked))
+    } else {
+        (run(&mut report, &mut checked), Vec::new())
+    };
+    result?;
     anyhow::ensure!(
         !checked.is_empty(),
         "check needs --plan plan.json and/or --model-file spec.json"
     );
     if args.flag("json") {
-        println!("{}", report.to_json());
+        let mut payload = report.to_json();
+        if !diag_warnings.is_empty() {
+            if let galvatron::util::json::Json::Obj(map) = &mut payload {
+                map.insert(
+                    "diag_warnings".to_string(),
+                    galvatron::util::json::Json::arr(
+                        diag_warnings.iter().map(|w| galvatron::util::json::Json::str(w)),
+                    ),
+                );
+            }
+        }
+        println!("{payload}");
     } else {
         for path in &checked {
             println!("checked {path}");
@@ -298,6 +327,51 @@ fn cmd_check(args: &Args) -> Result<()> {
     }
     if report.has_errors() {
         std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `galvatron serve`: the long-lived planning daemon. Default transport
+/// is JSONL on stdin/stdout (one request per line, one response per
+/// line, exit at EOF); `--http ADDR` serves HTTP/1.1 instead. See the
+/// README "Serving plans" section for the request/response schema.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use galvatron::serve::{run_jsonl, serve_http, ServeState};
+    let workers = args.usize("workers", 4)?.max(1);
+    // Concurrent searches draw engine threads from one machine-wide
+    // budget (sized like a single CLI run's pool) instead of each
+    // spawning a full pool; grants never change plan bytes.
+    let threads = match args.get("threads") {
+        Some(t) => Some(t.parse().context("--threads expects an integer")?),
+        None => None,
+    };
+    galvatron::util::parallelism::install_worker_budget(
+        galvatron::util::parallelism::resolve_worker_count(threads),
+    );
+    let cache_dir = args
+        .get("cache-dir")
+        .map(std::path::PathBuf::from)
+        .or_else(|| std::env::var_os("GALVATRON_CACHE_DIR").map(std::path::PathBuf::from));
+    if let Some(dir) = &cache_dir {
+        eprintln!("serve: persistent cache at {}", dir.display());
+    }
+    let state = std::sync::Arc::new(ServeState::new(cache_dir));
+    match args.get("http") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .with_context(|| format!("binding {addr}"))?;
+            let local = listener.local_addr()?;
+            // Readiness line for supervisors; stdout is block-buffered
+            // when piped, so flush explicitly.
+            println!("serving http on {local} ({workers} workers)");
+            use std::io::Write;
+            std::io::stdout().flush()?;
+            serve_http(listener, state, workers)?;
+        }
+        None => {
+            let stdin = std::io::stdin();
+            run_jsonl(&state, stdin.lock(), std::io::stdout(), workers)?;
+        }
     }
     Ok(())
 }
@@ -528,6 +602,7 @@ fn main() -> Result<()> {
         "smoke" => cmd_smoke(&args)?,
         "simulate" => cmd_simulate(&args)?,
         "check" => cmd_check(&args)?,
+        "serve" => cmd_serve(&args)?,
         "models" => cmd_models(&args)?,
         "clusters" => {
             for c in galvatron::cluster::cluster_names() {

@@ -352,7 +352,15 @@ impl<'a> SearchEngine<'a> {
     /// Results come back in input order regardless of completion order,
     /// each with its wall time (diagnostics only — never serialized).
     fn run_wave(&self, wave_cells: &[(usize, usize)]) -> Vec<(CellOutcome, f64)> {
-        let workers = self.threads.min(wave_cells.len()).max(1);
+        let want = self.threads.min(wave_cells.len()).max(1);
+        // Under an installed process-wide budget (the serve daemon) the
+        // wave's pool is capped by the workers still free, so concurrent
+        // searches share the machine at wave granularity. Without one
+        // (every CLI path) the grant is exactly `want`. The grant only
+        // sizes the pool — cell results are thread-count-independent, so
+        // the artifact bytes never change.
+        let grant = crate::util::parallelism::acquire_workers(want);
+        let workers = grant.workers();
         if workers <= 1 {
             return wave_cells.iter().map(|&(b, c)| self.eval_cell_timed(b, c)).collect();
         }

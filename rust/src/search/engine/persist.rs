@@ -53,7 +53,7 @@ const PLAN_FILE_VERSION: u64 = 1;
 const COST_MAGIC: &[u8; 4] = b"GVCC";
 
 fn warn(msg: &str) {
-    eprintln!("warning: {msg}");
+    crate::util::diag::warn(msg);
 }
 
 // ---- fingerprints ---------------------------------------------------------
@@ -325,10 +325,15 @@ fn write_atomic(path: &Path, bytes: &[u8]) {
         warn(&format!("could not create planner cache dir {}: {e}", dir.display()));
         return;
     }
+    // pid + per-process counter: two threads of one process (or two
+    // processes) writing the same target never share a temp file, so a
+    // rename can only ever publish one writer's complete bytes.
+    static TMP_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     let tmp = dir.join(format!(
-        ".{}.{}.tmp",
+        ".{}.{}.{}.tmp",
         path.file_name().and_then(|n| n.to_str()).unwrap_or("cache-entry"),
-        std::process::id()
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     ));
     if let Err(e) = std::fs::write(&tmp, bytes) {
         warn(&format!("could not write planner cache file {}: {e}", tmp.display()));
@@ -337,6 +342,67 @@ fn write_atomic(path: &Path, bytes: &[u8]) {
     if let Err(e) = std::fs::rename(&tmp, path) {
         warn(&format!("could not publish planner cache file {}: {e}", path.display()));
         let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+// ---- flush lock -----------------------------------------------------------
+
+/// Advisory cross-process lock around the read→merge→write window of
+/// [`PersistHandle::flush`]. Without it, two writers that both read the
+/// store before either renamed would each publish a merge missing the
+/// other's entries — last rename wins, earlier writer's work silently
+/// dropped.
+///
+/// Implemented as an `O_EXCL` lock file next to the store (the only
+/// advisory lock std offers portably). Acquisition waits up to ~2s in
+/// 10ms steps; a lock file older than 10s is presumed abandoned by a
+/// crashed process and stolen. On timeout the caller proceeds unlocked
+/// with a warning — the cache is an accelerator, never a gate, and an
+/// unlocked merge can at worst drop another writer's newest entries
+/// (exactly the historical behavior).
+struct FlushLock {
+    path: PathBuf,
+    held: bool,
+}
+
+impl FlushLock {
+    fn acquire(path: PathBuf) -> FlushLock {
+        const ATTEMPTS: u32 = 200;
+        const STEP: std::time::Duration = std::time::Duration::from_millis(10);
+        const STALE: std::time::Duration = std::time::Duration::from_secs(10);
+        for _ in 0..ATTEMPTS {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(_) => return FlushLock { path, held: true },
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .is_some_and(|age| age > STALE);
+                    if stale {
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(STEP);
+                }
+                // Unwritable/missing directory etc: the flush itself will
+                // surface its own warning; don't spin on a dead path.
+                Err(_) => break,
+            }
+        }
+        warn(&format!(
+            "could not take planner cache lock {} (proceeding unlocked)",
+            path.display()
+        ));
+        FlushLock { path, held: false }
+    }
+}
+
+impl Drop for FlushLock {
+    fn drop(&mut self) {
+        if self.held {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -413,13 +479,26 @@ impl PersistHandle {
     }
 
     /// Merge this run's tables into the on-disk store (union with whatever
-    /// is there; re-read at flush time so concurrent runs lose at most
-    /// their own last write, never corrupt the file).
+    /// is there). The read→merge→write window is serialized by an
+    /// advisory lock file so concurrent flushes — threads of one serve
+    /// daemon or separate CLI processes — each see the other's entries:
+    /// the last writer includes all.
     pub(crate) fn flush(
         &self,
         layer: &HashMap<LayerKey, LayerCost>,
         transforms: &HashMap<TransformKey, f64>,
     ) {
+        // The lock file needs the directory to exist; write_atomic would
+        // create it anyway, just later.
+        if let Err(e) = std::fs::create_dir_all(&self.dir) {
+            warn(&format!(
+                "could not create planner cache dir {}: {e}",
+                self.dir.display()
+            ));
+            return;
+        }
+        let _lock =
+            FlushLock::acquire(self.dir.join(format!(".costs-{:016x}.lock", self.context_fp)));
         let mut store = self.read_store().unwrap_or_default();
         let before = store.layer.len() + store.transforms.len();
         for (&(prov, site, class, b_m, extra, strat), &c) in layer {
@@ -558,5 +637,53 @@ mod tests {
         let c = Fingerprint::new().u64(1).u64(2).finish();
         let d = Fingerprint::new().u64(2).u64(1).finish();
         assert_ne!(c, d);
+    }
+
+    #[test]
+    fn concurrent_flushes_keep_every_writers_entries() {
+        let dir = std::env::temp_dir()
+            .join(format!("galvatron-flush-race-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        const WRITERS: u64 = 8;
+        let barrier = std::sync::Barrier::new(WRITERS as usize);
+        std::thread::scope(|scope| {
+            for i in 0..WRITERS {
+                let dir = dir.clone();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let handle = PersistHandle::new(dir, 0x99, vec![7]);
+                    let mut layer = HashMap::new();
+                    // Disjoint layer-class keys, one per writer.
+                    layer.insert(
+                        (0u64, 0u32, i as u32, 1.0f64.to_bits(), 0.0f64.to_bits(), i),
+                        LayerCost {
+                            fwd: i as f64,
+                            bwd: 0.0,
+                            bwd_sync: 0.0,
+                            mem: LayerMemory { o_ms: 0.0, o_f: 0.0, o_b: 0.0 },
+                        },
+                    );
+                    // All writers hit the read→merge→write window together.
+                    barrier.wait();
+                    handle.flush(&layer, &HashMap::new());
+                });
+            }
+        });
+        let handle = PersistHandle::new(dir.clone(), 0x99, vec![7]);
+        let store = handle.read_store().unwrap_or_default();
+        assert_eq!(
+            store.layer.len(),
+            WRITERS as usize,
+            "a concurrent flush dropped another writer's entries"
+        );
+        // No temp or lock files may survive the flushes.
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(Result::ok)
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|name| name.ends_with(".tmp") || name.ends_with(".lock"))
+            .collect();
+        assert!(leftovers.is_empty(), "leftover files: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,222 @@
+//! Minimal HTTP/1.1 front end for the serve daemon, hand-rolled over
+//! [`std::net::TcpListener`] per the repo's zero-dependency policy. One
+//! request per connection (`Connection: close`), `Content-Length` bodies
+//! only, no TLS.
+//!
+//! Routes:
+//!
+//! * `POST /plan` — body is one serve request object; responds with the
+//!   JSON envelope ([`super::protocol`]). `200` on `status:"ok"`, `400`
+//!   on `status:"error"`.
+//! * `POST /plan/artifact` — same request; responds with the **raw plan
+//!   artifact bytes**, byte-identical to `galvatron plan --out` (this is
+//!   what `cmp`-based gates should fetch). Errors return the envelope
+//!   with `400`.
+//! * `GET /health` — liveness plus the daemon's counters.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use super::{protocol, ServeState};
+
+/// Largest accepted request body; a plan request is a few hundred bytes,
+/// so this is generous headroom, not a real limit.
+const MAX_BODY: usize = 8 * 1024 * 1024;
+const MAX_HEADER_LINES: usize = 100;
+
+/// Accept loop: serves `listener` until the process exits, dispatching
+/// connections to `workers` handler threads. Blocks the calling thread.
+pub fn serve_http(
+    listener: TcpListener,
+    state: Arc<ServeState>,
+    workers: usize,
+) -> std::io::Result<()> {
+    let workers = workers.max(1);
+    std::thread::scope(|scope| {
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        for _ in 0..workers {
+            let conn_rx = Arc::clone(&conn_rx);
+            let state = Arc::clone(&state);
+            scope.spawn(move || loop {
+                let conn = {
+                    let rx = conn_rx.lock().unwrap_or_else(PoisonError::into_inner);
+                    rx.recv()
+                };
+                let Ok(stream) = conn else { break };
+                handle_connection(stream, &state);
+            });
+        }
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    if conn_tx.send(s).is_err() {
+                        break;
+                    }
+                }
+                // Transient accept errors (EMFILE, aborted handshakes)
+                // must not kill the daemon.
+                Err(_) => continue,
+            }
+        }
+        drop(conn_tx);
+        Ok(())
+    })
+}
+
+fn handle_connection(stream: TcpStream, state: &ServeState) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    match read_request(&stream) {
+        Ok((method, path, body)) => respond(&stream, state, &method, &path, &body),
+        Err(reason) => {
+            let envelope = protocol::error_response(
+                None,
+                "parse",
+                &format!("malformed HTTP request: {reason}"),
+                &[],
+            );
+            write_response(&stream, 400, "Bad Request", envelope.to_string().as_bytes());
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Parse request line, headers (only `Content-Length` matters), and body.
+fn read_request(stream: &TcpStream) -> Result<(String, String, Vec<u8>), String> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let path = parts.next().ok_or("request line has no path")?.to_string();
+    let mut content_length = 0usize;
+    let mut saw_blank = false;
+    for _ in 0..MAX_HEADER_LINES {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("connection closed mid-headers".to_string());
+        }
+        let header = header.trim();
+        if header.is_empty() {
+            saw_blank = true;
+            break;
+        }
+        if let Some((key, value)) = header.split_once(':') {
+            if key.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| "unparsable Content-Length")?;
+            }
+        }
+    }
+    if !saw_blank {
+        return Err(format!("more than {MAX_HEADER_LINES} header lines"));
+    }
+    if content_length > MAX_BODY {
+        return Err(format!("body of {content_length} bytes exceeds the {MAX_BODY}-byte limit"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+    Ok((method, path, body))
+}
+
+fn respond(stream: &TcpStream, state: &ServeState, method: &str, path: &str, body: &[u8]) {
+    let (status, reason, payload): (u16, &str, Vec<u8>) = match (method, path) {
+        ("POST", "/plan") | ("POST", "/plan/artifact") => {
+            let text = String::from_utf8_lossy(body);
+            let outcome = state.handle_line(&text);
+            if path == "/plan/artifact" {
+                match &outcome.artifact {
+                    Some(artifact) => (200, "OK", artifact.as_bytes().to_vec()),
+                    None => (400, "Bad Request", outcome.envelope.to_string().into_bytes()),
+                }
+            } else if outcome.ok {
+                (200, "OK", outcome.envelope.to_string().into_bytes())
+            } else {
+                (400, "Bad Request", outcome.envelope.to_string().into_bytes())
+            }
+        }
+        ("GET", "/health") => (200, "OK", state.health_json().to_string().into_bytes()),
+        _ => {
+            let envelope = protocol::error_response(
+                None,
+                "not_found",
+                &format!("no route for {method} {path}"),
+                &[],
+            );
+            (404, "Not Found", envelope.to_string().into_bytes())
+        }
+    };
+    write_response(stream, status, reason, &payload);
+}
+
+fn write_response(mut stream: &TcpStream, status: u16, reason: &str, body: &[u8]) {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body))
+        .and_then(|()| stream.flush());
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_parsing_handles_headers_and_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"POST /plan HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody",
+            )
+            .unwrap();
+            s.flush().unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let (method, path, body) = read_request(&stream).unwrap();
+        assert_eq!(method, "POST");
+        assert_eq!(path, "/plan");
+        assert_eq!(body, b"body");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn missing_blank_line_is_an_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /health HTTP/1.1\r\nHost: x\r\n").unwrap();
+            s.flush().unwrap();
+            // Close without ever sending the header-terminating blank line.
+        });
+        let (stream, _) = listener.accept().unwrap();
+        assert!(read_request(&stream).is_err());
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn json_content_type_header_is_emitted() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            write_response(&stream, 200, "OK", b"{}");
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,477 @@
+//! `galvatron serve`: a long-lived planning-as-a-service daemon.
+//!
+//! The daemon keeps one immutable world resident — zoo specs, cluster
+//! presets, cost model, and the warm persistent caches under
+//! `--cache-dir` — and answers [`crate::api::PlanRequest`]-shaped JSON
+//! over two zero-dependency transports:
+//!
+//! * **JSONL** (default): one request per stdin line, one response per
+//!   stdout line, exit at EOF ([`run_jsonl`]).
+//! * **HTTP/1.1** (`--http ADDR`): a hand-rolled listener over
+//!   [`std::net::TcpListener`] ([`http::serve_http`]).
+//!
+//! Three layers make repeat work cheap, every one re-proved by the same
+//! `check` gate a cold plan passes through:
+//!
+//! 1. **In-flight dedup** — a request identical (by
+//!    [`crate::api::request_fingerprint`]) to one currently being
+//!    planned blocks on that search's result instead of re-searching.
+//! 2. **In-memory memo** — a fingerprint answered before in this
+//!    process returns its retained artifact.
+//! 3. **Persistent store** — the PR 7 `--cache-dir` plan store and cost
+//!    tables, shared with the CLI, which make a *freshly started*
+//!    daemon warm.
+//!
+//! Artifacts are byte-identical to `galvatron plan`: the daemon hands
+//! out `PlanReport::to_json_string()` bytes verbatim (the `out` request
+//! key and the HTTP `/plan/artifact` endpoint), never a re-serialization.
+//!
+//! Concurrent searches share the machine through the process-wide
+//! [`crate::util::parallelism::WorkerBudget`], installed once at daemon
+//! startup: each search's waves draw workers from the shared budget
+//! instead of every request spawning a full pool.
+
+pub mod http;
+pub mod protocol;
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
+
+use crate::api::{request_fingerprint, PlanReport, PlanSource, Planner};
+use crate::util::json::Json;
+
+pub use http::serve_http;
+pub use protocol::{plan_error_kind, ServeError, REQUEST_KEYS};
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Monotonic counters over the daemon's lifetime, served on `/health`.
+#[derive(Default)]
+pub struct ServeStats {
+    requests: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    /// Request-level warm hits from the persistent plan store.
+    store_hits: AtomicU64,
+    /// Hits on the daemon's in-memory memo of past answers.
+    memo_hits: AtomicU64,
+    /// Requests answered from an identical in-flight computation.
+    dedup_hits: AtomicU64,
+    /// Requests that ran a fresh search.
+    searched: AtomicU64,
+}
+
+/// A point-in-time copy of [`ServeStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub store_hits: u64,
+    pub memo_hits: u64,
+    pub dedup_hits: u64,
+    pub searched: u64,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("store_hits", Json::num(self.store_hits as f64)),
+            ("memo_hits", Json::num(self.memo_hits as f64)),
+            ("dedup_hits", Json::num(self.dedup_hits as f64)),
+            ("searched", Json::num(self.searched as f64)),
+        ])
+    }
+}
+
+/// Terminal state of one planning computation, shared with every request
+/// deduplicated onto it.
+#[derive(Clone)]
+enum Done {
+    Ok {
+        /// `"hit"` or `"miss"` — how the leader got the answer.
+        cache: &'static str,
+        /// Exact `PlanReport::to_json_string()` bytes.
+        artifact: Arc<String>,
+        /// Parsed artifact value for the response envelope.
+        report: Arc<Json>,
+        warnings: Arc<Vec<String>>,
+    },
+    Err {
+        kind: &'static str,
+        message: Arc<String>,
+        warnings: Arc<Vec<String>>,
+    },
+}
+
+/// One in-flight computation: the first arrival (leader) fills `done`
+/// and notifies; identical requests arriving meanwhile (waiters) block
+/// on the condvar and share the result.
+struct InFlight {
+    done: Mutex<Option<Done>>,
+    cond: Condvar,
+}
+
+impl InFlight {
+    fn new() -> InFlight {
+        InFlight { done: Mutex::new(None), cond: Condvar::new() }
+    }
+
+    fn complete(&self, done: Done) {
+        let mut slot = lock(&self.done);
+        if slot.is_none() {
+            *slot = Some(done);
+        }
+        drop(slot);
+        self.cond.notify_all();
+    }
+
+    fn wait(&self) -> Done {
+        let mut slot = lock(&self.done);
+        loop {
+            if let Some(done) = slot.as_ref() {
+                return done.clone();
+            }
+            slot = self.cond.wait(slot).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// A memoized answer retained for the daemon's lifetime.
+#[derive(Clone)]
+struct MemoEntry {
+    report: PlanReport,
+    artifact: Arc<String>,
+}
+
+/// The daemon's shared immutable world plus its request-coordination
+/// state. One instance serves every connection of a daemon; it is also
+/// constructed directly by tests and benches to drive the serving path
+/// in-process.
+pub struct ServeState {
+    planner: Planner,
+    cache_dir: Option<PathBuf>,
+    stats: ServeStats,
+    inflight: Mutex<HashMap<u64, Arc<InFlight>>>,
+    memo: Mutex<HashMap<u64, MemoEntry>>,
+}
+
+/// What one request produced: the response envelope (one JSONL line /
+/// HTTP body) plus, on success, the exact artifact bytes.
+pub struct ServeOutcome {
+    pub ok: bool,
+    pub envelope: Json,
+    /// `PlanReport::to_json_string()` bytes, present iff `ok`.
+    pub artifact: Option<Arc<String>>,
+}
+
+impl ServeState {
+    /// `cache_dir` is attached to every request (requests cannot override
+    /// it); `None` plans without persistence unless `GALVATRON_CACHE_DIR`
+    /// is set, mirroring the CLI.
+    pub fn new(cache_dir: Option<PathBuf>) -> ServeState {
+        ServeState {
+            planner: Planner::new(),
+            cache_dir,
+            stats: ServeStats::default(),
+            inflight: Mutex::new(HashMap::new()),
+            memo: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.stats.requests.load(Ordering::SeqCst),
+            ok: self.stats.ok.load(Ordering::SeqCst),
+            errors: self.stats.errors.load(Ordering::SeqCst),
+            store_hits: self.stats.store_hits.load(Ordering::SeqCst),
+            memo_hits: self.stats.memo_hits.load(Ordering::SeqCst),
+            dedup_hits: self.stats.dedup_hits.load(Ordering::SeqCst),
+            searched: self.stats.searched.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Requests currently registered as in-flight (diagnostics/tests).
+    pub fn inflight_len(&self) -> usize {
+        lock(&self.inflight).len()
+    }
+
+    /// Handle one request line (raw JSON text).
+    pub fn handle_line(&self, line: &str) -> ServeOutcome {
+        match Json::parse(line) {
+            Ok(v) => self.handle_value(&v),
+            Err(e) => self.finish_error(
+                None,
+                "parse",
+                &format!("request is not valid JSON: {e}"),
+                &[],
+            ),
+        }
+    }
+
+    /// Handle one parsed request value.
+    pub fn handle_value(&self, v: &Json) -> ServeOutcome {
+        self.handle_value_with(v, || {})
+    }
+
+    /// [`ServeState::handle_value`] with a test seam: `after_register`
+    /// runs iff this request became the leader for its fingerprint,
+    /// after it registered as in-flight and before it computes —
+    /// letting tests hold a search open while identical requests arrive.
+    pub fn handle_value_with(&self, v: &Json, after_register: impl FnOnce()) -> ServeOutcome {
+        self.stats.requests.fetch_add(1, Ordering::SeqCst);
+        let id = v.get("id").cloned();
+        let parsed = match protocol::parse_request(v) {
+            Ok(p) => p,
+            Err(e) => return self.finish_error(id.as_ref(), e.kind, &e.message, &[]),
+        };
+        let mut req = parsed.request;
+        if req.cache_dir.is_none() {
+            req.cache_dir.clone_from(&self.cache_dir);
+        }
+        let resolved = match self.planner.resolve(&req) {
+            Ok(r) => r,
+            Err(e) => {
+                return self.finish_error(id.as_ref(), plan_error_kind(&e), &e.to_string(), &[])
+            }
+        };
+        let fp = request_fingerprint(&resolved);
+
+        enum Role {
+            Leader(Arc<InFlight>),
+            Waiter(Arc<InFlight>),
+        }
+        let role = {
+            let mut inflight = lock(&self.inflight);
+            match inflight.get(&fp) {
+                Some(flight) => Role::Waiter(Arc::clone(flight)),
+                None => {
+                    let flight = Arc::new(InFlight::new());
+                    inflight.insert(fp, Arc::clone(&flight));
+                    Role::Leader(flight)
+                }
+            }
+        };
+        let (done, dedup) = match role {
+            Role::Waiter(flight) => {
+                self.stats.dedup_hits.fetch_add(1, Ordering::SeqCst);
+                (flight.wait(), true)
+            }
+            Role::Leader(flight) => {
+                // Guarantee waiters are released and the slot is freed
+                // even if the computation panics.
+                struct LeaderGuard<'a> {
+                    state: &'a ServeState,
+                    flight: &'a InFlight,
+                    fp: u64,
+                    completed: bool,
+                }
+                impl Drop for LeaderGuard<'_> {
+                    fn drop(&mut self) {
+                        if !self.completed {
+                            self.flight.complete(Done::Err {
+                                kind: "internal",
+                                message: Arc::new("request handler panicked".to_string()),
+                                warnings: Arc::new(Vec::new()),
+                            });
+                        }
+                        lock(&self.state.inflight).remove(&self.fp);
+                    }
+                }
+                let mut guard =
+                    LeaderGuard { state: self, flight: &flight, fp, completed: false };
+                after_register();
+                let done = self.compute(&resolved, fp);
+                flight.complete(done.clone());
+                guard.completed = true;
+                drop(guard);
+                (done, false)
+            }
+        };
+
+        match done {
+            Done::Ok { cache, artifact, report, warnings } => {
+                let cache = if dedup { "dedup" } else { cache };
+                // Each request honors its own `out` path, waiters included.
+                if let Some(path) = &parsed.out {
+                    if let Err(e) = std::fs::write(path, artifact.as_bytes()) {
+                        return self.finish_error(
+                            id.as_ref(),
+                            "io",
+                            &format!("could not write artifact to {}: {e}", path.display()),
+                            &warnings,
+                        );
+                    }
+                }
+                self.stats.ok.fetch_add(1, Ordering::SeqCst);
+                let out = parsed.out.as_deref().map(|p| p.display().to_string());
+                ServeOutcome {
+                    ok: true,
+                    envelope: protocol::ok_response(
+                        id.as_ref(),
+                        cache,
+                        out.as_deref(),
+                        &warnings,
+                        (*report).clone(),
+                    ),
+                    artifact: Some(artifact),
+                }
+            }
+            Done::Err { kind, message, warnings } => {
+                self.finish_error(id.as_ref(), kind, &message, &warnings)
+            }
+        }
+    }
+
+    /// Resolve a fingerprint to an answer: memo, persistent store, or a
+    /// fresh search — capturing every warning the attempt emits.
+    fn compute(&self, r: &crate::api::ResolvedRequest, fp: u64) -> Done {
+        // Bind before the `if let`: a temporary guard in the scrutinee
+        // would live for the whole block and deadlock on the remove below.
+        let memo_entry = lock(&self.memo).get(&fp).cloned();
+        if let Some(entry) = memo_entry {
+            // Same re-proving discipline as the persistent store: a memo
+            // entry that no longer passes the gate is dropped, not served.
+            if crate::check::gate(&r.model, &r.cluster, &entry.report).is_ok() {
+                self.stats.memo_hits.fetch_add(1, Ordering::SeqCst);
+                return Done::Ok {
+                    cache: "hit",
+                    artifact: entry.artifact,
+                    report: Arc::new(entry.report.to_json()),
+                    warnings: Arc::new(Vec::new()),
+                };
+            }
+            lock(&self.memo).remove(&fp);
+        }
+        let (result, warnings) =
+            crate::util::diag::capture(|| self.planner.plan_resolved_sourced(r));
+        match result {
+            Ok((report, source)) => {
+                let cache = match source {
+                    PlanSource::Stored => {
+                        self.stats.store_hits.fetch_add(1, Ordering::SeqCst);
+                        "hit"
+                    }
+                    PlanSource::Searched => {
+                        self.stats.searched.fetch_add(1, Ordering::SeqCst);
+                        "miss"
+                    }
+                };
+                let artifact = Arc::new(report.to_json_string());
+                let report_json = Arc::new(report.to_json());
+                lock(&self.memo)
+                    .insert(fp, MemoEntry { report, artifact: Arc::clone(&artifact) });
+                Done::Ok {
+                    cache,
+                    artifact,
+                    report: report_json,
+                    warnings: Arc::new(warnings),
+                }
+            }
+            Err(e) => Done::Err {
+                kind: plan_error_kind(&e),
+                message: Arc::new(e.to_string()),
+                warnings: Arc::new(warnings),
+            },
+        }
+    }
+
+    fn finish_error(
+        &self,
+        id: Option<&Json>,
+        kind: &str,
+        message: &str,
+        warnings: &[String],
+    ) -> ServeOutcome {
+        self.stats.errors.fetch_add(1, Ordering::SeqCst);
+        ServeOutcome {
+            ok: false,
+            envelope: protocol::error_response(id, kind, message, warnings),
+            artifact: None,
+        }
+    }
+
+    /// `/health` payload.
+    pub fn health_json(&self) -> Json {
+        Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("stats", self.stats().to_json()),
+        ])
+    }
+}
+
+/// Drive the daemon over JSONL: one request per input line, one response
+/// envelope per output line. Responses stream in completion order —
+/// match them to requests by the echoed `id`; with `workers == 1` they
+/// are strictly in request order. Returns when the reader reaches EOF
+/// and every accepted request has been answered.
+pub fn run_jsonl<R, W>(
+    state: &Arc<ServeState>,
+    reader: R,
+    writer: W,
+    workers: usize,
+) -> std::io::Result<()>
+where
+    R: BufRead,
+    W: Write + Send,
+{
+    let workers = workers.max(1);
+    std::thread::scope(|scope| -> std::io::Result<()> {
+        let (response_tx, response_rx) = mpsc::channel::<String>();
+        // One writer thread serializes output so responses never interleave.
+        let writer_thread = scope.spawn(move || -> std::io::Result<()> {
+            let mut writer = writer;
+            for line in response_rx {
+                writeln!(writer, "{line}")?;
+                writer.flush()?;
+            }
+            Ok(())
+        });
+        {
+            // Bounded job queue: a flood of input lines backpressures the
+            // reader instead of buffering unboundedly.
+            let (job_tx, job_rx) = mpsc::sync_channel::<String>(workers);
+            let job_rx = Arc::new(Mutex::new(job_rx));
+            for _ in 0..workers {
+                let job_rx = Arc::clone(&job_rx);
+                let response_tx = response_tx.clone();
+                let state = Arc::clone(state);
+                scope.spawn(move || loop {
+                    let job = {
+                        let rx = job_rx.lock().unwrap_or_else(PoisonError::into_inner);
+                        rx.recv()
+                    };
+                    let Ok(line) = job else { break };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let outcome = state.handle_line(&line);
+                    if response_tx.send(outcome.envelope.to_string()).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(response_tx);
+            for line in reader.lines() {
+                let line = line?;
+                if job_tx.send(line).is_err() {
+                    break;
+                }
+            }
+            // job_tx drops here: workers drain the queue and exit, the
+            // last response_tx clone drops, and the writer finishes.
+        }
+        match writer_thread.join() {
+            Ok(result) => result,
+            Err(_) => Ok(()),
+        }
+    })
+}

@@ -1,0 +1,301 @@
+//! Wire schema of the serve daemon: request JSON → [`PlanRequest`],
+//! response envelopes, and the typed error-kind vocabulary shared by the
+//! JSONL and HTTP transports.
+//!
+//! A request is a single JSON object mirroring the `galvatron plan` CLI
+//! flags (strict: unknown keys are rejected so typos fail loudly):
+//!
+//! ```json
+//! {"id": 1, "model": "bert-huge-32", "cluster": "titan8",
+//!  "memory_gb": 16, "max_batch": 64, "out": "/tmp/plan.json"}
+//! ```
+//!
+//! Responses are one JSON object per request:
+//!
+//! ```json
+//! {"status": "ok", "id": 1, "cache": "miss", "warnings": [], "report": {...}}
+//! {"status": "error", "id": 2, "error": {"kind": "infeasible", "message": "..."},
+//!  "warnings": []}
+//! ```
+//!
+//! `cache` is `"miss"` (fresh search), `"hit"` (request-level warm hit —
+//! persistent store or the daemon's in-memory memo), or `"dedup"` (this
+//! request arrived while an identical one was already in flight and was
+//! answered from its result).
+
+use std::path::PathBuf;
+
+use crate::api::{parse_schedule, PlanError, PlanRequest};
+use crate::util::json::{check_object_keys, Json};
+
+/// Every key a serve request may carry. `id` is echoed back verbatim for
+/// matching responses to requests under concurrency; `out` makes the
+/// daemon write the raw artifact (byte-identical to `plan --out`) to a
+/// path; the rest mirror `galvatron plan` flags.
+pub const REQUEST_KEYS: &[&str] = &[
+    "id",
+    "model",
+    "model_file",
+    "cluster",
+    "memory_gb",
+    "method",
+    "max_batch",
+    "dtype",
+    "optimizer",
+    "zero",
+    "schedule",
+    "overlap_slowdown",
+    "microbatch_limit",
+    "pipeline_degrees",
+    "threads",
+    "profile_db",
+    "out",
+];
+
+/// A serve-level failure: protocol errors (bad JSON, bad schema) and
+/// planner errors share one envelope shape.
+#[derive(Debug, Clone)]
+pub struct ServeError {
+    pub kind: &'static str,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn schema(message: impl Into<String>) -> ServeError {
+        ServeError { kind: "schema", message: message.into() }
+    }
+}
+
+/// Stable snake_case kind for a [`PlanError`], so clients can dispatch on
+/// errors without parsing prose.
+pub fn plan_error_kind(e: &PlanError) -> &'static str {
+    match e {
+        PlanError::UnknownModel { .. } => "unknown_model",
+        PlanError::UnknownCluster { .. } => "unknown_cluster",
+        PlanError::UnknownMethod { .. } => "unknown_method",
+        PlanError::InvalidRequest { .. } => "invalid_request",
+        PlanError::InvalidModel { .. } => "invalid_model",
+        PlanError::InvalidCluster { .. } => "invalid_cluster",
+        PlanError::InvalidProfileDb { .. } => "invalid_profile_db",
+        PlanError::ProfileDbCoverage { .. } => "profile_db_coverage",
+        PlanError::Infeasible { .. } => "infeasible",
+        PlanError::Artifact { .. } => "artifact",
+        PlanError::InvalidArtifact { .. } => "invalid_artifact",
+    }
+}
+
+/// A parsed serve request: the planner input plus serve-only directives.
+pub struct ParsedRequest {
+    pub request: PlanRequest,
+    pub out: Option<PathBuf>,
+}
+
+fn str_field<'a>(v: &'a Json, key: &str) -> Result<Option<&'a str>, ServeError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => j
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| ServeError::schema(format!("\"{key}\" must be a string"))),
+    }
+}
+
+fn f64_field(v: &Json, key: &str) -> Result<Option<f64>, ServeError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => j
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| ServeError::schema(format!("\"{key}\" must be a number"))),
+    }
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<Option<usize>, ServeError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => match j.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(Some(n as usize)),
+            _ => Err(ServeError::schema(format!("\"{key}\" must be a non-negative integer"))),
+        },
+    }
+}
+
+/// Parse and validate one request object into a [`PlanRequest`]. Strict:
+/// missing required keys, unknown keys, and wrong types all produce a
+/// `schema` error naming the offending field.
+pub fn parse_request(v: &Json) -> Result<ParsedRequest, ServeError> {
+    check_object_keys(v, REQUEST_KEYS, "serve request").map_err(ServeError::schema)?;
+    let model = str_field(v, "model")?
+        .ok_or_else(|| ServeError::schema("a \"model\" string is required"))?;
+    let cluster = str_field(v, "cluster")?
+        .ok_or_else(|| ServeError::schema("a \"cluster\" string is required"))?;
+    let mut req = PlanRequest::new(model, cluster);
+    if let Some(path) = str_field(v, "model_file")? {
+        req = req.model_file(path);
+    }
+    if let Some(gb) = f64_field(v, "memory_gb")? {
+        req = req.memory_gb(gb);
+    }
+    if let Some(name) = str_field(v, "method")? {
+        req = req.try_method_name(name).map_err(|e| ServeError {
+            kind: plan_error_kind(&e),
+            message: e.to_string(),
+        })?;
+    }
+    if let Some(n) = usize_field(v, "max_batch")? {
+        req = req.max_batch(n);
+    }
+    if let Some(name) = str_field(v, "dtype")? {
+        let dtype = name
+            .parse()
+            .map_err(|e| ServeError::schema(format!("\"dtype\": {e}")))?;
+        req = req.dtype(dtype);
+    }
+    if let Some(name) = str_field(v, "optimizer")? {
+        let optimizer = name
+            .parse()
+            .map_err(|e| ServeError::schema(format!("\"optimizer\": {e}")))?;
+        req = req.optimizer(optimizer);
+    }
+    if let Some(j) = v.get("zero") {
+        let zero = j
+            .as_bool()
+            .ok_or_else(|| ServeError::schema("\"zero\" must be a boolean"))?;
+        req = req.zero(zero);
+    }
+    if let Some(name) = str_field(v, "schedule")? {
+        let schedule = parse_schedule(name)
+            .map_err(|e| ServeError::schema(format!("\"schedule\": {e}")))?;
+        req = req.schedule(schedule);
+    }
+    if let Some(factor) = f64_field(v, "overlap_slowdown")? {
+        req = req.overlap_slowdown(factor);
+    }
+    if let Some(limit) = usize_field(v, "microbatch_limit")? {
+        req = req.microbatch_limit(limit);
+    }
+    if let Some(j) = v.get("pipeline_degrees") {
+        let degrees = j.as_usize_vec().ok_or_else(|| {
+            ServeError::schema("\"pipeline_degrees\" must be an array of integers")
+        })?;
+        req = req.pipeline_degrees(&degrees);
+    }
+    if let Some(n) = usize_field(v, "threads")? {
+        req = req.threads(n);
+    }
+    if let Some(path) = str_field(v, "profile_db")? {
+        req = req.profile_db(path);
+    }
+    let out = str_field(v, "out")?.map(PathBuf::from);
+    Ok(ParsedRequest { request: req, out })
+}
+
+fn warnings_json(warnings: &[String]) -> Json {
+    Json::arr(warnings.iter().map(|w| Json::str(w)))
+}
+
+/// Success envelope. `report` is the parsed artifact value; the exact
+/// artifact bytes travel via `out` files or the HTTP `/plan/artifact`
+/// endpoint (re-serializing the envelope is not guaranteed byte-identical
+/// to `PlanReport::to_json_string`).
+pub fn ok_response(
+    id: Option<&Json>,
+    cache: &str,
+    out: Option<&str>,
+    warnings: &[String],
+    report: Json,
+) -> Json {
+    let mut fields = vec![
+        ("status", Json::str("ok")),
+        ("cache", Json::str(cache)),
+        ("warnings", warnings_json(warnings)),
+        ("report", report),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
+    if let Some(out) = out {
+        fields.push(("out", Json::str(out)));
+    }
+    Json::obj(fields)
+}
+
+/// Error envelope with a stable `error.kind` for dispatch.
+pub fn error_response(id: Option<&Json>, kind: &str, message: &str, warnings: &[String]) -> Json {
+    let mut fields = vec![
+        ("status", Json::str("error")),
+        (
+            "error",
+            Json::obj(vec![("kind", Json::str(kind)), ("message", Json::str(message))]),
+        ),
+        ("warnings", warnings_json(warnings)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_request_parses() {
+        let v = Json::parse(r#"{"model":"bert-huge-32","cluster":"titan8"}"#).unwrap();
+        let parsed = parse_request(&v).unwrap();
+        assert!(parsed.out.is_none());
+        assert!(matches!(
+            &parsed.request.model,
+            crate::api::ModelSource::Name(n) if n == "bert-huge-32"
+        ));
+        assert!(matches!(
+            &parsed.request.cluster,
+            crate::api::ClusterSource::Name(n) if n == "titan8"
+        ));
+    }
+
+    #[test]
+    fn missing_required_keys_are_schema_errors() {
+        let v = Json::parse(r#"{"model":"bert-huge-32"}"#).unwrap();
+        let err = parse_request(&v).unwrap_err();
+        assert_eq!(err.kind, "schema");
+        assert!(err.message.contains("cluster"), "{}", err.message);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let v =
+            Json::parse(r#"{"model":"m","cluster":"c","max_bathc":4}"#).unwrap();
+        let err = parse_request(&v).unwrap_err();
+        assert_eq!(err.kind, "schema");
+        assert!(err.message.contains("max_bathc"), "{}", err.message);
+    }
+
+    #[test]
+    fn wrong_types_name_the_field() {
+        let v = Json::parse(r#"{"model":"m","cluster":"c","max_batch":"lots"}"#).unwrap();
+        let err = parse_request(&v).unwrap_err();
+        assert!(err.message.contains("max_batch"), "{}", err.message);
+        let v = Json::parse(r#"{"model":"m","cluster":"c","zero":1}"#).unwrap();
+        let err = parse_request(&v).unwrap_err();
+        assert!(err.message.contains("zero"), "{}", err.message);
+    }
+
+    #[test]
+    fn envelopes_have_stable_shape() {
+        let id = Json::num(7.0);
+        let ok = ok_response(Some(&id), "hit", Some("/tmp/x.json"), &[], Json::obj(vec![]));
+        assert_eq!(ok.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(ok.get("cache").and_then(Json::as_str), Some("hit"));
+        assert_eq!(ok.get("id").and_then(Json::as_f64), Some(7.0));
+        let err = error_response(None, "parse", "bad json", &["w".to_string()]);
+        assert_eq!(err.get("status").and_then(Json::as_str), Some("error"));
+        assert_eq!(
+            err.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("parse")
+        );
+        assert_eq!(err.get("warnings").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-request warning sink.
+//!
+//! Library code emits operational warnings (ignored cache files, IO
+//! hiccups, provenance mismatches) through [`warn`]. By default they go
+//! to stderr as `warning: <msg>` — byte-identical to the historical
+//! `eprintln!` behavior of the plain CLI paths. A caller that owns a
+//! request boundary (the serve daemon, `check --json`) installs a
+//! collector with [`capture`], which gathers every warning emitted on
+//! the current thread for the closure's duration and returns them
+//! alongside the closure's result, so they can be surfaced as a
+//! structured `warnings` array instead of interleaving with protocol
+//! output on a shared stderr.
+//!
+//! The sink is thread-local: a collector never sees warnings from other
+//! threads. Every current [`warn`] call site runs on the thread that
+//! initiated the request (the engine's wave workers do not warn), so a
+//! per-request `capture` around the planner entry point is complete.
+
+use std::cell::RefCell;
+
+thread_local! {
+    /// Stack of active collectors on this thread; [`warn`] appends to the
+    /// innermost one, falling back to stderr when the stack is empty.
+    static COLLECTORS: RefCell<Vec<Vec<String>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Emit an operational warning. Captured by the innermost active
+/// [`capture`] on this thread; otherwise printed to stderr as
+/// `warning: <msg>` (the plain-CLI behavior).
+pub fn warn(msg: &str) {
+    let captured = COLLECTORS.with(|c| {
+        let mut stack = c.borrow_mut();
+        match stack.last_mut() {
+            Some(frame) => {
+                frame.push(msg.to_string());
+                true
+            }
+            None => false,
+        }
+    });
+    if !captured {
+        eprintln!("warning: {msg}");
+    }
+}
+
+/// Run `f` with a warning collector installed on this thread, returning
+/// its result together with every warning emitted while it ran. Nests:
+/// an inner `capture` shadows the outer one for its duration.
+pub fn capture<T>(f: impl FnOnce() -> T) -> (T, Vec<String>) {
+    struct Frame;
+    impl Drop for Frame {
+        fn drop(&mut self) {
+            COLLECTORS.with(|c| {
+                c.borrow_mut().pop();
+            });
+        }
+    }
+    COLLECTORS.with(|c| c.borrow_mut().push(Vec::new()));
+    let frame = Frame;
+    let out = f();
+    let warnings = COLLECTORS.with(|c| {
+        c.borrow_mut()
+            .last_mut()
+            .map(std::mem::take)
+            .unwrap_or_default()
+    });
+    drop(frame);
+    (out, warnings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_collects_warnings_and_returns_result() {
+        let (value, warnings) = capture(|| {
+            warn("first");
+            warn("second");
+            42
+        });
+        assert_eq!(value, 42);
+        assert_eq!(warnings, vec!["first".to_string(), "second".to_string()]);
+    }
+
+    #[test]
+    fn capture_is_empty_when_nothing_warned() {
+        let ((), warnings) = capture(|| {});
+        assert!(warnings.is_empty());
+    }
+
+    #[test]
+    fn nested_capture_shadows_the_outer_collector() {
+        let ((inner_warnings, ()), outer_warnings) = capture(|| {
+            warn("outer-before");
+            let ((), inner) = capture(|| warn("inner"));
+            warn("outer-after");
+            (inner, ())
+        });
+        assert_eq!(inner_warnings, vec!["inner".to_string()]);
+        assert_eq!(
+            outer_warnings,
+            vec!["outer-before".to_string(), "outer-after".to_string()]
+        );
+    }
+
+    #[test]
+    fn collector_is_removed_after_capture() {
+        let ((), warnings) = capture(|| warn("kept"));
+        assert_eq!(warnings.len(), 1);
+        // With no active collector this must not panic (routes to stderr).
+        warn("stderr-bound");
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod diag;
 pub mod json;
 pub mod parallelism;
 pub mod rng;

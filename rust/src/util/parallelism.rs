@@ -41,6 +41,105 @@ pub fn resolve_from(requested: Option<usize>, env: Option<&str>, detected: usize
     detected.max(1)
 }
 
+/// A cap on the total number of engine worker threads active at once,
+/// shared by every concurrent search in the process.
+///
+/// One-shot CLI runs never install a budget: a single search owns the
+/// machine and sizes its pool exactly as requested, byte- and
+/// thread-count-identical to the historical behavior. The serve daemon
+/// installs one at startup (see [`install_worker_budget`]) so that
+/// concurrent plan requests multiplex the same cores at wave granularity
+/// instead of each spawning a full pool and oversubscribing.
+///
+/// Grants never block and are always at least one worker, so a flood of
+/// requests degrades toward one-thread-per-search execution instead of
+/// deadlocking or starving anyone. Worker counts are proven not to affect
+/// plan bytes (the determinism gates), so granting fewer threads than
+/// requested never changes a result.
+pub struct WorkerBudget {
+    capacity: usize,
+    active: std::sync::Mutex<usize>,
+}
+
+impl WorkerBudget {
+    pub fn new(capacity: usize) -> WorkerBudget {
+        WorkerBudget { capacity: capacity.max(1), active: std::sync::Mutex::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Workers currently checked out (diagnostics and tests).
+    pub fn active(&self) -> usize {
+        *self.active.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Check out up to `want` workers: the grant is `want` capped by the
+    /// capacity still free, but never less than one — a search always
+    /// makes progress on its own thread.
+    pub fn acquire(&self, want: usize) -> WorkerGrant<'_> {
+        let want = want.max(1);
+        let mut active = self.active.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let free = self.capacity.saturating_sub(*active);
+        let granted = want.min(free).max(1);
+        *active += granted;
+        WorkerGrant { budget: Some(self), granted }
+    }
+}
+
+/// RAII grant from [`WorkerBudget::acquire`]; returns its workers to the
+/// budget on drop.
+pub struct WorkerGrant<'a> {
+    budget: Option<&'a WorkerBudget>,
+    granted: usize,
+}
+
+impl WorkerGrant<'_> {
+    pub fn workers(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for WorkerGrant<'_> {
+    fn drop(&mut self) {
+        if let Some(budget) = self.budget {
+            let mut active =
+                budget.active.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            *active = active.saturating_sub(self.granted);
+        }
+    }
+}
+
+static BUDGET: std::sync::OnceLock<WorkerBudget> = std::sync::OnceLock::new();
+
+/// Install the process-wide worker budget. The first call wins (returns
+/// `true`); later calls are no-ops (`false`). Plain CLI runs never call
+/// this, so their searches keep exactly the pool size they resolved.
+pub fn install_worker_budget(capacity: usize) -> bool {
+    let mut installed = false;
+    BUDGET.get_or_init(|| {
+        installed = true;
+        WorkerBudget::new(capacity)
+    });
+    installed
+}
+
+/// The installed process-wide budget, if any.
+pub fn worker_budget() -> Option<&'static WorkerBudget> {
+    BUDGET.get()
+}
+
+/// Check out up to `want` workers from the process-wide budget. Without
+/// an installed budget the grant is simply `want` — the zero-overhead
+/// CLI fast path.
+pub fn acquire_workers(want: usize) -> WorkerGrant<'static> {
+    match BUDGET.get() {
+        Some(budget) => budget.acquire(want),
+        None => WorkerGrant { budget: None, granted: want.max(1) },
+    }
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
@@ -78,5 +177,46 @@ mod tests {
     fn real_resolver_returns_at_least_one() {
         assert!(resolve_worker_count(None) >= 1);
         assert_eq!(resolve_worker_count(Some(5)), 5);
+    }
+
+    // The budget is exercised on instances only: installing the global
+    // OnceLock here would leak into every other unit test in this binary.
+
+    #[test]
+    fn budget_caps_grants_at_capacity() {
+        let budget = WorkerBudget::new(4);
+        let a = budget.acquire(3);
+        assert_eq!(a.workers(), 3);
+        let b = budget.acquire(3);
+        assert_eq!(b.workers(), 1, "only one worker left under the cap");
+        assert_eq!(budget.active(), 4);
+    }
+
+    #[test]
+    fn exhausted_budget_still_grants_one_worker() {
+        let budget = WorkerBudget::new(2);
+        let a = budget.acquire(2);
+        assert_eq!(a.workers(), 2);
+        // Over-committed rather than blocked: progress beats fairness.
+        let b = budget.acquire(8);
+        assert_eq!(b.workers(), 1);
+        assert_eq!(budget.active(), 3);
+    }
+
+    #[test]
+    fn dropping_a_grant_returns_its_workers() {
+        let budget = WorkerBudget::new(4);
+        let a = budget.acquire(4);
+        assert_eq!(budget.active(), 4);
+        drop(a);
+        assert_eq!(budget.active(), 0);
+        assert_eq!(budget.acquire(4).workers(), 4);
+    }
+
+    #[test]
+    fn zero_inputs_are_clamped_to_one() {
+        let budget = WorkerBudget::new(0);
+        assert_eq!(budget.capacity(), 1);
+        assert_eq!(budget.acquire(0).workers(), 1);
     }
 }

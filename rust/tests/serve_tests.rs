@@ -1,0 +1,386 @@
+//! Integration tests for the `galvatron serve` daemon core.
+//!
+//! The contract under test: the daemon is a transport around the exact
+//! CLI planning pipeline — every served artifact is byte-identical to
+//! `galvatron plan` output, identical in-flight requests collapse onto
+//! one search, warm starts answer from the persistent store without
+//! searching, and a malformed request produces a typed error without
+//! killing the daemon.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use galvatron::api::{MethodSpec, PlanRequest};
+use galvatron::serve::{run_jsonl, serve_http, ServeState};
+use galvatron::util::json::Json;
+
+/// The serve-request twin of `persist_tests::request`: same model,
+/// cluster, budget and pinned pipeline degree, so searches take
+/// milliseconds and fingerprints line up with [`direct`].
+fn req_line(max_batch: usize) -> String {
+    format!(
+        r#"{{"cluster":"titan8","max_batch":{max_batch},"memory_gb":16,"model":"bert-huge-32","pipeline_degrees":[4]}}"#
+    )
+}
+
+/// The CLI-equivalent request: identical knobs, explicit thread count.
+fn direct(max_batch: usize, threads: usize) -> PlanRequest {
+    PlanRequest::new("bert-huge-32", "titan8")
+        .memory_gb(16.0)
+        .max_batch(max_batch)
+        .pipeline_degrees(&[4])
+        .method(MethodSpec::Bmw { ckpt: true })
+        .threads(threads)
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("galvatron-serve-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn state(cache_dir: Option<&Path>) -> Arc<ServeState> {
+    Arc::new(ServeState::new(cache_dir.map(Path::to_path_buf)))
+}
+
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    cond()
+}
+
+#[test]
+fn concurrent_distinct_requests_match_serial_plan_artifacts() {
+    // Serve plans with auto threads; the serial baseline pins threads=1.
+    // Byte-identity across that asymmetry is the whole point.
+    let st = state(None);
+    let batches = [8usize, 12, 16, 20];
+    let serial: Vec<String> = batches
+        .iter()
+        .map(|&b| direct(b, 1).plan().unwrap().to_json_string())
+        .collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = batches
+            .iter()
+            .map(|&b| {
+                let st = Arc::clone(&st);
+                scope.spawn(move || st.handle_line(&req_line(b)))
+            })
+            .collect();
+        for (handle, expect) in handles.into_iter().zip(&serial) {
+            let outcome = handle.join().unwrap();
+            assert!(outcome.ok, "{}", outcome.envelope);
+            assert_eq!(
+                outcome.artifact.as_deref().map(String::as_str),
+                Some(expect.as_str()),
+                "served artifact differs from the serial CLI artifact"
+            );
+            assert_eq!(
+                outcome.envelope.get("cache").and_then(Json::as_str),
+                Some("miss")
+            );
+        }
+    });
+    let stats = st.stats();
+    assert_eq!(stats.searched, batches.len() as u64);
+    assert_eq!(stats.ok, batches.len() as u64);
+    assert_eq!(stats.dedup_hits, 0);
+}
+
+#[test]
+fn identical_simultaneous_requests_share_one_search() {
+    let st = state(None);
+    let expect = direct(16, 1).plan().unwrap().to_json_string();
+    let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+    std::thread::scope(|scope| {
+        // Leader: registers in-flight, then blocks inside the test seam
+        // until released — holding the "search" open.
+        let leader = {
+            let st = Arc::clone(&st);
+            scope.spawn(move || {
+                let v = Json::parse(&req_line(16)).unwrap();
+                st.handle_value_with(&v, || {
+                    release_rx.recv().unwrap();
+                })
+            })
+        };
+        assert!(
+            wait_until(Duration::from_secs(10), || st.inflight_len() == 1),
+            "leader never registered in-flight"
+        );
+        // Waiter: same request while the leader is mid-search.
+        let waiter = {
+            let st = Arc::clone(&st);
+            scope.spawn(move || st.handle_line(&req_line(16)))
+        };
+        // dedup_hits is bumped before the waiter blocks on the result.
+        assert!(
+            wait_until(Duration::from_secs(10), || st.stats().dedup_hits == 1),
+            "waiter never deduplicated onto the in-flight search"
+        );
+        release_tx.send(()).unwrap();
+        let leader_out = leader.join().unwrap();
+        let waiter_out = waiter.join().unwrap();
+        assert!(leader_out.ok && waiter_out.ok);
+        assert_eq!(leader_out.artifact.as_deref().map(String::as_str), Some(expect.as_str()));
+        assert_eq!(waiter_out.artifact.as_deref().map(String::as_str), Some(expect.as_str()));
+        assert_eq!(leader_out.envelope.get("cache").and_then(Json::as_str), Some("miss"));
+        assert_eq!(waiter_out.envelope.get("cache").and_then(Json::as_str), Some("dedup"));
+    });
+    let stats = st.stats();
+    assert_eq!(stats.searched, 1, "exactly one search for two identical requests");
+    assert_eq!(stats.dedup_hits, 1);
+    assert_eq!(stats.ok, 2);
+    assert_eq!(st.inflight_len(), 0, "in-flight slot freed after completion");
+}
+
+#[test]
+fn malformed_requests_get_typed_errors_and_the_daemon_survives() {
+    let st = state(None);
+    let input = format!(
+        "this is not json\n{{\"model\":\"bert-huge-32\"}}\n{}\n",
+        req_line(8)
+    );
+    let mut output: Vec<u8> = Vec::new();
+    // workers=1 => responses in strict request order.
+    run_jsonl(&st, std::io::Cursor::new(input.into_bytes()), &mut output, 1).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    let lines: Vec<Json> =
+        text.lines().map(|l| Json::parse(l).expect("each response line is JSON")).collect();
+    assert_eq!(lines.len(), 3, "{text}");
+    assert_eq!(lines[0].get("status").and_then(Json::as_str), Some("error"));
+    assert_eq!(
+        lines[0].get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("parse")
+    );
+    assert_eq!(lines[1].get("status").and_then(Json::as_str), Some("error"));
+    assert_eq!(
+        lines[1].get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("schema"),
+        "missing cluster is a schema error"
+    );
+    // The daemon kept serving: the valid request after two bad ones planned.
+    assert_eq!(lines[2].get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(st.stats().errors, 2);
+    assert_eq!(st.stats().ok, 1);
+}
+
+#[test]
+fn warm_started_daemon_answers_from_the_store_without_searching() {
+    let dir = fresh_dir("warm");
+    // Prime via the CLI-equivalent API path (same request fingerprint).
+    let cold = direct(16, 1).cache_dir(&dir).plan().unwrap();
+    // Tamper the stored throughput (persist_tests trick): if the daemon
+    // returns the tampered number, it answered from the store.
+    let plan_files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("plan-") && n.ends_with(".json"))
+        })
+        .collect();
+    assert_eq!(plan_files.len(), 1);
+    let Json::Obj(mut top) = Json::parse(&std::fs::read_to_string(&plan_files[0]).unwrap())
+        .unwrap()
+    else {
+        panic!("plan entry is not a JSON object");
+    };
+    match top.get_mut("report") {
+        Some(Json::Obj(r)) => {
+            let t = match r.get("throughput") {
+                Some(Json::Num(n)) => *n,
+                other => panic!("report has a numeric throughput: {other:?}"),
+            };
+            r.insert("throughput".to_string(), Json::num(t + 1.0));
+        }
+        other => panic!("plan entry has a report object: {other:?}"),
+    }
+    std::fs::write(&plan_files[0], Json::Obj(top).to_string()).unwrap();
+
+    let st = state(Some(&dir));
+    let first = st.handle_line(&req_line(16));
+    assert!(first.ok, "{}", first.envelope);
+    assert_eq!(
+        first.envelope.get("cache").and_then(Json::as_str),
+        Some("hit"),
+        "a freshly started daemon over a primed store is warm"
+    );
+    let served = first
+        .envelope
+        .get("report")
+        .and_then(|r| r.get("throughput"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(
+        (served - (cold.throughput + 1.0)).abs() < 1e-6,
+        "expected the stored (tampered) throughput back: served {served}, cold {}",
+        cold.throughput
+    );
+    assert_eq!(st.stats().searched, 0, "no search may run on a warm hit");
+    assert_eq!(st.stats().store_hits, 1);
+    // A repeat of the same request is a memo hit — still no search.
+    let second = st.handle_line(&req_line(16));
+    assert!(second.ok);
+    assert_eq!(second.envelope.get("cache").and_then(Json::as_str), Some("hit"));
+    assert_eq!(
+        second.artifact.as_deref().map(String::as_str),
+        first.artifact.as_deref().map(String::as_str)
+    );
+    assert_eq!(st.stats().searched, 0);
+    assert_eq!(st.stats().memo_hits, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn invalid_store_entries_surface_as_response_warnings() {
+    let dir = fresh_dir("badentry");
+    direct(16, 1).cache_dir(&dir).plan().unwrap();
+    // Flip the entry's fingerprint: the loader must refuse it, plan cold,
+    // and the refusal must surface in the response's warnings array
+    // (per-request diag capture) instead of raw stderr.
+    let plan_files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("plan-") && n.ends_with(".json"))
+        })
+        .collect();
+    assert_eq!(plan_files.len(), 1);
+    let Json::Obj(mut top) = Json::parse(&std::fs::read_to_string(&plan_files[0]).unwrap())
+        .unwrap()
+    else {
+        panic!("plan entry is not a JSON object");
+    };
+    top.insert("request_fingerprint".to_string(), Json::str("00000000deadbeef"));
+    std::fs::write(&plan_files[0], Json::Obj(top).to_string()).unwrap();
+
+    let st = state(Some(&dir));
+    let outcome = st.handle_line(&req_line(16));
+    assert!(outcome.ok, "{}", outcome.envelope);
+    assert_eq!(
+        outcome.envelope.get("cache").and_then(Json::as_str),
+        Some("miss"),
+        "a refused store entry plans cold"
+    );
+    let warnings = outcome.envelope.get("warnings").and_then(Json::as_arr).unwrap();
+    assert!(
+        warnings.iter().any(|w| {
+            w.as_str().is_some_and(|s| {
+                s.contains("ignoring planner cache file") && s.contains("fingerprint mismatch")
+            })
+        }),
+        "expected the store refusal in the warnings array, got {warnings:?}"
+    );
+    assert_eq!(st.stats().searched, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- HTTP transport -------------------------------------------------------
+
+fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let header_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header terminator")
+        + 4;
+    (status, raw[header_end..].to_vec())
+}
+
+#[test]
+fn http_round_trip_serves_exact_artifacts_and_typed_errors() {
+    let st = state(None);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let st = Arc::clone(&st);
+        // The accept loop runs forever; leak the thread (process exit
+        // reaps it) exactly like the daemon would.
+        std::thread::spawn(move || {
+            let _ = serve_http(listener, st, 2);
+        });
+    }
+    let expect = direct(8, 1).plan().unwrap().to_json_string();
+    // Raw-artifact endpoint: byte-identical to `galvatron plan --out`.
+    let (status, body) = http_request(addr, "POST", "/plan/artifact", &req_line(8));
+    assert_eq!(status, 200);
+    assert_eq!(body, expect.as_bytes(), "HTTP artifact differs from CLI artifact");
+    // Envelope endpoint; the repeat is answered by the daemon's memo.
+    let (status, body) = http_request(addr, "POST", "/plan", &req_line(8));
+    assert_eq!(status, 200);
+    let envelope = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(envelope.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(envelope.get("cache").and_then(Json::as_str), Some("hit"));
+    // Health endpoint reports the counters.
+    let (status, body) = http_request(addr, "GET", "/health", "");
+    assert_eq!(status, 200);
+    let health = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(
+        health.get("stats").and_then(|s| s.get("searched")).and_then(Json::as_usize),
+        Some(1)
+    );
+    // Malformed body: typed error, daemon stays up.
+    let (status, body) = http_request(addr, "POST", "/plan", "not json");
+    assert_eq!(status, 400);
+    let envelope = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(
+        envelope.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("parse")
+    );
+    // Unknown route.
+    let (status, _) = http_request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    // And it still serves after all that.
+    let (status, body) = http_request(addr, "POST", "/plan/artifact", &req_line(8));
+    assert_eq!(status, 200);
+    assert_eq!(body, expect.as_bytes());
+}
+
+#[test]
+fn installed_worker_budget_never_changes_artifacts() {
+    // Install a tiny process-wide budget (the daemon does this at
+    // startup); over-subscribed searches must still produce the exact
+    // single-thread bytes. Affects only this test binary's process.
+    galvatron::util::parallelism::install_worker_budget(2);
+    let capped = direct(12, 8).plan().unwrap().to_json_string();
+    let serial = direct(12, 1).plan().unwrap().to_json_string();
+    assert_eq!(capped, serial, "worker-budget grants changed plan bytes");
+}

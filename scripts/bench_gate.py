@@ -23,6 +23,7 @@ warm floor is enforced.
 """
 
 import json
+import math
 import sys
 from pathlib import Path
 
@@ -39,12 +40,36 @@ WARM_SPEEDUP_FLOOR = 10.0
 
 
 def row_key(row):
-    return (
-        row["model"],
-        row["cluster"],
-        row.get("backend", "analytic"),
-        int(row["threads"]),
-    )
+    try:
+        return (
+            row["model"],
+            row["cluster"],
+            row.get("backend", "analytic"),
+            int(row["threads"]),
+        )
+    except (KeyError, TypeError, ValueError) as e:
+        sys.exit(
+            f"bench gate: malformed results row {row!r}: {e!r} — "
+            "every row needs string 'model'/'cluster' and integer 'threads' keys"
+        )
+
+
+def finite_number(row, key, context):
+    """A row's `key` as a finite float, or a precise sys.exit diagnostic."""
+    value = row.get(key)
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        sys.exit(
+            f"bench gate: {context} row {row_key(row)} has no numeric "
+            f"'{key}' field (got {value!r}) — re-run the bench, or re-bless "
+            "the baseline if its schema is stale"
+        )
+    if not math.isfinite(value):
+        sys.exit(
+            f"bench gate: {context} row {row_key(row)} has a non-finite "
+            f"'{key}' ({value!r}) — a zero or failed timing upstream; the "
+            "gate cannot compare against it"
+        )
+    return float(value)
 
 
 def load(path):
@@ -79,10 +104,8 @@ def main():
     failures = []
 
     for row in rows:
-        speedup = row.get("warm_speedup")
-        if speedup is None:
-            failures.append(f"{row_key(row)}: no warm_speedup recorded")
-        elif speedup < WARM_SPEEDUP_FLOOR:
+        speedup = finite_number(row, "warm_speedup", "current")
+        if speedup < WARM_SPEEDUP_FLOOR:
             failures.append(
                 f"{row_key(row)}: warm_speedup {speedup:.1f}x is below the "
                 f"{WARM_SPEEDUP_FLOOR:.0f}x floor "
@@ -94,11 +117,17 @@ def main():
 
     baseline = load(BASELINE)
     if baseline.get("placeholder"):
-        print(
-            "bench gate: BENCH_baseline.json is the unblessed placeholder — "
-            "regression check skipped. Bless on the reference machine with "
-            "`python3 scripts/bench_gate.py --bless` and commit the file."
+        # Surface the skip loudly: as a GitHub Actions warning annotation
+        # (rendered on the run summary page) and on stderr, so an unblessed
+        # baseline cannot silently disable the regression half forever.
+        message = (
+            "gate skipped: baseline not blessed — BENCH_baseline.json is the "
+            "placeholder, so only the warm-speedup floor was enforced. Bless "
+            "on the reference machine with `python3 scripts/bench_gate.py "
+            "--bless` and commit the file."
         )
+        print(f"::warning title=bench gate::{message}")
+        print(f"bench gate: WARNING: {message}", file=sys.stderr)
     else:
         by_key = {row_key(r): r for r in rows}
         for base in baseline.get("results", []):
@@ -107,17 +136,19 @@ def main():
             if cur is None:
                 failures.append(f"{key}: in the baseline but missing from this run")
                 continue
-            floor = DROP_TOLERANCE * base["plans_per_sec"]
-            if cur["plans_per_sec"] < floor:
+            base_pps = finite_number(base, "plans_per_sec", "baseline")
+            cur_pps = finite_number(cur, "plans_per_sec", "current")
+            floor = DROP_TOLERANCE * base_pps
+            if cur_pps < floor:
                 failures.append(
-                    f"{key}: cold {cur['plans_per_sec']:.2f} plans/s is below "
+                    f"{key}: cold {cur_pps:.2f} plans/s is below "
                     f"{floor:.2f} ({DROP_TOLERANCE:.0%} of the baseline "
-                    f"{base['plans_per_sec']:.2f})"
+                    f"{base_pps:.2f})"
                 )
             else:
                 print(
-                    f"bench gate: {key}: cold {cur['plans_per_sec']:.2f} plans/s "
-                    f"vs baseline {base['plans_per_sec']:.2f} ok"
+                    f"bench gate: {key}: cold {cur_pps:.2f} plans/s "
+                    f"vs baseline {base_pps:.2f} ok"
                 )
 
     if failures:
