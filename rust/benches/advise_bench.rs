@@ -1,0 +1,92 @@
+//! Bench: `galvatron advise` fleet-sweep throughput in fleets/second,
+//! cold (fresh `--cache-dir`) and warm (repeat sweep over the same
+//! store), emitted as one JSON row:
+//!
+//!   {"bench":"advise","model":...,"gpus":...,"fleets_considered":...,
+//!    "fleets_planned":...,"frontier_size":...,"fleets_per_sec_cold":...,
+//!    "fleets_per_sec_warm":...,"warm_speedup":...}
+//!
+//! The warm sweep must be byte-identical to the cold one and at least 5x
+//! faster: every fleet shares one cost-table context (the relaxed
+//! context fingerprint) and repeat sweeps answer from the plan store.
+//!
+//! The row is additionally written to `BENCH_advise.json` at the
+//! repository root, which CI uploads as an artifact.
+//!
+//! Run: `cargo bench --bench advise_bench`
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::Path;
+use std::time::Instant;
+
+use galvatron::advise::{advise, parse_fleet_spec, AdviseRequest};
+use galvatron::util::json::Json;
+use galvatron::util::parallelism::{install_worker_budget, resolve_worker_count};
+
+/// Nine fleets: 1x/2x/4x of each class alone plus the balanced mixes.
+const GPUS: &str = "RTX-TITAN-24G:0..4,A100-40G:0..4";
+const MODEL: &str = "bert-huge-32";
+
+fn main() {
+    install_worker_budget(resolve_worker_count(None));
+    let cache_dir = std::env::temp_dir()
+        .join(format!("galvatron-advise-bench-{}", std::process::id()));
+    std::fs::remove_dir_all(&cache_dir).ok();
+    let request = AdviseRequest::new(MODEL, parse_fleet_spec(GPUS, 3).unwrap())
+        .max_batch(8)
+        .cache_dir(&cache_dir);
+
+    // ---- cold: every viable fleet is a full search.
+    let start = Instant::now();
+    let cold = advise(&request).expect("cold sweep");
+    let cold_secs = start.elapsed().as_secs_f64();
+
+    // ---- warm: same sweep over the primed store.
+    let start = Instant::now();
+    let warm = advise(&request).expect("warm sweep");
+    let warm_secs = start.elapsed().as_secs_f64();
+    std::fs::remove_dir_all(&cache_dir).ok();
+
+    assert_eq!(
+        warm.to_pretty_string(),
+        cold.to_pretty_string(),
+        "warm sweep changed the frontier artifact bytes"
+    );
+    let fleets = cold.fleets_considered as f64;
+    let fleets_per_sec_cold = fleets / cold_secs;
+    let fleets_per_sec_warm = fleets / warm_secs;
+    let warm_speedup = fleets_per_sec_warm / fleets_per_sec_cold;
+    assert!(
+        warm_speedup >= 5.0,
+        "warm sweep speedup {warm_speedup:.2}x is below the 5x floor \
+         (cold {fleets_per_sec_cold:.2} fleets/s, warm {fleets_per_sec_warm:.2} fleets/s)"
+    );
+
+    let row = Json::obj(vec![
+        ("bench", Json::str("advise")),
+        ("model", Json::str(MODEL)),
+        ("gpus", Json::str(GPUS)),
+        ("fleets_considered", Json::num(cold.fleets_considered as f64)),
+        ("fleets_planned", Json::num(cold.fleets_planned as f64)),
+        ("frontier_size", Json::num(cold.points.len() as f64)),
+        ("fleets_per_sec_cold", Json::num(fleets_per_sec_cold)),
+        ("fleets_per_sec_warm", Json::num(fleets_per_sec_warm)),
+        ("warm_speedup", Json::num(warm_speedup)),
+    ]);
+    println!("{row}");
+
+    // Persist next to BENCH_serving.json at the repository root.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf);
+    let out = root
+        .unwrap_or_else(|| Path::new(".").to_path_buf())
+        .join("BENCH_advise.json");
+    let doc = Json::obj(vec![
+        ("bench", Json::str("advise")),
+        ("results", Json::arr(vec![row])),
+    ]);
+    match std::fs::write(&out, doc.to_pretty()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

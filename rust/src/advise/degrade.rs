@@ -1,0 +1,287 @@
+//! Failure-aware replanning: take a live plan, shrink its cluster by
+//! every combination of lost islands, and replan each surviving fleet —
+//! elastic training's "we just lost a rack" question as a scenario class.
+//!
+//! Replans reuse the warm persistent cost store of the original plan when
+//! a `cache_dir` is given: the cost-table context fingerprint covers only
+//! cluster-global inputs, so surviving island classes hit the tables the
+//! baseline run already measured instead of rebuilding them cold.
+
+use std::path::PathBuf;
+
+use crate::api::{PlanError, PlanReport, PlanRequest, Planner};
+use crate::cluster::{ClusterSpec, IslandSpec};
+use crate::util::json::Json;
+
+/// Knobs for a degrade run.
+#[derive(Debug, Clone, Default)]
+pub struct DegradeOptions {
+    /// Number of islands lost simultaneously (every combination is
+    /// replanned). Must be between 1 and `n_islands - 1`.
+    pub lose: usize,
+    pub threads: Option<usize>,
+    /// Warm store shared with the baseline plan.
+    pub cache_dir: Option<PathBuf>,
+}
+
+/// What happened to one shrunk cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DegradeOutcome {
+    Planned {
+        report: PlanReport,
+        /// Degraded / baseline throughput.
+        throughput_ratio: f64,
+        /// Whether the replan attached to a warm persistent cost store.
+        /// In-process diagnostic only (mirrors `SearchTiming`): excluded
+        /// from serialization, which must stay byte-deterministic across
+        /// cache states.
+        warm_start: bool,
+    },
+    /// The model no longer fits: every candidate plan exceeded memory.
+    Infeasible { reason: String },
+    /// Removing these islands leaves no valid cluster (e.g. the total
+    /// device count is no longer a power of two).
+    Invalid { reason: String },
+}
+
+/// One lost-island combination and its replanning result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeScenario {
+    /// Indices into the baseline cluster's island list that were lost.
+    pub lost_islands: Vec<usize>,
+    /// Canonical islands label of the survivors.
+    pub cluster: String,
+    pub outcome: DegradeOutcome,
+}
+
+/// Degrade analysis of one baseline plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeReport {
+    pub model: String,
+    pub base_cluster: String,
+    pub base_throughput: f64,
+    pub lose: usize,
+    pub scenarios: Vec<DegradeScenario>,
+}
+
+/// Replan `base` under every combination of `opts.lose` lost islands.
+pub fn degrade(base: &PlanReport, opts: &DegradeOptions) -> Result<DegradeReport, PlanError> {
+    let cluster = crate::check::resolve_report_cluster(base)?;
+    let n = cluster.n_islands();
+    if opts.lose == 0 || opts.lose >= n {
+        return Err(PlanError::InvalidFleet {
+            reason: format!(
+                "--lose must be between 1 and {} for cluster '{}' ({n} island(s))",
+                n.saturating_sub(1),
+                base.cluster
+            ),
+        });
+    }
+    let mut scenarios = Vec::new();
+    for lost in combinations(n, opts.lose) {
+        let survivors: Vec<IslandSpec> = cluster
+            .islands
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !lost.contains(i))
+            .map(|(_, isl)| isl.clone())
+            .collect();
+        let scenario = match ClusterSpec::from_islands("degraded", survivors, cluster.inter_bw) {
+            Ok(mut shrunk) => {
+                shrunk.name = shrunk.islands_label();
+                let label = shrunk.name.clone();
+                DegradeScenario {
+                    lost_islands: lost,
+                    cluster: label,
+                    outcome: replan(base, shrunk, opts)?,
+                }
+            }
+            Err(e) => DegradeScenario {
+                lost_islands: lost,
+                cluster: String::new(),
+                outcome: DegradeOutcome::Invalid { reason: e.to_string() },
+            },
+        };
+        scenarios.push(scenario);
+    }
+    Ok(DegradeReport {
+        model: base.model.clone(),
+        base_cluster: base.cluster.clone(),
+        base_throughput: base.throughput,
+        lose: opts.lose,
+        scenarios,
+    })
+}
+
+/// Replan the baseline's exact knobs on a shrunk cluster. Infeasibility
+/// is a scenario outcome; every other planner failure propagates.
+fn replan(
+    base: &PlanReport,
+    shrunk: ClusterSpec,
+    opts: &DegradeOptions,
+) -> Result<DegradeOutcome, PlanError> {
+    let mut req = PlanRequest::new(&base.model, "")
+        .cluster_spec(shrunk)
+        .method(base.method.clone())
+        .schedule(base.schedule)
+        .overlap_slowdown(base.overlap_slowdown)
+        .train_config(base.train)
+        .max_batch(base.max_batch);
+    if let Some(spec) = &base.model_spec {
+        req = req.model_spec(spec.clone());
+    }
+    if base.cost_model.is_some() {
+        // The artifact only records the calibrated backend's provenance,
+        // not the profile DB itself — replans price analytically.
+        crate::util::diag::warn(
+            "degrade replans use the analytic cost model; the baseline plan \
+             was priced by a calibrated backend",
+        );
+    }
+    if let Some(t) = opts.threads {
+        req = req.threads(t);
+    }
+    if let Some(dir) = &opts.cache_dir {
+        req = req.cache_dir(dir.clone());
+    }
+    match Planner::new().plan(&req) {
+        Ok(report) => {
+            let warm_start =
+                report.search_trace.as_ref().is_some_and(|t| t.timing.warm_start);
+            let throughput_ratio = if base.throughput > 0.0 {
+                report.throughput / base.throughput
+            } else {
+                0.0
+            };
+            Ok(DegradeOutcome::Planned { report, throughput_ratio, warm_start })
+        }
+        Err(PlanError::Infeasible { reason }) => Ok(DegradeOutcome::Infeasible { reason }),
+        Err(e) => Err(e),
+    }
+}
+
+/// All `k`-subsets of `0..n` in lexicographic order.
+fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
+    fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..n {
+            cur.push(i);
+            rec(i + 1, n, k, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(0, n, k, &mut Vec::with_capacity(k), &mut out);
+    out
+}
+
+impl DegradeScenario {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            (
+                "lost_islands",
+                Json::arr(self.lost_islands.iter().map(|&i| Json::num(i as f64))),
+            ),
+            ("cluster", Json::str(&self.cluster)),
+        ];
+        match &self.outcome {
+            DegradeOutcome::Planned { report, throughput_ratio, .. } => {
+                fields.push(("status", Json::str("planned")));
+                fields.push(("throughput", Json::num(report.throughput)));
+                fields.push(("throughput_ratio", Json::num(*throughput_ratio)));
+                fields.push(("report", report.to_json()));
+            }
+            DegradeOutcome::Infeasible { reason } => {
+                fields.push(("status", Json::str("infeasible")));
+                fields.push(("reason", Json::str(reason)));
+            }
+            DegradeOutcome::Invalid { reason } => {
+                fields.push(("status", Json::str("invalid")));
+                fields.push(("reason", Json::str(reason)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+impl DegradeReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("base_cluster", Json::str(&self.base_cluster)),
+            ("base_throughput", Json::num(self.base_throughput)),
+            ("lose", Json::num(self.lose as f64)),
+            ("scenarios", Json::arr(self.scenarios.iter().map(DegradeScenario::to_json))),
+        ])
+    }
+
+    /// Human-readable scenario table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "degrade report: {} on {}, losing {} island(s)\n\
+             baseline throughput: {:.2} samples/s\n",
+            self.model, self.base_cluster, self.lose, self.base_throughput
+        );
+        for s in &self.scenarios {
+            let lost: Vec<String> = s.lost_islands.iter().map(ToString::to_string).collect();
+            match &s.outcome {
+                DegradeOutcome::Planned { report, throughput_ratio, .. } => {
+                    out.push_str(&format!(
+                        "  lost [{}] -> {}: {:.2} samples/s ({:.2}x of baseline), fits\n",
+                        lost.join(","),
+                        s.cluster,
+                        report.throughput,
+                        throughput_ratio
+                    ));
+                }
+                DegradeOutcome::Infeasible { reason } => {
+                    out.push_str(&format!(
+                        "  lost [{}] -> {}: does not fit ({reason})\n",
+                        lost.join(","),
+                        s.cluster
+                    ));
+                }
+                DegradeOutcome::Invalid { reason } => {
+                    out.push_str(&format!(
+                        "  lost [{}] -> no valid cluster ({reason})\n",
+                        lost.join(",")
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combinations_are_lexicographic_and_complete() {
+        assert_eq!(combinations(3, 1), vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(combinations(4, 2).len(), 6);
+        assert_eq!(combinations(4, 2)[0], vec![0, 1]);
+        assert_eq!(combinations(4, 2)[5], vec![2, 3]);
+    }
+
+    #[test]
+    fn lose_bounds_are_enforced() {
+        let base = PlanRequest::new("bert-huge-32", "hetero4")
+            .max_batch(8)
+            .threads(1)
+            .plan()
+            .unwrap();
+        for lose in [0, 2, 3] {
+            let opts = DegradeOptions { lose, ..DegradeOptions::default() };
+            assert!(
+                matches!(degrade(&base, &opts), Err(PlanError::InvalidFleet { .. })),
+                "lose={lose} on a 2-island cluster must be rejected"
+            );
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Fleet search space: the priced GPU catalog and the deterministic
+//! enumeration of candidate island assemblies for `galvatron advise`.
+//!
+//! A fleet spec like `A100-80G:0..8,RTX-TITAN-24G:0..8` gives each GPU
+//! class an inclusive device-count range. Enumeration considers, per
+//! class, zero devices plus every power of two inside the range (islands
+//! hold power-of-two device counts), assembles one island per non-empty
+//! class in spec order, and keeps assemblies whose total device count is
+//! itself a power of two — [`ClusterSpec::from_islands`] would reject
+//! anything else. `--max-islands` caps the number of non-empty classes
+//! per fleet.
+//!
+//! Pricing is a static on-demand $/hr table over the GPU catalog;
+//! [`fleet_cost_per_hour`] prices a whole `ClusterSpec` against it.
+
+use crate::api::PlanError;
+use crate::cluster::{gpu_by_name, gpu_class_names, ClusterSpec, IslandSpec};
+use crate::model::ModelProfile;
+use crate::util::GIB;
+
+/// Inter-island bandwidth every enumerated fleet is wired with — the same
+/// 100 Gb IB figure `parse_islands` assumes, so a fleet's canonical
+/// islands label re-resolves to an identical `ClusterSpec`.
+const FLEET_INTER_BW: f64 = 10.0 * GIB;
+
+/// Ranges beyond this are a typo, not a data center.
+const MAX_FLEET_DEVICES: usize = 4096;
+
+/// On-demand $/hr for one device of the named catalog class (aliases
+/// accepted). `None` for names outside the catalog.
+pub fn price_per_gpu_hour(name: &str) -> Option<f64> {
+    let (gpu, _) = gpu_by_name(name)?;
+    Some(match gpu.name.as_str() {
+        "A100-80G" => 3.5,
+        "A100-40G" => 2.5,
+        "RTX-TITAN-24G" => 0.8,
+        _ => 0.1, // "cpu": priced so it never looks free
+    })
+}
+
+/// Total on-demand price of a cluster, $/hr. Classes outside the catalog
+/// (impossible for enumerated fleets) price at zero.
+pub fn fleet_cost_per_hour(cluster: &ClusterSpec) -> f64 {
+    cluster
+        .islands
+        .iter()
+        .map(|i| i.count as f64 * price_per_gpu_hour(&i.gpu.name).unwrap_or(0.0))
+        .sum()
+}
+
+/// One GPU class of a fleet search space: a catalog name plus the
+/// inclusive device-count range it may contribute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetClass {
+    /// Canonical catalog name (e.g. `A100-80G`).
+    pub gpu: String,
+    pub min_devices: usize,
+    pub max_devices: usize,
+}
+
+/// A typed fleet search space: GPU classes in spec order (island assembly
+/// preserves it) plus the island-count cap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSearchSpace {
+    pub classes: Vec<FleetClass>,
+    /// Maximum number of non-empty classes (= islands) per fleet.
+    pub max_islands: usize,
+}
+
+/// Parse `NAME:lo..hi[,NAME:lo..hi...]` into a search space. Class names
+/// go through the GPU catalog (aliases fold to canonical names); errors
+/// surface as [`PlanError::InvalidFleet`].
+pub fn parse_fleet_spec(spec: &str, max_islands: usize) -> Result<FleetSearchSpace, PlanError> {
+    let invalid = |reason: String| PlanError::InvalidFleet { reason };
+    if max_islands == 0 {
+        return Err(invalid("--max-islands must be at least 1".into()));
+    }
+    let mut classes: Vec<FleetClass> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (name, range) = part
+            .split_once(':')
+            .ok_or_else(|| invalid(format!("{part:?} is not of the form NAME:lo..hi")))?;
+        let (gpu, _) = gpu_by_name(name.trim()).ok_or_else(|| {
+            invalid(format!(
+                "unknown GPU class {:?} (catalog: {})",
+                name.trim(),
+                gpu_class_names().join(", ")
+            ))
+        })?;
+        let (lo, hi) = range
+            .split_once("..")
+            .ok_or_else(|| invalid(format!("range {range:?} is not of the form lo..hi")))?;
+        let parse_count = |s: &str| -> Result<usize, PlanError> {
+            s.trim()
+                .parse()
+                .map_err(|_| invalid(format!("{s:?} is not a device count in {part:?}")))
+        };
+        let (lo, hi) = (parse_count(lo)?, parse_count(hi)?);
+        if lo > hi {
+            return Err(invalid(format!("empty device range {lo}..{hi} for {}", gpu.name)));
+        }
+        if hi > MAX_FLEET_DEVICES {
+            return Err(invalid(format!(
+                "{hi} devices of {} exceeds the {MAX_FLEET_DEVICES}-device fleet limit",
+                gpu.name
+            )));
+        }
+        if classes.iter().any(|c| c.gpu == gpu.name) {
+            return Err(invalid(format!("GPU class {} listed twice", gpu.name)));
+        }
+        classes.push(FleetClass { gpu: gpu.name, min_devices: lo, max_devices: hi });
+    }
+    Ok(FleetSearchSpace { classes, max_islands })
+}
+
+/// The device counts a class may contribute: zero (when the range allows
+/// it) plus every power of two inside the range.
+fn candidate_counts(class: &FleetClass) -> Vec<usize> {
+    let mut counts = Vec::new();
+    if class.min_devices == 0 {
+        counts.push(0);
+    }
+    let mut p = 1usize;
+    while p <= class.max_devices {
+        if p >= class.min_devices.max(1) {
+            counts.push(p);
+        }
+        p *= 2;
+    }
+    counts
+}
+
+/// Enumerate every viable fleet of the space, in deterministic order
+/// (classes in spec order, device counts ascending). Each fleet's `name`
+/// is its canonical islands label, so plan artifacts embedded in a
+/// frontier re-resolve by name.
+pub fn enumerate_fleets(space: &FleetSearchSpace) -> Vec<ClusterSpec> {
+    let per_class: Vec<Vec<usize>> = space.classes.iter().map(candidate_counts).collect();
+    let mut counts = vec![0usize; space.classes.len()];
+    let mut fleets = Vec::new();
+    enumerate_rec(space, &per_class, 0, &mut counts, &mut fleets);
+    fleets
+}
+
+fn enumerate_rec(
+    space: &FleetSearchSpace,
+    per_class: &[Vec<usize>],
+    depth: usize,
+    counts: &mut Vec<usize>,
+    out: &mut Vec<ClusterSpec>,
+) {
+    if depth == per_class.len() {
+        if let Some(fleet) = build_fleet(space, counts) {
+            out.push(fleet);
+        }
+        return;
+    }
+    for &n in &per_class[depth] {
+        counts[depth] = n;
+        enumerate_rec(space, per_class, depth + 1, counts, out);
+    }
+}
+
+fn build_fleet(space: &FleetSearchSpace, counts: &[usize]) -> Option<ClusterSpec> {
+    let total: usize = counts.iter().sum();
+    let islands_used = counts.iter().filter(|&&n| n > 0).count();
+    if total == 0 || !total.is_power_of_two() || islands_used > space.max_islands {
+        return None;
+    }
+    let mut islands = Vec::new();
+    for (class, &n) in space.classes.iter().zip(counts) {
+        if n == 0 {
+            continue;
+        }
+        let (gpu, intra_bw) = gpu_by_name(&class.gpu)?;
+        islands.push(IslandSpec { gpu, count: n, intra_bw });
+    }
+    // Power-of-two counts and total make this infallible; a `None` here
+    // would mean the filters above and `from_islands` disagree.
+    let mut cluster = ClusterSpec::from_islands("fleet", islands, FLEET_INTER_BW).ok()?;
+    cluster.name = cluster.islands_label();
+    Some(cluster)
+}
+
+/// The `check` GAL0030 predicate, reused as the sweep's cheap prune: fp32
+/// weights alone exceed the fleet's aggregate device memory, so no plan
+/// can ever fit and the engine need not run.
+pub fn model_never_fits(model: &ModelProfile, cluster: &ClusterSpec) -> bool {
+    let weight_bytes = model.total_params() * 4.0;
+    let capacity: f64 =
+        cluster.islands.iter().map(|i| i.count as f64 * i.gpu.mem_bytes).sum();
+    weight_bytes > capacity
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_canonicalizes_classes() {
+        let space = parse_fleet_spec("titan:0..4, a100:1..2", 2).unwrap();
+        assert_eq!(space.classes.len(), 2);
+        assert_eq!(space.classes[0].gpu, "RTX-TITAN-24G");
+        assert_eq!(space.classes[1].gpu, "A100-40G");
+        assert_eq!((space.classes[1].min_devices, space.classes[1].max_devices), (1, 2));
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        for bad in [
+            "A100-80G", // no range
+            "A100-80G:4", // not lo..hi
+            "A100-80G:4..2", // empty range
+            "A100-80G:0..x", // not a count
+            "H999:0..4", // unknown class
+            "A100-80G:0..4,a100-80g:0..4", // duplicate class
+            "A100-80G:0..100000", // absurd
+        ] {
+            match parse_fleet_spec(bad, 2) {
+                Err(PlanError::InvalidFleet { .. }) => {}
+                other => panic!("{bad:?} parsed as {other:?}"),
+            }
+        }
+        assert!(matches!(
+            parse_fleet_spec("A100-80G:0..4", 0),
+            Err(PlanError::InvalidFleet { .. })
+        ));
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_and_power_of_two_only() {
+        let space = parse_fleet_spec("RTX-TITAN-24G:0..2,A100-40G:0..2", 2).unwrap();
+        let labels: Vec<String> =
+            enumerate_fleets(&space).into_iter().map(|c| c.name).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "1xA100-40G",
+                "2xA100-40G",
+                "1xRTX-TITAN-24G",
+                "1xRTX-TITAN-24G,1xA100-40G",
+                "2xRTX-TITAN-24G",
+                "2xRTX-TITAN-24G,2xA100-40G",
+            ]
+        );
+    }
+
+    #[test]
+    fn max_islands_caps_nonempty_classes() {
+        let space = parse_fleet_spec("RTX-TITAN-24G:0..2,A100-40G:0..2", 1).unwrap();
+        let fleets = enumerate_fleets(&space);
+        assert!(fleets.iter().all(|c| c.n_islands() == 1), "mixed fleet survived cap");
+        assert_eq!(fleets.len(), 4);
+    }
+
+    #[test]
+    fn fleets_reresolve_by_their_own_label() {
+        let space = parse_fleet_spec("RTX-TITAN-24G:2..2,A100-80G:2..2", 2).unwrap();
+        let fleets = enumerate_fleets(&space);
+        assert_eq!(fleets.len(), 1);
+        let reresolved = crate::api::resolve_cluster_name(&fleets[0].name).unwrap();
+        assert_eq!(reresolved, fleets[0]);
+    }
+
+    #[test]
+    fn pricing_sums_per_device_rates() {
+        let space = parse_fleet_spec("RTX-TITAN-24G:2..2,A100-40G:2..2", 2).unwrap();
+        let fleet = enumerate_fleets(&space).remove(0);
+        let cost = fleet_cost_per_hour(&fleet);
+        assert!((cost - (2.0 * 0.8 + 2.0 * 2.5)).abs() < 1e-9, "cost {cost}");
+        assert_eq!(price_per_gpu_hour("titan"), Some(0.8));
+        assert_eq!(price_per_gpu_hour("nope"), None);
+    }
+
+    #[test]
+    fn never_fits_prunes_undersized_fleets() {
+        let model = crate::model::model_by_name("gpt3-15b").unwrap();
+        let space = parse_fleet_spec("RTX-TITAN-24G:1..1", 1).unwrap();
+        let fleet = enumerate_fleets(&space).remove(0);
+        assert!(model_never_fits(&model, &fleet));
+        let small = crate::model::model_by_name("bert-huge-32").unwrap();
+        assert!(!model_never_fits(&small, &fleet));
+    }
+}

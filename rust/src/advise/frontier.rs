@@ -1,0 +1,351 @@
+//! `FrontierReport`: the capacity-advice artifact. Records the
+//! non-dominated fleets over (throughput, worst-stage memory headroom,
+//! $/hr), each point embedding the full [`PlanReport`] that produced it,
+//! so every recommendation can be re-checked and executed later.
+//!
+//! Serialization follows the plan-artifact conventions exactly: a strict
+//! top-level key set, canonical JSON via [`Json::to_pretty`], and a
+//! version field bumped on breaking schema changes.
+
+use std::path::Path;
+
+use crate::api::{PlanError, PlanReport};
+use crate::util::json::Json;
+use crate::util::GIB;
+
+/// Artifact format version (bump on breaking schema changes).
+pub const FRONTIER_ARTIFACT_VERSION: usize = 1;
+
+/// Every top-level key a version-1 frontier artifact may carry. Shared by
+/// the strict [`FrontierReport::from_json`] schema and the checker's
+/// frontier rules; extend it together with [`FrontierReport::to_json`].
+pub const FRONTIER_ARTIFACT_KEYS: &[&str] = &[
+    "version",
+    "model",
+    "max_batch",
+    "fleets_considered",
+    "fleets_planned",
+    "fleets_infeasible",
+    "points",
+];
+
+/// Every key a frontier point may carry.
+pub const FRONTIER_POINT_KEYS: &[&str] =
+    &["cluster", "devices", "cost_per_hour", "throughput", "headroom_bytes", "report"];
+
+/// One non-dominated fleet with the plan that achieves its objectives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierPoint {
+    /// Canonical islands label of the fleet (re-resolvable cluster name).
+    pub cluster: String,
+    pub devices: usize,
+    /// On-demand fleet price, $/hr.
+    pub cost_per_hour: f64,
+    /// End-to-end samples/s of the best plan found on this fleet.
+    pub throughput: f64,
+    /// Worst-stage headroom: min over stages of the stage site's device
+    /// memory minus the plan's peak, bytes.
+    pub headroom_bytes: f64,
+    /// The full plan artifact the objectives were measured from.
+    pub report: PlanReport,
+}
+
+/// Pareto dominance over (throughput max, headroom max, $/hr min):
+/// `a` dominates `b` when it is no worse on every objective and strictly
+/// better on at least one.
+pub fn dominates(a: &FrontierPoint, b: &FrontierPoint) -> bool {
+    let no_worse = a.throughput >= b.throughput
+        && a.headroom_bytes >= b.headroom_bytes
+        && a.cost_per_hour <= b.cost_per_hour;
+    let better = a.throughput > b.throughput
+        || a.headroom_bytes > b.headroom_bytes
+        || a.cost_per_hour < b.cost_per_hour;
+    no_worse && better
+}
+
+/// Filter to the non-dominated set and put it in canonical order:
+/// cheapest first, throughput descending, then cluster label — a total
+/// order, so frontier artifacts are byte-deterministic.
+pub fn pareto(points: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
+    let mut kept: Vec<FrontierPoint> = Vec::new();
+    for p in points {
+        if kept.iter().any(|q| dominates(q, &p)) {
+            continue;
+        }
+        kept.retain(|q| !dominates(&p, q));
+        kept.push(p);
+    }
+    kept.sort_by(|a, b| {
+        a.cost_per_hour
+            .total_cmp(&b.cost_per_hour)
+            .then(b.throughput.total_cmp(&a.throughput))
+            .then(a.cluster.cmp(&b.cluster))
+    });
+    kept
+}
+
+/// The full advice artifact: sweep accounting plus the frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierReport {
+    /// Model zoo name the sweep planned for.
+    pub model: String,
+    pub max_batch: usize,
+    /// Fleets the search space enumerated.
+    pub fleets_considered: usize,
+    /// Fleets that survived the cheap prune and planned feasibly.
+    pub fleets_planned: usize,
+    /// Fleets skipped by the never-fits prune or infeasible under search.
+    pub fleets_infeasible: usize,
+    /// The non-dominated set, cheapest first.
+    pub points: Vec<FrontierPoint>,
+}
+
+impl FrontierPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cluster", Json::str(&self.cluster)),
+            ("devices", Json::num(self.devices as f64)),
+            ("cost_per_hour", Json::num(self.cost_per_hour)),
+            ("throughput", Json::num(self.throughput)),
+            ("headroom_bytes", Json::num(self.headroom_bytes)),
+            ("report", self.report.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FrontierPoint, PlanError> {
+        let bad = |what: &str| PlanError::Artifact { reason: format!("missing or invalid {what}") };
+        crate::util::json::check_object_keys(v, FRONTIER_POINT_KEYS, "frontier point")
+            .map_err(|reason| PlanError::Artifact { reason })?;
+        let getn = |key: &str| v.get(key).and_then(Json::as_f64).ok_or_else(|| bad(key));
+        Ok(FrontierPoint {
+            cluster: v
+                .get("cluster")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("cluster"))?
+                .to_string(),
+            devices: v.get("devices").and_then(Json::as_usize).ok_or_else(|| bad("devices"))?,
+            cost_per_hour: getn("cost_per_hour")?,
+            throughput: getn("throughput")?,
+            headroom_bytes: getn("headroom_bytes")?,
+            report: PlanReport::from_json(v.get("report").ok_or_else(|| bad("report"))?)?,
+        })
+    }
+}
+
+impl FrontierReport {
+    // ---- JSON (de)serialization -----------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(FRONTIER_ARTIFACT_VERSION as f64)),
+            ("model", Json::str(&self.model)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("fleets_considered", Json::num(self.fleets_considered as f64)),
+            ("fleets_planned", Json::num(self.fleets_planned as f64)),
+            ("fleets_infeasible", Json::num(self.fleets_infeasible as f64)),
+            ("points", Json::arr(self.points.iter().map(FrontierPoint::to_json))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FrontierReport, PlanError> {
+        let bad = |what: &str| PlanError::Artifact { reason: format!("missing or invalid {what}") };
+        crate::util::json::check_object_keys(v, FRONTIER_ARTIFACT_KEYS, "frontier artifact")
+            .map_err(|reason| PlanError::Artifact { reason })?;
+        let getu = |key: &str| v.get(key).and_then(Json::as_usize).ok_or_else(|| bad(key));
+        let version = getu("version")?;
+        if version != FRONTIER_ARTIFACT_VERSION {
+            return Err(PlanError::Artifact {
+                reason: format!(
+                    "unsupported frontier artifact version {version} \
+                     (supported: {FRONTIER_ARTIFACT_VERSION})"
+                ),
+            });
+        }
+        let mut points = Vec::new();
+        for pv in v.get("points").and_then(Json::as_arr).ok_or_else(|| bad("points"))? {
+            points.push(FrontierPoint::from_json(pv)?);
+        }
+        Ok(FrontierReport {
+            model: v.get("model").and_then(Json::as_str).ok_or_else(|| bad("model"))?.to_string(),
+            max_batch: getu("max_batch")?,
+            fleets_considered: getu("fleets_considered")?,
+            fleets_planned: getu("fleets_planned")?,
+            fleets_infeasible: getu("fleets_infeasible")?,
+            points,
+        })
+    }
+
+    /// Canonical artifact bytes: pretty-printed, sorted keys, trailing
+    /// newline — byte-identical across threads and cache states.
+    pub fn to_pretty_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    pub fn from_json_str(s: &str) -> Result<FrontierReport, PlanError> {
+        let v = Json::parse(s)
+            .map_err(|e| PlanError::Artifact { reason: format!("parse: {e}") })?;
+        Self::from_json(&v)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), PlanError> {
+        std::fs::write(path, self.to_pretty_string()).map_err(|e| PlanError::Artifact {
+            reason: format!("writing {}: {e}", path.display()),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<FrontierReport, PlanError> {
+        let text = std::fs::read_to_string(path).map_err(|e| PlanError::Artifact {
+            reason: format!("reading {}: {e}", path.display()),
+        })?;
+        Self::from_json_str(&text)
+    }
+
+    // ---- queries ---------------------------------------------------------
+
+    /// Cheapest frontier point sustaining at least `min_throughput`
+    /// samples/s. Points are stored cheapest-first, so the first match
+    /// wins; ties broke deterministically at sort time.
+    pub fn cheapest_at_least(&self, min_throughput: f64) -> Option<&FrontierPoint> {
+        self.points.iter().find(|p| p.throughput >= min_throughput)
+    }
+
+    // ---- presentation ----------------------------------------------------
+
+    /// Human-readable frontier table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "capacity frontier for {} (max batch {})\n\
+             fleets: {} considered, {} planned, {} infeasible; {} on the frontier\n",
+            self.model,
+            self.max_batch,
+            self.fleets_considered,
+            self.fleets_planned,
+            self.fleets_infeasible,
+            self.points.len(),
+        );
+        if self.points.is_empty() {
+            return out;
+        }
+        out.push_str(&format!(
+            "  {:>8}  {:>10}  {:>9}  {:>7}  fleet\n",
+            "$/hr", "samples/s", "headroom", "devices"
+        ));
+        for p in &self.points {
+            out.push_str(&format!(
+                "  {:>8.2}  {:>10.2}  {:>8.2}G  {:>7}  {}\n",
+                p.cost_per_hour,
+                p.throughput,
+                p.headroom_bytes / GIB,
+                p.devices,
+                p.cluster
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn point(cluster: &str, cost: f64, thr: f64, head: f64) -> FrontierPoint {
+        // A structurally minimal report is enough for frontier math tests.
+        let report = PlanReport {
+            model: "bert-huge-32".into(),
+            model_spec: None,
+            cluster: cluster.into(),
+            memory_budget_gb: 16.0,
+            method: crate::api::MethodSpec::Bmw { ckpt: true },
+            schedule: crate::cost::pipeline::Schedule::OneFOneB,
+            overlap_slowdown: 1.3,
+            train: crate::model::TrainConfig::default(),
+            cost_model: None,
+            max_batch: 8,
+            plan: crate::parallel::ParallelPlan {
+                pp: 1,
+                partition: vec![32],
+                strategies: vec![],
+                batch: 8,
+                microbatches: 1,
+                stage_slots: None,
+            },
+            throughput: thr,
+            iter_time: 1.0,
+            alpha_t: 1.0,
+            alpha_m: 1.0,
+            stages: vec![],
+            search_trace: None,
+        };
+        FrontierPoint {
+            cluster: cluster.into(),
+            devices: 2,
+            cost_per_hour: cost,
+            throughput: thr,
+            headroom_bytes: head,
+            report,
+        }
+    }
+
+    #[test]
+    fn dominance_requires_no_worse_everywhere_and_better_somewhere() {
+        let a = point("a", 1.0, 10.0, 5.0);
+        let b = point("b", 2.0, 10.0, 5.0); // strictly pricier
+        let c = point("c", 1.0, 12.0, 1.0); // faster but less headroom
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+        assert!(!dominates(&a, &a), "a point never dominates itself");
+    }
+
+    #[test]
+    fn pareto_keeps_exactly_the_non_dominated_set_in_canonical_order() {
+        let pts = vec![
+            point("pricey-slow", 4.0, 5.0, 1.0),
+            point("cheap-fast", 1.0, 10.0, 1.0),
+            point("mid-headroom", 2.0, 8.0, 9.0),
+        ];
+        let frontier = pareto(pts);
+        let names: Vec<&str> = frontier.iter().map(|p| p.cluster.as_str()).collect();
+        assert_eq!(names, vec!["cheap-fast", "mid-headroom"]);
+    }
+
+    #[test]
+    fn cheapest_query_scans_cheapest_first() {
+        let report = FrontierReport {
+            model: "bert-huge-32".into(),
+            max_batch: 8,
+            fleets_considered: 3,
+            fleets_planned: 3,
+            fleets_infeasible: 0,
+            points: pareto(vec![
+                point("cheap", 1.0, 5.0, 1.0),
+                point("fast", 3.0, 20.0, 1.0),
+            ]),
+        };
+        assert_eq!(report.cheapest_at_least(4.0).unwrap().cluster, "cheap");
+        assert_eq!(report.cheapest_at_least(10.0).unwrap().cluster, "fast");
+        assert!(report.cheapest_at_least(100.0).is_none());
+    }
+
+    #[test]
+    fn artifact_round_trips_and_rejects_unknown_keys() {
+        let report = FrontierReport {
+            model: "bert-huge-32".into(),
+            max_batch: 8,
+            fleets_considered: 1,
+            fleets_planned: 1,
+            fleets_infeasible: 0,
+            points: vec![point("2xRTX-TITAN-24G", 1.6, 5.0, 2.0 * GIB)],
+        };
+        let text = report.to_pretty_string();
+        let back = FrontierReport::from_json_str(&text).unwrap();
+        assert_eq!(back, report);
+        assert_eq!(back.to_pretty_string(), text, "round trip is byte-stable");
+        let tampered = text.replace("\"model\"", "\"modle\"");
+        assert!(matches!(
+            FrontierReport::from_json_str(&tampered),
+            Err(PlanError::Artifact { .. })
+        ));
+    }
+}

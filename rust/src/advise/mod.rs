@@ -1,0 +1,190 @@
+//! Elastic capacity planning (`galvatron advise`): invert the planner's
+//! question. Instead of "what is the best plan on this cluster", answer
+//! "which cluster should run this model" — sweep a priced fleet search
+//! space, plan every viable candidate, and report the Pareto frontier
+//! over (throughput, worst-stage memory headroom, $/hr), plus
+//! failure-aware replanning for clusters that lose islands mid-training.
+//!
+//! The sweep leans on two existing subsystems:
+//! - the cheap never-fits prune is the `check` GAL0030 predicate, so
+//!   hopeless fleets never reach the engine;
+//! - every surviving fleet plans through one shared `--cache-dir` warm
+//!   store. The persistent cost-table context covers only cluster-global
+//!   inputs, so fleets that share GPU classes share measured cost tables
+//!   and repeat sweeps answer from the plan store without searching.
+
+pub mod degrade;
+pub mod fleet;
+pub mod frontier;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::api::{MethodSpec, PlanError, PlanReport, PlanRequest, Planner};
+use crate::cluster::ClusterSpec;
+
+pub use degrade::{degrade, DegradeOptions, DegradeOutcome, DegradeReport, DegradeScenario};
+pub use fleet::{
+    enumerate_fleets, fleet_cost_per_hour, model_never_fits, parse_fleet_spec, price_per_gpu_hour,
+    FleetClass, FleetSearchSpace,
+};
+pub use frontier::{
+    dominates, pareto, FrontierPoint, FrontierReport, FRONTIER_ARTIFACT_KEYS,
+    FRONTIER_ARTIFACT_VERSION, FRONTIER_POINT_KEYS,
+};
+
+/// A capacity-advice request: which model, over which fleet space, under
+/// which planning knobs.
+#[derive(Debug, Clone)]
+pub struct AdviseRequest {
+    /// Model zoo name.
+    pub model: String,
+    pub space: FleetSearchSpace,
+    pub method: MethodSpec,
+    pub max_batch: usize,
+    pub threads: Option<usize>,
+    /// Warm store shared by every fleet of the sweep (and by repeat
+    /// sweeps). `None` uses a run-private scratch directory: fleets still
+    /// share cost tables within the run, nothing persists after it.
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl AdviseRequest {
+    /// Defaults mirror `galvatron plan`: the paper's full BMW method.
+    pub fn new(model: &str, space: FleetSearchSpace) -> AdviseRequest {
+        AdviseRequest {
+            model: model.to_string(),
+            space,
+            method: MethodSpec::Bmw { ckpt: true },
+            max_batch: 64,
+            threads: None,
+            cache_dir: None,
+        }
+    }
+
+    pub fn method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+}
+
+/// Distinguishes concurrent scratch sweeps within one process (the serve
+/// daemon may run several).
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Run the fleet sweep and return the Pareto frontier.
+pub fn advise(req: &AdviseRequest) -> Result<FrontierReport, PlanError> {
+    let model = crate::api::resolve_model_name(&req.model)?;
+    let fleets = enumerate_fleets(&req.space);
+    if fleets.is_empty() {
+        return Err(PlanError::InvalidFleet {
+            reason: "the search space enumerates no viable fleet (power-of-two device \
+                     totals within the class ranges and island cap)"
+                .into(),
+        });
+    }
+    let (cache_dir, scratch) = match &req.cache_dir {
+        Some(dir) => (dir.clone(), None),
+        None => {
+            let dir = std::env::temp_dir().join(format!(
+                "galvatron-advise-{}-{}",
+                std::process::id(),
+                SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            (dir.clone(), Some(dir))
+        }
+    };
+    let result = sweep(req, &model, &fleets, &cache_dir);
+    if let Some(dir) = scratch {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    result
+}
+
+fn sweep(
+    req: &AdviseRequest,
+    model: &crate::model::ModelProfile,
+    fleets: &[ClusterSpec],
+    cache_dir: &std::path::Path,
+) -> Result<FrontierReport, PlanError> {
+    let planner = Planner::new();
+    let mut planned = 0usize;
+    let mut infeasible = 0usize;
+    let mut points = Vec::new();
+    for cluster in fleets {
+        if model_never_fits(model, cluster) {
+            infeasible += 1;
+            continue;
+        }
+        let mut preq = PlanRequest::new(&req.model, "")
+            .cluster_spec(cluster.clone())
+            .method(req.method.clone())
+            .max_batch(req.max_batch)
+            .cache_dir(cache_dir.to_path_buf());
+        if let Some(t) = req.threads {
+            preq = preq.threads(t);
+        }
+        match planner.plan(&preq) {
+            Ok(report) => {
+                planned += 1;
+                points.push(point_from_report(cluster, report));
+            }
+            Err(PlanError::Infeasible { .. }) => infeasible += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FrontierReport {
+        model: req.model.clone(),
+        max_batch: req.max_batch,
+        fleets_considered: fleets.len(),
+        fleets_planned: planned,
+        fleets_infeasible: infeasible,
+        points: pareto(points),
+    })
+}
+
+fn point_from_report(cluster: &ClusterSpec, report: PlanReport) -> FrontierPoint {
+    FrontierPoint {
+        cluster: cluster.name.clone(),
+        devices: cluster.n_devices(),
+        cost_per_hour: fleet_cost_per_hour(cluster),
+        throughput: report.throughput,
+        headroom_bytes: headroom_bytes(cluster, &report),
+        report,
+    }
+}
+
+/// Worst-stage memory headroom of a plan on its cluster: the minimum over
+/// pipeline stages of the stage site's device memory minus the plan's
+/// peak for that stage, bytes.
+pub fn headroom_bytes(cluster: &ClusterSpec, report: &PlanReport) -> f64 {
+    let sites = cluster.stage_sites(report.plan.pp);
+    let mut min = f64::INFINITY;
+    for (s, stage) in report.stages.iter().enumerate() {
+        let Some(site) = sites.get(report.plan.slot_of(s)) else { continue };
+        let headroom = site.gpu.mem_bytes - stage.peak_mem_bytes;
+        if headroom < min {
+            min = headroom;
+        }
+    }
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}

@@ -34,6 +34,9 @@ pub enum PlanError {
     /// Every candidate plan exceeded the device memory budget ("OOM" in
     /// the paper's tables).
     Infeasible { reason: String },
+    /// A fleet search space (`advise --gpus`) could not be parsed, or the
+    /// degrade/sweep request is out of range for its cluster.
+    InvalidFleet { reason: String },
     /// A plan artifact could not be read, written, or parsed.
     Artifact { reason: String },
     /// A plan artifact parsed but failed the static checker's
@@ -83,6 +86,7 @@ impl fmt::Display for PlanError {
                 write!(f, "profile db coverage: {reason}")
             }
             PlanError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
+            PlanError::InvalidFleet { reason } => write!(f, "invalid fleet: {reason}"),
             PlanError::Artifact { reason } => write!(f, "plan artifact error: {reason}"),
             PlanError::InvalidArtifact { diagnostics } => {
                 write!(f, "invalid plan artifact: {} error(s)", diagnostics.len())?;

@@ -43,6 +43,9 @@ pub mod method;
 pub mod report;
 pub mod request;
 
+// Capacity advice rides on the same stable surface: `AdviseRequest` in,
+// `FrontierReport` artifact out (see [`crate::advise`]).
+pub use crate::advise::{AdviseRequest, FrontierPoint, FrontierReport};
 pub use crate::cost::{CostModel, CostProvenance, ProfileDb};
 pub use crate::search::engine::{CellTrace, SearchTiming, SearchTrace};
 pub use error::{suggest, PlanError};

@@ -1,0 +1,221 @@
+//! Frontier-artifact rules (the `check --frontier` form): a
+//! `FrontierReport` must parse, its points must actually be mutually
+//! non-dominated, every embedded plan must pass the plan gate against the
+//! model and cluster it names, and each point's headline objectives must
+//! agree with the plan it embeds.
+
+use crate::advise::{dominates, fleet_cost_per_hour};
+use crate::api::PlanError;
+
+use super::{CheckContext, Checker, Diagnostic};
+
+struct Rule {
+    code: &'static str,
+    name: &'static str,
+    description: &'static str,
+    cheap: bool,
+    check: fn(&CheckContext, &mut Vec<Diagnostic>),
+}
+
+impl Checker for Rule {
+    fn code(&self) -> &'static str {
+        self.code
+    }
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn description(&self) -> &'static str {
+        self.description
+    }
+    fn cheap(&self) -> bool {
+        self.cheap
+    }
+    fn check(&self, ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+        (self.check)(ctx, out);
+    }
+}
+
+pub fn rules() -> Vec<Box<dyn Checker>> {
+    vec![
+        Box::new(Rule {
+            code: "GAL0040",
+            name: "frontier-invalid",
+            description: "frontier artifact parses under FrontierReport::from_json",
+            cheap: false,
+            check: frontier_invalid,
+        }),
+        Box::new(Rule {
+            code: "GAL0041",
+            name: "frontier-dominated",
+            description: "no frontier point is Pareto-dominated by another",
+            cheap: false,
+            check: frontier_dominated,
+        }),
+        Box::new(Rule {
+            code: "GAL0042",
+            name: "frontier-embedded-plan",
+            description: "every embedded plan passes the plan gate for its model/cluster",
+            cheap: false,
+            check: frontier_embedded_plan,
+        }),
+        Box::new(Rule {
+            code: "GAL0043",
+            name: "frontier-point-consistency",
+            description: "point objectives agree with the embedded plan and price table",
+            cheap: false,
+            check: frontier_point_consistency,
+        }),
+    ]
+}
+
+fn frontier_invalid(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(err) = &ctx.frontier_error else { return };
+    out.push(
+        Diagnostic::error("GAL0040", "$", format!("frontier artifact rejected: {err}")).suggest(
+            "regenerate with `galvatron advise --out frontier.json`; artifacts use a strict \
+             key schema",
+        ),
+    );
+}
+
+fn frontier_dominated(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(frontier) = ctx.frontier else { return };
+    for (j, b) in frontier.points.iter().enumerate() {
+        if let Some((i, a)) =
+            frontier.points.iter().enumerate().find(|&(i, a)| i != j && dominates(a, b))
+        {
+            out.push(Diagnostic::error(
+                "GAL0041",
+                format!("$.points[{j}]"),
+                format!(
+                    "point '{}' is dominated by points[{i}] ('{}'): \
+                     {:.2} vs {:.2} samples/s, {:.0} vs {:.0} headroom bytes, \
+                     ${:.2}/hr vs ${:.2}/hr",
+                    b.cluster,
+                    a.cluster,
+                    b.throughput,
+                    a.throughput,
+                    b.headroom_bytes,
+                    a.headroom_bytes,
+                    b.cost_per_hour,
+                    a.cost_per_hour
+                ),
+            ));
+        }
+    }
+}
+
+fn frontier_embedded_plan(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(frontier) = ctx.frontier else { return };
+    for (i, p) in frontier.points.iter().enumerate() {
+        let path = format!("$.points[{i}].report");
+        let model = match super::resolve_report_model(&p.report) {
+            Ok(m) => m,
+            Err(e) => {
+                out.push(Diagnostic::error(
+                    "GAL0042",
+                    &path,
+                    format!("embedded plan's model does not resolve: {e}"),
+                ));
+                continue;
+            }
+        };
+        let cluster = match super::resolve_report_cluster(&p.report) {
+            Ok(c) => c,
+            Err(e) => {
+                out.push(Diagnostic::error(
+                    "GAL0042",
+                    &path,
+                    format!("embedded plan's cluster does not resolve: {e}"),
+                ));
+                continue;
+            }
+        };
+        match super::gate(&model, &cluster, &p.report) {
+            Ok(()) => {}
+            Err(PlanError::InvalidArtifact { diagnostics }) => {
+                for d in diagnostics {
+                    // Re-anchor the gate's finding inside this point.
+                    let sub = d.path.trim_start_matches('$');
+                    out.push(Diagnostic::error(
+                        "GAL0042",
+                        format!("{path}{sub}"),
+                        format!("embedded plan fails the gate: {}[{}] {}", d.severity, d.code, d.message),
+                    ));
+                }
+            }
+            Err(e) => {
+                out.push(Diagnostic::error(
+                    "GAL0042",
+                    &path,
+                    format!("embedded plan gate could not run: {e}"),
+                ));
+            }
+        }
+    }
+}
+
+fn frontier_point_consistency(ctx: &CheckContext, out: &mut Vec<Diagnostic>) {
+    let Some(frontier) = ctx.frontier else { return };
+    for (i, p) in frontier.points.iter().enumerate() {
+        if p.cluster != p.report.cluster {
+            out.push(Diagnostic::error(
+                "GAL0043",
+                format!("$.points[{i}].cluster"),
+                format!(
+                    "point names cluster '{}' but its embedded plan names '{}'",
+                    p.cluster, p.report.cluster
+                ),
+            ));
+        }
+        // Bit-exact: both numbers were serialized from the same f64.
+        if p.throughput != p.report.throughput {
+            out.push(Diagnostic::error(
+                "GAL0043",
+                format!("$.points[{i}].throughput"),
+                format!(
+                    "point claims {} samples/s but its embedded plan estimates {}",
+                    p.throughput, p.report.throughput
+                ),
+            ));
+        }
+        // The price table is deterministic, so a resolvable cluster must
+        // price to exactly the recorded $/hr.
+        if let Ok(cluster) = super::resolve_report_cluster(&p.report) {
+            let expected = fleet_cost_per_hour(&cluster);
+            if p.cost_per_hour != expected {
+                out.push(Diagnostic::error(
+                    "GAL0043",
+                    format!("$.points[{i}].cost_per_hour"),
+                    format!(
+                        "point prices '{}' at ${}/hr but the catalog prices it at ${}/hr",
+                        p.cluster, p.cost_per_hour, expected
+                    ),
+                ));
+            }
+        }
+        if !p.headroom_bytes.is_finite() {
+            out.push(Diagnostic::error(
+                "GAL0043",
+                format!("$.points[{i}].headroom_bytes"),
+                "headroom is not a finite number".to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use crate::check::check_frontier_text;
+
+    #[test]
+    fn unparseable_frontier_is_gal0040() {
+        let report = check_frontier_text("{\"not\": \"a frontier\"}");
+        assert!(report.has_errors());
+        assert!(report.errors().any(|d| d.code == "GAL0040"), "{}", report.render());
+        // Not even JSON.
+        let report = check_frontier_text("nonsense");
+        assert!(report.errors().any(|d| d.code == "GAL0040"));
+    }
+}

@@ -24,6 +24,7 @@
 //! plans and specs" section for the diagnostic-code table and the
 //! exit-code contract).
 
+pub mod frontier_rules;
 pub mod plan_rules;
 pub mod spec_rules;
 
@@ -139,6 +140,12 @@ pub struct CheckContext<'a> {
     pub cluster_error: Option<String>,
     /// Raw model-spec JSON (the `check --model-file` form).
     pub raw_spec: Option<&'a Json>,
+    /// Raw frontier-artifact JSON (the `check --frontier` form).
+    pub raw_frontier: Option<&'a Json>,
+    /// Typed frontier report, when `FrontierReport::from_json` accepted it.
+    pub frontier: Option<&'a crate::advise::FrontierReport>,
+    /// Error text of a failed `FrontierReport` parse.
+    pub frontier_error: Option<String>,
 }
 
 /// One static-analysis rule.
@@ -240,6 +247,7 @@ fn sort_diagnostics(diags: &mut [Diagnostic]) {
 pub fn registry() -> Vec<Box<dyn Checker>> {
     let mut rules = plan_rules::rules();
     rules.extend(spec_rules::rules());
+    rules.extend(frontier_rules::rules());
     rules
 }
 
@@ -324,6 +332,28 @@ pub fn check_model_json(v: &Json, cluster: Option<&ClusterSpec>) -> CheckReport 
         raw_spec: Some(v),
         model: model.as_ref(),
         cluster,
+        ..Default::default()
+    };
+    run(&ctx)
+}
+
+/// Check one frontier-artifact text (the `check --frontier` form): parse
+/// it and run the registry's frontier rules — non-domination, embedded
+/// plans passing the plan gate, point/plan consistency.
+pub fn check_frontier_text(text: &str) -> CheckReport {
+    let raw = Json::parse(text).ok();
+    let mut frontier_error = None;
+    let frontier = match crate::advise::FrontierReport::from_json_str(text) {
+        Ok(f) => Some(f),
+        Err(e) => {
+            frontier_error = Some(e.to_string());
+            None
+        }
+    };
+    let ctx = CheckContext {
+        raw_frontier: raw.as_ref(),
+        frontier: frontier.as_ref(),
+        frontier_error,
         ..Default::default()
     };
     run(&ctx)

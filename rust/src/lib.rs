@@ -22,6 +22,9 @@
 //!   * [`check`]   — static analysis over planner artifacts: typed
 //!     `GAL0xxx` diagnostics re-proving plan legality, artifact
 //!     consistency and spec/cluster lints (`galvatron check`).
+//!   * [`advise`]  — elastic capacity planning (`galvatron advise`):
+//!     priced fleet sweeps, Pareto frontiers over
+//!     (throughput, headroom, $/hr), and failure-aware replanning.
 //!   * [`sim`]     — discrete-event cluster simulator (ground truth for
 //!     Fig. 4/7-style experiments; substitutes the GPU testbed).
 //!   * [`serve`]   — long-lived planning-as-a-service daemon (JSONL +
@@ -31,6 +34,7 @@
 //!     (pipeline + data parallel + collectives) over the runtime.
 //!   * [`util`]    — JSON/RNG/CLI/table/bench substrates.
 
+pub mod advise;
 pub mod api;
 pub mod check;
 pub mod cluster;

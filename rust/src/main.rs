@@ -5,8 +5,12 @@
 //!             (optionally persisting it with --out plan.json)
 //!   simulate  cross-check a plan on the discrete-event simulator, either
 //!             re-planned from names or loaded from --plan plan.json
-//!   check     statically verify plan artifacts / ModelSpec files with
-//!             typed GAL0xxx diagnostics (exit 1 on any error)
+//!   check     statically verify plan artifacts / ModelSpec files /
+//!             frontier artifacts with typed GAL0xxx diagnostics (exit 1
+//!             on any error)
+//!   advise    elastic capacity planning: sweep a priced fleet search
+//!             space to a Pareto frontier, or replan a plan artifact
+//!             under lost islands (--degrade)
 //!   serve     long-lived planning daemon: JSONL on stdin/stdout or
 //!             HTTP/1.1 (--http), warm caches + in-flight request dedup
 //!   table2..6 regenerate the paper's tables
@@ -40,12 +44,19 @@ commands:
   simulate  --plan plan.json [--profile-db db.json]
             | --model <name> --cluster <name> --memory <GB> [--method <name>]
   check     --plan plan.json and/or --model-file spec.json
+            and/or --frontier frontier.json
             [--cluster <name> | --islands <spec>] [--json]
             (static verifier: exits 1 on any error-severity diagnostic)
+  advise    --gpus A100-80G:0..8,RTX-TITAN-24G:0..8 [--max-islands N]
+            [--model <name>] [--max-batch N] [--method <name>]
+            [--min-throughput X] [--threads N] [--cache-dir DIR]
+            [--out frontier.json] [--json]
+            | --degrade plan.json [--lose N] [--threads N]
+            [--cache-dir DIR] [--json]
   serve     [--cache-dir DIR] [--http ADDR:PORT] [--workers N] [--threads N]
             (planning daemon: JSONL requests on stdin, one response per
             line on stdout, until EOF; --http serves POST /plan,
-            POST /plan/artifact and GET /health instead)
+            POST /plan/artifact, POST /advise and GET /health instead)
   table2    [--models a,b] [--budgets 8,16] [--methods m1,m2] [--max-batch N]
   table3 | table4 | table5 | table6     (same options)
   hetero    heterogeneous-cluster sweep [--models a,b] [--max-batch N]
@@ -291,6 +302,12 @@ fn cmd_check(args: &Args) -> Result<()> {
             report.merge(check::check_model_json(&v, cluster.as_ref()));
             checked.push(path.to_string());
         }
+        if let Some(path) = args.get("frontier") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading frontier artifact {path}"))?;
+            report.merge(check::check_frontier_text(&text));
+            checked.push(path.to_string());
+        }
         Ok(())
     };
     // In --json mode operational warnings join the payload (the
@@ -304,7 +321,7 @@ fn cmd_check(args: &Args) -> Result<()> {
     result?;
     anyhow::ensure!(
         !checked.is_empty(),
-        "check needs --plan plan.json and/or --model-file spec.json"
+        "check needs --plan plan.json, --model-file spec.json and/or --frontier frontier.json"
     );
     if args.flag("json") {
         let mut payload = report.to_json();
@@ -327,6 +344,78 @@ fn cmd_check(args: &Args) -> Result<()> {
     }
     if report.has_errors() {
         std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `galvatron advise`: elastic capacity planning. The sweep form
+/// enumerates a priced fleet search space (`--gpus CLASS:lo..hi,...`),
+/// plans every viable fleet through one shared warm cache, and prints
+/// the Pareto frontier over (throughput, memory headroom, $/hr). The
+/// `--degrade plan.json` form replans an existing plan artifact under
+/// every combination of `--lose N` lost islands. See the README
+/// "Capacity advice" section.
+fn cmd_advise(args: &Args) -> Result<()> {
+    use galvatron::advise::{advise, degrade, parse_fleet_spec, AdviseRequest, DegradeOptions};
+    let threads: Option<usize> = match args.get("threads") {
+        Some(t) => Some(t.parse().context("--threads expects an integer")?),
+        None => None,
+    };
+    let cache_dir = args
+        .get("cache-dir")
+        .map(std::path::PathBuf::from)
+        .or_else(|| std::env::var_os("GALVATRON_CACHE_DIR").map(std::path::PathBuf::from));
+
+    // Failure-aware replanning of an existing plan artifact.
+    if let Some(path) = args.get("degrade") {
+        let base = PlanReport::load(std::path::Path::new(path))?;
+        let opts = DegradeOptions { lose: args.usize("lose", 1)?, threads, cache_dir };
+        let report = degrade(&base, &opts)?;
+        if args.flag("json") {
+            println!("{}", report.to_json());
+        } else {
+            print!("{}", report.render());
+        }
+        return Ok(());
+    }
+
+    // Fleet sweep to a Pareto frontier.
+    let gpus = args
+        .get("gpus")
+        .ok_or_else(|| anyhow::anyhow!(
+            "advise needs --gpus CLASS:lo..hi[,CLASS:lo..hi] (or --degrade plan.json)"
+        ))?;
+    let space = parse_fleet_spec(gpus, args.usize("max-islands", 3)?)?;
+    let mut req = AdviseRequest::new(args.get_or("model", "bert-huge-32"), space)
+        .max_batch(args.usize("max-batch", 64)?);
+    if let Some(name) = args.get("method") {
+        req = req.method(MethodSpec::parse(name)?);
+    }
+    if let Some(t) = threads {
+        req = req.threads(t);
+    }
+    if let Some(dir) = cache_dir {
+        req = req.cache_dir(dir);
+    }
+    let frontier = advise(&req)?;
+    if args.flag("json") {
+        print!("{}", frontier.to_pretty_string());
+    } else {
+        print!("{}", frontier.render());
+    }
+    if let Some(min) = args.get("min-throughput") {
+        let min: f64 = min.parse().context("--min-throughput expects a number")?;
+        match frontier.cheapest_at_least(min) {
+            Some(p) => println!(
+                "cheapest fleet >= {min} samples/s: {} at ${:.2}/hr ({:.2} samples/s)",
+                p.cluster, p.cost_per_hour, p.throughput
+            ),
+            None => println!("no surveyed fleet reaches {min} samples/s"),
+        }
+    }
+    if let Some(path) = args.get("out") {
+        frontier.save(std::path::Path::new(path))?;
+        println!("wrote frontier artifact to {path}");
     }
     Ok(())
 }
@@ -602,6 +691,7 @@ fn main() -> Result<()> {
         "smoke" => cmd_smoke(&args)?,
         "simulate" => cmd_simulate(&args)?,
         "check" => cmd_check(&args)?,
+        "advise" => cmd_advise(&args)?,
         "serve" => cmd_serve(&args)?,
         "models" => cmd_models(&args)?,
         "clusters" => {

@@ -8,12 +8,16 @@
 //!     and transform tables of one *cost context*, a length-prefixed
 //!     little-endian binary with a versioned header. The context
 //!     fingerprint ([`context_fingerprint`]) hashes everything a memoized
-//!     cost value can depend on: the model's layer profiles and attributed
-//!     embedding/head params, the cluster's islands and links, the overlap
-//!     slowdown, the training numerics, and the cost-model provenance
-//!     fingerprint. Anything else (batch caps, schedules, thread counts,
-//!     search spaces) only selects *which* keys are queried, never their
-//!     values, so runs that differ only in those share one cost file.
+//!     cost value can depend on beyond its own key: the model's layer
+//!     profiles and attributed embedding/head params, the inter-island
+//!     link bandwidth, the overlap slowdown, the training numerics, and
+//!     the cost-model provenance fingerprint. Island composition lives in
+//!     the per-record site fingerprints instead, so clusters that differ
+//!     only in which islands they assemble — a fleet sweep, a degraded
+//!     replan — share one cost file. Anything else (batch caps,
+//!     schedules, thread counts, search spaces) only selects *which* keys
+//!     are queried, never their values, so runs that differ only in those
+//!     share one cost file too.
 //!   * `plan-<request>.json` — a whole serialized
 //!     [`crate::api::PlanReport`] keyed by a request fingerprint computed
 //!     in `api::request`: an identical `PlanRequest` returns its artifact
@@ -128,9 +132,10 @@ pub(crate) fn hash_model(fp: &mut Fingerprint, model: &ModelProfile) {
     }
 }
 
-/// Fold a cluster's cost-relevant content (islands, budgets, links) into
-/// `fp`. Memory budgets are part of the resolved cluster, so a different
-/// `--memory` lands in a different cache context.
+/// Fold a cluster's full content (islands, budgets, links) into `fp`.
+/// Used by the *request* fingerprint (whole-plan entries are cluster
+/// specific); the cost-table context deliberately hashes only `inter_bw`
+/// — see [`context_fingerprint`].
 pub(crate) fn hash_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
     fp.usize(cluster.islands.len());
     for isl in &cluster.islands {
@@ -149,13 +154,25 @@ pub(crate) fn hash_train(fp: &mut Fingerprint, train: &crate::model::TrainConfig
     fp.u64(train.dtype as u64).u64(train.optimizer as u64).u64(u64::from(train.zero));
 }
 
-/// Fingerprint of everything a memoized cost value depends on. Two runs
-/// with equal context fingerprints may share cost tables; anything that
-/// could change a cached value (model content, cluster shape or links,
-/// overlap, training numerics, cost-model backend) changes the
-/// fingerprint and therefore the cache file. Batch caps, schedules,
-/// search spaces and thread counts only select *which* keys are queried,
-/// never their values, so they are deliberately excluded.
+/// Fingerprint of everything a memoized cost value depends on *beyond its
+/// own key*. Two runs with equal context fingerprints may share cost
+/// tables; anything that could change a cached value (model content, the
+/// inter-island link, overlap, training numerics, cost-model backend)
+/// changes the fingerprint and therefore the cache file.
+///
+/// The cluster's island composition is deliberately **not** hashed: every
+/// persisted record already carries a stable site fingerprint
+/// ([`site_fingerprint`]: gpu class, memory budget, FLOP rate, intra bus,
+/// saturation/limit), which is the only way island content reaches a
+/// memoized value. The single remaining cluster-global input is
+/// `inter_bw` — an unsaturated site prices communication groups that
+/// spill past its intra limit on the inter-island link. (Pipeline p2p
+/// reads the full topology but is never cached.) Clusters that differ
+/// only in island composition — a fleet sweep, a degraded replan —
+/// therefore share one cost file, and records for island classes both
+/// clusters contain warm-start every member of the sweep. Batch caps,
+/// schedules, search spaces and thread counts only select *which* keys
+/// are queried, never their values, so they are excluded too.
 pub fn context_fingerprint(
     model: &ModelProfile,
     cluster: &ClusterSpec,
@@ -164,7 +181,7 @@ pub fn context_fingerprint(
     let mut fp = Fingerprint::new();
     fp.u64(u64::from(COST_FILE_VERSION));
     hash_model(&mut fp, model);
-    hash_cluster(&mut fp, cluster);
+    fp.f64(cluster.inter_bw);
     fp.f64(cfg.overlap_slowdown);
     hash_train(&mut fp, &cfg.train);
     fp.u64(cfg.cost_model.cache_fingerprint());

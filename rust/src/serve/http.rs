@@ -1,7 +1,10 @@
 //! Minimal HTTP/1.1 front end for the serve daemon, hand-rolled over
-//! [`std::net::TcpListener`] per the repo's zero-dependency policy. One
-//! request per connection (`Connection: close`), `Content-Length` bodies
-//! only, no TLS.
+//! [`std::net::TcpListener`] per the repo's zero-dependency policy.
+//! `Content-Length` bodies only, no TLS. Connections close after one
+//! response unless the client opts in with an explicit `Connection:
+//! keep-alive` header, in which case the handler loops on the socket
+//! (bounded by the 30s read timeout) and echoes `connection: keep-alive`
+//! back — clients that read until EOF keep working unchanged.
 //!
 //! Routes:
 //!
@@ -12,6 +15,9 @@
 //!   artifact bytes**, byte-identical to `galvatron plan --out` (this is
 //!   what `cmp`-based gates should fetch). Errors return the envelope
 //!   with `400`.
+//! * `POST /advise` — body is one advise request object
+//!   ([`super::protocol::ADVISE_REQUEST_KEYS`]); responds with the
+//!   envelope whose `report` is the frontier artifact value.
 //! * `GET /health` — liveness plus the daemon's counters.
 
 use std::io::{BufRead, BufReader, Read, Write};
@@ -66,38 +72,93 @@ pub fn serve_http(
     })
 }
 
+/// One parsed HTTP request off a connection.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    /// The client sent an explicit `Connection: keep-alive` header.
+    keep_alive: bool,
+}
+
+/// Why [`read_request`] produced no request.
+enum ReadError {
+    /// The peer closed (or idled past the read timeout) between requests
+    /// — a normal end of a keep-alive conversation, nothing to answer.
+    Closed,
+    /// The stream held bytes that do not form an HTTP request.
+    Malformed(String),
+}
+
 fn handle_connection(stream: TcpStream, state: &ServeState) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    match read_request(&stream) {
-        Ok((method, path, body)) => respond(&stream, state, &method, &path, &body),
-        Err(reason) => {
-            let envelope = protocol::error_response(
-                None,
-                "parse",
-                &format!("malformed HTTP request: {reason}"),
-                &[],
-            );
-            write_response(&stream, 400, "Bad Request", envelope.to_string().as_bytes());
+    // One buffered reader for the connection's lifetime: a per-request
+    // reader would discard bytes of the next pipelined request that it
+    // buffered past the current body.
+    let mut reader = BufReader::new(&stream);
+    loop {
+        match read_request(&mut reader) {
+            Ok(req) => {
+                respond(&stream, state, &req);
+                if !req.keep_alive {
+                    break;
+                }
+            }
+            Err(ReadError::Closed) => break,
+            Err(ReadError::Malformed(reason)) => {
+                let envelope = protocol::error_response(
+                    None,
+                    "parse",
+                    &format!("malformed HTTP request: {reason}"),
+                    &[],
+                );
+                write_response(&stream, 400, "Bad Request", envelope.to_string().as_bytes(), false);
+                break;
+            }
         }
     }
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
-/// Parse request line, headers (only `Content-Length` matters), and body.
-fn read_request(stream: &TcpStream) -> Result<(String, String, Vec<u8>), String> {
-    let mut reader = BufReader::new(stream);
+/// Parse request line, headers (`Content-Length` and `Connection` matter),
+/// and body.
+fn read_request(reader: &mut BufReader<&TcpStream>) -> Result<Request, ReadError> {
+    let malformed = |e: std::io::Error| ReadError::Malformed(e.to_string());
     let mut line = String::new();
-    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    match reader.read_line(&mut line) {
+        // EOF before any byte of a request line: the peer is done.
+        Ok(0) => return Err(ReadError::Closed),
+        Ok(_) => {}
+        // An idle keep-alive socket hitting the read timeout is a normal
+        // close, not a protocol error to answer with a 400.
+        Err(e)
+            if line.is_empty()
+                && matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+        {
+            return Err(ReadError::Closed)
+        }
+        Err(e) => return Err(malformed(e)),
+    }
     let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or("empty request line")?.to_string();
-    let path = parts.next().ok_or("request line has no path")?.to_string();
+    let method = parts
+        .next()
+        .ok_or_else(|| ReadError::Malformed("empty request line".to_string()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| ReadError::Malformed("request line has no path".to_string()))?
+        .to_string();
     let mut content_length = 0usize;
+    let mut keep_alive = false;
     let mut saw_blank = false;
     for _ in 0..MAX_HEADER_LINES {
         let mut header = String::new();
-        let n = reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let n = reader.read_line(&mut header).map_err(malformed)?;
         if n == 0 {
-            return Err("connection closed mid-headers".to_string());
+            return Err(ReadError::Malformed("connection closed mid-headers".to_string()));
         }
         let header = header.trim();
         if header.is_empty() {
@@ -105,29 +166,36 @@ fn read_request(stream: &TcpStream) -> Result<(String, String, Vec<u8>), String>
             break;
         }
         if let Some((key, value)) = header.split_once(':') {
-            if key.trim().eq_ignore_ascii_case("content-length") {
-                content_length =
-                    value.trim().parse().map_err(|_| "unparsable Content-Length")?;
+            let key = key.trim();
+            if key.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| ReadError::Malformed("unparsable Content-Length".to_string()))?;
+            } else if key.eq_ignore_ascii_case("connection") {
+                keep_alive = value.trim().eq_ignore_ascii_case("keep-alive");
             }
         }
     }
     if !saw_blank {
-        return Err(format!("more than {MAX_HEADER_LINES} header lines"));
+        return Err(ReadError::Malformed(format!("more than {MAX_HEADER_LINES} header lines")));
     }
     if content_length > MAX_BODY {
-        return Err(format!("body of {content_length} bytes exceeds the {MAX_BODY}-byte limit"));
+        return Err(ReadError::Malformed(format!(
+            "body of {content_length} bytes exceeds the {MAX_BODY}-byte limit"
+        )));
     }
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body).map_err(|e| e.to_string())?;
-    Ok((method, path, body))
+    reader.read_exact(&mut body).map_err(malformed)?;
+    Ok(Request { method, path, body, keep_alive })
 }
 
-fn respond(stream: &TcpStream, state: &ServeState, method: &str, path: &str, body: &[u8]) {
-    let (status, reason, payload): (u16, &str, Vec<u8>) = match (method, path) {
+fn respond(stream: &TcpStream, state: &ServeState, req: &Request) {
+    let (status, reason, payload): (u16, &str, Vec<u8>) = match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/plan") | ("POST", "/plan/artifact") => {
-            let text = String::from_utf8_lossy(body);
+            let text = String::from_utf8_lossy(&req.body);
             let outcome = state.handle_line(&text);
-            if path == "/plan/artifact" {
+            if req.path == "/plan/artifact" {
                 match &outcome.artifact {
                     Some(artifact) => (200, "OK", artifact.as_bytes().to_vec()),
                     None => (400, "Bad Request", outcome.envelope.to_string().into_bytes()),
@@ -138,23 +206,33 @@ fn respond(stream: &TcpStream, state: &ServeState, method: &str, path: &str, bod
                 (400, "Bad Request", outcome.envelope.to_string().into_bytes())
             }
         }
+        ("POST", "/advise") => {
+            let text = String::from_utf8_lossy(&req.body);
+            let outcome = state.handle_advise(&text);
+            if outcome.ok {
+                (200, "OK", outcome.envelope.to_string().into_bytes())
+            } else {
+                (400, "Bad Request", outcome.envelope.to_string().into_bytes())
+            }
+        }
         ("GET", "/health") => (200, "OK", state.health_json().to_string().into_bytes()),
         _ => {
             let envelope = protocol::error_response(
                 None,
                 "not_found",
-                &format!("no route for {method} {path}"),
+                &format!("no route for {} {}", req.method, req.path),
                 &[],
             );
             (404, "Not Found", envelope.to_string().into_bytes())
         }
     };
-    write_response(stream, status, reason, &payload);
+    write_response(stream, status, reason, &payload, req.keep_alive);
 }
 
-fn write_response(mut stream: &TcpStream, status: u16, reason: &str, body: &[u8]) {
+fn write_response(mut stream: &TcpStream, status: u16, reason: &str, body: &[u8], keep_alive: bool) {
+    let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {connection}\r\n\r\n",
         body.len()
     );
     let _ = stream
@@ -181,11 +259,36 @@ mod tests {
             s.flush().unwrap();
         });
         let (stream, _) = listener.accept().unwrap();
-        let (method, path, body) = read_request(&stream).unwrap();
-        assert_eq!(method, "POST");
-        assert_eq!(path, "/plan");
-        assert_eq!(body, b"body");
+        let mut reader = BufReader::new(&stream);
+        let req = read_request(&mut reader).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/plan");
+        assert_eq!(req.body, b"body");
+        // Keep-alive is strictly opt-in: absent header means close.
+        assert!(!req.keep_alive);
         client.join().unwrap();
+    }
+
+    #[test]
+    fn keep_alive_header_is_parsed_and_eof_is_a_clean_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"GET /health HTTP/1.1\r\nConnection: keep-alive\r\n\r\n",
+            )
+            .unwrap();
+            s.flush().unwrap();
+            // Close after one request: the server's next read is EOF.
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(&stream);
+        let req = read_request(&mut reader).unwrap();
+        assert!(req.keep_alive);
+        assert_eq!(req.path, "/health");
+        client.join().unwrap();
+        assert!(matches!(read_request(&mut reader), Err(ReadError::Closed)));
     }
 
     #[test]
@@ -199,7 +302,8 @@ mod tests {
             // Close without ever sending the header-terminating blank line.
         });
         let (stream, _) = listener.accept().unwrap();
-        assert!(read_request(&stream).is_err());
+        let mut reader = BufReader::new(&stream);
+        assert!(matches!(read_request(&mut reader), Err(ReadError::Malformed(_))));
         client.join().unwrap();
     }
 
@@ -209,13 +313,14 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            write_response(&stream, 200, "OK", b"{}");
+            write_response(&stream, 200, "OK", b"{}", false);
         });
         let mut s = TcpStream::connect(addr).unwrap();
         let mut text = String::new();
         s.read_to_string(&mut text).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
         assert!(text.ends_with("\r\n\r\n{}"), "{text}");
         server.join().unwrap();
     }

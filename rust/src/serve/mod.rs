@@ -50,6 +50,13 @@ fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Default bound on the in-memory memo: retained artifacts beyond this
+/// count evict the least-recently-used entry, so a daemon fed a stream of
+/// distinct requests holds a bounded working set instead of growing
+/// without limit. The persistent `--cache-dir` store remains the durable
+/// tier — an evicted entry that recurs is re-answered from there.
+pub const MEMO_CAPACITY: usize = 256;
+
 /// Monotonic counters over the daemon's lifetime, served on `/health`.
 #[derive(Default)]
 pub struct ServeStats {
@@ -64,6 +71,8 @@ pub struct ServeStats {
     dedup_hits: AtomicU64,
     /// Requests that ran a fresh search.
     searched: AtomicU64,
+    /// Memo entries dropped to stay under the capacity bound.
+    memo_evictions: AtomicU64,
 }
 
 /// A point-in-time copy of [`ServeStats`].
@@ -76,6 +85,7 @@ pub struct StatsSnapshot {
     pub memo_hits: u64,
     pub dedup_hits: u64,
     pub searched: u64,
+    pub memo_evictions: u64,
 }
 
 impl StatsSnapshot {
@@ -88,6 +98,7 @@ impl StatsSnapshot {
             ("memo_hits", Json::num(self.memo_hits as f64)),
             ("dedup_hits", Json::num(self.dedup_hits as f64)),
             ("searched", Json::num(self.searched as f64)),
+            ("memo_evictions", Json::num(self.memo_evictions as f64)),
         ])
     }
 }
@@ -145,11 +156,15 @@ impl InFlight {
     }
 }
 
-/// A memoized answer retained for the daemon's lifetime.
+/// A memoized answer retained until capacity pressure evicts it.
 #[derive(Clone)]
 struct MemoEntry {
     report: PlanReport,
     artifact: Arc<String>,
+    /// Tick from [`ServeState::memo_clock`] at the last hit or insert;
+    /// the eviction victim is the minimum. Ticks are unique, so the
+    /// victim is deterministic.
+    last_used: u64,
 }
 
 /// The daemon's shared immutable world plus its request-coordination
@@ -162,6 +177,10 @@ pub struct ServeState {
     stats: ServeStats,
     inflight: Mutex<HashMap<u64, Arc<InFlight>>>,
     memo: Mutex<HashMap<u64, MemoEntry>>,
+    /// LRU bound on `memo`; `0` disables memoization entirely.
+    memo_capacity: usize,
+    /// Monotonic recency ticks for `MemoEntry::last_used`.
+    memo_clock: AtomicU64,
 }
 
 /// What one request produced: the response envelope (one JSONL line /
@@ -178,12 +197,20 @@ impl ServeState {
     /// it); `None` plans without persistence unless `GALVATRON_CACHE_DIR`
     /// is set, mirroring the CLI.
     pub fn new(cache_dir: Option<PathBuf>) -> ServeState {
+        ServeState::with_memo_capacity(cache_dir, MEMO_CAPACITY)
+    }
+
+    /// [`ServeState::new`] with an explicit memo bound (tests shrink it to
+    /// exercise eviction; `0` turns the memo tier off).
+    pub fn with_memo_capacity(cache_dir: Option<PathBuf>, memo_capacity: usize) -> ServeState {
         ServeState {
             planner: Planner::new(),
             cache_dir,
             stats: ServeStats::default(),
             inflight: Mutex::new(HashMap::new()),
             memo: Mutex::new(HashMap::new()),
+            memo_capacity,
+            memo_clock: AtomicU64::new(0),
         }
     }
 
@@ -196,7 +223,13 @@ impl ServeState {
             memo_hits: self.stats.memo_hits.load(Ordering::SeqCst),
             dedup_hits: self.stats.dedup_hits.load(Ordering::SeqCst),
             searched: self.stats.searched.load(Ordering::SeqCst),
+            memo_evictions: self.stats.memo_evictions.load(Ordering::SeqCst),
         }
+    }
+
+    /// Memo entries currently retained (diagnostics/tests).
+    pub fn memo_len(&self) -> usize {
+        lock(&self.memo).len()
     }
 
     /// Requests currently registered as in-flight (diagnostics/tests).
@@ -336,7 +369,13 @@ impl ServeState {
     fn compute(&self, r: &crate::api::ResolvedRequest, fp: u64) -> Done {
         // Bind before the `if let`: a temporary guard in the scrutinee
         // would live for the whole block and deadlock on the remove below.
-        let memo_entry = lock(&self.memo).get(&fp).cloned();
+        let memo_entry = {
+            let mut memo = lock(&self.memo);
+            memo.get_mut(&fp).map(|entry| {
+                entry.last_used = self.memo_clock.fetch_add(1, Ordering::SeqCst);
+                entry.clone()
+            })
+        };
         if let Some(entry) = memo_entry {
             // Same re-proving discipline as the persistent store: a memo
             // entry that no longer passes the gate is dropped, not served.
@@ -367,8 +406,24 @@ impl ServeState {
                 };
                 let artifact = Arc::new(report.to_json_string());
                 let report_json = Arc::new(report.to_json());
-                lock(&self.memo)
-                    .insert(fp, MemoEntry { report, artifact: Arc::clone(&artifact) });
+                if self.memo_capacity > 0 {
+                    let mut memo = lock(&self.memo);
+                    if !memo.contains_key(&fp) && memo.len() >= self.memo_capacity {
+                        // Evict the least-recently-used entry; recency
+                        // ticks are unique, so the victim is deterministic.
+                        if let Some((&victim, _)) =
+                            memo.iter().min_by_key(|(_, entry)| entry.last_used)
+                        {
+                            memo.remove(&victim);
+                            self.stats.memo_evictions.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    let last_used = self.memo_clock.fetch_add(1, Ordering::SeqCst);
+                    memo.insert(
+                        fp,
+                        MemoEntry { report, artifact: Arc::clone(&artifact), last_used },
+                    );
+                }
                 Done::Ok {
                     cache,
                     artifact,
@@ -403,8 +458,75 @@ impl ServeState {
     pub fn health_json(&self) -> Json {
         Json::obj(vec![
             ("status", Json::str("ok")),
+            (
+                "memo",
+                Json::obj(vec![
+                    ("entries", Json::num(self.memo_len() as f64)),
+                    ("capacity", Json::num(self.memo_capacity as f64)),
+                ]),
+            ),
             ("stats", self.stats().to_json()),
         ])
+    }
+
+    /// Handle one capacity-advice request (raw JSON text): the `POST
+    /// /advise` endpoint. Sweeps are not memoized or deduplicated — each
+    /// one replans through the shared `cache_dir`, which already answers
+    /// repeat fleets from the warm store.
+    pub fn handle_advise(&self, text: &str) -> ServeOutcome {
+        self.stats.requests.fetch_add(1, Ordering::SeqCst);
+        let v = match Json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                return self.finish_error(
+                    None,
+                    "parse",
+                    &format!("request is not valid JSON: {e}"),
+                    &[],
+                )
+            }
+        };
+        let id = v.get("id").cloned();
+        let parsed = match protocol::parse_advise_request(&v) {
+            Ok(p) => p,
+            Err(e) => return self.finish_error(id.as_ref(), e.kind, &e.message, &[]),
+        };
+        let mut req = parsed.request;
+        if req.cache_dir.is_none() {
+            req.cache_dir.clone_from(&self.cache_dir);
+        }
+        let (result, warnings) = crate::util::diag::capture(|| crate::advise::advise(&req));
+        match result {
+            Ok(frontier) => {
+                let artifact = Arc::new(frontier.to_pretty_string());
+                if let Some(path) = &parsed.out {
+                    if let Err(e) = std::fs::write(path, artifact.as_bytes()) {
+                        return self.finish_error(
+                            id.as_ref(),
+                            "io",
+                            &format!("could not write artifact to {}: {e}", path.display()),
+                            &warnings,
+                        );
+                    }
+                }
+                self.stats.ok.fetch_add(1, Ordering::SeqCst);
+                let out = parsed.out.as_deref().map(|p| p.display().to_string());
+                ServeOutcome {
+                    ok: true,
+                    envelope: protocol::ok_response(
+                        id.as_ref(),
+                        "miss",
+                        out.as_deref(),
+                        &warnings,
+                        frontier.to_json(),
+                    ),
+                    artifact: Some(artifact),
+                }
+            }
+            Err(e) => {
+                self.finish_error(id.as_ref(), plan_error_kind(&e), &e.to_string(), &warnings)
+            }
+        }
     }
 }
 

@@ -79,6 +79,7 @@ pub fn plan_error_kind(e: &PlanError) -> &'static str {
         PlanError::InvalidProfileDb { .. } => "invalid_profile_db",
         PlanError::ProfileDbCoverage { .. } => "profile_db_coverage",
         PlanError::Infeasible { .. } => "infeasible",
+        PlanError::InvalidFleet { .. } => "invalid_fleet",
         PlanError::Artifact { .. } => "artifact",
         PlanError::InvalidArtifact { .. } => "invalid_artifact",
     }
@@ -188,6 +189,42 @@ pub fn parse_request(v: &Json) -> Result<ParsedRequest, ServeError> {
     }
     let out = str_field(v, "out")?.map(PathBuf::from);
     Ok(ParsedRequest { request: req, out })
+}
+
+/// Every key a `POST /advise` request may carry: a capacity-advice sweep
+/// mirroring the `galvatron advise` CLI flags.
+pub const ADVISE_REQUEST_KEYS: &[&str] =
+    &["id", "model", "gpus", "max_islands", "max_batch", "method", "threads", "out"];
+
+/// A parsed advise request: the sweep input plus serve-only directives.
+pub struct ParsedAdvise {
+    pub request: crate::advise::AdviseRequest,
+    pub out: Option<PathBuf>,
+}
+
+/// Parse and validate one advise request object. Same strictness as
+/// [`parse_request`]: unknown keys and wrong types fail loudly.
+pub fn parse_advise_request(v: &Json) -> Result<ParsedAdvise, ServeError> {
+    check_object_keys(v, ADVISE_REQUEST_KEYS, "advise request").map_err(ServeError::schema)?;
+    let model = str_field(v, "model")?
+        .ok_or_else(|| ServeError::schema("a \"model\" string is required"))?;
+    let gpus = str_field(v, "gpus")?
+        .ok_or_else(|| ServeError::schema("a \"gpus\" fleet spec string is required"))?;
+    let max_islands = usize_field(v, "max_islands")?.unwrap_or(3);
+    let plan_err = |e: PlanError| ServeError { kind: plan_error_kind(&e), message: e.to_string() };
+    let space = crate::advise::parse_fleet_spec(gpus, max_islands).map_err(plan_err)?;
+    let mut req = crate::advise::AdviseRequest::new(model, space);
+    if let Some(n) = usize_field(v, "max_batch")? {
+        req = req.max_batch(n);
+    }
+    if let Some(name) = str_field(v, "method")? {
+        req = req.method(crate::api::MethodSpec::parse(name).map_err(plan_err)?);
+    }
+    if let Some(n) = usize_field(v, "threads")? {
+        req = req.threads(n);
+    }
+    let out = str_field(v, "out")?.map(PathBuf::from);
+    Ok(ParsedAdvise { request: req, out })
 }
 
 fn warnings_json(warnings: &[String]) -> Json {

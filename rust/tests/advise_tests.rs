@@ -1,0 +1,217 @@
+//! Integration tests for `galvatron advise`: elastic capacity planning.
+//!
+//! The contract under test: fleet sweeps are byte-deterministic across
+//! thread counts and cache states, the reported frontier is exactly the
+//! non-dominated set a brute-force sweep finds, the cheapest-at-least
+//! query matches brute force, degrade replans are deterministic and reuse
+//! the baseline's warm cost tables (the relaxed cost-table context: one
+//! `costs-*.bin` per model/link context, not per island composition), and
+//! frontier artifacts round-trip through the `check --frontier` gate.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::{Path, PathBuf};
+
+use galvatron::advise::{
+    advise, degrade, dominates, enumerate_fleets, fleet_cost_per_hour, headroom_bytes,
+    parse_fleet_spec, AdviseRequest, DegradeOptions, DegradeOutcome, FrontierPoint,
+};
+use galvatron::api::{MethodSpec, PlanRequest};
+
+/// The small two-class space every sweep test uses: six fleets (1x/2x of
+/// each class alone, plus the two balanced mixes).
+const SPACE: &str = "RTX-TITAN-24G:0..2,A100-40G:0..2";
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("galvatron-advise-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn costs_files(dir: &Path) -> Vec<PathBuf> {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("costs-") && n.ends_with(".bin"))
+        })
+        .collect()
+}
+
+fn sweep_request(threads: usize, cache_dir: &Path) -> AdviseRequest {
+    AdviseRequest::new("bert-huge-32", parse_fleet_spec(SPACE, 2).unwrap())
+        .max_batch(8)
+        .threads(threads)
+        .cache_dir(cache_dir)
+}
+
+#[test]
+fn sweeps_are_byte_identical_across_threads_and_cache_states() {
+    let dir = fresh_dir("det");
+    let cold = advise(&sweep_request(1, &dir)).unwrap().to_pretty_string();
+    // The relaxed cost-table context: every fleet of the sweep shares one
+    // inter_bw/model context, hence exactly one cost file.
+    assert_eq!(costs_files(&dir).len(), 1, "fleets must share one cost-table context");
+    let warm = advise(&sweep_request(8, &dir)).unwrap().to_pretty_string();
+    assert_eq!(warm, cold, "warm multi-threaded sweep changed artifact bytes");
+    let dir2 = fresh_dir("det2");
+    let cold2 = advise(&sweep_request(8, &dir2)).unwrap().to_pretty_string();
+    assert_eq!(cold2, cold, "cold sweep in a fresh cache changed artifact bytes");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn frontier_matches_brute_force_over_the_enumerated_fleets() {
+    let dir = fresh_dir("brute");
+    let frontier = advise(&sweep_request(1, &dir)).unwrap();
+    // Brute force: plan every enumerated fleet directly with the same
+    // knobs, no advise machinery.
+    let fleets = enumerate_fleets(&parse_fleet_spec(SPACE, 2).unwrap());
+    assert_eq!(frontier.fleets_considered, fleets.len());
+    let mut feasible: Vec<FrontierPoint> = Vec::new();
+    for cluster in &fleets {
+        let req = PlanRequest::new("bert-huge-32", "")
+            .cluster_spec(cluster.clone())
+            .method(MethodSpec::Bmw { ckpt: true })
+            .max_batch(8)
+            .threads(1);
+        let Ok(report) = req.plan() else { continue };
+        feasible.push(FrontierPoint {
+            cluster: cluster.name.clone(),
+            devices: cluster.n_devices(),
+            cost_per_hour: fleet_cost_per_hour(cluster),
+            throughput: report.throughput,
+            headroom_bytes: headroom_bytes(cluster, &report),
+            report,
+        });
+    }
+    assert_eq!(frontier.fleets_planned, feasible.len());
+    assert!(!frontier.points.is_empty());
+    // Every reported point is non-dominated against ALL feasible fleets.
+    for p in &frontier.points {
+        assert!(
+            !feasible.iter().any(|q| dominates(q, p)),
+            "frontier point '{}' is dominated by brute-force fleet '{}'",
+            p.cluster,
+            feasible.iter().find(|q| dominates(q, p)).unwrap().cluster
+        );
+    }
+    // Every non-dominated feasible fleet's objective triple is on the
+    // frontier (bit-exact: both sides planned the same deterministic search).
+    for q in &feasible {
+        if feasible.iter().any(|r| dominates(r, q)) {
+            continue;
+        }
+        assert!(
+            frontier.points.iter().any(|p| p.cluster == q.cluster
+                && p.cost_per_hour == q.cost_per_hour
+                && p.throughput == q.throughput
+                && p.headroom_bytes == q.headroom_bytes),
+            "non-dominated fleet '{}' is missing from the frontier",
+            q.cluster
+        );
+    }
+    // The cheapest-at-least query agrees with brute force on cost.
+    let mut thresholds: Vec<f64> = vec![0.0];
+    thresholds.extend(frontier.points.iter().map(|p| p.throughput));
+    for min in thresholds {
+        let brute_min = feasible
+            .iter()
+            .filter(|q| q.throughput >= min)
+            .map(|q| q.cost_per_hour)
+            .min_by(f64::total_cmp);
+        assert_eq!(
+            frontier.cheapest_at_least(min).map(|p| p.cost_per_hour),
+            brute_min,
+            "cheapest fleet >= {min} samples/s disagrees with brute force"
+        );
+    }
+    let max = feasible.iter().map(|q| q.throughput).fold(0.0, f64::max);
+    assert!(frontier.cheapest_at_least(max + 1.0).is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn degrade_replans_each_shrunk_cluster_warm_and_deterministically() {
+    let dir = fresh_dir("degrade");
+    let base = PlanRequest::new("bert-huge-32", "hetero4")
+        .max_batch(8)
+        .method(MethodSpec::Bmw { ckpt: true })
+        .threads(1)
+        .cache_dir(&dir)
+        .plan()
+        .unwrap();
+    assert_eq!(costs_files(&dir).len(), 1);
+    let opts =
+        DegradeOptions { lose: 1, threads: Some(1), cache_dir: Some(dir.clone()) };
+    let first = degrade(&base, &opts).unwrap();
+    assert_eq!(first.scenarios.len(), 2, "hetero4 has two islands");
+    assert_eq!(first.scenarios[0].lost_islands, vec![0]);
+    assert_eq!(first.scenarios[0].cluster, "2xA100-80G");
+    assert_eq!(first.scenarios[1].lost_islands, vec![1]);
+    assert_eq!(first.scenarios[1].cluster, "2xRTX-TITAN-24G");
+    for s in &first.scenarios {
+        match &s.outcome {
+            DegradeOutcome::Planned { report, throughput_ratio, warm_start } => {
+                assert!(report.throughput > 0.0 && *throughput_ratio > 0.0);
+                // The shrunk clusters share the baseline's cost-table
+                // context, so both replans start warm.
+                assert!(*warm_start, "replan of '{}' rebuilt cost tables cold", s.cluster);
+            }
+            other => panic!("losing one hetero4 island must stay plannable: {other:?}"),
+        }
+    }
+    // No second cost file appeared: the degraded contexts hit the
+    // baseline's table instead of building their own.
+    assert_eq!(costs_files(&dir).len(), 1, "degrade replans created a new cost-table context");
+    // Byte-determinism of the serialized report across repeat runs (now
+    // answered by the plan store) and across thread counts.
+    let again = degrade(&base, &opts).unwrap();
+    assert_eq!(again.to_json().to_string(), first.to_json().to_string());
+    let threaded_opts =
+        DegradeOptions { lose: 1, threads: Some(8), cache_dir: Some(dir.clone()) };
+    let threaded = degrade(&base, &threaded_opts).unwrap();
+    assert_eq!(threaded.to_json().to_string(), first.to_json().to_string());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn frontier_artifacts_pass_the_check_gate_and_tampering_is_caught() {
+    // Scratch-cache path: no cache_dir on the request.
+    let req = AdviseRequest::new("bert-huge-32", parse_fleet_spec("RTX-TITAN-24G:2..2", 2).unwrap())
+        .max_batch(8)
+        .threads(1);
+    let frontier = advise(&req).unwrap();
+    assert_eq!(frontier.points.len(), 1);
+    let report = galvatron::check::check_frontier_text(&frontier.to_pretty_string());
+    assert!(!report.has_errors(), "clean frontier flagged:\n{}", report.render());
+    // A dominated duplicate (same objectives, strictly pricier) must trip
+    // the GAL0041 dominance rule.
+    let mut tampered = frontier.clone();
+    let mut dup = tampered.points[0].clone();
+    dup.cost_per_hour += 1.0;
+    tampered.points.push(dup);
+    let report = galvatron::check::check_frontier_text(&tampered.to_pretty_string());
+    assert!(report.errors().any(|d| d.code == "GAL0041"), "{}", report.render());
+}
+
+#[test]
+fn never_fits_fleets_are_pruned_without_planning() {
+    // 15B params in fp32 can never fit one 24G card; the sweep must
+    // record it as infeasible without touching the engine.
+    let req = AdviseRequest::new("gpt3-15b", parse_fleet_spec("RTX-TITAN-24G:1..1", 1).unwrap())
+        .max_batch(8)
+        .threads(1);
+    let frontier = advise(&req).unwrap();
+    assert_eq!(frontier.fleets_considered, 1);
+    assert_eq!(frontier.fleets_infeasible, 1);
+    assert_eq!(frontier.fleets_planned, 0);
+    assert!(frontier.points.is_empty());
+    // An empty frontier is still a valid, checkable artifact.
+    let report = galvatron::check::check_frontier_text(&frontier.to_pretty_string());
+    assert!(!report.has_errors(), "{}", report.render());
+}

@@ -374,6 +374,142 @@ fn http_round_trip_serves_exact_artifacts_and_typed_errors() {
     assert_eq!(body, expect.as_bytes());
 }
 
+/// Read one HTTP response (status, `connection` header, body) off a
+/// shared reader — the client side of a keep-alive conversation, where
+/// read-to-EOF would block forever.
+fn read_response(reader: &mut std::io::BufReader<&TcpStream>) -> (u16, String, String) {
+    use std::io::BufRead;
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            } else if k.trim().eq_ignore_ascii_case("connection") {
+                connection = v.trim().to_string();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).unwrap();
+    (status, connection, String::from_utf8(body).unwrap())
+}
+
+#[test]
+fn keep_alive_serves_two_requests_on_one_socket() {
+    let st = state(None);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let st = Arc::clone(&st);
+        std::thread::spawn(move || {
+            let _ = serve_http(listener, st, 2);
+        });
+    }
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let send = |mut s: &TcpStream, connection: &str, body: &str| {
+        write!(
+            s,
+            "POST /plan HTTP/1.1\r\nHost: x\r\nConnection: {connection}\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        s.flush().unwrap();
+    };
+    send(&stream, "keep-alive", &req_line(8));
+    let mut reader = std::io::BufReader::new(&stream);
+    let (status, connection, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(connection, "keep-alive", "opt-in keep-alive must be echoed");
+    assert_eq!(Json::parse(&body).unwrap().get("cache").and_then(Json::as_str), Some("miss"));
+    // Second request on the very same socket: served, and a memo hit.
+    send(&stream, "keep-alive", &req_line(8));
+    let (status, connection, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(connection, "keep-alive");
+    assert_eq!(Json::parse(&body).unwrap().get("cache").and_then(Json::as_str), Some("hit"));
+    // A request without the opt-in closes the conversation.
+    send(&stream, "close", &req_line(8));
+    let (status, connection, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(connection, "close");
+    drop(reader);
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after a non-keep-alive request");
+    assert_eq!(st.stats().searched, 1, "one socket, one search, two memo hits");
+}
+
+#[test]
+fn memo_capacity_bounds_entries_and_evicts_lru() {
+    let st = Arc::new(ServeState::with_memo_capacity(None, 2));
+    let (a, b, c) = (req_line(8), req_line(12), req_line(16));
+    assert!(st.handle_line(&a).ok);
+    assert!(st.handle_line(&b).ok);
+    assert_eq!(st.memo_len(), 2);
+    assert_eq!(st.stats().memo_evictions, 0);
+    // Touch A so B becomes the least-recently-used entry...
+    let again = st.handle_line(&a);
+    assert_eq!(again.envelope.get("cache").and_then(Json::as_str), Some("hit"));
+    // ...then C's insert at capacity evicts B, not A.
+    assert!(st.handle_line(&c).ok);
+    assert_eq!(st.memo_len(), 2);
+    assert_eq!(st.stats().memo_evictions, 1);
+    assert_eq!(st.handle_line(&a).envelope.get("cache").and_then(Json::as_str), Some("hit"));
+    assert_eq!(
+        st.handle_line(&b).envelope.get("cache").and_then(Json::as_str),
+        Some("miss"),
+        "the evicted entry must plan again"
+    );
+    // A, B, C cold plus B's re-plan; B's re-insert evicted C in turn.
+    assert_eq!(st.stats().searched, 4);
+    assert_eq!(st.stats().memo_hits, 2);
+    assert_eq!(st.stats().memo_evictions, 2);
+    // The bound and occupancy are visible on /health.
+    let memo = st.health_json().get("memo").cloned().unwrap();
+    assert_eq!(memo.get("capacity").and_then(Json::as_usize), Some(2));
+    assert_eq!(memo.get("entries").and_then(Json::as_usize), Some(2));
+}
+
+#[test]
+fn http_advise_endpoint_returns_a_frontier_envelope() {
+    let st = state(None);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let st = Arc::clone(&st);
+        std::thread::spawn(move || {
+            let _ = serve_http(listener, st, 2);
+        });
+    }
+    let req = r#"{"gpus":"RTX-TITAN-24G:2..2","max_batch":8,"model":"bert-huge-32","threads":1}"#;
+    let (status, body) = http_request(addr, "POST", "/advise", req);
+    assert_eq!(status, 200);
+    let envelope = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(envelope.get("status").and_then(Json::as_str), Some("ok"), "{envelope}");
+    let report = envelope.get("report").unwrap();
+    assert_eq!(report.get("fleets_considered").and_then(Json::as_usize), Some(1));
+    assert_eq!(report.get("fleets_planned").and_then(Json::as_usize), Some(1));
+    assert_eq!(report.get("points").and_then(Json::as_arr).map(Vec::len), Some(1));
+    // Missing "model" is a schema error, not a daemon death.
+    let (status, body) = http_request(addr, "POST", "/advise", r#"{"gpus":"cpu:1..1"}"#);
+    assert_eq!(status, 400);
+    let envelope = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(
+        envelope.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("schema")
+    );
+}
+
 #[test]
 fn installed_worker_budget_never_changes_artifacts() {
     // Install a tiny process-wide budget (the daemon does this at
