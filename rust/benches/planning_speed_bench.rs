@@ -14,10 +14,19 @@
 //! asserted byte-identical to the cold one — the cache may only remove
 //! work, never change a plan.
 //!
+//! Each case also measures the cold path with pruning disabled
+//! (`.prune(false)`, the `GALVATRON_NO_PRUNE=1` path): `cold_speedup` is
+//! what dominance pruning, the lower-bound skip, the DP reachability
+//! bounds and the stage-DP memo buy together. The pruned artifact is
+//! asserted byte-identical to the unpruned one on every case — pruning
+//! may only remove work, never change a plan — and the homogeneous
+//! titan8 cases gate `cold_speedup >= 3` at threads=1.
+//!
 //! All cases are additionally written to `BENCH_planning.json` at the
 //! repository root (canonical pretty JSON) — the persistent planning-speed
-//! trajectory CI runs in release mode, gates against `BENCH_baseline.json`
-//! (`scripts/bench_gate.py`), and uploads as an artifact.
+//! trajectory CI runs in release mode, gates against the best cold rate
+//! recorded in `BENCH_history.jsonl` (`scripts/bench_gate.py`), and
+//! uploads as an artifact.
 //!
 //! Run: `cargo bench --bench planning_speed_bench`
 
@@ -107,6 +116,32 @@ fn main() {
                 Some(t) => (t.cache_hit_rate(), t.cells_explored),
                 None => (0.0, 0),
             };
+            // Pruning diagnostics from the live trace (timing counters are
+            // never serialized, so they must come from a fresh run).
+            let timing =
+                cold.search_trace.as_ref().map(|t| t.timing.clone()).unwrap_or_default();
+            // ---- no-prune: the pre-pruning cold path, for the speedup
+            // gate. Must produce the byte-identical artifact first.
+            let noprune_text =
+                request().prune(false).plan().expect("no-prune run plans").to_json_string();
+            assert_eq!(
+                cold_text, noprune_text,
+                "{label}: pruned and unpruned artifacts differ — pruning changed a plan"
+            );
+            let r = bench(&format!("{label}/cold-noprune"), Duration::from_secs(3), || {
+                let _ = request().prune(false).plan();
+            });
+            let plans_per_sec_noprune = 1.0 / r.mean.as_secs_f64();
+            let cold_speedup = plans_per_sec / plans_per_sec_noprune;
+            // Gate the tentpole on the homogeneous cases at threads=1 (the
+            // least noisy rows); the other rows just report their ratio.
+            if cluster == "titan8" && backend == "analytic" && threads == 1 {
+                assert!(
+                    cold_speedup >= 3.0,
+                    "{label}: pruning speedup {cold_speedup:.2}x below the 3x floor \
+                     ({plans_per_sec:.2} vs {plans_per_sec_noprune:.2} plans/s)"
+                );
+            }
             // ---- warm: prime a fresh cache directory once, then re-plan
             // the identical request against it.
             let cache_dir = std::env::temp_dir().join(format!(
@@ -141,8 +176,15 @@ fn main() {
                 ("plans_per_sec", Json::num(plans_per_sec)),
                 ("plans_per_sec_warm", Json::num(plans_per_sec_warm)),
                 ("warm_speedup", Json::num(plans_per_sec_warm / plans_per_sec)),
+                ("plans_per_sec_noprune", Json::num(plans_per_sec_noprune)),
+                ("cold_speedup", Json::num(cold_speedup)),
                 ("cache_hit_rate", Json::num(hit_rate)),
                 ("cells_explored", Json::num(cells as f64)),
+                ("candidates_pruned", Json::num(timing.candidates_pruned as f64)),
+                ("lb_skips", Json::num(timing.lb_skips as f64)),
+                ("dp_states_visited", Json::num(timing.dp_states_visited as f64)),
+                ("matrix_builds", Json::num(timing.matrix_builds as f64)),
+                ("dp_memo_entries", Json::num(timing.dp_memo_entries as f64)),
             ]);
             println!("{row}");
             results.push(row);

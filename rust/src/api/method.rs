@@ -84,6 +84,10 @@ pub struct SearchOverrides {
     pub cost_model: Option<crate::cost::CostModel>,
     /// Persistent planning cache directory (`None` = no persistence).
     pub cache_dir: Option<std::path::PathBuf>,
+    /// Cold-path pruning (`None` = engine default: on unless the
+    /// `GALVATRON_NO_PRUNE` environment variable disables it). Never
+    /// changes a plan or trace byte — only wall time.
+    pub prune: Option<bool>,
 }
 
 impl SearchOverrides {
@@ -98,6 +102,7 @@ impl SearchOverrides {
             train: TrainConfig::default(),
             cost_model: None,
             cache_dir: None,
+            prune: None,
         }
     }
 
@@ -125,6 +130,9 @@ impl SearchOverrides {
         }
         if let Some(dir) = &self.cache_dir {
             cfg.cache_dir = Some(dir.clone());
+        }
+        if self.prune.is_some() {
+            cfg.prune = self.prune;
         }
         cfg
     }

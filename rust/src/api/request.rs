@@ -117,6 +117,11 @@ pub struct PlanRequest {
     /// The cache never changes a plan — warm and cold artifacts are
     /// byte-identical — it only removes recomputation.
     pub cache_dir: Option<PathBuf>,
+    /// Cold-path pruning (dominance pruning, DP reachability bounds,
+    /// lower-bound evaluation skips). `None` = engine default: on unless
+    /// the `GALVATRON_NO_PRUNE` environment variable disables it. Pruning
+    /// never changes an artifact byte — only planning wall time.
+    pub prune: Option<bool>,
 }
 
 impl PlanRequest {
@@ -139,6 +144,7 @@ impl PlanRequest {
             profile_db: None,
             cost_model: None,
             cache_dir: None,
+            prune: None,
         }
     }
 
@@ -290,6 +296,15 @@ impl PlanRequest {
         self
     }
 
+    /// Force cold-path pruning on or off (default: on, unless the
+    /// `GALVATRON_NO_PRUNE` environment variable disables it). Pruning
+    /// never changes an artifact byte — only planning wall time — so this
+    /// exists for benchmarking and byte-identity checks.
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.prune = Some(prune);
+        self
+    }
+
     /// Convenience: plan with a default [`Planner`].
     pub fn plan(&self) -> Result<PlanReport, PlanError> {
         Planner::new().plan(self)
@@ -326,8 +341,8 @@ pub struct ResolvedRequest {
 /// [`PlanReport`]. Hashes the artifact schema version, resolved names,
 /// model/cluster content, the declarative spec (it is embedded in the
 /// artifact), the full method, training numerics, the cost-model
-/// provenance, and every search override *except* `threads` and
-/// `cache_dir` — both are proven not to change the artifact.
+/// provenance, and every search override *except* `threads`, `cache_dir`
+/// and `prune` — all three are proven not to change the artifact.
 pub fn request_fingerprint(r: &ResolvedRequest) -> u64 {
     use crate::search::engine::persist;
     let mut fp = persist::Fingerprint::new();
@@ -534,6 +549,7 @@ impl Planner {
         overrides.threads = req.threads;
         overrides.train = req.train;
         overrides.cost_model = Some(cost_model.clone());
+        overrides.prune = req.prune;
         let cache_dir = req
             .cache_dir
             .clone()

@@ -68,6 +68,13 @@ pub struct SearchConfig {
     /// its cost tables from compatible prior runs and flushes what it
     /// learned. Never changes a plan — only its wall time.
     pub cache_dir: Option<std::path::PathBuf>,
+    /// Cold-path pruning (dominance pruning, DP reachability bounds, and
+    /// the lower-bound evaluation skip). `None` (the default) resolves at
+    /// engine construction: on, unless the `GALVATRON_NO_PRUNE` environment
+    /// variable disables it. Pruning never changes an artifact byte — every
+    /// skipped candidate is provably dominated or beaten — only wall time,
+    /// so this knob exists for benchmarking and byte-identity CI checks.
+    pub prune: Option<bool>,
 }
 
 impl Default for SearchConfig {
@@ -86,6 +93,7 @@ impl Default for SearchConfig {
             train: TrainConfig::default(),
             cost_model: CostModel::Analytic,
             cache_dir: None,
+            prune: None,
         }
     }
 }

@@ -13,6 +13,7 @@
 //! {1,2,4,8}, i.e. 44 candidates with CKPT — the counts in paper Fig. 3
 //! (and 68 pre-Takeaway-3) — verified by unit tests below.
 
+use crate::cost::estimator::LayerCost;
 use crate::parallel::{Dim, Strategy};
 use crate::util::is_pow2;
 
@@ -93,6 +94,67 @@ fn enumerate_levels(
             degree *= 2;
         }
     }
+}
+
+/// Pairwise dominance over a candidate catalog, judged on memoized cost
+/// rows (`class_costs[layer_class][candidate]`, one row per distinct layer
+/// cost class of the model). Returns a mask: `true` means the candidate can
+/// be dropped from the stage-level DP without changing its answer.
+///
+/// Candidate `j` is dominated by an earlier candidate `k < j` iff, for
+/// every layer class:
+///
+///   * the batch-split degree matches (so transform costs R are identical
+///     for every neighbor — R reads only the split),
+///   * the forward-memory weight is *bitwise* identical (`o_ms` and `o_f`
+///     bit-equal, so the DP bucket of every layer is the same at any
+///     granularity/live-microbatch count) and the backward spike is no
+///     larger (`o_b <=`, so the Eq. 2 peak of the substituted path can
+///     only shrink),
+///   * the time components satisfy `fwd+bwd <=` and `bwd_sync-bwd <=`
+///     (exactly the two terms the DP's per-batch cost combines, so
+///     `m·(fwd+bwd) + (bwd_sync-bwd)` is `<=` for *every* microbatch
+///     count under monotone float rounding).
+///
+/// Under the DP's strictly-less update rule (earliest index wins ties) a
+/// dominated candidate can never appear in a returned assignment: any path
+/// through `j` has a path through `k` of equal bucket column, `<=` cost
+/// and `<=` true peak that precedes it in enumeration order. Equality is
+/// deliberately non-strict — the common case is topology-permuted level
+/// orderings with tied costs — but the index condition `k < j` keeps the
+/// relation irreflexive and the *first* member of every batch-split class
+/// always survives, so the split-class structure the DP collapses
+/// predecessors into is unchanged.
+pub fn dominated_candidates(
+    strategies: &[Strategy],
+    class_costs: &[Vec<LayerCost>],
+) -> Vec<bool> {
+    let ns = strategies.len();
+    let mut dominated = vec![false; ns];
+    for j in 0..ns {
+        'candidate: for k in 0..j {
+            if dominated[k] || strategies[k].batch_split() != strategies[j].batch_split() {
+                // Transitivity makes skipping dominated dominators safe:
+                // whatever dominates k also dominates j.
+                continue;
+            }
+            for row in class_costs {
+                let (a, b) = (&row[k], &row[j]);
+                let weight_equal = a.mem.o_ms.to_bits() == b.mem.o_ms.to_bits()
+                    && a.mem.o_f.to_bits() == b.mem.o_f.to_bits();
+                let dominates = weight_equal
+                    && a.mem.o_b <= b.mem.o_b
+                    && a.fwd + a.bwd <= b.fwd + b.bwd
+                    && a.bwd_sync - a.bwd <= b.bwd_sync - b.bwd;
+                if !dominates {
+                    continue 'candidate;
+                }
+            }
+            dominated[j] = true;
+            break;
+        }
+    }
+    dominated
 }
 
 /// Total candidate count across all PP degrees for `n` devices — the
@@ -179,6 +241,59 @@ mod tests {
         let a = candidate_strategies(8, &SpaceOptions::default());
         let b = candidate_strategies(8, &SpaceOptions::default());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dominance_keeps_first_of_every_split_class() {
+        use crate::cluster::cluster_by_name;
+        use crate::cost::CostEstimator;
+        use crate::model::model_by_name;
+        let model = model_by_name("bert-huge-32").unwrap();
+        let cluster = cluster_by_name("titan8").unwrap();
+        let est = CostEstimator::new(&cluster, 1, 1.3);
+        let cands = candidate_strategies(8, &SpaceOptions::default());
+        let classes = crate::search::engine::layer_classes(&model);
+        let n_classes = *classes.iter().max().unwrap() as usize + 1;
+        let rows: Vec<Vec<LayerCost>> = (0..n_classes)
+            .map(|c| {
+                let rep = classes.iter().position(|&x| x as usize == c).unwrap();
+                cands
+                    .iter()
+                    .map(|s| est.layer_cost(&model.layers[rep], s, 4.0, model.extra_params(rep)))
+                    .collect()
+            })
+            .collect();
+        let dom = dominated_candidates(&cands, &rows);
+        // titan8's saturated bus makes topology-permuted orderings tie.
+        assert!(dom.iter().any(|&d| d), "expected dominated ordering permutations");
+        // The first member of each batch-split class must survive, so the
+        // DP's split-class structure is unchanged by pruning.
+        let mut seen = std::collections::HashSet::new();
+        for (i, s) in cands.iter().enumerate() {
+            if seen.insert(s.batch_split()) {
+                assert!(!dom[i], "first of split class {} pruned", s.batch_split());
+            }
+        }
+        // Never dominated by itself or a later candidate: an all-distinct
+        // catalog (one per split) prunes nothing.
+        let one_per_split: Vec<Strategy> = {
+            let mut seen = std::collections::HashSet::new();
+            cands.iter().filter(|s| seen.insert(s.batch_split())).cloned().collect()
+        };
+        let rows1: Vec<Vec<LayerCost>> = rows
+            .iter()
+            .map(|row| {
+                let mut seen = std::collections::HashSet::new();
+                cands
+                    .iter()
+                    .zip(row)
+                    .filter(|(s, _)| seen.insert(s.batch_split()))
+                    .map(|(_, c)| *c)
+                    .collect()
+            })
+            .collect();
+        let dom1 = dominated_candidates(&one_per_split, &rows1);
+        assert!(dom1.iter().all(|&d| !d), "distinct splits can never dominate each other");
     }
 
     #[test]

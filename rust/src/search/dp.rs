@@ -9,6 +9,23 @@
 //! O_b and the 1F1B live-microbatch multiplier) is verified on the
 //! backtraced solution, scanning candidate terminal states in cost order —
 //! equivalent to Algorithm 3's E_fwd sweep.
+//!
+//! Two entry points share one kernel:
+//!
+//! * [`dp_stage_search`] — the flat core. The caller hands it prebuilt
+//!   per-layer-class cost rows and per-microbatch transform matrices
+//!   (see [`crate::search::engine`]'s `StageMatrices`), an *active*
+//!   candidate subset (dominance survivors), and optional reachability
+//!   bounds. State tables are single contiguous buffers indexed by
+//!   `(memory bucket, active candidate)`; the parent chain is one flat
+//!   `u32` buffer for the whole stage.
+//! * [`dp_search`] — the historical convenience wrapper over a
+//!   [`StageCosts`] source. It prices the full catalog through the counted
+//!   cache path (one probe per (layer, strategy) plus one per
+//!   (layer ≥ 1, split-class pair) — identical traffic to the original
+//!   kernel) and runs the core with every candidate active and bounds off,
+//!   so its results and side effects are byte-for-byte those of the
+//!   pre-flattening implementation.
 
 use crate::cost::estimator::{LayerCost, StageCosts};
 use crate::model::LayerProfile;
@@ -40,6 +57,43 @@ pub struct DpInput<'a> {
     pub granularity: f64,
 }
 
+/// Inputs for the flat DP core: costs come prebuilt as per-layer rows over
+/// the *full* candidate catalog, and the DP itself runs over the `active`
+/// subset only. Built by the engine from its memoized `StageMatrices`
+/// bundles (one build per (site class, group, b_m) for the whole run) or by
+/// the [`dp_search`] compatibility wrapper.
+pub struct DpStageInput<'a> {
+    /// Full candidate catalog (indices below refer into this).
+    pub strategies: &'a [Strategy],
+    /// Candidate indices the DP may assign (ascending). Dominance pruning
+    /// shrinks this; the unpruned path passes `0..strategies.len()`.
+    pub active: &'a [usize],
+    /// Catalog index → batch-split class (index into the sorted distinct
+    /// split list).
+    pub class_of: &'a [usize],
+    /// Number of distinct batch-split classes.
+    pub nc: usize,
+    /// Per stage layer: the full-catalog cost row of its layer class.
+    pub layer_costs: Vec<&'a [LayerCost]>,
+    /// Per stage layer `l ≥ 1`: the `nc × nc` *per-microbatch* transform
+    /// matrix of its layer class (entry 0 is never read).
+    pub layer_transforms: Vec<&'a [Vec<f64>]>,
+    /// Microbatches per global batch (m).
+    pub microbatches: usize,
+    /// Live microbatches at this stage's peak (1F1B: P - stage_idx).
+    pub live_mb: usize,
+    /// Device memory budget E, bytes.
+    pub mem_budget: f64,
+    /// Memory discretization granularity, bytes.
+    pub granularity: f64,
+    /// Enable the reachability bounds (min-weight bail, prefix band,
+    /// suffix-min column cutoff). Sound — every state they skip is
+    /// unreachable or cannot reach any in-budget terminal — so results are
+    /// identical either way; gated so `GALVATRON_NO_PRUNE=1` measures the
+    /// full legacy sweep.
+    pub bounds: bool,
+}
+
 /// Result of a stage-level DP search.
 #[derive(Debug, Clone)]
 pub struct DpResult {
@@ -53,53 +107,274 @@ pub struct DpResult {
     pub peak_mem: f64,
     /// Chosen strategy per layer.
     pub strategies: Vec<Strategy>,
+    /// Chosen *catalog* index per layer (parallel to `strategies`).
+    pub choice: Vec<usize>,
+    /// DP transition attempts this search evaluated (diagnostics).
+    pub states_visited: u64,
 }
 
 const INF: f64 = f64::INFINITY;
 
-/// Run the DP search; `None` if no assignment fits the budget.
+/// Run the flat DP core. Returns the result (if any assignment fits) and
+/// the number of transition attempts evaluated — also reported on misses,
+/// where there is no `DpResult` to carry it.
+pub fn dp_stage_search(input: &DpStageInput) -> (Option<DpResult>, u64) {
+    let nl = input.layer_costs.len();
+    let na = input.active.len();
+    let mut states: u64 = 0;
+    if nl == 0 || na == 0 {
+        return (None, states);
+    }
+    let m = input.microbatches as f64;
+    let buckets = (input.mem_budget / input.granularity).floor() as usize;
+    if buckets == 0 {
+        return (None, states);
+    }
+    let nc = input.nc;
+
+    // ---- Per-(layer, active candidate) weights and per-batch costs ------
+    // weight = forward-memory share: model states + live·O_f (Eq. 3 with
+    // the schedule's live multiplier).
+    let mut weight: Vec<Vec<usize>> = Vec::with_capacity(nl);
+    let mut batch_cost: Vec<Vec<f64>> = Vec::with_capacity(nl);
+    for row in &input.layer_costs {
+        let mut wrow = Vec::with_capacity(na);
+        let mut brow = Vec::with_capacity(na);
+        for &cand in input.active {
+            let c = &row[cand];
+            let fwd_bytes = c.mem.o_ms + input.live_mb as f64 * c.mem.o_f;
+            wrow.push((fwd_bytes / input.granularity).ceil() as usize);
+            brow.push(m * (c.fwd + c.bwd) + (c.bwd_sync - c.bwd));
+        }
+        weight.push(wrow);
+        batch_cost.push(brow);
+    }
+    // Per-batch transform matrices, flattened `ci*nc + cj`. The m-multiply
+    // happens here — `fl(m · x)` exactly as the historical per-stage build.
+    let r_batch: Vec<Vec<f64>> = (0..nl)
+        .map(|l| {
+            if l == 0 {
+                return Vec::new();
+            }
+            let t = input.layer_transforms[l];
+            let mut flat = vec![0.0; nc * nc];
+            for (ci, row) in t.iter().enumerate() {
+                for (cj, &x) in row.iter().enumerate() {
+                    flat[ci * nc + cj] = m * x;
+                }
+            }
+            flat
+        })
+        .collect();
+    // Split class of each active candidate.
+    let class_act: Vec<usize> = input.active.iter().map(|&i| input.class_of[i]).collect();
+
+    // ---- Reachability bounds --------------------------------------------
+    // Columns outside [prefix_min, prefix_max] hold no state; states whose
+    // remaining layers cannot fit even at min weight reach no in-budget
+    // terminal, and neither can any state they would populate (weights are
+    // additive) — skipping both leaves the terminal set untouched.
+    let mut lo = vec![0usize; nl];
+    let mut hi = vec![buckets; nl];
+    // suffix_min[l] = min buckets needed by layers l.. (suffix_min[nl] = 0).
+    let mut suffix_min = vec![0usize; nl + 1];
+    if input.bounds {
+        let min_w: Vec<usize> = weight
+            .iter()
+            .map(|row| row.iter().copied().fold(usize::MAX, usize::min))
+            .collect();
+        let max_w: Vec<usize> =
+            weight.iter().map(|row| row.iter().copied().fold(0, usize::max)).collect();
+        for l in (0..nl).rev() {
+            suffix_min[l] = suffix_min[l + 1].saturating_add(min_w[l]);
+        }
+        if suffix_min[0] > buckets {
+            return (None, states); // even the lightest assignment overflows
+        }
+        let (mut run_min, mut run_max) = (0usize, 0usize);
+        for l in 0..nl {
+            run_min = run_min.saturating_add(min_w[l]);
+            run_max = run_max.saturating_add(max_w[l]);
+            lo[l] = run_min;
+            hi[l] = run_max.min(buckets);
+        }
+    }
+
+    // ---- DP tables -------------------------------------------------------
+    // prev[e*na + a]: min per-batch cost of layers 0..=l with exactly e
+    // buckets of forward memory used and layer l on active candidate a.
+    // parent is one flat buffer for the whole stage, offset l*width*na,
+    // holding the predecessor's `e_prev*na + a_prev`.
+    let width = buckets + 1;
+    let mut prev = vec![INF; width * na];
+    let mut cur = vec![INF; width * na];
+    let mut parent = vec![u32::MAX; nl * width * na];
+
+    // Layer 0.
+    for a in 0..na {
+        let w = weight[0][a];
+        if w <= buckets {
+            states += 1;
+            let idx = w * na + a;
+            if batch_cost[0][a] < prev[idx] {
+                prev[idx] = batch_cost[0][a];
+                parent[idx] = idx as u32; // self-marker, never read back
+            }
+        }
+    }
+
+    let mut best_class = vec![(INF, 0u32); nc];
+    for l in 1..nl {
+        for c in cur.iter_mut() {
+            *c = INF;
+        }
+        let par_off = l * width * na;
+        let r_l = &r_batch[l];
+        for e_prev in lo[l - 1]..=hi[l - 1] {
+            if input.bounds && e_prev.saturating_add(suffix_min[l]) > buckets {
+                break; // ascending e_prev: every later column is worse
+            }
+            let base = e_prev * na;
+            // Collapse predecessors into split classes: min cost + argmin.
+            for b in best_class.iter_mut() {
+                *b = (INF, 0);
+            }
+            let mut any = false;
+            for a in 0..na {
+                let c_prev = prev[base + a];
+                if c_prev < best_class[class_act[a]].0 {
+                    best_class[class_act[a]] = (c_prev, (base + a) as u32);
+                    any = true;
+                }
+            }
+            if !any {
+                continue; // empty column
+            }
+            for a in 0..na {
+                let w = weight[l][a];
+                let e = e_prev + w;
+                if e > buckets {
+                    continue;
+                }
+                states += 1;
+                let cj = class_act[a];
+                let mut best = INF;
+                let mut best_par = u32::MAX;
+                for (ci, &(c_prev, par_idx)) in best_class.iter().enumerate() {
+                    if !c_prev.is_finite() {
+                        continue;
+                    }
+                    let c = c_prev + r_l[ci * nc + cj];
+                    if c < best {
+                        best = c;
+                        best_par = par_idx;
+                    }
+                }
+                if !best.is_finite() {
+                    continue;
+                }
+                let c = best + batch_cost[l][a];
+                let idx = e * na + a;
+                if c < cur[idx] {
+                    cur[idx] = c;
+                    parent[par_off + idx] = best_par;
+                }
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    // ---- Pick the cheapest terminal state whose true Eq. 2 peak fits ----
+    let mut terminals: Vec<(f64, usize)> = prev
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_finite())
+        .map(|(idx, c)| (*c, idx))
+        .collect();
+    terminals.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    for (c_batch, term_idx) in terminals {
+        // Backtrace (active space), then lift to catalog indices.
+        let mut choice_a = vec![0usize; nl];
+        let mut idx = term_idx;
+        for l in (0..nl).rev() {
+            choice_a[l] = idx % na;
+            if l > 0 {
+                idx = parent[l * width * na + idx] as usize;
+                debug_assert_ne!(idx, u32::MAX as usize);
+            }
+        }
+        let choice: Vec<usize> = choice_a.iter().map(|&a| input.active[a]).collect();
+        // True peak (Eq. 2 with live multiplier).
+        let mems: Vec<_> = (0..nl).map(|l| input.layer_costs[l][choice[l]].mem).collect();
+        let peak = stage_peak_memory(&mems, input.live_mb);
+        if peak <= input.mem_budget {
+            let mut nosync = 0.0;
+            let mut sync = 0.0;
+            for l in 0..nl {
+                let c = &input.layer_costs[l][choice[l]];
+                nosync += c.fwd + c.bwd;
+                sync += c.fwd + c.bwd_sync;
+                if l > 0 {
+                    // fl(m·x)/m, not x: keeps the historical double rounding.
+                    let rt = r_batch[l][class_act[choice_a[l - 1]] * nc + class_act[choice_a[l]]] / m;
+                    nosync += rt;
+                    sync += rt;
+                }
+            }
+            return (
+                Some(DpResult {
+                    cost_per_batch: c_batch,
+                    time_nosync: nosync,
+                    time_sync: sync,
+                    peak_mem: peak,
+                    strategies: choice.iter().map(|&j| input.strategies[j].clone()).collect(),
+                    choice,
+                    states_visited: states,
+                }),
+                states,
+            );
+        }
+    }
+    (None, states)
+}
+
+/// Run the DP search over a [`StageCosts`] source; `None` if no assignment
+/// fits the budget. Compatibility wrapper: full catalog active, bounds off,
+/// cost-source traffic identical to the historical kernel.
 pub fn dp_search(input: &DpInput) -> Option<DpResult> {
     let nl = input.layers.len();
     let ns = input.strategies.len();
     if nl == 0 || ns == 0 {
         return None;
     }
-    let m = input.microbatches as f64;
-    let buckets = (input.mem_budget / input.granularity).floor() as usize;
-    if buckets == 0 {
+    if ((input.mem_budget / input.granularity).floor() as usize) == 0 {
         return None;
     }
 
-    // ---- Precompute per-(layer, strategy) costs and weights -------------
-    // weight = forward-memory share: model states + live·O_f (Eq. 3 with
-    // the schedule's live multiplier).
-    let mut cost: Vec<Vec<LayerCost>> = Vec::with_capacity(nl);
-    let mut weight: Vec<Vec<usize>> = Vec::with_capacity(nl);
-    let mut batch_cost: Vec<Vec<f64>> = Vec::with_capacity(nl);
-    for (l, layer) in input.layers.iter().enumerate() {
-        let mut crow = Vec::with_capacity(ns);
-        let mut wrow = Vec::with_capacity(ns);
-        let mut brow = Vec::with_capacity(ns);
-        for s in input.strategies {
-            let c = input.costs.layer_cost_at(
-                input.layer_offset + l,
-                layer,
-                s,
-                input.b_m,
-                input.extra_params[l],
-            );
-            let fwd_bytes = c.mem.o_ms + input.live_mb as f64 * c.mem.o_f;
-            wrow.push((fwd_bytes / input.granularity).ceil() as usize);
-            brow.push(m * (c.fwd + c.bwd) + (c.bwd_sync - c.bwd));
-            crow.push(c);
-        }
-        cost.push(crow);
-        weight.push(wrow);
-        batch_cost.push(brow);
-    }
+    // Price the full catalog through the counted path: one probe per
+    // (layer, strategy)...
+    let rows: Vec<Vec<LayerCost>> = input
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(l, layer)| {
+            input
+                .strategies
+                .iter()
+                .map(|s| {
+                    input.costs.layer_cost_at(
+                        input.layer_offset + l,
+                        layer,
+                        s,
+                        input.b_m,
+                        input.extra_params[l],
+                    )
+                })
+                .collect()
+        })
+        .collect();
 
-    // Transform costs R between consecutive layers (per batch: m times).
-    //
     // §Perf: R(l, S_i, S_j) depends on the strategies only through their
     // batch-split degrees (transform.rs), so strategies collapse into a
     // handful of *split classes*. The DP transition then takes the min
@@ -128,14 +403,15 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
                 .unwrap_or_else(|| unreachable!("every class has a member"))
         })
         .collect();
-    // r_class[l][ci][cj]: per-batch transform cost between split classes.
-    let mut r_class: Vec<Vec<Vec<f64>>> = Vec::with_capacity(nl);
-    r_class.push(vec![vec![0.0; nc]; 1]); // unused for l=0
+    // ...plus one per (layer ≥ 1, split-class pair). Per-microbatch values;
+    // the core multiplies by m.
+    let mut transforms: Vec<Vec<Vec<f64>>> = Vec::with_capacity(nl);
+    transforms.push(Vec::new()); // unused for l=0
     for l in 1..nl {
         let mut mat = vec![vec![0.0; nc]; nc];
-        for ci in 0..nc {
-            for cj in 0..nc {
-                mat[ci][cj] = m * input.costs.transform_cost_at(
+        for (ci, row) in mat.iter_mut().enumerate() {
+            for (cj, cell) in row.iter_mut().enumerate() {
+                *cell = input.costs.transform_cost_at(
                     input.layer_offset + l,
                     &input.layers[l],
                     &input.strategies[class_rep[ci]],
@@ -144,132 +420,24 @@ pub fn dp_search(input: &DpInput) -> Option<DpResult> {
                 );
             }
         }
-        r_class.push(mat);
-    }
-    let r_between = |l: usize, i: usize, j: usize| r_class[l][class_of[i]][class_of[j]];
-
-    // ---- DP table --------------------------------------------------------
-    // dp[e][j]: min per-batch cost of layers 0..=l with exactly e buckets of
-    // forward memory used and layer l running strategy j.
-    let width = buckets + 1;
-    let mut prev = vec![INF; width * ns];
-    let mut parent: Vec<Vec<u32>> = Vec::with_capacity(nl);
-
-    // Layer 0.
-    let mut p0 = vec![u32::MAX; width * ns];
-    for j in 0..ns {
-        let w = weight[0][j];
-        if w <= buckets {
-            let idx = w * ns + j;
-            if batch_cost[0][j] < prev[idx] {
-                prev[idx] = batch_cost[0][j];
-                p0[idx] = j as u32; // self-marker
-            }
-        }
-    }
-    parent.push(p0);
-
-    for l in 1..nl {
-        let mut cur = vec![INF; width * ns];
-        let mut par = vec![u32::MAX; width * ns];
-        let mut best_class = vec![(INF, 0u32); nc];
-        for e_prev in 0..width {
-            let base = e_prev * ns;
-            // Collapse predecessors into split classes: min cost + argmin.
-            for b in best_class.iter_mut() {
-                *b = (INF, 0);
-            }
-            let mut any = false;
-            for i in 0..ns {
-                let c_prev = prev[base + i];
-                if c_prev < best_class[class_of[i]].0 {
-                    best_class[class_of[i]] = (c_prev, (base + i) as u32);
-                    any = true;
-                }
-            }
-            if !any {
-                continue; // empty column
-            }
-            for j in 0..ns {
-                let w = weight[l][j];
-                let e = e_prev + w;
-                if e > buckets {
-                    continue;
-                }
-                let cj = class_of[j];
-                let mut best = INF;
-                let mut best_par = u32::MAX;
-                for (ci, &(c_prev, par_idx)) in best_class.iter().enumerate() {
-                    if !c_prev.is_finite() {
-                        continue;
-                    }
-                    let c = c_prev + r_class[l][ci][cj];
-                    if c < best {
-                        best = c;
-                        best_par = par_idx;
-                    }
-                }
-                if !best.is_finite() {
-                    continue;
-                }
-                let c = best + batch_cost[l][j];
-                let idx = e * ns + j;
-                if c < cur[idx] {
-                    cur[idx] = c;
-                    par[idx] = best_par;
-                }
-            }
-        }
-        parent.push(par);
-        prev = cur;
+        transforms.push(mat);
     }
 
-    // ---- Pick the cheapest terminal state whose true Eq. 2 peak fits ----
-    let mut terminals: Vec<(f64, usize)> = prev
-        .iter()
-        .enumerate()
-        .filter(|(_, c)| c.is_finite())
-        .map(|(idx, c)| (*c, idx))
-        .collect();
-    terminals.sort_by(|a, b| a.0.total_cmp(&b.0));
-
-    for (c_batch, term_idx) in terminals {
-        // Backtrace.
-        let mut choice = vec![0usize; nl];
-        let mut idx = term_idx;
-        for l in (0..nl).rev() {
-            choice[l] = idx % ns;
-            if l > 0 {
-                idx = parent[l][idx] as usize;
-                debug_assert_ne!(idx, u32::MAX as usize);
-            }
-        }
-        // True peak (Eq. 2 with live multiplier).
-        let mems: Vec<_> = (0..nl).map(|l| cost[l][choice[l]].mem).collect();
-        let peak = stage_peak_memory(&mems, input.live_mb);
-        if peak <= input.mem_budget {
-            let mut nosync = 0.0;
-            let mut sync = 0.0;
-            for l in 0..nl {
-                let c = &cost[l][choice[l]];
-                nosync += c.fwd + c.bwd;
-                sync += c.fwd + c.bwd_sync;
-                if l > 0 {
-                    let rt = r_between(l, choice[l - 1], choice[l]) / m;
-                    nosync += rt;
-                    sync += rt;
-                }
-            }
-            return Some(DpResult {
-                cost_per_batch: c_batch,
-                time_nosync: nosync,
-                time_sync: sync,
-                peak_mem: peak,
-                strategies: choice.iter().map(|&j| input.strategies[j].clone()).collect(),
-            });
-        }
-    }
-    None
+    let active: Vec<usize> = (0..ns).collect();
+    dp_stage_search(&DpStageInput {
+        strategies: input.strategies,
+        active: &active,
+        class_of: &class_of,
+        nc,
+        layer_costs: rows.iter().map(Vec::as_slice).collect(),
+        layer_transforms: transforms.iter().map(Vec::as_slice).collect(),
+        microbatches: input.microbatches,
+        live_mb: input.live_mb,
+        mem_budget: input.mem_budget,
+        granularity: input.granularity,
+        bounds: false,
+    })
+    .0
 }
 
 #[cfg(test)]

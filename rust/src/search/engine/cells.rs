@@ -12,17 +12,19 @@
 //! plans and traces are untouched.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
+use crate::cost::estimator::LayerCost;
 use crate::cost::pipeline::plan_cost_full;
-use crate::cost::StageCosts;
 use crate::model::{ModelProfile, TrainConfig};
 use crate::parallel::ParallelPlan;
 use crate::search::base::{LayerDiag, SearchConfig, SearchOutcome};
 use crate::search::bmw::{adjust_candidates, memory_balanced_partition_budgeted, proxy_stage_stats};
-use crate::search::dp::{dp_search, DpInput};
+use crate::search::dp::{dp_stage_search, DpStageInput};
 use crate::search::partition::{even_partition, rated_balanced_partition};
 
+use super::cache::DpMemoKey;
 use super::trace::CellTrace;
 use super::{PartitionKind, PpContext};
 
@@ -38,11 +40,27 @@ pub(crate) struct CellOutcome {
     /// Best outcome in this cell (ties keep the earliest, matching the
     /// sequential sweep's strictly-greater update rule).
     pub best: Option<SearchOutcome>,
+    /// Evaluations short-circuited by the optimistic lower bound (the skip
+    /// is byte-neutral: a skipped candidate provably cannot beat the
+    /// incumbent, see [`evaluate_partition_cached`]). Diagnostics only —
+    /// never serialized.
+    pub lb_skips: u64,
+    /// DP transition attempts across this cell's stage searches
+    /// (diagnostics only — never serialized).
+    pub dp_states: u64,
 }
 
 impl CellOutcome {
     fn new(batch: usize, pp: usize) -> CellOutcome {
-        CellOutcome { batch, pp, evaluations: 0, feasible: false, best: None }
+        CellOutcome {
+            batch,
+            pp,
+            evaluations: 0,
+            feasible: false,
+            best: None,
+            lb_skips: 0,
+            dp_states: 0,
+        }
     }
 
     /// Keep `out` iff strictly better than the current cell best.
@@ -96,7 +114,11 @@ fn placement_budgets(ctx: &PpContext, placement: &[usize]) -> (Vec<f64>, Vec<f64
     (budgets, rates)
 }
 
-/// Microbatch-count candidates under the config's accumulation cap.
+/// Microbatch-count candidates under the config's accumulation cap —
+/// computed once per cell (every kernel hoists it out of its placement
+/// sweep) and deduplicated (the candidate list is strictly increasing and
+/// the cap fallback only fires on an empty list, so this is belt and
+/// braces against future candidate generators).
 fn microbatch_options(cfg: &SearchConfig, batch: usize, pp: usize) -> Vec<usize> {
     let mut mbs = crate::search::microbatch_candidates(batch, pp);
     if let Some(cap) = cfg.microbatch_limit {
@@ -105,12 +127,33 @@ fn microbatch_options(cfg: &SearchConfig, batch: usize, pp: usize) -> Vec<usize>
             mbs.push(cap.min(batch));
         }
     }
+    mbs.dedup();
     mbs
 }
 
 /// Cache-aware port of `search::base::evaluate_partition`: run the stage
 /// DPs over the precomputed candidate catalog — each stage against its
 /// placed island's budget and cost class — and compose the plan.
+///
+/// The stage searches consume the cache's memoized `StageMatrices` bundles
+/// (built once per (site class, group, b_m) for the whole run), feeding the
+/// flat [`dp_stage_search`] kernel with dominance pruning and reachability
+/// bounds when the engine's prune mode is on. Lookup traffic is counted at
+/// bundle-request granularity *before* anything can fail, so the serialized
+/// trace counters are a pure function of the evaluated (partition,
+/// placement, m) set — identical with and without pruning.
+///
+/// `incumbent`: the best throughput this candidate must strictly beat to
+/// matter. When set (callers only pass it once the cell is already
+/// feasible, and never on evaluations whose diagnostics steer a search
+/// trajectory, i.e. BMW's adjustment queue), an optimistic lower bound on
+/// the iteration time — every layer at its cheapest catalog cost, ignoring
+/// transforms, p2p and memory — may prove the candidate cannot beat it.
+/// Floating-point soundness: the bound folds `fl(fwd+bwd)` mins in layer
+/// order and mirrors `plan_cost_full`'s max/sum shapes, and IEEE addition
+/// of non-negative extras is monotone, so `lb ≤ fl(iter_time)` and the
+/// skipped throughput `batch/iter_time ≤ batch/lb ≤ incumbent` — a
+/// strictly-greater offer can never be lost. DP counters still accrue.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn evaluate_partition_cached(
     model: &ModelProfile,
@@ -121,34 +164,122 @@ pub(crate) fn evaluate_partition_cached(
     microbatches: usize,
     partition: &[usize],
     placement: &[usize],
+    incumbent: Option<f64>,
+    cell: &mut CellOutcome,
 ) -> Option<(SearchOutcome, Vec<LayerDiag>)> {
     if ctx.candidates.is_empty() {
         return None;
     }
     let b_m = batch as f64 / microbatches as f64;
+    let classes = ctx.cache.layer_class_map();
+
+    // Bundle fetches first: the counted traffic is fixed per (partition,
+    // placement, m) regardless of skips, DP misses or pruning.
+    let stage_mats: Vec<_> = partition
+        .iter()
+        .enumerate()
+        .map(|(s, &count)| {
+            let site = &ctx.sites[placement[s]];
+            ctx.cache.stage_matrices(site.class, ctx.group, b_m, count, &ctx.candidates, model)
+        })
+        .collect();
+
+    if ctx.cache.prune() {
+        if let Some(thr) = incumbent {
+            let m_f = microbatches as f64;
+            let mut max_nosync = 0.0f64;
+            let mut sum_sync = 0.0f64;
+            let mut start = 0usize;
+            for (s, &count) in partition.iter().enumerate() {
+                let mats = &stage_mats[s];
+                let mut nosync = 0.0f64;
+                let mut sync = 0.0f64;
+                for i in start..start + count {
+                    nosync += mats.min_step[classes[i] as usize];
+                    sync += mats.min_step_sync[classes[i] as usize];
+                }
+                max_nosync = max_nosync.max(nosync);
+                sum_sync += sync;
+                start += count;
+            }
+            let iter_lb = (m_f - 1.0) * max_nosync + sum_sync;
+            // NaN/zero-safe: both comparisons false → no skip.
+            if iter_lb > 0.0 && batch as f64 / iter_lb <= thr {
+                cell.lb_skips += 1;
+                return None;
+            }
+        }
+    }
 
     let mut strategies = Vec::with_capacity(model.n_layers());
+    let mut diags = Vec::with_capacity(model.n_layers());
     let mut start = 0usize;
+    let mut dp_failed = false;
     for (s, &count) in partition.iter().enumerate() {
         let site = &ctx.sites[placement[s]];
-        let costs = ctx.cache.site_costs(site.class);
-        let layers = &model.layers[start..start + count];
-        let extra: Vec<f64> = (start..start + count).map(|i| model.extra_params(i)).collect();
+        let mats = &stage_mats[s];
         let live = cfg.schedule.live_microbatches(s, ctx.pp, microbatches);
-        let res = dp_search(&DpInput {
-            layers,
-            extra_params: &extra,
-            strategies: &ctx.candidates,
-            costs: &costs,
-            layer_offset: start,
-            b_m,
-            microbatches,
-            live_mb: live,
-            mem_budget: site.gpu.mem_bytes,
-            granularity: cfg.granularity,
-        })?;
-        strategies.extend(res.strategies);
+        // A stage DP is a pure function of this key (granularity and the
+        // catalog are run-fixed): memoize it run-wide so the BMW queue's
+        // ±1-layer boundary shifts and recurring b_m values across the
+        // batch sweep re-solve in O(1). Memo hits replay the solve's state
+        // count, keeping the diagnostics counter thread-independent.
+        let memo_key: Option<DpMemoKey> = ctx.cache.prune().then(|| {
+            (
+                site.class,
+                ctx.group as u64,
+                b_m.to_bits(),
+                microbatches as u64,
+                live as u64,
+                site.gpu.mem_bytes.to_bits(),
+                classes[start..start + count].to_vec(),
+            )
+        });
+        let entry = match memo_key.as_ref().and_then(|k| ctx.cache.dp_memo_get(k)) {
+            Some(hit) => hit,
+            None => {
+                let layer_costs: Vec<&[LayerCost]> = (start..start + count)
+                    .map(|i| mats.class_costs[classes[i] as usize].as_slice())
+                    .collect();
+                let layer_transforms: Vec<&[Vec<f64>]> = (start..start + count)
+                    .map(|i| mats.class_transforms[classes[i] as usize].as_slice())
+                    .collect();
+                let (res, states) = dp_stage_search(&DpStageInput {
+                    strategies: &ctx.candidates,
+                    active: &mats.active,
+                    class_of: &mats.class_of,
+                    nc: mats.splits.len(),
+                    layer_costs,
+                    layer_transforms,
+                    microbatches,
+                    live_mb: live,
+                    mem_budget: site.gpu.mem_bytes,
+                    granularity: cfg.granularity,
+                    bounds: ctx.cache.prune(),
+                });
+                let solved = Arc::new((res, states));
+                match memo_key {
+                    Some(k) => ctx.cache.dp_memo_put(k, solved),
+                    None => solved,
+                }
+            }
+        };
+        cell.dp_states += entry.1;
+        let Some(res) = entry.0.as_ref() else {
+            dp_failed = true;
+            break;
+        };
+        // Diagnostics straight from the bundle rows the DP chose — the
+        // same `LayerCost` values the memoized per-layer path returned.
+        for (k, &j) in res.choice.iter().enumerate() {
+            let c = &mats.class_costs[classes[start + k] as usize][j];
+            diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
+        }
+        strategies.extend(res.strategies.iter().cloned());
         start += count;
+    }
+    if dp_failed {
+        return None;
     }
 
     let plan = ParallelPlan {
@@ -171,23 +302,6 @@ pub(crate) fn evaluate_partition_cached(
     if !cost.feasible {
         return None;
     }
-
-    let mut diags = Vec::with_capacity(model.n_layers());
-    let mut start = 0usize;
-    for (s, &count) in partition.iter().enumerate() {
-        let costs = ctx.cache.site_costs(ctx.sites[placement[s]].class);
-        for i in start..start + count {
-            let c = costs.layer_cost_at(
-                i,
-                &model.layers[i],
-                &plan.strategies[i],
-                b_m,
-                model.extra_params(i),
-            );
-            diags.push(LayerDiag { time: c.fwd + c.bwd, mem: c.mem });
-        }
-        start += count;
-    }
     Some((SearchOutcome { plan, cost }, diags))
 }
 
@@ -208,14 +322,23 @@ pub(crate) fn eval_even_cell(
     let partition = even_partition(model.n_layers(), ctx.pp);
     let mut worse_streak = 0usize;
     let mut best_mb: Option<f64> = None;
-    for m in microbatch_options(cfg, batch, ctx.pp) {
+    let mb_options = microbatch_options(cfg, batch, ctx.pp);
+    for m in mb_options {
         // Best over the candidate placements for this microbatch count
         // (single identity placement on homogeneous clusters).
         let mut m_best: Option<SearchOutcome> = None;
         for placement in &ctx.placements {
             cell.evaluations += 1;
+            // Incumbent: anything this placement must strictly beat to
+            // affect `m_best`, `best_mb` or the cell best — the running
+            // max of both. Beaten candidates can be lower-bound skipped
+            // without changing any outcome or counter the trace keeps.
+            let incumbent = match (best_mb, m_best.as_ref().map(SearchOutcome::throughput)) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
             if let Some((out, _)) = evaluate_partition_cached(
-                model, cluster, cfg, ctx, batch, m, &partition, placement,
+                model, cluster, cfg, ctx, batch, m, &partition, placement, incumbent, &mut cell,
             ) {
                 cell.feasible = true;
                 if m_best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
@@ -264,11 +387,22 @@ pub(crate) fn eval_bmw_cell(
         // Algorithm 2 line 5 iterates P in {2,4,...}; P=1 has no pipeline
         // to balance — still evaluate it via the even path so pure
         // intra-stage plans are not lost.
-        for m in microbatch_options(cfg, batch, 1) {
+        let mb_options = microbatch_options(cfg, batch, 1);
+        for m in mb_options {
             for placement in &ctx.placements {
                 cell.evaluations += 1;
+                let incumbent = cell.best.as_ref().map(SearchOutcome::throughput);
                 if let Some((out, _)) = evaluate_partition_cached(
-                    model, cluster, cfg, ctx, batch, m, &[n_layers], placement,
+                    model,
+                    cluster,
+                    cfg,
+                    ctx,
+                    batch,
+                    m,
+                    &[n_layers],
+                    placement,
+                    incumbent,
+                    &mut cell,
                 ) {
                     cell.feasible = true;
                     cell.offer(out);
@@ -279,7 +413,8 @@ pub(crate) fn eval_bmw_cell(
     }
 
     let group = ctx.group;
-    for m in microbatch_options(cfg, batch, pp) {
+    let mb_options = microbatch_options(cfg, batch, pp);
+    for m in mb_options {
         let b_m = batch as f64 / m as f64;
         let (act_w, ms_w) = strategy_init_weights(model, group, b_m, cfg.train);
         for placement in &ctx.placements {
@@ -316,8 +451,11 @@ pub(crate) fn eval_bmw_cell(
                 }
                 visited.push(part.clone());
                 cell.evaluations += 1;
+                // Never lower-bound skip here: the diagnostics of *every*
+                // evaluated partition steer the adjustment queue, so a
+                // skip could change the search trajectory.
                 let Some((out, diags)) = evaluate_partition_cached(
-                    model, cluster, cfg, ctx, batch, m, &part, placement,
+                    model, cluster, cfg, ctx, batch, m, &part, placement, None, &mut cell,
                 ) else {
                     continue;
                 };
@@ -382,7 +520,8 @@ pub(crate) fn eval_fixed_cell(
         return cell;
     }
     let group = ctx.group;
-    for m in microbatch_options(cfg, batch, ctx.pp) {
+    let mb_options = microbatch_options(cfg, batch, ctx.pp);
+    for m in mb_options {
         for placement in &ctx.placements {
             let (budgets, rates) = placement_budgets(ctx, placement);
             let partition = match kind {
@@ -396,8 +535,9 @@ pub(crate) fn eval_fixed_cell(
                 }
             };
             cell.evaluations += 1;
+            let incumbent = cell.best.as_ref().map(SearchOutcome::throughput);
             if let Some((out, _)) = evaluate_partition_cached(
-                model, cluster, cfg, ctx, batch, m, &partition, placement,
+                model, cluster, cfg, ctx, batch, m, &partition, placement, incumbent, &mut cell,
             ) {
                 cell.feasible = true;
                 cell.offer(out);

@@ -157,6 +157,19 @@ fn placement_candidates(sites: &[StageSite]) -> Vec<Vec<usize>> {
     out
 }
 
+/// Default prune mode when [`SearchConfig::prune`] is `None`: on, unless
+/// the `GALVATRON_NO_PRUNE` environment variable is set to a non-empty
+/// value other than `0`. Pruning never changes an artifact byte (every
+/// skipped candidate is provably dominated or beaten); the escape hatch
+/// exists so CI and the benches can measure — and byte-compare — the
+/// unpruned path.
+fn prune_default() -> bool {
+    match std::env::var("GALVATRON_NO_PRUNE") {
+        Ok(v) => v.trim().is_empty() || v.trim() == "0",
+        Err(_) => true,
+    }
+}
+
 /// Look-ahead window of the batch sweep: cells of this many consecutive
 /// batch sizes are computed per wave. Deliberately fixed (never derived
 /// from the worker count) so the set of computed cells — and therefore the
@@ -230,6 +243,7 @@ impl<'a> SearchEngine<'a> {
             }
             None => (false, 0),
         };
+        cache.set_prune(cfg.prune.unwrap_or_else(prune_default));
         let cache = Arc::new(cache);
         let contexts: Vec<PpContext> = parts
             .into_iter()
@@ -298,6 +312,8 @@ impl<'a> SearchEngine<'a> {
                         trace.cells_discarded += 1;
                         trace.cells.push(cell.to_trace(true));
                         trace.timing.cell_secs.push((cell.batch, cell.pp, *secs));
+                        trace.timing.lb_skips += cell.lb_skips;
+                        trace.timing.dp_states_visited += cell.dp_states;
                     }
                     continue;
                 }
@@ -311,6 +327,8 @@ impl<'a> SearchEngine<'a> {
                     }
                     trace.cells.push(cell.to_trace(false));
                     trace.timing.cell_secs.push((cell.batch, cell.pp, *secs));
+                    trace.timing.lb_skips += cell.lb_skips;
+                    trace.timing.dp_states_visited += cell.dp_states;
                     if let Some(out) = &cell.best {
                         if best.as_ref().map_or(true, |b| out.throughput() > b.throughput()) {
                             best = Some(out.clone());
@@ -345,6 +363,10 @@ impl<'a> SearchEngine<'a> {
         trace.timing.total_secs = self.precompute_secs + search_secs;
         trace.timing.warm_start = self.warm_start;
         trace.timing.persisted_entries = self.persisted_entries;
+        let (matrix_builds, candidates_pruned) = self.cache.matrix_stats();
+        trace.timing.matrix_builds = matrix_builds;
+        trace.timing.candidates_pruned = candidates_pruned;
+        trace.timing.dp_memo_entries = self.cache.dp_memo_len();
         (best, trace)
     }
 

@@ -81,6 +81,23 @@ pub struct SearchTiming {
     pub warm_start: bool,
     /// Cost entries loaded from the persistent cache at startup.
     pub persisted_entries: u64,
+    /// DP transition attempts evaluated across every stage search — the
+    /// direct measure of how much work pruning and the reachability
+    /// bounds saved.
+    pub dp_states_visited: u64,
+    /// Partition evaluations short-circuited by the optimistic lower
+    /// bound (each skip avoided a full stage-DP pass).
+    pub lb_skips: u64,
+    /// Candidate strategies dropped as pairwise dominated, summed over the
+    /// distinct matrix bundles of the run (0 when pruning is off).
+    pub candidates_pruned: u64,
+    /// Distinct (site class, group, b_m) matrix bundles built — each one
+    /// amortized across every cell, batch and thread that requested it.
+    pub matrix_builds: u64,
+    /// Distinct stage-DP solves memoized run-wide (pruned path): every
+    /// repeated (site, group, b_m, m, live, budget, layer-class-sequence)
+    /// stage beyond these was an O(1) map hit instead of a DP pass.
+    pub dp_memo_entries: u64,
 }
 
 impl SearchTiming {
@@ -91,6 +108,11 @@ impl SearchTiming {
         self.cell_secs.extend(other.cell_secs);
         self.warm_start |= other.warm_start;
         self.persisted_entries += other.persisted_entries;
+        self.dp_states_visited += other.dp_states_visited;
+        self.lb_skips += other.lb_skips;
+        self.candidates_pruned += other.candidates_pruned;
+        self.matrix_builds += other.matrix_builds;
+        self.dp_memo_entries += other.dp_memo_entries;
     }
 }
 
@@ -177,8 +199,15 @@ impl SearchTrace {
             "cold".to_string()
         };
         Some(format!(
-            "timing: {:.3}s total ({:.3}s precompute, {:.3}s search), cache start: {warm}",
-            t.total_secs, t.precompute_secs, t.search_secs,
+            "timing: {:.3}s total ({:.3}s precompute, {:.3}s search), cache start: {warm}, pruning: {} candidates pruned / {} lb skips / {} dp states / {} matrix builds / {} dp memo entries",
+            t.total_secs,
+            t.precompute_secs,
+            t.search_secs,
+            t.candidates_pruned,
+            t.lb_skips,
+            t.dp_states_visited,
+            t.matrix_builds,
+            t.dp_memo_entries,
         ))
     }
 

@@ -2,24 +2,29 @@
 """Planning-speed regression gate over BENCH_planning.json.
 
 Reads the trajectory the `planning_speed_bench` bench just wrote at the
-repository root and enforces two properties:
+repository root and enforces three properties:
 
   1. Warm floor: every case's `warm_speedup` (request-level cache hit vs
-     cold search) must be at least WARM_SPEEDUP_FLOOR. This is
-     machine-independent — both numbers come from the same run.
-  2. Regression: each case's cold `plans_per_sec` must stay above
-     DROP_TOLERANCE x the committed BENCH_baseline.json number for the
-     same (model, cluster, backend, threads) row. Machine-dependent, so
-     the baseline must be blessed on the reference (CI) machine.
+     cold search) must be at least WARM_SPEEDUP_FLOOR. Machine-independent
+     — both numbers come from the same run.
+  2. Pruning floor: every homogeneous analytic case's `cold_speedup`
+     (pruned vs `GALVATRON_NO_PRUNE=1` cold path, both from this run)
+     must be at least COLD_SPEEDUP_FLOOR. Also machine-independent.
+  3. Regression: each case's cold `plans_per_sec` must stay above
+     DROP_TOLERANCE x the best value ever recorded for the same
+     (model, cluster, backend, threads) row in the committed
+     BENCH_history.jsonl. Machine-dependent, so history should be
+     recorded on the reference (CI) machine.
+
+After gating, the run's summary is appended as one JSON line to
+BENCH_history.jsonl — the PR-over-PR planning-speed trajectory. Commit
+the updated file so the next run gates against it. An empty (or absent)
+history skips the regression half with a notice: the first recorded run
+seeds it.
 
 Usage:
-    python3 scripts/bench_gate.py            # gate (CI)
-    python3 scripts/bench_gate.py --bless    # adopt the current numbers
-                                             # as BENCH_baseline.json
-
-While BENCH_baseline.json is the committed placeholder (no blessed
-numbers yet), the regression half is skipped with a notice and only the
-warm floor is enforced.
+    python3 scripts/bench_gate.py               # gate + append (CI)
+    python3 scripts/bench_gate.py --check-only  # gate, don't append
 """
 
 import json
@@ -29,14 +34,31 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 CURRENT = ROOT / "BENCH_planning.json"
-BASELINE = ROOT / "BENCH_baseline.json"
+HISTORY = ROOT / "BENCH_history.jsonl"
 
-# A cold run may be up to 30% slower than the blessed baseline before the
+# A cold run may be up to 30% slower than the best recorded rate before the
 # gate fails: CI machines are noisy, order-of-magnitude regressions are not.
 DROP_TOLERANCE = 0.70
 # The warm path answers from the stored artifact without searching; if it
 # is not at least this much faster than the cold search, the cache broke.
 WARM_SPEEDUP_FLOOR = 10.0
+# Dominance pruning + lower-bound skips + DP bounds + the stage-DP memo
+# must keep the pruned cold path at least this much faster than the
+# GALVATRON_NO_PRUNE=1 path on the homogeneous analytic cases.
+COLD_SPEEDUP_FLOOR = 3.0
+
+# Keys copied from each bench row into the appended history line.
+SUMMARY_KEYS = (
+    "model",
+    "cluster",
+    "backend",
+    "threads",
+    "plans_per_sec",
+    "plans_per_sec_warm",
+    "warm_speedup",
+    "plans_per_sec_noprune",
+    "cold_speedup",
+)
 
 
 def row_key(row):
@@ -60,8 +82,8 @@ def finite_number(row, key, context):
     if not isinstance(value, (int, float)) or isinstance(value, bool):
         sys.exit(
             f"bench gate: {context} row {row_key(row)} has no numeric "
-            f"'{key}' field (got {value!r}) — re-run the bench, or re-bless "
-            "the baseline if its schema is stale"
+            f"'{key}' field (got {value!r}) — re-run the bench, or prune "
+            "stale history lines if their schema predates it"
         )
     if not math.isfinite(value):
         sys.exit(
@@ -81,14 +103,42 @@ def load(path):
         sys.exit(f"bench gate: {path} is not valid JSON: {e}")
 
 
-def bless(current):
-    doc = {
+def load_history():
+    """All prior run summaries, oldest first. Malformed lines are fatal:
+    silently skipping them would silently lower the recorded best."""
+    if not HISTORY.exists():
+        return []
+    runs = []
+    for i, line in enumerate(HISTORY.read_text().splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            runs.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            sys.exit(f"bench gate: {HISTORY}:{i} is not valid JSON: {e}")
+    return runs
+
+
+def best_recorded(history):
+    """Best cold plans/sec per row key across every recorded run."""
+    best = {}
+    for run in history:
+        for row in run.get("rows", []):
+            key = row_key(row)
+            pps = finite_number(row, "plans_per_sec", "history")
+            if key not in best or pps > best[key][0]:
+                best[key] = (pps, row)
+    return best
+
+
+def append_history(rows):
+    line = {
         "bench": "planning_speed",
-        "note": "Blessed planning-speed baseline; regenerate with `python3 scripts/bench_gate.py --bless`.",
-        "results": current.get("results", []),
+        "rows": [{k: row[k] for k in SUMMARY_KEYS if k in row} for row in rows],
     }
-    BASELINE.write_text(json.dumps(doc, indent=2, sort_keys=False) + "\n")
-    print(f"bench gate: blessed {len(doc['results'])} rows into {BASELINE}")
+    with HISTORY.open("a") as f:
+        f.write(json.dumps(line, separators=(",", ":")) + "\n")
+    print(f"bench gate: appended {len(line['rows'])} rows to {HISTORY.name}")
 
 
 def main():
@@ -96,10 +146,6 @@ def main():
     rows = current.get("results", [])
     if not rows:
         sys.exit(f"bench gate: {CURRENT} has no results")
-
-    if "--bless" in sys.argv[1:]:
-        bless(current)
-        return
 
     failures = []
 
@@ -114,41 +160,48 @@ def main():
             )
         else:
             print(f"bench gate: {row_key(row)}: warm_speedup {speedup:.1f}x ok")
+        # The pruning floor mirrors the in-bench assertion (titan8 analytic
+        # at threads=1) so a stale bench binary cannot slip past CI.
+        if (
+            row.get("cluster") == "titan8"
+            and row.get("backend", "analytic") == "analytic"
+            and int(row.get("threads", 0)) == 1
+        ):
+            cold_speedup = finite_number(row, "cold_speedup", "current")
+            if cold_speedup < COLD_SPEEDUP_FLOOR:
+                failures.append(
+                    f"{row_key(row)}: cold_speedup {cold_speedup:.1f}x (pruned vs "
+                    f"no-prune) is below the {COLD_SPEEDUP_FLOOR:.0f}x floor"
+                )
+            else:
+                print(f"bench gate: {row_key(row)}: cold_speedup {cold_speedup:.1f}x ok")
 
-    baseline = load(BASELINE)
-    if baseline.get("placeholder"):
-        # Surface the skip loudly: as a GitHub Actions warning annotation
-        # (rendered on the run summary page) and on stderr, so an unblessed
-        # baseline cannot silently disable the regression half forever.
-        message = (
-            "gate skipped: baseline not blessed — BENCH_baseline.json is the "
-            "placeholder, so only the warm-speedup floor was enforced. Bless "
-            "on the reference machine with `python3 scripts/bench_gate.py "
-            "--bless` and commit the file."
+    history = load_history()
+    if not history:
+        print(
+            "bench gate: no recorded history yet — the regression half is "
+            "skipped; this run seeds BENCH_history.jsonl"
         )
-        print(f"::warning title=bench gate::{message}")
-        print(f"bench gate: WARNING: {message}", file=sys.stderr)
     else:
+        best = best_recorded(history)
         by_key = {row_key(r): r for r in rows}
-        for base in baseline.get("results", []):
-            key = row_key(base)
+        for key, (base_pps, _) in sorted(best.items()):
             cur = by_key.get(key)
             if cur is None:
-                failures.append(f"{key}: in the baseline but missing from this run")
+                failures.append(f"{key}: recorded in history but missing from this run")
                 continue
-            base_pps = finite_number(base, "plans_per_sec", "baseline")
             cur_pps = finite_number(cur, "plans_per_sec", "current")
             floor = DROP_TOLERANCE * base_pps
             if cur_pps < floor:
                 failures.append(
                     f"{key}: cold {cur_pps:.2f} plans/s is below "
-                    f"{floor:.2f} ({DROP_TOLERANCE:.0%} of the baseline "
+                    f"{floor:.2f} ({DROP_TOLERANCE:.0%} of the recorded best "
                     f"{base_pps:.2f})"
                 )
             else:
                 print(
                     f"bench gate: {key}: cold {cur_pps:.2f} plans/s "
-                    f"vs baseline {base_pps:.2f} ok"
+                    f"vs recorded best {base_pps:.2f} ok"
                 )
 
     if failures:
@@ -156,6 +209,9 @@ def main():
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         sys.exit(1)
+
+    if "--check-only" not in sys.argv[1:]:
+        append_history(rows)
     print("bench gate: all checks passed")
 
 
